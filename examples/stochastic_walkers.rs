@@ -1,0 +1,102 @@
+//! The stochastic & parallel side of SPED (§4.3): unbiased estimation of
+//! Laplacian powers from random walks on the edge-incidence graph, with a
+//! leader/worker walker fleet.
+//!
+//! ```bash
+//! cargo run --release --example stochastic_walkers
+//! ```
+//!
+//! Shows:
+//!   * Monte-Carlo convergence of the L² estimator (error ~ 1/√walks),
+//!   * rejection sampling (the paper's scheme, eqs 13–14) vs importance
+//!     weighting (the paper's future-work variance reduction),
+//!   * sub-walk harvesting: one walk feeding a whole polynomial p(L)·V,
+//!   * a stochastic Oja run driven *only* by walk estimates.
+
+use std::sync::Arc;
+
+use sped::coordinator::walkers::{WalkerPool, WalkerPoolConfig};
+use sped::graph::gen::{cliques, CliqueSpec};
+use sped::linalg::funcs::matpow;
+use sped::solvers::stochastic::StochasticPolyOp;
+use sped::solvers::{run_convergence, Oja, RunConfig};
+use sped::walks::{SampleMethod, WalkEstimator};
+
+fn main() -> anyhow::Result<()> {
+    let gg = cliques(&CliqueSpec { n: 48, k: 3, max_short_circuit: 3, seed: 3 });
+    let g = gg.graph;
+    let l = g.laplacian();
+    let l2 = matpow(&l, 2);
+    println!(
+        "graph: {} nodes, {} edges, max degree {} (deg*_inc = {})",
+        g.num_nodes(),
+        g.num_edges(),
+        g.max_degree(),
+        2 * g.max_degree() - 1
+    );
+
+    // --- estimator convergence, fleet-parallel ---
+    println!("\nL² estimation with the walker fleet (4 workers, importance):");
+    let pool = WalkerPool::spawn(Arc::new(g.clone()), WalkerPoolConfig::default());
+    for walks in [2_000usize, 8_000, 32_000, 128_000] {
+        let t0 = std::time::Instant::now();
+        let (est, stats) = pool.estimate_power(2, walks, 16, walks as u64);
+        let rel = (&est - &l2).max_abs() / l2.max_abs();
+        println!(
+            "  {walks:>7} walks → rel err {rel:.4}   ({:.0} walks/s)",
+            stats.trials as f64 / t0.elapsed().as_secs_f64()
+        );
+    }
+    pool.shutdown();
+
+    // --- rejection vs importance ---
+    println!("\nrejection (paper, eqs 13-14) vs importance (future work):");
+    for method in [SampleMethod::Rejection, SampleMethod::Importance] {
+        let (est, stats) =
+            sped::walks::estimate_l_power(&g, 3, 60_000, 4, method, 11);
+        let l3 = matpow(&l, 3);
+        let rel = (&est - &l3).max_abs() / l3.max_abs();
+        println!(
+            "  {method:?}: L³ rel err {rel:.4}, acceptance rate {:.3}, weight σ {:.1}",
+            stats.acceptance_rate(),
+            stats.weight_stats.stddev()
+        );
+    }
+
+    // --- sub-walk harvesting: polynomial apply ---
+    println!("\nsub-walk harvesting: p(L)·V with p(x) = x − 0.1x² + 0.01x³ from ONE walk set:");
+    let v = sped::solvers::random_init(g.num_nodes(), 4, 5);
+    let coeffs = [0.0, 1.0, -0.1, 0.01];
+    let exact = sped::linalg::matmul::matmul(
+        &sped::linalg::funcs::poly_horner(&l, &coeffs),
+        &v,
+    );
+    let est = WalkEstimator::new(&g, SampleMethod::Importance);
+    let mut rng = sped::util::rng::Rng::new(17);
+    for walks in [5_000usize, 40_000] {
+        let approx = est.estimate_poly_apply(&coeffs, &v, walks, &mut rng);
+        let rel = (&approx - &exact).max_abs() / exact.max_abs();
+        println!("  {walks:>6} walks → rel err {rel:.4}");
+    }
+
+    // --- fully stochastic solve ---
+    println!("\nOja driven purely by walk estimates (no dense matrix ever formed):");
+    let e = sped::linalg::eigh(&l)?;
+    let v_star = e.bottom_k(2);
+    let lam_star = e.lambda_max() * 1.05;
+    let mut op = StochasticPolyOp::new(
+        &g,
+        vec![0.0, 1.0],
+        lam_star,
+        4_000, // walks per step: variance ∝ 1/walks — the knob a fleet scales
+        SampleMethod::Importance,
+        23,
+    );
+    let mut solver = Oja { eta: 0.05 / lam_star };
+    let cfg = RunConfig { steps: 3000, eval_every: 250, ..Default::default() };
+    let hist = run_convergence(&mut solver, &mut op, &v_star, &cfg);
+    for p in &hist.points {
+        println!("  step {:>5}: subspace err {:.3}, streak {}", p.step, p.subspace_error, p.streak);
+    }
+    Ok(())
+}

@@ -1,0 +1,18 @@
+"""L1 — Pallas kernels for SPED's compute hot spots.
+
+Three kernels cover the paper's inner loops:
+
+* :mod:`poly_horner` — fused blocked matmul + diagonal epilogue
+  ``O = A @ B + c * I`` — one Horner term of the series transform (§4.2).
+* :mod:`stoch_apply` — the stochastic walk-batch apply of §4.3:
+  gather walk-endpoint rows of ``V``, scale by the chain weights.
+* :mod:`solver_step` — fused Oja pre-orthonormalization update
+  ``G = V + eta * (M @ V)``.
+
+All kernels run ``interpret=True`` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); BlockSpecs are shaped for the TPU MXU/VMEM as
+documented in DESIGN.md §Hardware-Adaptation. ``ref.py`` holds the pure-jnp
+oracles the pytest suite checks against.
+"""
+
+from . import poly_horner, ref, solver_step, stoch_apply  # noqa: F401

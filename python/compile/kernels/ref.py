@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package must match its `*_ref` twin to float32
+tolerance; pytest (with hypothesis shape/value sweeps) enforces this at
+build time before any artifact is emitted.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_add_diag_ref(a, b, c):
+    """O = A @ B + c·I (one Horner term; rectangular shapes get the
+    leading-diagonal generalization)."""
+    out = a @ b
+    return out + c * jnp.eye(out.shape[0], out.shape[1], dtype=out.dtype)
+
+
+def horner_ref(b, coeffs):
+    """p(B) = Σ coeffs[i] · B^i by Horner (coeffs ascending)."""
+    n = b.shape[0]
+    r = coeffs[-1] * jnp.eye(n, dtype=b.dtype)
+    for c in coeffs[-2::-1]:
+        r = r @ b + c * jnp.eye(n, dtype=b.dtype)
+    return r
+
+
+def matpow_bits_ref(b, bits):
+    """B^p where p = Σ bits[i]·2^i (bits float 0/1, LSB first)."""
+    n = b.shape[0]
+    acc = jnp.eye(n, dtype=b.dtype)
+    base = b
+    for bit in bits:
+        acc = jnp.where(bit > 0.5, acc @ base, acc)
+        base = base @ base
+    return acc
+
+
+def oja_update_ref(m, v, eta):
+    """Fused Oja pre-orthonormalization update G = V + η·(M @ V)."""
+    return v + eta * (m @ v)
+
+
+def stoch_apply_ref(v, idx, w):
+    """Walk-batch apply (§4.3, eq 12).
+
+    idx: (B, 4) int32 rows [e1_u, e1_v, el_u, el_v]; w: (B,) chain weights
+    (already scaled by α/p/num_walks). Output: Σ_b w_b · x_{e1,b} (x_{el,b}ᵀ V),
+    an (n, k) matrix.
+    """
+    d = (v[idx[:, 2]] - v[idx[:, 3]]) * w[:, None]  # (B, k)
+    out = jnp.zeros_like(v)
+    out = out.at[idx[:, 0]].add(d)
+    out = out.at[idx[:, 1]].add(-d)
+    return out
+
+
+def gather_diff_ref(v, idx, w):
+    """Just the gather-diff-scale stage (the Pallas part of stoch_apply)."""
+    return (v[idx[:, 2]] - v[idx[:, 3]]) * w[:, None]

@@ -1,0 +1,164 @@
+"""L2 — the JAX compute graphs lowered to AOT artifacts.
+
+Everything the rust coordinator executes at runtime is defined here as a
+pure jax function over fixed shapes, calling the L1 Pallas kernels:
+
+* :func:`oja_chunk` / :func:`eg_chunk` — ``T`` solver steps per call with
+  the paper's §5.2 metrics (subspace error, per-vector alignment) computed
+  in-graph against the supplied ground truth.
+* :func:`poly_build` — Horner evaluation of a series transform
+  ``Σ c_i (L − s·I)^i`` (runtime coefficients, static degree).
+* :func:`matpow_bits` — ``B^p`` by square-and-multiply with a runtime bit
+  mask (the limit transform ``−(I − L/ℓ)^ℓ`` for any odd ℓ < 2^bits).
+* :func:`matvec` — plain ``M @ V`` (cross-validation oracle + XlaDenseOp).
+* :func:`stoch_chunk` — walk-batch stochastic apply (§4.3) feeding one
+  solver step.
+
+Python runs only at ``make artifacts`` time; see aot.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import poly_horner, solver_step, stoch_apply
+
+
+# ---------------------------------------------------------------------------
+# metrics (paper §5.2), computed in-graph
+# ---------------------------------------------------------------------------
+
+def subspace_error(v_star, v):
+    """δ = 1 − tr(U* P)/k for orthonormal v_star; v is orthonormalized by
+    construction in both solvers (QR / per-column normalization makes this
+    an adequate proxy at f32 tolerance)."""
+    k = v.shape[1]
+    m = v_star.T @ v
+    return 1.0 - jnp.sum(m * m) / k
+
+
+def alignments(v_star, v):
+    """Per-vector |cos| alignment (columns assumed ~unit norm)."""
+    num = jnp.abs(jnp.sum(v_star * v, axis=0))
+    den = jnp.linalg.norm(v_star, axis=0) * jnp.linalg.norm(v, axis=0) + 1e-30
+    return num / den
+
+
+# ---------------------------------------------------------------------------
+# solver steps
+# ---------------------------------------------------------------------------
+
+def _orthonormalize(v):
+    """Modified Gram–Schmidt over the (static, small) column count.
+
+    Pure dots/axpys — deliberately NOT `jnp.linalg.qr`, which lowers to a
+    LAPACK typed-FFI custom-call that the runtime's XLA (0.5.1) cannot
+    load. k ≤ 8, so the unrolled loop is cheap and fusion-friendly.
+    """
+    k = v.shape[1]
+    cols = [v[:, i] for i in range(k)]
+    out = []
+    for i in range(k):
+        c = cols[i]
+        for q in out:
+            c = c - jnp.dot(q, c) * q
+        # Second projection pass for f32 robustness (MGS2).
+        for q in out:
+            c = c - jnp.dot(q, c) * q
+        c = c / (jnp.linalg.norm(c) + 1e-30)
+        out.append(c)
+    return jnp.stack(out, axis=1)
+
+
+def oja_step(m, v, eta):
+    """One Oja step: orth(V + η·MV); matmul through the fused L1 kernel."""
+    g = solver_step.oja_update(m, v, eta)
+    return _orthonormalize(g)
+
+
+def eg_step(m, v, eta):
+    """One µ-EigenGame (unloaded) step.
+
+    grad_i = (MV)_i − Σ_{j<i} (v_jᵀ M v_i) v_j, Riemannian-projected and
+    retracted to the sphere per column.
+    """
+    g = solver_step.matvec(m, v)
+    a = v.T @ g  # (k, k); a[j, i] = v_jᵀ M v_i
+    k = v.shape[1]
+    mask = jnp.triu(jnp.ones((k, k), v.dtype), 1)  # strictly upper: j < i
+    grad = g - v @ (a * mask)
+    vg = jnp.sum(v * grad, axis=0)  # per-column ⟨v_i, grad_i⟩
+    new_v = v + eta * (grad - v * vg[None, :])
+    norms = jnp.linalg.norm(new_v, axis=0) + 1e-30
+    return new_v / norms[None, :]
+
+
+def _chunk(step_fn, t):
+    """T steps of `step_fn` with per-step metrics, as a lax.scan."""
+
+    def chunk(m, v, v_star, eta):
+        def body(v, _):
+            v2 = step_fn(m, v, eta)
+            return v2, (subspace_error(v_star, v2), alignments(v_star, v2))
+
+        v_final, (errs, aligns) = jax.lax.scan(body, v, None, length=t)
+        return v_final, errs, aligns
+
+    return chunk
+
+
+def oja_chunk(t):
+    """T Oja steps + metrics: (M, V, V*, η) → (V', errs(T,), aligns(T,k))."""
+    return _chunk(oja_step, t)
+
+
+def eg_chunk(t):
+    """T µ-EG steps + metrics."""
+    return _chunk(eg_step, t)
+
+
+# ---------------------------------------------------------------------------
+# transform builders
+# ---------------------------------------------------------------------------
+
+def poly_build(l, coeffs, shift):
+    """p(L) = Σ coeffs[i] (L − shift·I)^i via the fused Horner kernel."""
+    n = l.shape[0]
+    b = l - shift * jnp.eye(n, dtype=l.dtype)
+    return poly_horner.horner(b, coeffs)
+
+
+def matpow_bits(b, bits):
+    """B^p with p given as a 0/1 float mask (LSB first), square-and-multiply
+    over the L1 matmul kernel inside a scan: `bits` static length."""
+    n = b.shape[0]
+
+    def body(carry, bit):
+        acc, base = carry
+        mult = poly_horner.matmul(acc, base)
+        acc = jnp.where(bit > 0.5, mult, acc)
+        base = poly_horner.matmul(base, base)
+        return (acc, base), ()
+
+    (acc, _), _ = jax.lax.scan(body, (jnp.eye(n, dtype=b.dtype), b), bits)
+    return acc
+
+
+def matvec(m, v):
+    """M @ V (the XlaDenseOp oracle)."""
+    return solver_step.matvec(m, v)
+
+
+# ---------------------------------------------------------------------------
+# stochastic SPED (§4.3)
+# ---------------------------------------------------------------------------
+
+def stoch_chunk(v, idx, w, lam_star, eta):
+    """One stochastic solver step from a walk batch.
+
+    M̂V = λ*·V − stoch_apply(V, idx, w); then an Oja update + QR. The rust
+    walker fleet supplies (idx, w) with all α/p/num_walks scaling folded
+    into w.
+    """
+    est = stoch_apply.stoch_apply(v, idx, w)
+    g = lam_star * v - est
+    return _orthonormalize(v + eta * g)

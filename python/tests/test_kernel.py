@@ -1,0 +1,160 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and values; assert_allclose at f32 tolerance.
+This is the gate before any artifact is emitted.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import poly_horner, ref, solver_step, stoch_apply
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# poly_horner.matmul_add_diag
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    c=st.floats(-3, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_add_diag_matches_ref(m, k, n, c, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = poly_horner.matmul_add_diag(a, b, c)
+    want = ref.matmul_add_diag_ref(jnp.asarray(a), jnp.asarray(b), c)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_add_diag_crosses_block_boundary():
+    # > BLOCK in every dimension exercises the 3-d grid + reduction.
+    rng = np.random.default_rng(0)
+    a, b = rand(rng, 130, 200), rand(rng, 200, 131)
+    got = poly_horner.matmul_add_diag(a, b, 0.5)
+    want = ref.matmul_add_diag_ref(jnp.asarray(a), jnp.asarray(b), 0.5)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_identity():
+    rng = np.random.default_rng(1)
+    a = rand(rng, 40, 40)
+    got = poly_horner.matmul(a, np.eye(40, dtype=np.float32))
+    np.testing.assert_allclose(got, a, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# poly_horner.horner
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(2, 40),
+    deg=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_horner_matches_ref(n, deg, seed):
+    rng = np.random.default_rng(seed)
+    b = (rand(rng, n, n) * 0.3).astype(np.float32)
+    coeffs = rand(rng, deg + 1)
+    got = poly_horner.horner(jnp.asarray(b), jnp.asarray(coeffs))
+    want = ref.horner_ref(jnp.asarray(b), [float(c) for c in coeffs])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_horner_taylor_negexp_vs_scalar():
+    # The actual SPED use: Taylor −e^{−x} coefficients, diagonal matrix →
+    # entries must match the scalar series.
+    ell = 20
+    coeffs = []
+    fact = 1.0
+    for i in range(ell + 1):
+        if i:
+            fact *= i
+        coeffs.append((-1.0 if i % 2 == 0 else 1.0) / fact)
+    d = jnp.diag(jnp.asarray([0.0, 0.5, 1.0, 1.9], jnp.float32))
+    got = poly_horner.horner(d, jnp.asarray(coeffs, jnp.float32))
+    want = -np.exp(-np.asarray([0.0, 0.5, 1.0, 1.9]))
+    np.testing.assert_allclose(np.diagonal(got), want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# solver_step
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 80),
+    k=st.integers(1, 8),
+    eta=st.floats(0.001, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_oja_update_matches_ref(n, k, eta, seed):
+    rng = np.random.default_rng(seed)
+    m, v = rand(rng, n, n), rand(rng, n, k)
+    got = solver_step.oja_update(m, v, eta)
+    want = ref.oja_update_ref(jnp.asarray(m), jnp.asarray(v), eta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matvec_matches_numpy():
+    rng = np.random.default_rng(3)
+    m, v = rand(rng, 150, 150), rand(rng, 150, 8)
+    got = solver_step.matvec(m, v)
+    np.testing.assert_allclose(got, m @ v, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# stoch_apply
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(4, 60),
+    k=st.integers(1, 8),
+    batch=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stoch_apply_matches_ref(n, k, batch, seed):
+    rng = np.random.default_rng(seed)
+    v = rand(rng, n, k)
+    idx = rng.integers(0, n, size=(batch, 4)).astype(np.int32)
+    w = rand(rng, batch)
+    got = stoch_apply.stoch_apply(jnp.asarray(v), jnp.asarray(idx), jnp.asarray(w))
+    want = ref.stoch_apply_ref(jnp.asarray(v), jnp.asarray(idx), jnp.asarray(w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gather_diff_zero_weights_vanish():
+    rng = np.random.default_rng(5)
+    v = rand(rng, 10, 3)
+    idx = rng.integers(0, 10, size=(7, 4)).astype(np.int32)
+    w = np.zeros(7, np.float32)
+    got = stoch_apply.gather_diff(jnp.asarray(v), jnp.asarray(idx), jnp.asarray(w))
+    assert np.abs(np.asarray(got)).max() == 0.0
+
+
+def test_stoch_apply_single_walk_outer_product():
+    # One walk e1=(0,1), el=(2,3), w=2 → 2·x_{01} x_{23}ᵀ V.
+    v = jnp.asarray(np.arange(12, dtype=np.float32).reshape(4, 3))
+    idx = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    w = jnp.asarray([2.0], jnp.float32)
+    got = np.asarray(stoch_apply.stoch_apply(v, idx, w))
+    d = 2.0 * (np.asarray(v)[2] - np.asarray(v)[3])
+    want = np.zeros((4, 3), np.float32)
+    want[0] = d
+    want[1] = -d
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)

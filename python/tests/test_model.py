@@ -1,0 +1,161 @@
+"""L2 correctness: solver chunks, transform builders, in-graph metrics."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _sym(rng, n):
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    return (a + a.T) / 2
+
+
+def _orth(rng, n, k):
+    q, _ = np.linalg.qr(rng.standard_normal((n, k)))
+    return q.astype(np.float32)
+
+
+def _reversed_psd(rng, n, spread=1.0):
+    """A PSD matrix whose top eigenvectors are well separated."""
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    vals = np.linspace(1.0, 0.0, n) ** 2 * spread
+    return (q * vals) @ q.T, q[:, :], vals
+
+
+def test_subspace_error_in_graph_matches_definition():
+    rng = np.random.default_rng(0)
+    v_star = _orth(rng, 20, 4)
+    # Same subspace → 0; orthogonal subspace → 1.
+    err_same = float(model.subspace_error(jnp.asarray(v_star), jnp.asarray(v_star)))
+    assert err_same < 1e-6
+    v2 = _orth(rng, 20, 4)
+    # Make v2 orthogonal to v_star's span.
+    v2 = v2 - v_star @ (v_star.T @ v2)
+    v2, _ = np.linalg.qr(v2)
+    err_orth = float(model.subspace_error(jnp.asarray(v_star), jnp.asarray(v2.astype(np.float32))))
+    assert err_orth > 0.999
+
+
+def test_alignments_sign_invariant():
+    rng = np.random.default_rng(1)
+    v_star = _orth(rng, 15, 3)
+    v = v_star.copy()
+    v[:, 1] *= -1
+    a = np.asarray(model.alignments(jnp.asarray(v_star), jnp.asarray(v)))
+    np.testing.assert_allclose(a, 1.0, atol=1e-6)
+
+
+def test_oja_chunk_converges_to_top_eigenvectors():
+    rng = np.random.default_rng(2)
+    n, k, t = 30, 3, 25
+    m, q, vals = _reversed_psd(rng, n)
+    v_star = q[:, :k]  # top eigenvectors (vals descending)
+    chunk = model.oja_chunk(t)
+    v = _orth(rng, n, k)
+    errs = []
+    for _ in range(12):
+        v, e, a = chunk(jnp.asarray(m), jnp.asarray(v), jnp.asarray(v_star), 0.5)
+        errs.append(float(e[-1]))
+    assert errs[-1] < 1e-3, errs
+    assert errs[-1] <= errs[0]
+
+
+def test_eg_chunk_orders_eigenvectors():
+    rng = np.random.default_rng(3)
+    n, k, t = 24, 3, 25
+    m, q, vals = _reversed_psd(rng, n, spread=2.0)
+    v_star = q[:, :k]
+    chunk = model.eg_chunk(t)
+    v = _orth(rng, n, k)
+    aligns = None
+    for _ in range(40):
+        v, e, a = chunk(jnp.asarray(m), jnp.asarray(v), jnp.asarray(v_star), 0.3)
+        aligns = np.asarray(a[-1])
+    # Every individual eigenvector recovered (streak k) — µ-EG's promise.
+    assert (aligns > 0.98).all(), aligns
+
+
+def test_chunk_metrics_shapes():
+    rng = np.random.default_rng(4)
+    n, k, t = 12, 2, 7
+    chunk = model.oja_chunk(t)
+    m = _sym(rng, n)
+    v = _orth(rng, n, k)
+    v2, errs, aligns = chunk(jnp.asarray(m), jnp.asarray(v), jnp.asarray(v), 0.1)
+    assert v2.shape == (n, k)
+    assert errs.shape == (t,)
+    assert aligns.shape == (t, k)
+
+
+def test_poly_build_matches_horner_ref():
+    rng = np.random.default_rng(5)
+    n = 16
+    l = _sym(rng, n) * 0.2
+    coeffs = np.asarray([0.5, -1.0, 0.25, 0.1], np.float32)
+    shift = 0.3
+    got = model.poly_build(jnp.asarray(l), jnp.asarray(coeffs), shift)
+    b = jnp.asarray(l) - shift * jnp.eye(n, dtype=jnp.float32)
+    want = ref.horner_ref(b, [float(c) for c in coeffs])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_poly_build_zero_padded_coeffs_harmless():
+    # The rust side zero-pads coefficients to the artifact degree.
+    rng = np.random.default_rng(6)
+    n = 10
+    l = _sym(rng, n) * 0.2
+    c_short = np.asarray([0.5, -1.0, 0.25], np.float32)
+    c_padded = np.concatenate([c_short, np.zeros(13, np.float32)])
+    a = model.poly_build(jnp.asarray(l), jnp.asarray(c_short), 0.0)
+    b = model.poly_build(jnp.asarray(l), jnp.asarray(c_padded), 0.0)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 7, 251])
+def test_matpow_bits_matches_numpy(p):
+    rng = np.random.default_rng(7)
+    n = 12
+    b = _sym(rng, n) * (0.8 / n)  # spectral radius < 1 keeps powers tame
+    bits = np.asarray([(p >> i) & 1 for i in range(9)], np.float32)
+    got = model.matpow_bits(jnp.asarray(b), jnp.asarray(bits))
+    want = np.linalg.matrix_power(b.astype(np.float64), p)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=1e-5)
+
+
+def test_limit_negexp_through_matpow():
+    # −(I − L/ℓ)^ℓ ≈ −e^{−L} on a small Laplacian-like matrix.
+    ell = 251
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal((20, 6)).astype(np.float32)
+    l = (x @ x.T) / 10
+    b = np.eye(20, dtype=np.float32) - l / ell
+    bits = np.asarray([(ell >> i) & 1 for i in range(9)], np.float32)
+    got = -np.asarray(model.matpow_bits(jnp.asarray(b), jnp.asarray(bits)))
+    evals, evecs = np.linalg.eigh(l.astype(np.float64))
+    want = -(evecs * np.exp(-evals)) @ evecs.T
+    np.testing.assert_allclose(got, want, rtol=0.05, atol=5e-3)
+
+
+def test_matvec():
+    rng = np.random.default_rng(9)
+    m = _sym(rng, 40)
+    v = rng.standard_normal((40, 8)).astype(np.float32)
+    got = model.matvec(jnp.asarray(m), jnp.asarray(v))
+    np.testing.assert_allclose(got, m @ v, rtol=1e-4, atol=1e-4)
+
+
+def test_stoch_chunk_step_is_orthonormal():
+    rng = np.random.default_rng(10)
+    n, k, batch = 16, 3, 50
+    v = _orth(rng, n, k)
+    idx = rng.integers(0, n, size=(batch, 4)).astype(np.int32)
+    w = rng.standard_normal(batch).astype(np.float32) * 0.01
+    v2 = model.stoch_chunk(
+        jnp.asarray(v), jnp.asarray(idx), jnp.asarray(w), 2.0, 0.05
+    )
+    gram = np.asarray(v2).T @ np.asarray(v2)
+    np.testing.assert_allclose(gram, np.eye(k), atol=1e-4)

@@ -1,0 +1,48 @@
+//! Figure 2 — 3-room MDP: longest eigenvector streak over training for
+//! µ-EG and Oja under {identity, exact −e^{−L}, limit series ℓ=251,
+//! exact log(L+ε)}.
+//!
+//! Regenerates the figure's series as `results/fig2_fig3_mdp.csv` and
+//! prints the steps-to-streak summary. Expected shape (paper): series
+//! transform ≈ 10× fewer steps than identity, exact log ≈ 100×.
+//!
+//! `SPED_BENCH_FAST=1 cargo bench --bench fig2_mdp_streak` for a smoke run.
+
+use sped::coordinator::experiments::{fig2_fig3_mdp, summarize, ExperimentOptions};
+use sped::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig2_mdp_streak");
+    let opts = ExperimentOptions::default();
+    let t0 = std::time::Instant::now();
+    let curves = fig2_fig3_mdp(&opts).expect("fig2 harness");
+    suite.report(&format!(
+        "figure 2 regenerated in {:.1}s → {}/fig2_fig3_mdp.csv",
+        t0.elapsed().as_secs_f64(),
+        opts.out_dir
+    ));
+    suite.report("");
+    for row in summarize(&curves, 8) {
+        suite.report(&row);
+    }
+    // The headline shape: any accelerated transform reaches streak 8 in
+    // fewer steps than its identity counterpart on the same solver.
+    suite.report("");
+    for solver in ["mu-eg", "oja"] {
+        let steps = |label_frag: &str| {
+            curves
+                .iter()
+                .find(|c| c.label.starts_with(solver) && c.label.contains(label_frag))
+                .and_then(|c| c.steps_to_streak(8))
+        };
+        let id = steps("identity");
+        let exp = steps("-exp(-L)");
+        let lim = steps("limit_negexp");
+        let log = steps("log(");
+        suite.report(&format!(
+            "{solver}: steps→streak8  identity {:?}  exact-exp {:?}  limit-T251 {:?}  exact-log {:?}",
+            id, exp, lim, log
+        ));
+    }
+    suite.finish();
+}

@@ -1,0 +1,46 @@
+//! Figure 3 — 3-room MDP: normalized subspace error (eq 15) over training.
+//!
+//! Shares the Figure-2 run (same curves, second metric — the paper plots
+//! them as two figures). Prints the steps-to-error(0.01) summary and an
+//! ASCII convergence plot of the µ-EG curves.
+
+use sped::coordinator::experiments::{fig2_fig3_mdp, summarize, ExperimentOptions};
+use sped::linalg::metrics::ConvergenceHistory;
+use sped::util::bench::BenchSuite;
+
+fn ascii_curve(c: &ConvergenceHistory, width: usize) -> String {
+    // log-error sparkline: '#' = high error … '.' = low.
+    let ramp: &[u8] = b"#%*+=-:. ";
+    let pts: Vec<f64> = c.points.iter().map(|p| p.subspace_error.max(1e-8)).collect();
+    if pts.is_empty() {
+        return String::new();
+    }
+    let stride = (pts.len() as f64 / width as f64).max(1.0);
+    let mut s = String::new();
+    let (lo, hi) = (1e-6f64.ln(), 1.0f64.ln());
+    let mut i = 0.0;
+    while (i as usize) < pts.len() && s.len() < width {
+        let e = pts[i as usize].ln().clamp(lo, hi);
+        let t = (e - lo) / (hi - lo); // 0 = converged, 1 = bad
+        let idx = ((1.0 - t) * (ramp.len() - 1) as f64).round() as usize;
+        s.push(ramp[idx.min(ramp.len() - 1)] as char);
+        i += stride;
+    }
+    s
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("fig3_mdp_subspace");
+    let opts = ExperimentOptions::default();
+    let curves = fig2_fig3_mdp(&opts).expect("fig3 harness");
+    suite.report("subspace-error summaries (same runs as Figure 2):");
+    for row in summarize(&curves, 8) {
+        suite.report(&row);
+    }
+    suite.report("");
+    suite.report("log-subspace-error over training ('#' high → ' ' converged):");
+    for c in &curves {
+        suite.report(&format!("  {:<42} |{}|", c.label, ascii_curve(c, 60)));
+    }
+    suite.finish();
+}

@@ -1,0 +1,50 @@
+//! Figure 4 — well-clustered clique graphs: streak vs training step across
+//! graph sizes and cluster counts.
+//!
+//! Paper shape to reproduce: transforms accelerate convergence everywhere;
+//! the series approximation degrades when cliques get large (max degree ↑
+//! → spectral radius ↑ → ℓ=251 no longer covers the spectrum), while with
+//! more clusters (smaller cliques) it succeeds — the crossover discussed in
+//! §5.4. `--full-size` (via `sped experiment`) runs the paper's n=1000/2000.
+
+use sped::coordinator::experiments::{fig4_cliques, summarize, ExperimentOptions};
+use sped::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig4_cliques");
+    let opts = ExperimentOptions::default();
+    let t0 = std::time::Instant::now();
+    let curves = fig4_cliques(&opts).expect("fig4 harness");
+    suite.report(&format!(
+        "figure 4 regenerated in {:.1}s → {}/fig4_cliques.csv",
+        t0.elapsed().as_secs_f64(),
+        opts.out_dir
+    ));
+    for row in summarize(&curves, 3) {
+        suite.report(&row);
+    }
+    // Crossover check: limit-T251 steps-to-streak as cliques grow denser
+    // (fewer clusters at fixed n → larger max degree → series strain).
+    // Each panel's streak target is its own cluster count (parsed from the
+    // `nNNN_cC|` label prefix).
+    let target_of = |label: &str| -> usize {
+        label
+            .split('|')
+            .next()
+            .and_then(|p| p.split("_c").nth(1))
+            .and_then(|c| c.parse().ok())
+            .unwrap_or(2)
+            .max(2)
+    };
+    suite.report("");
+    suite.report("series strain with clique density (limit_negexp_T251, oja):");
+    for c in curves.iter().filter(|c| c.label.contains("oja|limit_negexp")) {
+        let k = target_of(&c.label);
+        let s = c
+            .steps_to_streak(k)
+            .map(|x| x.to_string())
+            .unwrap_or_else(|| "never".into());
+        suite.report(&format!("  {:<44} steps→streak{k}: {s}", c.label));
+    }
+    suite.finish();
+}

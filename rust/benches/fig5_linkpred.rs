@@ -1,0 +1,24 @@
+//! Figure 5 — link-prediction-completed probabilistic graphs: SPED
+//! generalizes to weighted Laplacians (App A.1).
+//!
+//! Expected shape: same ordering as Figure 4 — the transform only sees the
+//! spectrum, not the underlying (now weighted) graph object.
+
+use sped::coordinator::experiments::{fig5_linkpred, summarize, ExperimentOptions};
+use sped::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig5_linkpred");
+    let opts = ExperimentOptions::default();
+    let t0 = std::time::Instant::now();
+    let curves = fig5_linkpred(&opts).expect("fig5 harness");
+    suite.report(&format!(
+        "figure 5 regenerated in {:.1}s → {}/fig5_linkpred.csv",
+        t0.elapsed().as_secs_f64(),
+        opts.out_dir
+    ));
+    for row in summarize(&curves, 3) {
+        suite.report(&row);
+    }
+    suite.finish();
+}

@@ -1,0 +1,42 @@
+//! Figure 6 — series-degree sweep ℓ ∈ {11, 51, 151, 251} across the three
+//! series families (limit −e^{−L}, Taylor −e^{−L}, Taylor log).
+//!
+//! Expected shape (paper, App A.2): insufficient terms fail to accelerate
+//! (or fail outright); the limit approximation outperforms the other series
+//! at every ℓ; Taylor-log diverges at raw spectral radius (ρ ≥ 2).
+
+use sped::coordinator::experiments::{fig6_series_terms, summarize, ExperimentOptions};
+use sped::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig6_series_terms");
+    let opts = ExperimentOptions::default();
+    let t0 = std::time::Instant::now();
+    let curves = fig6_series_terms(&opts).expect("fig6 harness");
+    suite.report(&format!(
+        "figure 6 regenerated in {:.1}s → {}/fig6_series_terms.csv",
+        t0.elapsed().as_secs_f64(),
+        opts.out_dir
+    ));
+    for row in summarize(&curves, 3) {
+        suite.report(&row);
+    }
+    suite.report("");
+    suite.report("limit vs taylor at each ℓ (oja, steps→streak3; '-' = never):");
+    for ell in [11usize, 51, 151, 251] {
+        let get = |frag: &str| {
+            curves
+                .iter()
+                .find(|c| c.label.starts_with("oja") && c.label.contains(frag))
+                .and_then(|c| c.steps_to_streak(3))
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| "-".into())
+        };
+        suite.report(&format!(
+            "  ℓ={ell:<4} limit {:<8} taylor {:<8}",
+            get(&format!("limit_negexp_T{ell}")),
+            get(&format!("taylor_negexp_T{ell}")),
+        ));
+    }
+    suite.finish();
+}

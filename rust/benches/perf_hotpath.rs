@@ -1,0 +1,145 @@
+//! Whole-stack hot-path profile — the measurement side of EXPERIMENTS.md
+//! §Perf. Times every layer's inner loops:
+//!
+//! * L3 native: blocked matmul (vs naive), symmetric eigh, MGS, solver
+//!   steps (Oja / µ-EG), transform builders (Horner vs matpow), k-means,
+//!   walk sampling.
+//! * XLA path (when artifacts exist): chunked solver steps, poly build,
+//!   matpow, matvec round-trip — including the PJRT call overhead.
+
+use sped::graph::gen::{cliques, CliqueSpec};
+use sped::linalg::dmat::DMat;
+use sped::linalg::matmul::{matmul, matmul_naive};
+use sped::solvers::{EigenSolver, MatVecOp};
+use sped::transforms::TransformKind;
+use sped::util::bench::{fast_mode, BenchSuite};
+use sped::util::rng::Rng;
+
+fn random_mat(seed: u64, r: usize, c: usize) -> DMat {
+    let mut rng = Rng::new(seed);
+    DMat::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("perf_hotpath");
+    let n = if fast_mode() { 128 } else { 256 };
+
+    // ---- L3: matmul ----
+    let a = random_mat(1, n, n);
+    let b = random_mat(2, n, n);
+    let flops = 2.0 * (n as f64).powi(3);
+    suite.bench_units(&format!("matmul blocked {n}x{n}"), flops, "FLOP", || {
+        std::hint::black_box(matmul(&a, &b));
+    });
+    if !fast_mode() {
+        suite.bench_units(&format!("matmul naive {n}x{n}"), flops, "FLOP", || {
+            std::hint::black_box(matmul_naive(&a, &b));
+        });
+    }
+
+    // ---- L3: eigh ----
+    let mut sym = random_mat(3, n, n);
+    sym.symmetrize();
+    suite.bench(&format!("eigh (tred2+tql2) {n}x{n}"), || {
+        std::hint::black_box(sped::linalg::eigh(&sym).unwrap());
+    });
+
+    // ---- L3: solver steps ----
+    let gg = cliques(&CliqueSpec { n, k: 4, max_short_circuit: 10, seed: 5 });
+    let sm = sped::transforms::build_solver_matrix(
+        &gg.graph.laplacian(),
+        TransformKind::NegExp,
+        &Default::default(),
+    )
+    .unwrap();
+    let k = 8;
+    let mut v = sped::solvers::random_init(n, k, 7);
+    let mut op = sped::solvers::DenseOp { m: sm.m.clone() };
+    let step_flops = 2.0 * (n * n * k) as f64;
+    let mut oja = sped::solvers::Oja { eta: 0.1 };
+    suite.bench_units(&format!("oja step n={n} k={k}"), step_flops, "FLOP", || {
+        oja.step(&mut op, &mut v);
+    });
+    let mut eg = sped::solvers::MuEigenGame { eta: 0.1 };
+    suite.bench_units(&format!("mu-eg step n={n} k={k}"), step_flops, "FLOP", || {
+        eg.step(&mut op, &mut v);
+    });
+    suite.bench(&format!("mgs orthonormalize n={n} k={k}"), || {
+        sped::linalg::qr::mgs_orthonormalize(&mut v);
+    });
+
+    // ---- L3: transform builders ----
+    let l = gg.graph.laplacian();
+    suite.bench("transform build: limit_negexp T251 (matpow, ~13 matmuls)", || {
+        std::hint::black_box(TransformKind::LimitNegExp { ell: 251 }.build(&l).unwrap());
+    });
+    if !fast_mode() {
+        suite.bench("transform build: taylor_negexp T51 (Horner, 51 matmuls)", || {
+            std::hint::black_box(TransformKind::TaylorNegExp { ell: 51 }.build(&l).unwrap());
+        });
+        suite.bench("transform build: exact negexp (full eigh)", || {
+            std::hint::black_box(TransformKind::NegExp.build(&l).unwrap());
+        });
+    }
+
+    // ---- L3: clustering + walks ----
+    let emb = random_mat(11, n, 4);
+    suite.bench(&format!("kmeans++ n={n} k=4"), || {
+        std::hint::black_box(sped::cluster::kmeans(&emb, 4, 50, 3));
+    });
+    let engine = sped::walks::WalkEngine::new(&gg.graph);
+    let mut rng = Rng::new(13);
+    let mut walk = sped::walks::WalkSample { edges: vec![], alpha: vec![], prob: vec![] };
+    suite.bench_units("walk sampling len=5", 1000.0, "walks", || {
+        for _ in 0..1000 {
+            engine.sample_walk_into(5, &mut rng, &mut walk);
+        }
+    });
+
+    // ---- XLA path (artifacts optional) ----
+    let art_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art_dir.join("manifest.cfg").exists() {
+        let rt = sped::runtime::Runtime::load_dir(&art_dir).expect("artifacts");
+        if let Ok(chunk_art) = rt.best_fit("oja_chunk", n) {
+            let size = chunk_art.meta.n;
+            let m_pad = sped::runtime::pad_matrix(&sm.m, size, -1.0);
+            let runner = sped::runtime::XlaChunkRunner::new(chunk_art.clone(), &m_pad).unwrap();
+            let vv = sped::runtime::pad_rows(&sped::solvers::random_init(n, chunk_art.meta.k, 5), size);
+            let t = chunk_art.meta.t as f64;
+            let mut cur = vv.clone();
+            suite.bench_units(
+                &format!("XLA oja_chunk n={size} (T={} steps/call)", chunk_art.meta.t),
+                t,
+                "steps",
+                || {
+                    let out = runner.run_chunk(&cur, &vv, 0.3).unwrap();
+                    cur = out.v;
+                },
+            );
+        }
+        if let Ok(mv) = rt.best_fit("matvec", n) {
+            let m_pad = sped::runtime::pad_matrix(&sm.m, mv.meta.n, -1.0);
+            let mut xop = sped::runtime::XlaDenseOp::new(mv.clone(), &m_pad).unwrap();
+            let vv = sped::solvers::random_init(mv.meta.n, mv.meta.k, 5);
+            suite.bench_units(
+                &format!("XLA matvec round-trip n={}", mv.meta.n),
+                2.0 * (mv.meta.n * mv.meta.n * mv.meta.k) as f64,
+                "FLOP",
+                || {
+                    std::hint::black_box(xop.apply(&vv));
+                },
+            );
+        }
+        if let Ok(mp) = rt.best_fit("matpow", n) {
+            let mut bmat = sped::runtime::pad_matrix(&l, mp.meta.n, 0.0);
+            bmat.scale(-1.0 / 251.0);
+            bmat.add_diag(1.0);
+            suite.bench("XLA matpow^251 (square-and-multiply)", || {
+                std::hint::black_box(sped::runtime::xla_matpow(&mp, &bmat, 251).unwrap());
+            });
+        }
+    } else {
+        suite.report("(artifacts/ missing — XLA cases skipped; run `make artifacts`)");
+    }
+    suite.finish();
+}

@@ -1,0 +1,73 @@
+//! Table 1 — edge-vector inner products.
+//!
+//! Verifies the five combinatorial cases (disconnected 0, serial −1,
+//! converging +1, diverging +1, repeated +2) exhaustively against the dense
+//! incidence-vector oracle, then times the classification hot path (it sits
+//! inside every walk step of the §4.3 estimator).
+
+use sped::graph::incidence::{classify_pair, inner_product, inner_product_dense, EdgePairKind};
+use sped::graph::Edge;
+use sped::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("table1_inner_products");
+
+    // --- correctness: exhaustive over all canonical edge pairs on 8 nodes ---
+    let mut edges = Vec::new();
+    for u in 0..8u32 {
+        for v in (u + 1)..8 {
+            edges.push(Edge { u, v, w: 1.0 });
+        }
+    }
+    let mut counts = [0usize; 5];
+    let mut mismatches = 0;
+    for &a in &edges {
+        for &b in &edges {
+            let fast = inner_product(a, b);
+            let slow = inner_product_dense(a, b, 8);
+            if (fast - slow).abs() > 1e-12 {
+                mismatches += 1;
+            }
+            let idx = match classify_pair(a, b) {
+                EdgePairKind::Disconnected => 0,
+                EdgePairKind::Serial => 1,
+                EdgePairKind::Converging => 2,
+                EdgePairKind::Diverging => 3,
+                EdgePairKind::Repeated => 4,
+            };
+            counts[idx] += 1;
+        }
+    }
+    suite.report(&format!(
+        "table 1 verification: {} pairs, {mismatches} mismatches vs dense oracle",
+        edges.len() * edges.len()
+    ));
+    suite.report(&format!(
+        "  case counts — disconnected {} | serial {} | converging {} | diverging {} | repeated {}",
+        counts[0], counts[1], counts[2], counts[3], counts[4]
+    ));
+    suite.report("  values      —            0  |       -1  |         +1  |        +1  |       +2");
+    assert_eq!(mismatches, 0);
+
+    // --- throughput of the classification (walk-estimator hot path) ---
+    let pairs: Vec<(Edge, Edge)> = edges
+        .iter()
+        .flat_map(|&a| edges.iter().map(move |&b| (a, b)))
+        .collect();
+    let npairs = pairs.len() as f64;
+    suite.bench_units("inner_product (combinatorial)", npairs, "pairs", || {
+        let mut acc = 0.0;
+        for &(a, b) in &pairs {
+            acc += inner_product(a, b);
+        }
+        std::hint::black_box(acc);
+    });
+    suite.bench_units("inner_product_dense (oracle)", npairs, "pairs", || {
+        let mut acc = 0.0;
+        for &(a, b) in &pairs {
+            acc += inner_product_dense(a, b, 8);
+        }
+        std::hint::black_box(acc);
+    });
+    suite.finish();
+}

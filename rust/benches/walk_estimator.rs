@@ -1,0 +1,87 @@
+//! §4.3 — the stochastic, parallel walk estimator: unbiasedness, Monte-
+//! Carlo convergence, rejection vs importance, walker-fleet throughput and
+//! scaling, and the engine-construction overhead split.
+
+use std::sync::Arc;
+
+use sped::coordinator::walkers::{WalkerPool, WalkerPoolConfig};
+use sped::graph::gen::{cliques, CliqueSpec};
+use sped::linalg::funcs::matpow;
+use sped::util::bench::{fast_mode, BenchSuite};
+use sped::walks::{estimate_l_power, SampleMethod, WalkEngine, WalkSample};
+
+fn main() {
+    let mut suite = BenchSuite::new("walk_estimator");
+    let gg = cliques(&CliqueSpec { n: 48, k: 3, max_short_circuit: 3, seed: 3 });
+    let g = gg.graph;
+    let l = g.laplacian();
+    let l2 = matpow(&l, 2);
+    let l3 = matpow(&l, 3);
+
+    // --- Monte-Carlo convergence table ---
+    suite.report("estimator error vs walk budget (rel max-abs error):");
+    suite.report(&format!(
+        "  {:<12} {:>5} {:>9} {:>9} {:>9}",
+        "method", "len", "8k", "32k", "128k"
+    ));
+    let budgets: &[usize] = if fast_mode() { &[2_000, 4_000, 8_000] } else { &[8_000, 32_000, 128_000] };
+    for method in [SampleMethod::Rejection, SampleMethod::Importance] {
+        for (len, truth) in [(2usize, &l2), (3usize, &l3)] {
+            let errs: Vec<String> = budgets
+                .iter()
+                .map(|&w| {
+                    let (est, _) = estimate_l_power(&g, len, w, 4, method, w as u64);
+                    format!("{:.4}", (&est - truth).max_abs() / truth.max_abs())
+                })
+                .collect();
+            suite.report(&format!(
+                "  {:<12} {:>5} {:>9} {:>9} {:>9}",
+                format!("{method:?}"),
+                len,
+                errs[0],
+                errs[1],
+                errs[2]
+            ));
+        }
+    }
+    // Acceptance rates by length.
+    let engine_stats: Vec<String> = (1..=5)
+        .map(|len| {
+            let (_, s) = estimate_l_power(&g, len, 4000, 2, SampleMethod::Rejection, len as u64);
+            format!("len {len}: {:.3}", s.acceptance_rate())
+        })
+        .collect();
+    suite.report(&format!("rejection acceptance rates — {}", engine_stats.join(", ")));
+
+    // --- raw walk throughput (single engine) ---
+    let engine = WalkEngine::new(&g);
+    let mut rng = sped::util::rng::Rng::new(9);
+    let mut walk = WalkSample { edges: vec![], alpha: vec![], prob: vec![] };
+    suite.bench_units("sample_walk len=3 (single thread)", 1000.0, "walks", || {
+        for _ in 0..1000 {
+            engine.sample_walk_into(3, &mut rng, &mut walk);
+        }
+    });
+    suite.bench("engine construction (|E| CSR build)", || {
+        std::hint::black_box(WalkEngine::new(&g));
+    });
+
+    // --- fleet throughput vs worker count (structural on 1 core) ---
+    let total = if fast_mode() { 20_000 } else { 100_000 };
+    for workers in [1usize, 2, 4, 8] {
+        let pool = WalkerPool::spawn(
+            Arc::new(g.clone()),
+            WalkerPoolConfig { workers, backlog: 8, method: SampleMethod::Importance },
+        );
+        let t0 = std::time::Instant::now();
+        let (_, stats) = pool.estimate_power(3, total, workers * 4, 7);
+        let dt = t0.elapsed().as_secs_f64();
+        pool.shutdown();
+        suite.report(&format!(
+            "fleet {workers} workers: {:.0} walks/s ({} trials in {dt:.2}s)",
+            stats.trials as f64 / dt,
+            stats.trials
+        ));
+    }
+    suite.finish();
+}

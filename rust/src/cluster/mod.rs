@@ -1,0 +1,325 @@
+//! Hard clustering on spectral embeddings and cluster-quality metrics.
+//!
+//! Spectral clustering's final step (§2.1): run k-means on the rows of the
+//! bottom-k eigenvector matrix. Includes k-means++ initialisation, Lloyd
+//! iterations, and the evaluation suite: Adjusted Rand Index, Normalized
+//! Mutual Information, and the conductance / normalized-cut objectives
+//! (eqs 3–7) the spectral relaxation approximates.
+
+use crate::graph::Graph;
+use crate::linalg::DMat;
+use crate::util::rng::Rng;
+
+/// k-means result.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    pub assignments: Vec<usize>,
+    pub centroids: DMat,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// k-means++ seeding followed by Lloyd iterations on the rows of `points`.
+pub fn kmeans(points: &DMat, k: usize, max_iters: usize, seed: u64) -> KMeansResult {
+    let (n, d) = (points.rows(), points.cols());
+    assert!(k >= 1 && k <= n, "need 1 ≤ k ≤ n");
+    let mut rng = Rng::new(seed);
+    // --- k-means++ seeding ---
+    let mut centroids = DMat::zeros(k, d);
+    let first = rng.below(n);
+    centroids.row_mut(0).copy_from_slice(points.row(first));
+    let mut d2 = vec![f64::INFINITY; n];
+    for c in 1..k {
+        for i in 0..n {
+            let dist = sqdist(points.row(i), centroids.row(c - 1));
+            if dist < d2[i] {
+                d2[i] = dist;
+            }
+        }
+        let next = rng.weighted(&d2).unwrap_or_else(|| rng.below(n));
+        centroids.row_mut(c).copy_from_slice(points.row(next));
+    }
+    // --- Lloyd ---
+    let mut assignments = vec![0usize; n];
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        let mut changed = false;
+        for i in 0..n {
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..k {
+                let dist = sqdist(points.row(i), centroids.row(c));
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if assignments[i] != best.1 {
+                assignments[i] = best.1;
+                changed = true;
+            }
+        }
+        // Recompute centroids; re-seed empty clusters from the farthest point.
+        let mut counts = vec![0usize; k];
+        let mut sums = DMat::zeros(k, d);
+        for i in 0..n {
+            counts[assignments[i]] += 1;
+            let row = points.row(i);
+            let srow = sums.row_mut(assignments[i]);
+            for j in 0..d {
+                srow[j] += row[j];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = sqdist(points.row(a), centroids.row(assignments[a]));
+                        let db = sqdist(points.row(b), centroids.row(assignments[b]));
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids.row_mut(c).copy_from_slice(points.row(far));
+                changed = true;
+            } else {
+                let inv = 1.0 / counts[c] as f64;
+                for j in 0..d {
+                    centroids[(c, j)] = sums[(c, j)] * inv;
+                }
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+    }
+    let inertia = (0..n)
+        .map(|i| sqdist(points.row(i), centroids.row(assignments[i])))
+        .sum();
+    KMeansResult { assignments, centroids, inertia, iterations }
+}
+
+#[inline]
+fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Row-normalize an embedding (common spectral-clustering preprocessing;
+/// zero rows are left as-is).
+pub fn row_normalize(v: &DMat) -> DMat {
+    let mut out = v.clone();
+    for i in 0..out.rows() {
+        let row = out.row_mut(i);
+        let n = row.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if n > 0.0 {
+            for x in row.iter_mut() {
+                *x /= n;
+            }
+        }
+    }
+    out
+}
+
+/// Adjusted Rand Index between two labelings (1 = identical partitions,
+/// ~0 = random agreement).
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let ka = 1 + *a.iter().max().unwrap();
+    let kb = 1 + *b.iter().max().unwrap();
+    let mut table = vec![vec![0u64; kb]; ka];
+    for i in 0..n {
+        table[a[i]][b[i]] += 1;
+    }
+    let choose2 = |x: u64| (x * x.saturating_sub(1)) / 2;
+    let sum_ij: u64 = table.iter().flatten().map(|&x| choose2(x)).sum();
+    let sum_a: u64 = table.iter().map(|row| choose2(row.iter().sum())).sum();
+    let sum_b: u64 = (0..kb)
+        .map(|j| choose2(table.iter().map(|row| row[j]).sum()))
+        .sum();
+    let total = choose2(n as u64);
+    let expected = sum_a as f64 * sum_b as f64 / total as f64;
+    let max_index = 0.5 * (sum_a + sum_b) as f64;
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0;
+    }
+    (sum_ij as f64 - expected) / (max_index - expected)
+}
+
+/// Normalized Mutual Information (arithmetic normalization).
+pub fn normalized_mutual_info(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let ka = 1 + *a.iter().max().unwrap();
+    let kb = 1 + *b.iter().max().unwrap();
+    let mut joint = vec![vec![0f64; kb]; ka];
+    for i in 0..n {
+        joint[a[i]][b[i]] += 1.0;
+    }
+    let nf = n as f64;
+    let pa: Vec<f64> = joint.iter().map(|r| r.iter().sum::<f64>() / nf).collect();
+    let pb: Vec<f64> = (0..kb)
+        .map(|j| joint.iter().map(|r| r[j]).sum::<f64>() / nf)
+        .collect();
+    let mut mi = 0.0;
+    for i in 0..ka {
+        for j in 0..kb {
+            let p = joint[i][j] / nf;
+            if p > 0.0 {
+                mi += p * (p / (pa[i] * pb[j])).ln();
+            }
+        }
+    }
+    let ent = |p: &[f64]| -p.iter().filter(|&&x| x > 0.0).map(|&x| x * x.ln()).sum::<f64>();
+    let (ha, hb) = (ent(&pa), ent(&pb));
+    if ha == 0.0 && hb == 0.0 {
+        return 1.0;
+    }
+    2.0 * mi / (ha + hb)
+}
+
+/// Worst-cluster conductance `max_i φ(S_i)` (eq 7's objective evaluated on
+/// a concrete k-way partition). Lower is better-clustered.
+pub fn max_conductance(g: &Graph, labels: &[usize]) -> f64 {
+    assert_eq!(labels.len(), g.num_nodes());
+    let k = 1 + labels.iter().copied().max().unwrap_or(0);
+    let mut worst: f64 = 0.0;
+    for c in 0..k {
+        let in_s: Vec<bool> = labels.iter().map(|&l| l == c).collect();
+        if let Some(phi) = g.conductance(&in_s) {
+            worst = worst.max(phi);
+        }
+    }
+    worst
+}
+
+/// End-to-end hard clustering from a spectral embedding: row-normalize,
+/// k-means++ with a few restarts, keep the lowest-inertia result.
+pub fn cluster_embedding(embedding: &DMat, k: usize, seed: u64) -> KMeansResult {
+    let pts = row_normalize(embedding);
+    let mut best: Option<KMeansResult> = None;
+    for restart in 0..5 {
+        let r = kmeans(&pts, k, 100, seed ^ (restart as u64) << 32);
+        if best.as_ref().map(|b| r.inertia < b.inertia).unwrap_or(true) {
+            best = Some(r);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{cliques, CliqueSpec};
+    use crate::linalg::eigh;
+
+    #[test]
+    fn kmeans_separates_obvious_blobs() {
+        let mut rng = Rng::new(1);
+        let pts = DMat::from_fn(60, 2, |i, j| {
+            let center = if i < 30 { 0.0 } else { 10.0 };
+            center + 0.5 * rng.normal() + j as f64 * 0.0
+        });
+        let r = kmeans(&pts, 2, 50, 3);
+        // All first-30 in one cluster, rest in the other.
+        let c0 = r.assignments[0];
+        assert!(r.assignments[..30].iter().all(|&c| c == c0));
+        assert!(r.assignments[30..].iter().all(|&c| c != c0));
+        assert!(r.inertia < 60.0);
+    }
+
+    #[test]
+    fn kmeans_k_equals_n() {
+        let pts = DMat::from_fn(4, 2, |i, j| (i * 2 + j) as f64);
+        let r = kmeans(&pts, 4, 20, 1);
+        let mut sorted = r.assignments.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4);
+        assert!(r.inertia < 1e-12);
+    }
+
+    #[test]
+    fn ari_extremes() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+        // Permuted labels: same partition → ARI 1.
+        let b = vec![2, 2, 0, 0, 1, 1];
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+        // All-in-one vs discriminating: ARI 0.
+        let c = vec![0, 0, 0, 0, 0, 0];
+        assert!(adjusted_rand_index(&a, &c).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nmi_extremes() {
+        let a = vec![0, 0, 1, 1];
+        assert!((normalized_mutual_info(&a, &a) - 1.0).abs() < 1e-12);
+        let b = vec![1, 1, 0, 0];
+        assert!((normalized_mutual_info(&a, &b) - 1.0).abs() < 1e-12);
+        let c = vec![0, 1, 0, 1];
+        assert!(normalized_mutual_info(&a, &c).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spectral_clustering_end_to_end() {
+        // Bottom-k eigenvectors of a well-clustered graph + kmeans recovers
+        // the ground-truth cliques.
+        let spec = CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 4 };
+        let gg = cliques(&spec);
+        let e = eigh(&gg.graph.laplacian()).unwrap();
+        let emb = e.bottom_k(3);
+        let r = cluster_embedding(&emb, 3, 7);
+        let ari = adjusted_rand_index(&r.assignments, &gg.labels);
+        assert!(ari > 0.95, "ARI {ari}");
+        let nmi = normalized_mutual_info(&r.assignments, &gg.labels);
+        assert!(nmi > 0.9, "NMI {nmi}");
+        // And the recovered partition has low conductance.
+        let phi = max_conductance(&gg.graph, &r.assignments);
+        assert!(phi < 0.25, "φ {phi}");
+    }
+
+    #[test]
+    fn conductance_of_ground_truth_lower_than_random() {
+        let spec = CliqueSpec { n: 30, k: 3, max_short_circuit: 3, seed: 8 };
+        let gg = cliques(&spec);
+        let phi_true = max_conductance(&gg.graph, &gg.labels);
+        let mut rng = Rng::new(5);
+        let random: Vec<usize> = (0..30).map(|_| rng.below(3)).collect();
+        let phi_rand = max_conductance(&gg.graph, &random);
+        assert!(phi_true < phi_rand, "{phi_true} !< {phi_rand}");
+    }
+
+    #[test]
+    fn row_normalize_units() {
+        let v = DMat::from_fn(3, 2, |i, _| (i + 1) as f64);
+        let r = row_normalize(&v);
+        for i in 0..3 {
+            let n: f64 = r.row(i).iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-12);
+        }
+        // Zero rows untouched.
+        let z = row_normalize(&DMat::zeros(2, 2));
+        assert_eq!(z.max_abs(), 0.0);
+    }
+
+    #[test]
+    fn property_ari_symmetric() {
+        use crate::testkit::{check, SizeGen};
+        check(23, 20, &SizeGen { lo: 4, hi: 40 }, |&n| {
+            let mut rng = Rng::new(n as u64);
+            let a: Vec<usize> = (0..n).map(|_| rng.below(3)).collect();
+            let b: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+            (adjusted_rand_index(&a, &b) - adjusted_rand_index(&b, &a)).abs() < 1e-12
+        });
+    }
+}

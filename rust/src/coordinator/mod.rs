@@ -1,0 +1,7 @@
+//! L3 coordinator: configuration, the end-to-end SPED pipeline, the
+//! parallel walker fleet, and the experiment harnesses that regenerate
+//! every figure of the paper.
+
+pub mod experiments;
+pub mod pipeline;
+pub mod walkers;

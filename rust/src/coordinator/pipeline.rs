@@ -1,0 +1,403 @@
+//! The end-to-end SPED pipeline: graph → spectral transform → reversed
+//! solver matrix → iterative solver → bottom-k embedding → hard clusters.
+//!
+//! Two execution backends share the same orchestration:
+//!
+//! * [`Backend::Native`] — everything in-crate (dense f64).
+//! * [`Backend::Xla`] — transform construction and solver chunks run as AOT
+//!   XLA artifacts through the PJRT runtime (f32), with the graph padded to
+//!   the nearest artifact size. This is the production path: Python is
+//!   never invoked.
+
+use crate::cluster::{cluster_embedding, KMeansResult};
+use crate::graph::Graph;
+use crate::linalg::dmat::DMat;
+use crate::linalg::eigh;
+use crate::linalg::metrics::ConvergenceHistory;
+use crate::runtime::{pad_matrix, pad_rows, Runtime, XlaChunkRunner};
+use crate::solvers::{solver_by_name, DenseOp, RunConfig};
+use crate::transforms::{build_solver_matrix, BuildOptions, TransformKind};
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// Which engine executes the heavy math.
+#[derive(Clone, Debug, Default)]
+pub enum Backend {
+    #[default]
+    Native,
+    /// Artifacts directory (usually `artifacts/`).
+    Xla {
+        artifacts_dir: String,
+    },
+}
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Number of bottom eigenvectors / clusters.
+    pub k: usize,
+    pub transform: TransformKind,
+    /// `oja`, `mu-eg`, or `subspace`.
+    pub solver: String,
+    pub eta: f64,
+    pub steps: usize,
+    pub eval_every: usize,
+    /// Tolerance for the streak metric.
+    pub streak_eps: f64,
+    /// Early-stop subspace error (0 = run all steps).
+    pub stop_error: f64,
+    pub build: BuildOptions,
+    pub backend: Backend,
+    pub seed: u64,
+    /// Run k-means on the converged embedding.
+    pub do_cluster: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            k: 4,
+            transform: TransformKind::LimitNegExp { ell: 251 },
+            solver: "oja".into(),
+            eta: 0.1,
+            steps: 10_000,
+            eval_every: 50,
+            streak_eps: 1e-2,
+            stop_error: 1e-4,
+            build: BuildOptions::default(),
+            backend: Backend::Native,
+            seed: 0,
+            do_cluster: true,
+        }
+    }
+}
+
+/// Timings of the pipeline stages (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct StageTimings {
+    pub ground_truth: f64,
+    pub transform_build: f64,
+    pub solve: f64,
+    pub cluster: f64,
+}
+
+/// Pipeline output.
+pub struct PipelineOutput {
+    /// Convergence curve against the exact bottom-k eigenvectors.
+    pub history: ConvergenceHistory,
+    /// Final `n×k` embedding (bottom-k estimate, original node order).
+    pub embedding: DMat,
+    /// Hard cluster assignment (if `do_cluster`).
+    pub clustering: Option<KMeansResult>,
+    pub timings: StageTimings,
+    /// The reversal shift used (eq 8).
+    pub lambda_star: f64,
+}
+
+/// The pipeline orchestrator.
+pub struct Pipeline {
+    pub cfg: PipelineConfig,
+}
+
+impl Pipeline {
+    pub fn new(cfg: PipelineConfig) -> Pipeline {
+        Pipeline { cfg }
+    }
+
+    /// Run end-to-end on `graph`.
+    pub fn run(&self, graph: &Graph) -> Result<PipelineOutput> {
+        let cfg = &self.cfg;
+        let n = graph.num_nodes();
+        if cfg.k == 0 || cfg.k > n {
+            bail!("k={} out of range for n={n}", cfg.k);
+        }
+        let mut timings = StageTimings::default();
+        let l = graph.laplacian();
+
+        // Ground truth for metrics (the oracle; the thing SPED avoids
+        // needing *during* iteration — but the experiment protocol of §5.2
+        // measures against it).
+        let t0 = Instant::now();
+        let e = eigh(&l).context("ground-truth eigendecomposition")?;
+        let v_star = e.bottom_k(cfg.k);
+        let values = e.values[..cfg.k].to_vec();
+        timings.ground_truth = t0.elapsed().as_secs_f64();
+
+        match &cfg.backend {
+            Backend::Native => self.run_native(graph, &l, &v_star, &values, timings),
+            Backend::Xla { artifacts_dir } => {
+                let rt = Runtime::load_dir(artifacts_dir)?;
+                self.run_xla(&rt, graph, &l, &v_star, &values, timings)
+            }
+        }
+    }
+
+    fn run_native(
+        &self,
+        graph: &Graph,
+        l: &DMat,
+        v_star: &DMat,
+        values: &[f64],
+        mut timings: StageTimings,
+    ) -> Result<PipelineOutput> {
+        let cfg = &self.cfg;
+        let t0 = Instant::now();
+        let sm = build_solver_matrix(l, cfg.transform, &cfg.build)?;
+        timings.transform_build = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let mut solver = solver_by_name(&cfg.solver, cfg.eta)?;
+        let mut op = DenseOp { m: sm.m };
+        let run_cfg = RunConfig {
+            steps: cfg.steps,
+            eval_every: cfg.eval_every,
+            streak_eps: cfg.streak_eps,
+            stop_error: cfg.stop_error,
+            seed: cfg.seed,
+            // Degeneracy-aware streak: symmetric workloads (3-room MDP)
+            // have exactly tied eigenvalues.
+            group_values: Some(values.to_vec()),
+        };
+        let (mut history, embedding) =
+            crate::solvers::run_convergence_full(solver.as_mut(), &mut op, v_star, &run_cfg);
+        history.label = format!("{}:{}", cfg.solver, cfg.transform.name());
+        timings.solve = t0.elapsed().as_secs_f64();
+        let _ = graph;
+
+        let t0 = Instant::now();
+        let clustering = if cfg.do_cluster {
+            Some(cluster_embedding(&embedding, cfg.k, cfg.seed ^ 0xC1u64))
+        } else {
+            None
+        };
+        timings.cluster = t0.elapsed().as_secs_f64();
+
+        Ok(PipelineOutput { history, embedding, clustering, timings, lambda_star: sm.lambda_star })
+    }
+
+    fn run_xla(
+        &self,
+        rt: &Runtime,
+        graph: &Graph,
+        l: &DMat,
+        v_star: &DMat,
+        values: &[f64],
+        mut timings: StageTimings,
+    ) -> Result<PipelineOutput> {
+        let cfg = &self.cfg;
+        let n = graph.num_nodes();
+
+        // ---- transform build (XLA artifacts) ----
+        let t0 = Instant::now();
+        let m_unpadded = self.build_m_xla(rt, l)?;
+        timings.transform_build = t0.elapsed().as_secs_f64();
+
+        // ---- solver chunks (XLA) ----
+        let chunk_kind = match cfg.solver.as_str() {
+            "oja" => "oja_chunk",
+            "mu-eg" | "eg" | "mu_eg" => "eg_chunk",
+            other => bail!("XLA backend supports oja / mu-eg, not {other:?}"),
+        };
+        let artifact = rt.best_fit(chunk_kind, n)?;
+        let size = artifact.meta.n;
+        let ak = artifact.meta.k;
+        if cfg.k > ak {
+            bail!("k={} exceeds artifact k={ak}", cfg.k);
+        }
+        // Pad M with diagonal below its spectrum floor so padding dims rank
+        // last; pad V* with zero rows (padded dims have zero ground-truth
+        // weight; metrics on the first cfg.k columns are unaffected).
+        let m_padded = pad_matrix(&m_unpadded, size, -1.0);
+        // Ground truth padded to artifact k: extra columns use the next
+        // exact eigenvectors so in-graph metrics stay meaningful.
+        let e_full = eigh(l)?;
+        let v_star_wide = pad_rows(&e_full.bottom_k(ak.min(n)), size);
+        let v_star_wide = if ak <= n {
+            v_star_wide
+        } else {
+            // Degenerate tiny-graph case: right-pad columns with unit axes.
+            let mut w = DMat::zeros(size, ak);
+            for i in 0..size {
+                for j in 0..v_star_wide.cols() {
+                    w[(i, j)] = v_star_wide[(i, j)];
+                }
+            }
+            for (extra, j) in (v_star_wide.cols()..ak).enumerate() {
+                w[(n + extra, j)] = 1.0;
+            }
+            w
+        };
+
+        let t0 = Instant::now();
+        let runner = XlaChunkRunner::new(artifact.clone(), &m_padded)?;
+        let mut v = pad_rows(&crate::solvers::random_init(n, ak, cfg.seed), size);
+        let mut history = ConvergenceHistory::new(format!(
+            "{}:{}:xla{}",
+            cfg.solver,
+            cfg.transform.name(),
+            size
+        ));
+        // Step-0 metrics (native measurement, first cfg.k columns).
+        let v0 = take_embedding(&v, n, cfg.k);
+        let streak_of = |vk: &DMat| {
+            crate::linalg::metrics::eigenvector_streak_grouped(
+                v_star,
+                values,
+                vk,
+                cfg.streak_eps,
+                1e-9,
+            )
+        };
+        history.push(
+            0,
+            crate::linalg::metrics::subspace_error(v_star, &v0),
+            streak_of(&v0),
+        );
+        let t = artifact.meta.t;
+        let mut step = 0;
+        while step < cfg.steps {
+            let out = runner.run_chunk(&v, &v_star_wide, cfg.eta)?;
+            v = out.v;
+            // In-graph metrics are per chunk-step on the padded/wide bundle;
+            // record the k-restricted native metrics at chunk boundaries
+            // (cheap: n×k) and keep the in-graph series for diagnostics.
+            step += t;
+            let vk = take_embedding(&v, n, cfg.k);
+            let err = crate::linalg::metrics::subspace_error(v_star, &vk);
+            let streak = streak_of(&vk);
+            history.push(step, err, streak);
+            if cfg.stop_error > 0.0 && streak == cfg.k && err < cfg.stop_error {
+                break;
+            }
+        }
+        timings.solve = t0.elapsed().as_secs_f64();
+
+        let embedding = take_embedding(&v, n, cfg.k);
+        let t0 = Instant::now();
+        let clustering = if cfg.do_cluster {
+            Some(cluster_embedding(&embedding, cfg.k, cfg.seed ^ 0xC1u64))
+        } else {
+            None
+        };
+        timings.cluster = t0.elapsed().as_secs_f64();
+        let lambda_star = cfg.transform.lambda_star(
+            crate::linalg::funcs::power_lambda_max(l, cfg.build.power_iters) * cfg.build.safety,
+        );
+        Ok(PipelineOutput { history, embedding, clustering, timings, lambda_star })
+    }
+
+    /// Build `M = λ*I − f(L)` using XLA artifacts where the transform is a
+    /// series (poly_horner / matpow); exact transforms fall back to the
+    /// native eigendecomposition (they are the oracle baselines).
+    fn build_m_xla(&self, rt: &Runtime, l: &DMat) -> Result<DMat> {
+        let cfg = &self.cfg;
+        let n = l.rows();
+        let lam_est =
+            crate::linalg::funcs::power_lambda_max(l, cfg.build.power_iters) * cfg.build.safety;
+        let rho = if lam_est > 0.0 { lam_est } else { 1.0 };
+        let lambda_star = cfg.transform.lambda_star(rho);
+        let f_l = match cfg.transform {
+            TransformKind::Identity => l.clone(),
+            TransformKind::MatrixLog { .. } | TransformKind::NegExp => cfg.transform.build(l)?,
+            TransformKind::TaylorLog { .. } | TransformKind::TaylorNegExp { .. } => {
+                let series = cfg.transform.series().expect("series kind");
+                let artifact = rt.best_fit("poly_horner", n)?;
+                let l_pad = pad_matrix(l, artifact.meta.n, 0.0);
+                let f_pad = crate::runtime::xla_poly_build(
+                    &artifact,
+                    &l_pad,
+                    series.shift,
+                    &series.coeffs,
+                )?;
+                unpad(&f_pad, n)
+            }
+            TransformKind::LimitNegExp { ell } => {
+                let artifact = rt.best_fit("matpow", n)?;
+                // B = I − L/ℓ on the padded matrix (pad diag 0 → B pad diag 1
+                // → power stays 1; unpad drops it anyway).
+                let mut b = pad_matrix(l, artifact.meta.n, 0.0);
+                b.scale(-1.0 / ell as f64);
+                b.add_diag(1.0);
+                let p = crate::runtime::xla_matpow(&artifact, &b, ell as u64)?;
+                let mut f = unpad(&p, n);
+                f.scale(-1.0);
+                f
+            }
+        };
+        let mut m = f_l;
+        m.scale(-1.0);
+        m.add_diag(lambda_star);
+        Ok(m)
+    }
+}
+
+/// First `k` columns / `n` rows of a padded bundle.
+fn take_embedding(v: &DMat, n: usize, k: usize) -> DMat {
+    DMat::from_fn(n, k, |i, j| v[(i, j)])
+}
+
+/// Top-left `n×n` block.
+fn unpad(m: &DMat, n: usize) -> DMat {
+    DMat::from_fn(n, n, |i, j| m[(i, j)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::adjusted_rand_index;
+    use crate::graph::gen::{cliques, CliqueSpec};
+
+    #[test]
+    fn native_pipeline_end_to_end() {
+        let gg = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 1 });
+        let cfg = PipelineConfig {
+            k: 3,
+            transform: TransformKind::NegExp,
+            solver: "oja".into(),
+            eta: 0.1,
+            steps: 5000,
+            eval_every: 50,
+            stop_error: 1e-6,
+            ..Default::default()
+        };
+        let out = Pipeline::new(cfg).run(&gg.graph).unwrap();
+        let last = out.history.last().unwrap();
+        assert!(last.subspace_error < 1e-3, "err {}", last.subspace_error);
+        let ari = adjusted_rand_index(
+            &out.clustering.as_ref().unwrap().assignments,
+            &gg.labels,
+        );
+        assert!(ari > 0.9, "ARI {ari}");
+        assert!(out.timings.ground_truth > 0.0);
+    }
+
+    #[test]
+    fn pipeline_rejects_bad_k() {
+        let gg = cliques(&CliqueSpec { n: 10, k: 2, max_short_circuit: 1, seed: 2 });
+        let cfg = PipelineConfig { k: 0, ..Default::default() };
+        assert!(Pipeline::new(cfg).run(&gg.graph).is_err());
+        let cfg = PipelineConfig { k: 11, ..Default::default() };
+        assert!(Pipeline::new(cfg).run(&gg.graph).is_err());
+    }
+
+    #[test]
+    fn limit_series_native_pipeline_matches_exact() {
+        // Series transform converges to (nearly) the same subspace as exact.
+        let gg = cliques(&CliqueSpec { n: 24, k: 2, max_short_circuit: 1, seed: 3 });
+        let mk = |transform| PipelineConfig {
+            k: 2,
+            transform,
+            solver: "subspace".into(),
+            steps: 300,
+            eval_every: 10,
+            stop_error: 1e-9,
+            do_cluster: false,
+            ..Default::default()
+        };
+        let exact = Pipeline::new(mk(TransformKind::NegExp)).run(&gg.graph).unwrap();
+        let series =
+            Pipeline::new(mk(TransformKind::LimitNegExp { ell: 251 })).run(&gg.graph).unwrap();
+        let err = crate::linalg::metrics::subspace_error(&exact.embedding, &series.embedding);
+        assert!(err < 1e-3, "exact vs series subspace err {err}");
+    }
+}

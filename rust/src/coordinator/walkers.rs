@@ -1,0 +1,192 @@
+//! The parallel walker fleet (§4.3): a leader/worker pool estimating
+//! Laplacian powers from random walks, with bounded-queue backpressure.
+//!
+//! Structure mirrors a distributed deployment: the leader enqueues
+//! [`WalkJob`]s (length, batch size, RNG stream), `d` walkers each own a
+//! [`WalkEngine`] clone of the graph topology and push partial accumulators
+//! back through a bounded channel; the leader merges partials into the
+//! running estimate. On this image (1 core) the speedup is structural, not
+//! wall-clock; the walk-estimator bench reports per-walker throughput.
+
+use crate::graph::Graph;
+use crate::linalg::DMat;
+use crate::util::pool::JobPool;
+use crate::util::rng::Rng;
+use crate::walks::{EstimatorStats, SampleMethod, WalkEngine, WalkSample};
+use std::sync::Arc;
+
+/// A unit of walker work: `batch` trials of length-`len` walks.
+#[derive(Clone, Copy, Debug)]
+pub struct WalkJob {
+    pub len: usize,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+/// A walker's partial result: un-normalized accumulator + stats.
+pub struct WalkPartial {
+    pub acc: DMat,
+    pub stats: EstimatorStats,
+}
+
+/// Configuration of the fleet.
+#[derive(Clone, Copy, Debug)]
+pub struct WalkerPoolConfig {
+    pub workers: usize,
+    /// Bounded queue depth (jobs and results) — the backpressure knob.
+    pub backlog: usize,
+    pub method: SampleMethod,
+}
+
+impl Default for WalkerPoolConfig {
+    fn default() -> Self {
+        WalkerPoolConfig { workers: 4, backlog: 8, method: SampleMethod::Importance }
+    }
+}
+
+/// Leader-side handle to the walker fleet for one graph.
+pub struct WalkerPool {
+    pool: JobPool<WalkJob, WalkPartial>,
+    n: usize,
+    backlog: usize,
+}
+
+impl WalkerPool {
+    /// Spawn the fleet. The graph is shared read-only (`Arc`); each worker
+    /// builds its own edge-incidence index once at startup — the same
+    /// "replicate topology to every walker host" a distributed system does.
+    pub fn spawn(graph: Arc<Graph>, cfg: WalkerPoolConfig) -> WalkerPool {
+        let n = graph.num_nodes();
+        let method = cfg.method;
+        let pool = JobPool::new(cfg.workers, cfg.backlog, move |wid, job: WalkJob| {
+            // The engine (edge-incidence CSR) is rebuilt per job: O(|E|)
+            // construction amortized over ≥1k-trial batches. A longer-lived
+            // per-thread cache would need self-referential storage against
+            // the Arc'd graph; the bench `walk_estimator` shows construction
+            // is <2% of a 1k-walk job.
+            let engine = WalkEngine::new(&graph);
+            let mut rng = Rng::new(job.seed ^ ((wid as u64 + 1) << 48));
+            let mut acc = DMat::zeros(n, n);
+            let mut stats = EstimatorStats::default();
+            let mut walk = WalkSample { edges: vec![], alpha: vec![], prob: vec![] };
+            for _ in 0..job.batch {
+                engine.sample_walk_into(job.len, &mut rng, &mut walk);
+                stats.trials += 1;
+                if let Some((ea, eb, w)) =
+                    engine.prefix_contribution(&walk, job.len, method, &mut rng)
+                {
+                    stats.accepted += 1;
+                    if w != 0.0 {
+                        stats.weight_stats.push(w);
+                    }
+                    add_outer(&mut acc, &graph, ea, eb, w);
+                }
+            }
+            WalkPartial { acc, stats }
+        });
+        WalkerPool { pool, n, backlog: cfg.backlog }
+    }
+
+    /// Distribute `total_walks` length-`len` trials over `jobs` jobs, block
+    /// for all partials, and return the normalized unbiased estimate of
+    /// `L^len` plus merged stats.
+    pub fn estimate_power(
+        &self,
+        len: usize,
+        total_walks: usize,
+        jobs: usize,
+        seed: u64,
+    ) -> (DMat, EstimatorStats) {
+        let jobs = jobs.max(1);
+        let batch = total_walks.div_ceil(jobs);
+        let mut submitted = 0usize;
+        let mut acc = DMat::zeros(self.n, self.n);
+        let mut stats = EstimatorStats::default();
+        let mut outstanding = 0usize;
+        let mut job_idx = 0u64;
+        // Never keep more than `backlog` jobs outstanding: the job and
+        // result queues each hold `backlog` entries, so a deeper prime
+        // would block `submit` while workers block on full result queues —
+        // a leader/worker deadlock.
+        let max_outstanding = self.backlog.max(1);
+        while submitted < total_walks || outstanding > 0 {
+            // Keep the queue primed, then drain one result (backpressure-
+            // friendly interleave).
+            while submitted < total_walks && outstanding < max_outstanding {
+                let this_batch = batch.min(total_walks - submitted);
+                self.pool.submit(WalkJob {
+                    len,
+                    batch: this_batch,
+                    seed: seed ^ job_idx.wrapping_mul(0x9E3779B97F4A7C15),
+                });
+                submitted += this_batch;
+                outstanding += 1;
+                job_idx += 1;
+            }
+            let partial = self.pool.recv();
+            acc.axpy(1.0, &partial.acc);
+            stats = stats.merge(partial.stats);
+            outstanding -= 1;
+        }
+        acc.scale(1.0 / stats.trials.max(1) as f64);
+        (acc, stats)
+    }
+
+    /// Shut the fleet down, joining all workers.
+    pub fn shutdown(self) {
+        let _ = self.pool.shutdown();
+    }
+}
+
+#[inline]
+fn add_outer(acc: &mut DMat, g: &Graph, ea: u32, eb: u32, weight: f64) {
+    if weight == 0.0 {
+        return;
+    }
+    let a = g.edges()[ea as usize];
+    let b = g.edges()[eb as usize];
+    acc[(a.u as usize, b.u as usize)] += weight;
+    acc[(a.u as usize, b.v as usize)] -= weight;
+    acc[(a.v as usize, b.u as usize)] -= weight;
+    acc[(a.v as usize, b.v as usize)] += weight;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{cliques, CliqueSpec};
+    use crate::linalg::matmul::matmul;
+
+    #[test]
+    fn fleet_estimate_matches_truth() {
+        let g = Arc::new(
+            cliques(&CliqueSpec { n: 16, k: 2, max_short_circuit: 1, seed: 2 }).graph,
+        );
+        let l = g.laplacian();
+        let l2 = matmul(&l, &l);
+        let pool = WalkerPool::spawn(g.clone(), WalkerPoolConfig::default());
+        let (est, stats) = pool.estimate_power(2, 60_000, 12, 7);
+        pool.shutdown();
+        assert_eq!(stats.trials, 60_000);
+        let err = (&est - &l2).max_abs() / l2.max_abs();
+        assert!(err < 0.15, "rel err {err}");
+    }
+
+    #[test]
+    fn fleet_handles_more_jobs_than_backlog() {
+        let g = Arc::new(
+            cliques(&CliqueSpec { n: 12, k: 2, max_short_circuit: 1, seed: 3 }).graph,
+        );
+        let l = g.laplacian();
+        let pool = WalkerPool::spawn(
+            g.clone(),
+            WalkerPoolConfig { workers: 2, backlog: 2, method: SampleMethod::Importance },
+        );
+        // 40 jobs through a backlog of 2 — exercises the interleave.
+        let (est, stats) = pool.estimate_power(1, 40_000, 40, 9);
+        pool.shutdown();
+        assert_eq!(stats.trials, 40_000);
+        let err = (&est - &l).max_abs() / l.max_abs();
+        assert!(err < 0.1, "rel err {err}");
+    }
+}

@@ -1,0 +1,283 @@
+//! Graph generators for the paper's workloads.
+//!
+//! * [`cliques`] — §5.4: `n` nodes split into `k` cliques joined by a random
+//!   number (0–25) of "short-circuit" edges.
+//! * [`sbm`] — stochastic block model (Holland et al. 1983; the related-work
+//!   setting of Saade et al.).
+//! * [`erdos_renyi`], [`grid2d`], [`path`], [`ring`], [`barbell`],
+//!   [`ring_of_cliques`] — supporting topologies for tests and ablations.
+//!
+//! Generators that imply a ground-truth clustering return it as `labels`.
+
+use super::Graph;
+use crate::util::rng::Rng;
+
+/// A generated graph plus its ground-truth cluster labels (when defined).
+#[derive(Clone, Debug)]
+pub struct GeneratedGraph {
+    pub graph: Graph,
+    /// Ground-truth cluster id per node (empty when undefined).
+    pub labels: Vec<usize>,
+}
+
+/// Parameters for the §5.4 well-clustered clique construction.
+#[derive(Clone, Copy, Debug)]
+pub struct CliqueSpec {
+    /// Total node count; split as evenly as possible across cliques.
+    pub n: usize,
+    /// Number of cliques.
+    pub k: usize,
+    /// Max "short-circuit" edges between each pair of cliques (paper: 25).
+    pub max_short_circuit: usize,
+    pub seed: u64,
+}
+
+/// §5.4 generator: `k` cliques connected by `U{0..=max_short_circuit}`
+/// random inter-clique edges per clique pair.
+pub fn cliques(spec: &CliqueSpec) -> GeneratedGraph {
+    assert!(spec.k >= 1 && spec.n >= spec.k, "need n ≥ k ≥ 1");
+    let mut rng = Rng::new(spec.seed);
+    let mut labels = vec![0usize; spec.n];
+    // Split nodes: first (n % k) cliques get one extra node.
+    let base = spec.n / spec.k;
+    let extra = spec.n % spec.k;
+    let mut ranges = Vec::with_capacity(spec.k);
+    let mut start = 0;
+    for c in 0..spec.k {
+        let size = base + usize::from(c < extra);
+        ranges.push(start..start + size);
+        for v in start..start + size {
+            labels[v] = c;
+        }
+        start += size;
+    }
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    // Intra-clique: complete subgraphs.
+    for r in &ranges {
+        let nodes: Vec<usize> = r.clone().collect();
+        for i in 0..nodes.len() {
+            for j in (i + 1)..nodes.len() {
+                pairs.push((nodes[i], nodes[j]));
+            }
+        }
+    }
+    // Inter-clique short circuits.
+    for a in 0..spec.k {
+        for b in (a + 1)..spec.k {
+            let count = rng.below(spec.max_short_circuit + 1);
+            for _ in 0..count {
+                let u = rng.range(ranges[a].start, ranges[a].end);
+                let v = rng.range(ranges[b].start, ranges[b].end);
+                pairs.push((u, v));
+            }
+        }
+    }
+    let graph = Graph::from_pairs(spec.n, &pairs).expect("valid clique graph");
+    GeneratedGraph { graph, labels }
+}
+
+/// Stochastic block model: `sizes[c]` nodes per block, edge probability
+/// `p_in` within a block and `p_out` across blocks.
+pub fn sbm(sizes: &[usize], p_in: f64, p_out: f64, seed: u64) -> GeneratedGraph {
+    let n: usize = sizes.iter().sum();
+    let mut labels = Vec::with_capacity(n);
+    for (c, &s) in sizes.iter().enumerate() {
+        labels.extend(std::iter::repeat(c).take(s));
+    }
+    let mut rng = Rng::new(seed);
+    let mut pairs = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let p = if labels[i] == labels[j] { p_in } else { p_out };
+            if rng.bernoulli(p) {
+                pairs.push((i, j));
+            }
+        }
+    }
+    GeneratedGraph { graph: Graph::from_pairs(n, &pairs).unwrap(), labels }
+}
+
+/// Erdős–Rényi G(n, p).
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> GeneratedGraph {
+    let mut rng = Rng::new(seed);
+    let mut pairs = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.bernoulli(p) {
+                pairs.push((i, j));
+            }
+        }
+    }
+    GeneratedGraph { graph: Graph::from_pairs(n, &pairs).unwrap(), labels: vec![] }
+}
+
+/// 2-D 4-connected grid graph `rows × cols`.
+pub fn grid2d(rows: usize, cols: usize) -> GeneratedGraph {
+    let at = |r: usize, c: usize| r * cols + c;
+    let mut pairs = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                pairs.push((at(r, c), at(r, c + 1)));
+            }
+            if r + 1 < rows {
+                pairs.push((at(r, c), at(r + 1, c)));
+            }
+        }
+    }
+    GeneratedGraph { graph: Graph::from_pairs(rows * cols, &pairs).unwrap(), labels: vec![] }
+}
+
+/// Path graph P_n.
+pub fn path(n: usize) -> GeneratedGraph {
+    let pairs: Vec<(usize, usize)> = (0..n.saturating_sub(1)).map(|i| (i, i + 1)).collect();
+    GeneratedGraph { graph: Graph::from_pairs(n, &pairs).unwrap(), labels: vec![] }
+}
+
+/// Cycle graph C_n.
+pub fn ring(n: usize) -> GeneratedGraph {
+    assert!(n >= 3);
+    let mut pairs: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+    pairs.push((n - 1, 0));
+    GeneratedGraph { graph: Graph::from_pairs(n, &pairs).unwrap(), labels: vec![] }
+}
+
+/// Barbell: two cliques of size `m` joined by a single bridge edge —
+/// the canonical tiny-λ₂ example.
+pub fn barbell(m: usize) -> GeneratedGraph {
+    assert!(m >= 2);
+    let mut pairs = Vec::new();
+    for i in 0..m {
+        for j in (i + 1)..m {
+            pairs.push((i, j));
+            pairs.push((m + i, m + j));
+        }
+    }
+    pairs.push((m - 1, m));
+    let mut labels = vec![0; m];
+    labels.extend(std::iter::repeat(1).take(m));
+    GeneratedGraph { graph: Graph::from_pairs(2 * m, &pairs).unwrap(), labels }
+}
+
+/// Ring of `k` cliques of size `m`, adjacent cliques joined by one edge.
+pub fn ring_of_cliques(k: usize, m: usize, _seed: u64) -> GeneratedGraph {
+    assert!(k >= 3 && m >= 2);
+    let mut pairs = Vec::new();
+    let mut labels = vec![0usize; k * m];
+    for c in 0..k {
+        let base = c * m;
+        for i in 0..m {
+            labels[base + i] = c;
+            for j in (i + 1)..m {
+                pairs.push((base + i, base + j));
+            }
+        }
+        let next = ((c + 1) % k) * m;
+        pairs.push((base + m - 1, next));
+    }
+    GeneratedGraph { graph: Graph::from_pairs(k * m, &pairs).unwrap(), labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigh;
+
+    #[test]
+    fn cliques_structure() {
+        let spec = CliqueSpec { n: 40, k: 4, max_short_circuit: 5, seed: 1 };
+        let g = cliques(&spec);
+        assert_eq!(g.graph.num_nodes(), 40);
+        assert_eq!(g.labels.len(), 40);
+        // Each clique of 10 contributes C(10,2)=45 intra edges.
+        assert!(g.graph.num_edges() >= 4 * 45);
+        // Short circuits bounded: ≤ C(4,2)·5 extra.
+        assert!(g.graph.num_edges() <= 4 * 45 + 6 * 5);
+        // All 4 labels used.
+        let mut seen = g.labels.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn cliques_uneven_split() {
+        let g = cliques(&CliqueSpec { n: 10, k: 3, max_short_circuit: 0, seed: 2 });
+        // Sizes 4,3,3 — zero short circuits → 3 components.
+        assert_eq!(g.graph.num_components(), 3);
+        let counts = (0..3)
+            .map(|c| g.labels.iter().filter(|&&l| l == c).count())
+            .collect::<Vec<_>>();
+        assert_eq!(counts, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn well_clustered_graph_has_small_bottom_eigenvalues() {
+        // The premise of the paper: k clusters → k eigenvalues ≪ 1.
+        let g = cliques(&CliqueSpec { n: 48, k: 3, max_short_circuit: 2, seed: 7 });
+        let l = g.graph.laplacian();
+        let e = eigh(&l).unwrap();
+        assert!(e.values[0].abs() < 1e-9); // λ₁ = 0 always
+        assert!(e.values[1] < 1.0, "λ₂ = {}", e.values[1]);
+        assert!(e.values[2] < 1.0, "λ₃ = {}", e.values[2]);
+        assert!(e.values[3] > 1.0, "λ₄ = {} should jump", e.values[3]);
+    }
+
+    #[test]
+    fn sbm_respects_block_structure() {
+        let g = sbm(&[20, 20], 0.9, 0.02, 3);
+        assert_eq!(g.graph.num_nodes(), 40);
+        let intra = g
+            .graph
+            .edges()
+            .iter()
+            .filter(|e| g.labels[e.u as usize] == g.labels[e.v as usize])
+            .count();
+        let inter = g.graph.num_edges() - intra;
+        assert!(intra > 5 * inter, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn grid_and_path_and_ring_counts() {
+        assert_eq!(grid2d(3, 4).graph.num_edges(), 3 * 3 + 2 * 4);
+        assert_eq!(path(5).graph.num_edges(), 4);
+        assert_eq!(ring(5).graph.num_edges(), 5);
+        assert_eq!(ring(5).graph.num_components(), 1);
+    }
+
+    #[test]
+    fn barbell_bottleneck() {
+        let g = barbell(6);
+        assert_eq!(g.graph.num_nodes(), 12);
+        assert_eq!(g.graph.num_edges(), 2 * 15 + 1);
+        let e = eigh(&g.graph.laplacian()).unwrap();
+        // λ₂ is tiny relative to λ_max — the eigengap problem in miniature.
+        assert!(e.values[1] / e.lambda_max() < 0.05);
+    }
+
+    #[test]
+    fn ring_of_cliques_connected() {
+        let g = ring_of_cliques(4, 5, 0);
+        assert_eq!(g.graph.num_nodes(), 20);
+        assert_eq!(g.graph.num_components(), 1);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = cliques(&CliqueSpec { n: 30, k: 3, max_short_circuit: 8, seed: 11 });
+        let b = cliques(&CliqueSpec { n: 30, k: 3, max_short_circuit: 8, seed: 11 });
+        assert_eq!(a.graph.num_edges(), b.graph.num_edges());
+        assert_eq!(a.graph.edges(), b.graph.edges());
+    }
+
+    #[test]
+    fn property_laplacian_psd_over_generators() {
+        use crate::testkit::{check, SizeGen};
+        check(21, 8, &SizeGen { lo: 8, hi: 40 }, |&n| {
+            let g = cliques(&CliqueSpec { n, k: (n / 8).max(1), max_short_circuit: 3, seed: n as u64 });
+            let e = eigh(&g.graph.laplacian()).unwrap();
+            // PSD + ones-vector kernel.
+            e.values[0] > -1e-9 && e.values[0].abs() < 1e-9
+        });
+    }
+}

@@ -1,0 +1,276 @@
+//! The incidence-matrix view of a graph (§2 of the paper) and the
+//! edge-vector inner products of **Table 1**.
+//!
+//! Each edge `e = (i, j)` with `i < j` is a row `x_e ∈ ℝ^{|V|}` with
+//! `x_e[i] = +1`, `x_e[j] = −1`, so `L = XᵀWX = Σ_e w_e x_e x_eᵀ`.
+//! Inner products of edge vectors take values in `{0, −1, +1, 2}`
+//! depending on how the two edges touch (Table 1) — the combinatorial fact
+//! behind the random-walk estimator of `L^ℓ` (eq 12).
+
+use super::{Edge, Graph};
+use crate::linalg::DMat;
+
+/// Dense incidence matrix `X` (|E| × |V|). Rows follow `graph.edges()`
+/// order; weights are *not* folded in (use `weighted_incidence` for
+/// `W^{1/2}X`).
+pub fn incidence_matrix(g: &Graph) -> DMat {
+    let mut x = DMat::zeros(g.num_edges(), g.num_nodes());
+    for (r, e) in g.edges().iter().enumerate() {
+        x[(r, e.u as usize)] = e.w.sqrt(); // canonical +1 at min index, scaled
+        x[(r, e.v as usize)] = -e.w.sqrt();
+    }
+    x
+}
+
+/// Unweighted incidence matrix (entries exactly ±1).
+pub fn incidence_matrix_unweighted(g: &Graph) -> DMat {
+    let mut x = DMat::zeros(g.num_edges(), g.num_nodes());
+    for (r, e) in g.edges().iter().enumerate() {
+        x[(r, e.u as usize)] = 1.0;
+        x[(r, e.v as usize)] = -1.0;
+    }
+    x
+}
+
+/// The five Table 1 cases for a pair of edges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgePairKind {
+    /// No shared endpoint → inner product 0.
+    Disconnected,
+    /// `i → j → l`: the head of one is the tail of the other → −1.
+    Serial,
+    /// `i → j ← l`: both heads coincide → +1.
+    Converging,
+    /// `i ← j → l`: both tails coincide → +1.
+    Diverging,
+    /// Identical edge `i ⇒ j` → +2.
+    Repeated,
+}
+
+/// Classify an (unweighted) edge pair per Table 1. Edge direction is the
+/// canonical one (low index → high index), *not* a walk direction.
+pub fn classify_pair(a: Edge, b: Edge) -> EdgePairKind {
+    if a.u == b.u && a.v == b.v {
+        return EdgePairKind::Repeated;
+    }
+    let tail_shared = a.u == b.u; // both +1 at same node
+    let head_shared = a.v == b.v; // both −1 at same node
+    let a_head_b_tail = a.v == b.u;
+    let a_tail_b_head = a.u == b.v;
+    if tail_shared {
+        EdgePairKind::Diverging
+    } else if head_shared {
+        EdgePairKind::Converging
+    } else if a_head_b_tail || a_tail_b_head {
+        EdgePairKind::Serial
+    } else {
+        EdgePairKind::Disconnected
+    }
+}
+
+/// The Table 1 inner-product value `x_aᵀ x_b` for unit-weight edges.
+pub fn inner_product(a: Edge, b: Edge) -> f64 {
+    match classify_pair(a, b) {
+        EdgePairKind::Disconnected => 0.0,
+        EdgePairKind::Serial => -1.0,
+        EdgePairKind::Converging | EdgePairKind::Diverging => 1.0,
+        EdgePairKind::Repeated => 2.0,
+    }
+}
+
+/// Brute-force inner product from the incidence definition (oracle used by
+/// tests and the Table 1 bench).
+pub fn inner_product_dense(a: Edge, b: Edge, n: usize) -> f64 {
+    let mut xa = vec![0.0f64; n];
+    let mut xb = vec![0.0f64; n];
+    xa[a.u as usize] = 1.0;
+    xa[a.v as usize] = -1.0;
+    xb[b.u as usize] = 1.0;
+    xb[b.v as usize] = -1.0;
+    crate::linalg::dmat::dot(&xa, &xb)
+}
+
+/// The **edge-incidence graph** (footnote 1 of the paper): a new graph whose
+/// nodes are the edges of `g`; two nodes are adjacent iff the corresponding
+/// edges share an endpoint. Every node also carries a self-loop (the
+/// `Repeated` case participates in walks). Stored in CSR form; adjacency
+/// lists *include* the self-loop as the first entry.
+#[derive(Clone, Debug)]
+pub struct EdgeIncidenceGraph {
+    /// Number of original-graph edges (= node count here).
+    pub num_edges: usize,
+    offsets: Vec<usize>,
+    /// Adjacent edge ids (self-loop first, then proper neighbors).
+    adjacency: Vec<u32>,
+}
+
+impl EdgeIncidenceGraph {
+    pub fn build(g: &Graph) -> EdgeIncidenceGraph {
+        let m = g.num_edges();
+        // edge ids incident to each node of g
+        let mut node_edges: Vec<Vec<u32>> = vec![Vec::new(); g.num_nodes()];
+        for (idx, e) in g.edges().iter().enumerate() {
+            node_edges[e.u as usize].push(idx as u32);
+            node_edges[e.v as usize].push(idx as u32);
+        }
+        let mut offsets = Vec::with_capacity(m + 1);
+        let mut adjacency: Vec<u32> = Vec::new();
+        offsets.push(0);
+        let mut scratch: Vec<u32> = Vec::new();
+        for (idx, e) in g.edges().iter().enumerate() {
+            scratch.clear();
+            scratch.push(idx as u32); // self-loop
+            for &other in node_edges[e.u as usize]
+                .iter()
+                .chain(node_edges[e.v as usize].iter())
+            {
+                if other != idx as u32 {
+                    scratch.push(other);
+                }
+            }
+            // Dedup (an edge sharing *both* endpoints can't occur in a simple
+            // graph, but parallel edge ids from the two endpoint lists can't
+            // either — keep the dedup for safety with future multigraphs).
+            scratch[1..].sort_unstable();
+            scratch.dedup();
+            adjacency.extend_from_slice(&scratch);
+            offsets.push(adjacency.len());
+        }
+        EdgeIncidenceGraph { num_edges: m, offsets, adjacency }
+    }
+
+    /// Neighbors of edge-node `e` in the incidence graph (self-loop
+    /// included).
+    pub fn neighbors(&self, e: usize) -> &[u32] {
+        &self.adjacency[self.offsets[e]..self.offsets[e + 1]]
+    }
+
+    /// Degree in the incidence graph (self-loop counts once).
+    pub fn degree(&self, e: usize) -> usize {
+        self.offsets[e + 1] - self.offsets[e]
+    }
+
+    /// Max degree over all edge-nodes.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_edges).map(|e| self.degree(e)).max().unwrap_or(0)
+    }
+}
+
+/// Upper bound on the edge-incidence-graph degree from the original graph's
+/// max degree: `deg*_inc = 2·deg* − 1` (§4.3; both endpoints contribute at
+/// most deg* incident edges, the edge itself is double-counted once, and the
+/// self-loop replaces it).
+pub fn incidence_degree_bound(max_degree_original: usize) -> usize {
+    if max_degree_original == 0 {
+        0
+    } else {
+        2 * max_degree_original - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(u: u32, v: u32) -> Edge {
+        Edge { u, v, w: 1.0 }
+    }
+
+    #[test]
+    fn table1_all_cases() {
+        // disconnected: 0→1, 2→3
+        assert_eq!(classify_pair(e(0, 1), e(2, 3)), EdgePairKind::Disconnected);
+        assert_eq!(inner_product(e(0, 1), e(2, 3)), 0.0);
+        // serial: 0→1, 1→2 (head of first is tail of second)
+        assert_eq!(classify_pair(e(0, 1), e(1, 2)), EdgePairKind::Serial);
+        assert_eq!(inner_product(e(0, 1), e(1, 2)), -1.0);
+        // converging: 0→2, 1→2
+        assert_eq!(classify_pair(e(0, 2), e(1, 2)), EdgePairKind::Converging);
+        assert_eq!(inner_product(e(0, 2), e(1, 2)), 1.0);
+        // diverging: 1→2, 1→3
+        assert_eq!(classify_pair(e(1, 2), e(1, 3)), EdgePairKind::Diverging);
+        assert_eq!(inner_product(e(1, 2), e(1, 3)), 1.0);
+        // repeated
+        assert_eq!(classify_pair(e(4, 7), e(4, 7)), EdgePairKind::Repeated);
+        assert_eq!(inner_product(e(4, 7), e(4, 7)), 2.0);
+    }
+
+    #[test]
+    fn inner_product_matches_dense_oracle() {
+        // Exhaustive over all canonical edge pairs on 5 nodes.
+        let mut edges = Vec::new();
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                edges.push(e(u, v));
+            }
+        }
+        for &a in &edges {
+            for &b in &edges {
+                assert_eq!(
+                    inner_product(a, b),
+                    inner_product_dense(a, b, 5),
+                    "a={a:?} b={b:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn incidence_gram_is_laplacian() {
+        let g = Graph::from_pairs(4, &[(0, 1), (1, 2), (2, 3), (0, 3), (0, 2)]).unwrap();
+        let x = incidence_matrix_unweighted(&g);
+        let l = crate::linalg::matmul::matmul(&x.t(), &x);
+        assert!((&l - &g.laplacian()).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn ones_vector_in_kernel() {
+        let g = Graph::from_pairs(6, &[(0, 1), (1, 2), (3, 4), (4, 5), (2, 3)]).unwrap();
+        let l = g.laplacian();
+        let ones = vec![1.0; 6];
+        let lv = crate::linalg::matmul::gemv(&l, &ones);
+        assert!(lv.iter().all(|x| x.abs() < 1e-12));
+    }
+
+    #[test]
+    fn edge_incidence_graph_structure() {
+        // Path 0-1-2: edges e0=(0,1), e1=(1,2) share node 1.
+        let g = Graph::from_pairs(3, &[(0, 1), (1, 2)]).unwrap();
+        let eig = EdgeIncidenceGraph::build(&g);
+        assert_eq!(eig.num_edges, 2);
+        // Each edge-node: self-loop + the other edge → degree 2.
+        assert_eq!(eig.degree(0), 2);
+        assert_eq!(eig.neighbors(0), &[0, 1]);
+        assert_eq!(eig.neighbors(1), &[1, 0]);
+    }
+
+    #[test]
+    fn edge_incidence_self_loops_always_present() {
+        let g = Graph::from_pairs(4, &[(0, 1), (2, 3)]).unwrap();
+        let eig = EdgeIncidenceGraph::build(&g);
+        // Disconnected edges: only self-loops.
+        assert_eq!(eig.neighbors(0), &[0]);
+        assert_eq!(eig.neighbors(1), &[1]);
+    }
+
+    #[test]
+    fn degree_bound_holds() {
+        use crate::graph::gen::{cliques, CliqueSpec};
+        let g = cliques(&CliqueSpec { n: 60, k: 4, max_short_circuit: 10, seed: 3 }).graph;
+        let eig = EdgeIncidenceGraph::build(&g);
+        let bound = incidence_degree_bound(g.max_degree());
+        assert!(eig.max_degree() <= bound, "{} > {}", eig.max_degree(), bound);
+    }
+
+    #[test]
+    fn star_graph_incidence_degrees() {
+        // Star K_{1,4}: every pair of edges shares the hub → complete
+        // incidence graph + self-loops: degree = 4 each.
+        let g = Graph::from_pairs(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]).unwrap();
+        let eig = EdgeIncidenceGraph::build(&g);
+        for ei in 0..4 {
+            assert_eq!(eig.degree(ei), 4);
+        }
+        assert_eq!(incidence_degree_bound(4), 7);
+    }
+}

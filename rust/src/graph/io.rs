@@ -1,0 +1,134 @@
+//! Edge-list file I/O.
+//!
+//! Format: one edge per line, `u v [w]`, `#` comments, blank lines ignored.
+//! Node count is `max id + 1` unless a `# nodes: N` header is present.
+
+use super::Graph;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Parse a graph from edge-list text.
+pub fn parse_edge_list(text: &str) -> Result<Graph> {
+    let mut edges: Vec<(usize, usize, f64)> = Vec::new();
+    let mut declared_n: Option<usize> = None;
+    let mut max_id = 0usize;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            if let Some(n) = rest.trim().strip_prefix("nodes:") {
+                declared_n = Some(
+                    n.trim()
+                        .parse()
+                        .with_context(|| format!("line {}: bad node count", lineno + 1))?,
+                );
+            }
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let u: usize = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing u", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad node id", lineno + 1))?;
+        let v: usize = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing v", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad node id", lineno + 1))?;
+        let w: f64 = match parts.next() {
+            Some(s) => s
+                .parse()
+                .with_context(|| format!("line {}: bad weight", lineno + 1))?,
+            None => 1.0,
+        };
+        if parts.next().is_some() {
+            bail!("line {}: trailing tokens", lineno + 1);
+        }
+        max_id = max_id.max(u).max(v);
+        edges.push((u, v, w));
+    }
+    let n = declared_n.unwrap_or(if edges.is_empty() { 0 } else { max_id + 1 });
+    Graph::from_edges(n, &edges)
+}
+
+/// Load a graph from an edge-list file.
+pub fn load_edge_list<P: AsRef<Path>>(path: P) -> Result<Graph> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse_edge_list(&text)
+}
+
+/// Save a graph as an edge list (with a `# nodes:` header so isolated
+/// trailing nodes round-trip).
+pub fn save_edge_list<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    writeln!(f, "# nodes: {}", g.num_nodes())?;
+    for e in g.edges() {
+        if (e.w - 1.0).abs() < 1e-15 {
+            writeln!(f, "{} {}", e.u, e.v)?;
+        } else {
+            writeln!(f, "{} {} {}", e.u, e.v, e.w)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let g = parse_edge_list("0 1\n1 2 0.5\n# comment\n\n2 3\n").unwrap();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.edges()[1].w, 0.5);
+    }
+
+    #[test]
+    fn declared_nodes_header() {
+        let g = parse_edge_list("# nodes: 10\n0 1\n").unwrap();
+        assert_eq!(g.num_nodes(), 10);
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(parse_edge_list("0\n").is_err());
+        assert!(parse_edge_list("a b\n").is_err());
+        assert!(parse_edge_list("0 1 2 3\n").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let g = crate::graph::gen::cliques(&crate::graph::gen::CliqueSpec {
+            n: 20,
+            k: 2,
+            max_short_circuit: 3,
+            seed: 5,
+        })
+        .graph;
+        let dir = std::env::temp_dir().join("sped_io_test");
+        let path = dir.join("g.edges");
+        save_edge_list(&g, &path).unwrap();
+        let g2 = load_edge_list(&path).unwrap();
+        assert_eq!(g.num_nodes(), g2.num_nodes());
+        assert_eq!(g.edges(), g2.edges());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = parse_edge_list("").unwrap();
+        assert_eq!(g.num_nodes(), 0);
+        assert_eq!(g.num_edges(), 0);
+    }
+}

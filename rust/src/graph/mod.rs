@@ -1,0 +1,352 @@
+//! Graph substrate: undirected weighted graphs in CSR form, the incidence
+//! representation of §2, Laplacians, and workload generators.
+
+pub mod gen;
+pub mod incidence;
+pub mod io;
+
+use crate::linalg::DMat;
+use anyhow::{bail, Result};
+
+/// An undirected, optionally weighted graph.
+///
+/// Edges are stored once in canonical orientation `(u, v)` with `u < v`
+/// (matching the paper's incidence-vector convention: `x_e` has `+1` at
+/// `min(i,j)` and `−1` at `max(i,j)`), plus a CSR adjacency index for
+/// neighbor iteration.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    n: usize,
+    edges: Vec<Edge>,
+    offsets: Vec<usize>,
+    neighbors: Vec<(u32, f64)>,
+}
+
+/// A canonical undirected edge `u < v` with weight `w`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub u: u32,
+    pub v: u32,
+    pub w: f64,
+}
+
+impl Graph {
+    /// Build from an edge list. Edges are canonicalized (`u < v`),
+    /// duplicate edges have their weights summed, self-loops are rejected.
+    pub fn from_edges(n: usize, raw: &[(usize, usize, f64)]) -> Result<Graph> {
+        let mut canon: Vec<(u32, u32, f64)> = Vec::with_capacity(raw.len());
+        for &(a, b, w) in raw {
+            if a == b {
+                bail!("self-loop at node {a}");
+            }
+            if a >= n || b >= n {
+                bail!("edge ({a},{b}) out of range for n={n}");
+            }
+            if !(w.is_finite()) {
+                bail!("non-finite edge weight {w}");
+            }
+            let (u, v) = if a < b { (a, b) } else { (b, a) };
+            canon.push((u as u32, v as u32, w));
+        }
+        canon.sort_by_key(|&(u, v, _)| (u, v));
+        let mut edges: Vec<Edge> = Vec::with_capacity(canon.len());
+        for (u, v, w) in canon {
+            match edges.last_mut() {
+                Some(last) if last.u == u && last.v == v => last.w += w,
+                _ => edges.push(Edge { u, v, w }),
+            }
+        }
+        // CSR adjacency.
+        let mut degree_count = vec![0usize; n];
+        for e in &edges {
+            degree_count[e.u as usize] += 1;
+            degree_count[e.v as usize] += 1;
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0);
+        for i in 0..n {
+            offsets.push(offsets[i] + degree_count[i]);
+        }
+        let mut cursor = offsets.clone();
+        let mut neighbors = vec![(0u32, 0.0f64); offsets[n]];
+        for e in &edges {
+            neighbors[cursor[e.u as usize]] = (e.v, e.w);
+            cursor[e.u as usize] += 1;
+            neighbors[cursor[e.v as usize]] = (e.u, e.w);
+            cursor[e.v as usize] += 1;
+        }
+        Ok(Graph { n, edges, offsets, neighbors })
+    }
+
+    /// Build with unit weights.
+    pub fn from_pairs(n: usize, pairs: &[(usize, usize)]) -> Result<Graph> {
+        let raw: Vec<(usize, usize, f64)> = pairs.iter().map(|&(a, b)| (a, b, 1.0)).collect();
+        Graph::from_edges(n, &raw)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Neighbor list of `v` as `(neighbor, weight)` pairs.
+    pub fn neighbors(&self, v: usize) -> &[(u32, f64)] {
+        &self.neighbors[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// Unweighted degree (neighbor count).
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Weighted degree `Σ_u w(v,u)`.
+    pub fn weighted_degree(&self, v: usize) -> f64 {
+        self.neighbors(v).iter().map(|&(_, w)| w).sum()
+    }
+
+    /// Maximum unweighted degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Total edge weight.
+    pub fn total_weight(&self) -> f64 {
+        self.edges.iter().map(|e| e.w).sum()
+    }
+
+    /// Dense graph Laplacian `L = D − A` (weighted: `L = XᵀWX`).
+    pub fn laplacian(&self) -> DMat {
+        let mut l = DMat::zeros(self.n, self.n);
+        for e in &self.edges {
+            let (u, v, w) = (e.u as usize, e.v as usize, e.w);
+            l[(u, u)] += w;
+            l[(v, v)] += w;
+            l[(u, v)] -= w;
+            l[(v, u)] -= w;
+        }
+        l
+    }
+
+    /// Dense *normalized* Laplacian `D^{-1/2} L D^{-1/2}` (isolated nodes
+    /// contribute zero rows/cols).
+    pub fn normalized_laplacian(&self) -> DMat {
+        let d: Vec<f64> = (0..self.n)
+            .map(|v| {
+                let wd = self.weighted_degree(v);
+                if wd > 0.0 {
+                    1.0 / wd.sqrt()
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let mut l = DMat::zeros(self.n, self.n);
+        for e in &self.edges {
+            let (u, v, w) = (e.u as usize, e.v as usize, e.w);
+            let nw = w * d[u] * d[v];
+            l[(u, v)] -= nw;
+            l[(v, u)] -= nw;
+        }
+        for v in 0..self.n {
+            l[(v, v)] = if self.weighted_degree(v) > 0.0 { 1.0 } else { 0.0 };
+        }
+        l
+    }
+
+    /// Laplacian quadratic form `vᵀLv = Σ_e w_e (v_u − v_v)²` (eq 1) without
+    /// materializing `L`.
+    pub fn quadratic_form(&self, v: &[f64]) -> f64 {
+        assert_eq!(v.len(), self.n);
+        self.edges
+            .iter()
+            .map(|e| {
+                let d = v[e.u as usize] - v[e.v as usize];
+                e.w * d * d
+            })
+            .sum()
+    }
+
+    /// Cut weight between `s` and its complement (eq 1 semantics: the
+    /// number/weight of crossing edges).
+    pub fn cut_weight(&self, in_s: &[bool]) -> f64 {
+        assert_eq!(in_s.len(), self.n);
+        self.edges
+            .iter()
+            .filter(|e| in_s[e.u as usize] != in_s[e.v as usize])
+            .map(|e| e.w)
+            .sum()
+    }
+
+    /// Volume of a node set: total weighted degree (eq 3 denominator).
+    pub fn volume(&self, in_s: &[bool]) -> f64 {
+        (0..self.n)
+            .filter(|&v| in_s[v])
+            .map(|v| self.weighted_degree(v))
+            .sum()
+    }
+
+    /// Conductance φ(S) = cut(S, S̄) / vol(S) (eq 3). Returns `None` for
+    /// empty or zero-volume sets.
+    pub fn conductance(&self, in_s: &[bool]) -> Option<f64> {
+        let vol = self.volume(in_s);
+        if vol == 0.0 {
+            return None;
+        }
+        Some(self.cut_weight(in_s) / vol)
+    }
+
+    /// Number of connected components (unweighted, via BFS).
+    pub fn num_components(&self) -> usize {
+        let mut seen = vec![false; self.n];
+        let mut comps = 0;
+        let mut queue = std::collections::VecDeque::new();
+        for start in 0..self.n {
+            if seen[start] {
+                continue;
+            }
+            comps += 1;
+            seen[start] = true;
+            queue.push_back(start);
+            while let Some(v) = queue.pop_front() {
+                for &(u, _) in self.neighbors(v) {
+                    if !seen[u as usize] {
+                        seen[u as usize] = true;
+                        queue.push_back(u as usize);
+                    }
+                }
+            }
+        }
+        comps
+    }
+
+    /// Re-weighted copy with the same topology.
+    pub fn with_weights(&self, weights: &[f64]) -> Result<Graph> {
+        if weights.len() != self.edges.len() {
+            bail!("weight count mismatch");
+        }
+        let raw: Vec<(usize, usize, f64)> = self
+            .edges
+            .iter()
+            .zip(weights)
+            .map(|(e, &w)| (e.u as usize, e.v as usize, w))
+            .collect();
+        Graph::from_edges(self.n, &raw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        Graph::from_pairs(3, &[(0, 1), (1, 2), (0, 2)]).unwrap()
+    }
+
+    #[test]
+    fn construction_canonicalizes() {
+        let g = Graph::from_pairs(4, &[(2, 0), (3, 1)]).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.edges()[0], Edge { u: 0, v: 2, w: 1.0 });
+        assert_eq!(g.edges()[1], Edge { u: 1, v: 3, w: 1.0 });
+    }
+
+    #[test]
+    fn duplicates_merge_weights() {
+        let g = Graph::from_edges(3, &[(0, 1, 1.0), (1, 0, 2.5)]).unwrap();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.edges()[0].w, 3.5);
+    }
+
+    #[test]
+    fn rejects_bad_edges() {
+        assert!(Graph::from_pairs(3, &[(0, 0)]).is_err());
+        assert!(Graph::from_pairs(3, &[(0, 5)]).is_err());
+        assert!(Graph::from_edges(3, &[(0, 1, f64::NAN)]).is_err());
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = triangle();
+        for v in 0..3 {
+            assert_eq!(g.degree(v), 2);
+            assert_eq!(g.weighted_degree(v), 2.0);
+        }
+        assert_eq!(g.max_degree(), 2);
+        let mut nb: Vec<u32> = g.neighbors(0).iter().map(|&(u, _)| u).collect();
+        nb.sort_unstable();
+        assert_eq!(nb, vec![1, 2]);
+    }
+
+    #[test]
+    fn laplacian_rows_sum_to_zero() {
+        let g = triangle();
+        let l = g.laplacian();
+        for i in 0..3 {
+            let s: f64 = l.row(i).iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+        assert_eq!(l[(0, 0)], 2.0);
+        assert_eq!(l[(0, 1)], -1.0);
+    }
+
+    #[test]
+    fn laplacian_equals_incidence_gram() {
+        let g = gen::cliques(&gen::CliqueSpec { n: 30, k: 3, max_short_circuit: 5, seed: 1 }).graph;
+        let l = g.laplacian();
+        let x = incidence::incidence_matrix(&g);
+        let xtx = crate::linalg::matmul::matmul(&x.t(), &x);
+        assert!((&l - &xtx).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn quadratic_form_counts_cut() {
+        // v = ±1 indicator: vᵀLv = 4 × cut (eq 1 remark).
+        let g = Graph::from_pairs(4, &[(0, 1), (1, 2), (2, 3), (0, 3)]).unwrap();
+        let v = [1.0, 1.0, -1.0, -1.0];
+        let in_s = [true, true, false, false];
+        assert_eq!(g.quadratic_form(&v), 4.0 * g.cut_weight(&in_s));
+    }
+
+    #[test]
+    fn conductance_basics() {
+        let g = triangle();
+        let s = [true, false, false];
+        // cut = 2, vol = 2 → φ = 1
+        assert_eq!(g.conductance(&s), Some(1.0));
+        assert_eq!(g.conductance(&[false, false, false]), None);
+    }
+
+    #[test]
+    fn components() {
+        let g = Graph::from_pairs(5, &[(0, 1), (2, 3)]).unwrap();
+        assert_eq!(g.num_components(), 3);
+        assert_eq!(triangle().num_components(), 1);
+    }
+
+    #[test]
+    fn normalized_laplacian_unit_diagonal() {
+        let g = triangle();
+        let nl = g.normalized_laplacian();
+        for i in 0..3 {
+            assert!((nl[(i, i)] - 1.0).abs() < 1e-12);
+        }
+        // Normalized Laplacian of a graph has eigenvalues in [0, 2].
+        let e = crate::linalg::eigh(&nl).unwrap();
+        assert!(e.values[0] > -1e-10);
+        assert!(e.lambda_max() <= 2.0 + 1e-10);
+    }
+
+    #[test]
+    fn reweighting_preserves_topology() {
+        let g = triangle();
+        let w = vec![0.5, 0.25, 2.0];
+        let g2 = g.with_weights(&w).unwrap();
+        assert_eq!(g2.num_edges(), 3);
+        assert!((g2.total_weight() - 2.75).abs() < 1e-12);
+    }
+}

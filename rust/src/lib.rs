@@ -1,0 +1,60 @@
+//! # SPED — Stochastic Parallelizable Eigengap Dilation
+//!
+//! A production-grade reproduction of *"Stochastic Parallelizable Eigengap
+//! Dilation for Large Graph Clustering"* (van der Pol, Gemp, Bachrach,
+//! Everett; ICML 2022 TAG-ML workshop).
+//!
+//! SPED accelerates the computation of the bottom-`k` eigenvectors of a
+//! graph Laplacian — the core of spectral clustering — by applying cheap,
+//! eigenvector-preserving spectral transformations (matrix polynomials that
+//! approximate e.g. `−e^{−L}` or `log(L+εI)`) which *dilate the eigengaps*
+//! relative to the spectral radius before the matrix is handed to an
+//! iterative stochastic SVD solver (Oja's algorithm, µ-EigenGame).
+//!
+//! The crate is the **L3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for the blocked
+//!   Horner step and the stochastic walk-batch apply.
+//! * **L2** — JAX compute graphs (`python/compile/model.py`) lowered once,
+//!   AOT, to HLO text artifacts (`make artifacts`).
+//! * **L3** — this crate: graph substrate, random-walk estimator, transform
+//!   builder, solver driver (native or PJRT-backed), clustering, metrics,
+//!   CLI, and the experiment harness reproducing every figure of the paper.
+//!
+//! Python never runs on the request path: the `sped` binary only loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate).
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use sped::graph::gen::{cliques, CliqueSpec};
+//! use sped::pipeline::{Pipeline, PipelineConfig};
+//! use sped::transforms::TransformKind;
+//!
+//! let graph = cliques(&CliqueSpec { n: 256, k: 4, max_short_circuit: 25, seed: 7 });
+//! let cfg = PipelineConfig {
+//!     k: 8,
+//!     transform: TransformKind::LimitNegExp { ell: 251 },
+//!     ..PipelineConfig::default()
+//! };
+//! let out = Pipeline::new(cfg).run(&graph.graph).unwrap();
+//! println!("clusters: {:?}", out.clustering.unwrap().assignments);
+//! ```
+
+pub mod cluster;
+pub mod coordinator;
+pub mod graph;
+pub mod linalg;
+pub mod linkpred;
+pub mod mdp;
+pub mod runtime;
+pub mod solvers;
+pub mod testkit;
+pub mod transforms;
+pub mod util;
+pub mod walks;
+
+pub use coordinator::pipeline;
+
+/// Crate-wide result type (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,378 @@
+//! Row-major dense `f64` matrices.
+//!
+//! The workhorse container of the L3 coordinator. Eigenvector bundles are
+//! stored as `n × k` matrices whose *columns* are eigenvectors, matching the
+//! conventions of the paper (V ∈ ℝ^{|V|×k}) and the L2 JAX model.
+
+use std::fmt;
+
+/// Dense row-major matrix.
+#[derive(Clone, PartialEq)]
+pub struct DMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl DMat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> DMat {
+        DMat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> DMat {
+        let mut m = DMat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from an existing buffer (row-major, length must match).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> DMat {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        DMat { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> DMat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        DMat { rows, cols, data }
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: &[f64]) -> DMat {
+        let mut m = DMat::zeros(d.len(), d.len());
+        for (i, &x) in d.iter().enumerate() {
+            m[(i, i)] = x;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Column copy (rows are contiguous, columns are not).
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Transpose.
+    pub fn t(&self) -> DMat {
+        let mut out = DMat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, a: f64) {
+        for x in &mut self.data {
+            *x *= a;
+        }
+    }
+
+    /// `self + a·other` (element-wise), in place.
+    pub fn axpy(&mut self, a: f64, other: &DMat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, &y) in self.data.iter_mut().zip(other.data.iter()) {
+            *x += a * y;
+        }
+    }
+
+    /// Add `a` to the diagonal in place.
+    pub fn add_diag(&mut self, a: f64) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            self[(i, i)] += a;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |entry|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, &x| m.max(x.abs()))
+    }
+
+    /// Symmetry check within tolerance.
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if !self.is_square() {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Force exact symmetry: `(A + Aᵀ)/2`, in place.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    /// First `k` columns as a new matrix.
+    pub fn take_cols(&self, k: usize) -> DMat {
+        assert!(k <= self.cols);
+        DMat::from_fn(self.rows, k, |i, j| self[(i, j)])
+    }
+
+    /// Trace.
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Convert to `f32` buffer (for PJRT literals).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Build from an `f32` buffer.
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> DMat {
+        assert_eq!(data.len(), rows * cols);
+        DMat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DMat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DMat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for DMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "DMat {}x{} [", self.rows, self.cols)?;
+        let show_rows = self.rows.min(8);
+        for i in 0..show_rows {
+            write!(f, "  [")?;
+            let show_cols = self.cols.min(8);
+            for j in 0..show_cols {
+                write!(f, "{:>10.4}", self[(i, j)])?;
+                if j + 1 < show_cols {
+                    write!(f, ", ")?;
+                }
+            }
+            if self.cols > 8 {
+                write!(f, ", …")?;
+            }
+            writeln!(f, "]")?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+// ---- vector helpers (free functions over &[f64]) ----
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `y += a·x`.
+#[inline]
+pub fn vec_axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    for i in 0..y.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// Normalize to unit length in place; returns the original norm.
+pub fn normalize(v: &mut [f64]) -> f64 {
+    let n = norm(v);
+    if n > 0.0 {
+        let inv = 1.0 / n;
+        for x in v.iter_mut() {
+            *x *= inv;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_construction() {
+        let m = DMat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.col(2), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let i3 = DMat::eye(3);
+        assert_eq!(i3.trace(), 3.0);
+        let d = DMat::diag(&[1.0, 2.0]);
+        assert_eq!(d[(1, 1)], 2.0);
+        assert_eq!(d[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = DMat::from_fn(3, 5, |i, j| (i as f64) - 2.0 * (j as f64));
+        assert_eq!(m.t().t(), m);
+        assert_eq!(m.t()[(4, 2)], m[(2, 4)]);
+    }
+
+    #[test]
+    fn axpy_scale_adddiag() {
+        let mut a = DMat::eye(2);
+        let b = DMat::from_fn(2, 2, |_, _| 1.0);
+        a.axpy(2.0, &b);
+        assert_eq!(a[(0, 0)], 3.0);
+        assert_eq!(a[(0, 1)], 2.0);
+        a.scale(0.5);
+        assert_eq!(a[(0, 0)], 1.5);
+        a.add_diag(1.0);
+        assert_eq!(a[(1, 1)], 2.5);
+    }
+
+    #[test]
+    fn symmetry_helpers() {
+        let mut m = DMat::from_fn(3, 3, |i, j| (i + 2 * j) as f64);
+        assert!(!m.is_symmetric(1e-12));
+        m.symmetrize();
+        assert!(m.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn norms() {
+        let m = DMat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let m = DMat::from_fn(4, 4, |i, j| (i as f64) / 3.0 + j as f64);
+        let m2 = DMat::from_f32(4, 4, &m.to_f32());
+        assert!((&m2 - &m).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn vector_helpers() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        let mut y = vec![1.0, 1.0];
+        vec_axpy(&mut y, 2.0, &[1.0, 2.0]);
+        assert_eq!(y, vec![3.0, 5.0]);
+        let mut v = vec![0.0, 3.0, 4.0];
+        let n = normalize(&mut v);
+        assert!((n - 5.0).abs() < 1e-12);
+        assert!((norm(&v) - 1.0).abs() < 1e-12);
+    }
+}
+
+impl std::ops::Sub for &DMat {
+    type Output = DMat;
+    fn sub(self, rhs: &DMat) -> DMat {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(rhs.data.iter())
+            .map(|(a, b)| a - b)
+            .collect();
+        DMat { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+impl std::ops::Add for &DMat {
+    type Output = DMat;
+    fn add(self, rhs: &DMat) -> DMat {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(rhs.data.iter())
+            .map(|(a, b)| a + b)
+            .collect();
+        DMat { rows: self.rows, cols: self.cols, data }
+    }
+}

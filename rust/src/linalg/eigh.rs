@@ -1,0 +1,386 @@
+//! Symmetric eigendecomposition: Householder tridiagonalization (`tred2`)
+//! followed by implicit-shift QL iteration (`tql2`) — the classic
+//! EISPACK-lineage pair, O(n³) with a small constant.
+//!
+//! Provides the crate's ground truth: the exact bottom-k eigenvectors used
+//! by the paper's metrics (eq 15, streak), and the eigenbasis for *exact*
+//! spectral transforms `f(L) = V f(Λ) Vᵀ` (eq 10).
+
+use super::dmat::DMat;
+use anyhow::{bail, Result};
+
+/// Eigendecomposition of a symmetric matrix: `A = V Λ Vᵀ`.
+///
+/// `values` are sorted ascending; `vectors` holds the matching eigenvectors
+/// as columns (`vectors.col(i)` pairs with `values[i]`).
+#[derive(Clone, Debug)]
+pub struct Eigh {
+    pub values: Vec<f64>,
+    pub vectors: DMat,
+}
+
+impl Eigh {
+    /// Reconstruct `f(A) = V diag(f(λ)) Vᵀ` for a scalar spectrum map `f`.
+    pub fn apply_spectrum(&self, f: impl Fn(f64) -> f64) -> DMat {
+        let n = self.values.len();
+        let v = &self.vectors;
+        let mut out = DMat::zeros(n, n);
+        // out = Σ_i f(λ_i) v_i v_iᵀ  — rank-1 accumulation, exploits symmetry.
+        for idx in 0..n {
+            let fi = f(self.values[idx]);
+            if fi == 0.0 {
+                continue;
+            }
+            for r in 0..n {
+                let vr = v[(r, idx)] * fi;
+                if vr == 0.0 {
+                    continue;
+                }
+                for c in r..n {
+                    out[(r, c)] += vr * v[(c, idx)];
+                }
+            }
+        }
+        for r in 0..n {
+            for c in 0..r {
+                out[(r, c)] = out[(c, r)];
+            }
+        }
+        out
+    }
+
+    /// The `k` eigenvectors with smallest eigenvalues, as an `n×k` matrix.
+    pub fn bottom_k(&self, k: usize) -> DMat {
+        self.vectors.take_cols(k)
+    }
+
+    /// Largest eigenvalue (spectral radius for PSD matrices).
+    pub fn lambda_max(&self) -> f64 {
+        *self.values.last().expect("non-empty spectrum")
+    }
+}
+
+/// Compute the full symmetric eigendecomposition of `a`.
+///
+/// `a` must be square and (numerically) symmetric; it is symmetrized
+/// defensively before reduction. Errors if QL fails to converge (does not
+/// happen for finite symmetric input in practice).
+pub fn eigh(a: &DMat) -> Result<Eigh> {
+    if !a.is_square() {
+        bail!("eigh: matrix must be square, got {}x{}", a.rows(), a.cols());
+    }
+    let n = a.rows();
+    if n == 0 {
+        return Ok(Eigh { values: vec![], vectors: DMat::zeros(0, 0) });
+    }
+    let mut z = a.clone();
+    z.symmetrize();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut z, &mut d, &mut e);
+    tql2(&mut z, &mut d, &mut e)?;
+    // Sort eigenpairs ascending.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut vectors = DMat::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        for i in 0..n {
+            vectors[(i, new_j)] = z[(i, old_j)];
+        }
+    }
+    Ok(Eigh { values, vectors })
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form.
+/// On exit `z` holds the accumulated orthogonal transform, `d` the diagonal
+/// and `e` the subdiagonal. (Numerical Recipes `tred2`, 0-indexed.)
+fn tred2(z: &mut DMat, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += z[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    let v = z[(i, k)] / scale;
+                    z[(i, k)] = v;
+                    h += v * v;
+                }
+                let mut f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let delta = f * e[k] + g * z[(i, k)];
+                        z[(j, k)] -= delta;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        let l = i;
+        if d[i] != 0.0 {
+            for j in 0..l {
+                let mut g = 0.0;
+                for k in 0..l {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..l {
+                    z[(k, j)] -= g * z[(k, i)];
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..l {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+}
+
+/// QL with implicit shifts on a symmetric tridiagonal matrix, accumulating
+/// eigenvectors into `z`. (Numerical Recipes `tqli`, 0-indexed.)
+fn tql2(z: &mut DMat, d: &mut [f64], e: &mut [f64]) -> Result<()> {
+    let n = d.len();
+    if n == 1 {
+        return Ok(());
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find a small subdiagonal element to split the matrix.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                bail!("tql2: no convergence after 50 iterations");
+            }
+            // Form implicit shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate the rotation into the eigenvector matrix.
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+    use crate::util::rng::Rng;
+
+    fn random_symmetric(rng: &mut Rng, n: usize) -> DMat {
+        let mut m = DMat::from_fn(n, n, |_, _| rng.normal());
+        m.symmetrize();
+        m
+    }
+
+    fn check_decomposition(a: &DMat, eig: &Eigh, tol: f64) {
+        let n = a.rows();
+        // A v_i == λ_i v_i
+        for i in 0..n {
+            let v = eig.vectors.col(i);
+            let av = crate::linalg::matmul::gemv(a, &v);
+            for r in 0..n {
+                assert!(
+                    (av[r] - eig.values[i] * v[r]).abs() < tol,
+                    "eigenpair {i} residual at row {r}"
+                );
+            }
+        }
+        // VᵀV == I
+        let vtv = matmul(&eig.vectors.t(), &eig.vectors);
+        assert!((&vtv - &DMat::eye(n)).max_abs() < tol, "not orthonormal");
+        // ascending order
+        for i in 1..n {
+            assert!(eig.values[i] >= eig.values[i - 1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = DMat::diag(&[3.0, 1.0, 2.0]);
+        let e = eigh(&a).unwrap();
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 3.0).abs() < 1e-12);
+        check_decomposition(&a, &e, 1e-10);
+    }
+
+    #[test]
+    fn two_by_two_known() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = DMat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = eigh(&a).unwrap();
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+        check_decomposition(&a, &e, 1e-10);
+    }
+
+    #[test]
+    fn random_matrices_various_sizes() {
+        let mut rng = Rng::new(42);
+        for &n in &[1, 2, 3, 5, 10, 32, 64] {
+            let a = random_symmetric(&mut rng, n);
+            let e = eigh(&a).unwrap();
+            check_decomposition(&a, &e, 1e-8);
+            // trace preserved
+            let tr: f64 = e.values.iter().sum();
+            assert!((tr - a.trace()).abs() < 1e-8 * (n as f64));
+        }
+    }
+
+    #[test]
+    fn path_graph_laplacian_spectrum() {
+        // Known spectrum of the path graph P_n Laplacian:
+        // λ_j = 2 - 2cos(πj/n), j=0..n-1.
+        let n = 16;
+        let mut a = DMat::zeros(n, n);
+        for i in 0..n {
+            if i > 0 {
+                a[(i, i - 1)] = -1.0;
+                a[(i, i)] += 1.0;
+            }
+            if i + 1 < n {
+                a[(i, i + 1)] = -1.0;
+                a[(i, i)] += 1.0;
+            }
+        }
+        let e = eigh(&a).unwrap();
+        for j in 0..n {
+            let expected = 2.0 - 2.0 * (std::f64::consts::PI * j as f64 / n as f64).cos();
+            assert!((e.values[j] - expected).abs() < 1e-9, "j={j}");
+        }
+    }
+
+    #[test]
+    fn apply_spectrum_exponential() {
+        let mut rng = Rng::new(9);
+        let a = random_symmetric(&mut rng, 12);
+        let e = eigh(&a).unwrap();
+        // f == identity reproduces A.
+        let back = e.apply_spectrum(|x| x);
+        assert!((&back - &a).max_abs() < 1e-9);
+        // exp(A) has spectrum exp(λ) with the same eigenvectors.
+        let expa = e.apply_spectrum(f64::exp);
+        let e2 = eigh(&expa).unwrap();
+        let mut expected: Vec<f64> = e.values.iter().map(|&x| x.exp()).collect();
+        expected.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for i in 0..12 {
+            assert!((e2.values[i] - expected[i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn repeated_eigenvalues_ok() {
+        // Identity: all eigenvalues 1; vectors may be any orthonormal basis.
+        let e = eigh(&DMat::eye(8)).unwrap();
+        for v in &e.values {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+        check_decomposition(&DMat::eye(8), &e, 1e-10);
+    }
+
+    #[test]
+    fn property_psd_gram_has_nonneg_spectrum() {
+        use crate::testkit::{check, SizeGen};
+        check(11, 15, &SizeGen { lo: 1, hi: 20 }, |&n| {
+            let mut rng = Rng::new(n as u64 * 7 + 1);
+            let x = DMat::from_fn(n + 3, n, |_, _| rng.normal());
+            let g = crate::linalg::matmul::gram(&x);
+            let e = eigh(&g).unwrap();
+            e.values.iter().all(|&v| v > -1e-8)
+        });
+    }
+
+    #[test]
+    fn non_square_rejected() {
+        assert!(eigh(&DMat::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let e = eigh(&DMat::zeros(0, 0)).unwrap();
+        assert!(e.values.is_empty());
+    }
+}

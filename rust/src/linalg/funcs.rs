@@ -1,0 +1,303 @@
+//! Matrix functions: exact spectral application (via [`eigh`]), matrix
+//! exponential / logarithm, Horner polynomial evaluation, and binary matrix
+//! powers — the numerical machinery behind the Table 2 transforms.
+
+use super::dmat::DMat;
+use super::eigh::eigh;
+use super::matmul::{matmul, matmul_into};
+use anyhow::Result;
+
+/// Exact `f(A)` for symmetric `A` via full eigendecomposition (eq 10 of the
+/// paper: `f(A) = V diag(f(λ)) Vᵀ`). O(n³); the thing SPED's series
+/// approximations avoid — kept as the oracle/baseline.
+pub fn spectral_apply(a: &DMat, f: impl Fn(f64) -> f64) -> Result<DMat> {
+    Ok(eigh(a)?.apply_spectrum(f))
+}
+
+/// Exact matrix exponential of a symmetric matrix.
+pub fn expm(a: &DMat) -> Result<DMat> {
+    spectral_apply(a, f64::exp)
+}
+
+/// Exact matrix logarithm of a symmetric positive-definite matrix
+/// (the paper uses `log(L + εI)` to keep the spectrum positive).
+pub fn logm(a: &DMat) -> Result<DMat> {
+    spectral_apply(a, |x| x.max(f64::MIN_POSITIVE).ln())
+}
+
+/// Evaluate the matrix polynomial `p(A) = Σ_i c_i A^i` by Horner's rule:
+/// `((c_d A + c_{d-1} I) A + …) + c_0 I`. Exactly `deg(p)` dense multiplies.
+///
+/// This mirrors the L1 Pallas kernel `poly_horner` (same recurrence, same
+/// coefficient order) so the native and AOT paths are interchangeable.
+pub fn poly_horner(a: &DMat, coeffs: &[f64]) -> DMat {
+    assert!(a.is_square());
+    let n = a.rows();
+    if coeffs.is_empty() {
+        return DMat::zeros(n, n);
+    }
+    let d = coeffs.len() - 1;
+    // R = c_d · I
+    let mut r = DMat::eye(n);
+    r.scale(coeffs[d]);
+    let mut tmp = DMat::zeros(n, n);
+    for i in (0..d).rev() {
+        // R = R·A + c_i·I
+        matmul_into(&r, a, &mut tmp);
+        std::mem::swap(&mut r, &mut tmp);
+        r.add_diag(coeffs[i]);
+    }
+    r
+}
+
+/// `A^p` by binary exponentiation (square-and-multiply): ⌈log₂ p⌉ squarings
+/// plus popcount multiplies. Used for the paper's best-performing transform,
+/// the limit approximation `−(I − L/ℓ)^ℓ`, where expanding to monomial
+/// coefficients would be catastrophically ill-conditioned.
+pub fn matpow(a: &DMat, p: u64) -> DMat {
+    assert!(a.is_square());
+    let n = a.rows();
+    if p == 0 {
+        return DMat::eye(n);
+    }
+    let mut base = a.clone();
+    let mut acc: Option<DMat> = None;
+    let mut e = p;
+    loop {
+        if e & 1 == 1 {
+            acc = Some(match acc {
+                None => base.clone(),
+                Some(m) => matmul(&m, &base),
+            });
+        }
+        e >>= 1;
+        if e == 0 {
+            break;
+        }
+        base = matmul(&base, &base);
+    }
+    acc.unwrap()
+}
+
+/// Taylor coefficients of `−e^{−x}` of degree `ell`:
+/// `−Σ_{i=0}^{ℓ} (−x)^i / i!` → `c_i = −(−1)^i / i!` (Table 2, row 4).
+pub fn taylor_neg_exp_coeffs(ell: usize) -> Vec<f64> {
+    let mut coeffs = Vec::with_capacity(ell + 1);
+    let mut fact = 1.0f64;
+    for i in 0..=ell {
+        if i > 0 {
+            fact *= i as f64;
+        }
+        let sign = if i % 2 == 0 { -1.0 } else { 1.0 };
+        coeffs.push(sign / fact);
+    }
+    coeffs
+}
+
+/// Taylor coefficients of `log(x + ε)` around `x + ε = 1`, degree `ell`:
+/// `Σ_{i=1}^{ℓ} (−1)^{i+1} (x + ε − 1)^i / i` (Table 2, row 2), expanded to
+/// monomials in `x`. Convergent only for `|x + ε − 1| < 1` i.e. ρ(L) < 2.
+pub fn taylor_log_coeffs(ell: usize, eps: f64) -> Vec<f64> {
+    // p(x) = Σ_i a_i (x - s)^i with s = 1 - eps; expand via binomials.
+    let s = 1.0 - eps;
+    let mut mono = vec![0.0f64; ell + 1];
+    // (x - s)^i coefficients built iteratively: start with [1] for i=0.
+    let mut shifted = vec![0.0f64; ell + 1];
+    shifted[0] = 1.0;
+    for i in 1..=ell {
+        // shifted ← shifted * (x - s)
+        for j in (1..=i).rev() {
+            shifted[j] = shifted[j - 1] - s * shifted[j];
+        }
+        shifted[0] *= -s;
+        let a_i = if i % 2 == 1 { 1.0 } else { -1.0 } / i as f64;
+        for j in 0..=i {
+            mono[j] += a_i * shifted[j];
+        }
+    }
+    mono
+}
+
+/// Estimate the largest eigenvalue of a symmetric PSD matrix by power
+/// iteration (with a deterministic start vector salted by the diagonal).
+/// Returns an estimate within `tol` relative error for well-separated tops,
+/// and is always an underestimate ≤ λ_max; callers multiply by a safety
+/// factor.
+pub fn power_lambda_max(a: &DMat, iters: usize) -> f64 {
+    let n = a.rows();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = (0..n)
+        .map(|i| 1.0 + 0.01 * ((i * 2654435761 % 97) as f64 / 97.0))
+        .collect();
+    super::dmat::normalize(&mut v);
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let mut w = super::matmul::gemv(a, &v);
+        lambda = super::dmat::dot(&v, &w);
+        if super::dmat::normalize(&mut w) == 0.0 {
+            return 0.0;
+        }
+        v = w;
+    }
+    lambda.max(0.0)
+}
+
+/// Gershgorin upper bound on the spectral radius of a symmetric matrix:
+/// `max_i Σ_j |a_ij|`. For a graph Laplacian this gives ≤ 2·deg_max, the
+/// bound the paper quotes in §5.4.
+pub fn gershgorin_bound(a: &DMat) -> f64 {
+    (0..a.rows())
+        .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f64>())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_symmetric(rng: &mut Rng, n: usize) -> DMat {
+        let mut m = DMat::from_fn(n, n, |_, _| rng.normal());
+        m.symmetrize();
+        m
+    }
+
+    #[test]
+    fn horner_matches_explicit_powers() {
+        let mut rng = Rng::new(1);
+        let a = random_symmetric(&mut rng, 10);
+        let coeffs = [0.5, -1.0, 2.0, 0.25]; // 0.5 I - A + 2A² + 0.25A³
+        let p = poly_horner(&a, &coeffs);
+        let a2 = matmul(&a, &a);
+        let a3 = matmul(&a2, &a);
+        let mut expected = DMat::eye(10);
+        expected.scale(0.5);
+        expected.axpy(-1.0, &a);
+        expected.axpy(2.0, &a2);
+        expected.axpy(0.25, &a3);
+        assert!((&p - &expected).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn horner_edge_cases() {
+        let a = DMat::eye(3);
+        assert_eq!(poly_horner(&a, &[]).max_abs(), 0.0);
+        let c0 = poly_horner(&a, &[7.0]);
+        assert!((&c0 - &{ let mut m = DMat::eye(3); m.scale(7.0); m }).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn matpow_matches_repeated_multiplication() {
+        let mut rng = Rng::new(2);
+        let mut a = random_symmetric(&mut rng, 8);
+        a.scale(0.3); // keep powers bounded
+        for &p in &[0u64, 1, 2, 3, 7, 11, 251] {
+            let fast = matpow(&a, p);
+            let mut slow = DMat::eye(8);
+            for _ in 0..p.min(20) {
+                slow = matmul(&slow, &a);
+            }
+            if p <= 20 {
+                assert!((&fast - &slow).max_abs() < 1e-9, "p={p}");
+            } else {
+                // spot-check via spectrum: eig(A^p) == eig(A)^p
+                let ea = eigh(&a).unwrap();
+                let ep = eigh(&fast).unwrap();
+                let mut expect: Vec<f64> = ea.values.iter().map(|&l| l.powi(p as i32)).collect();
+                expect.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                for (got, want) in ep.values.iter().zip(expect.iter()) {
+                    assert!((got - want).abs() < 1e-6 * (1.0 + want.abs()), "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expm_logm_inverse_on_spd() {
+        let mut rng = Rng::new(3);
+        let x = DMat::from_fn(12, 6, |_, _| rng.normal());
+        let mut g = crate::linalg::matmul::gram(&x);
+        g.add_diag(0.5); // strictly PD
+        let lg = logm(&g).unwrap();
+        let back = expm(&lg).unwrap();
+        assert!((&back - &g).max_abs() < 1e-7);
+    }
+
+    #[test]
+    fn taylor_neg_exp_matches_scalar_function() {
+        // Evaluate the polynomial at scalar points and compare to -e^{-x}.
+        let coeffs = taylor_neg_exp_coeffs(30);
+        for &x in &[0.0f64, 0.1, 0.5, 1.0, 1.9] {
+            let mut p = 0.0;
+            for (i, &c) in coeffs.iter().enumerate() {
+                p += c * x.powi(i as i32);
+            }
+            assert!((p - (-(-x as f64).exp())).abs() < 1e-10, "x={x}");
+        }
+    }
+
+    #[test]
+    fn taylor_log_matches_scalar_function() {
+        // NOTE: ℓ=25 is near the usable limit of the *monomial* expansion —
+        // binomial coefficients grow ~C(ℓ,ℓ/2) and f64 cancellation destroys
+        // accuracy beyond ℓ≈30. High-degree series must use the shifted
+        // SeriesForm evaluation (transforms::SeriesForm) instead.
+        let eps = 0.05;
+        let ell = 25;
+        let coeffs = taylor_log_coeffs(ell, eps);
+        for &x in &[0.0f64, 0.1, 0.5, 1.0, 1.5] {
+            let mut p = 0.0;
+            for (i, &c) in coeffs.iter().enumerate() {
+                p += c * x.powi(i as i32);
+            }
+            // Truncation bound of the alternating series at r = |x+ε−1|:
+            // |tail| ≤ r^{ℓ+1} / ((ℓ+1)(1−r)).
+            let r = (x + eps - 1.0f64).abs();
+            let bound = r.powi(ell as i32 + 1) / ((ell + 1) as f64 * (1.0 - r)) + 1e-9;
+            assert!(
+                (p - (x + eps).ln()).abs() < bound.max(1e-6),
+                "x={x}: {p} vs {} (bound {bound})",
+                (x + eps).ln()
+            );
+        }
+    }
+
+    #[test]
+    fn taylor_log_diverges_outside_radius() {
+        // Sanity: the series must be inaccurate for x+eps-1 >= 1 (paper §5.3).
+        let coeffs = taylor_log_coeffs(60, 0.05);
+        let x: f64 = 2.5;
+        let mut p = 0.0;
+        for (i, &c) in coeffs.iter().enumerate() {
+            p += c * x.powi(i as i32);
+        }
+        assert!((p - (x + 0.05).ln()).abs() > 1.0);
+    }
+
+    #[test]
+    fn power_iteration_close_to_eigh() {
+        let mut rng = Rng::new(4);
+        let x = DMat::from_fn(30, 20, |_, _| rng.normal());
+        let g = crate::linalg::matmul::gram(&x);
+        let exact = eigh(&g).unwrap().lambda_max();
+        let approx = power_lambda_max(&g, 200);
+        assert!((approx - exact).abs() < 1e-6 * exact);
+        assert!(approx <= exact + 1e-9);
+    }
+
+    #[test]
+    fn gershgorin_is_upper_bound() {
+        use crate::testkit::{check, SizeGen};
+        check(6, 15, &SizeGen { lo: 1, hi: 16 }, |&n| {
+            let mut rng = Rng::new(n as u64 + 50);
+            let a = random_symmetric(&mut rng, n);
+            let bound = gershgorin_bound(&a);
+            let e = eigh(&a).unwrap();
+            e.values
+                .iter()
+                .all(|&l| l.abs() <= bound + 1e-9)
+        });
+    }
+}

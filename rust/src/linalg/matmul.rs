@@ -1,0 +1,232 @@
+//! Cache-blocked dense matrix multiplication.
+//!
+//! This is the L3 hot path when spectral transforms are built natively
+//! (each Horner term is one `n×n` multiply). The kernel packs nothing but
+//! iterates in an i-k-j loop order over `BLOCK`-sized tiles so the innermost
+//! loop is a contiguous `axpy` over rows of `B` — autovectorizes well and is
+//! friendly to a single-core cache hierarchy. See EXPERIMENTS.md §Perf for
+//! measured before/after of the blocking.
+
+use super::dmat::DMat;
+
+/// Tile edge (f64 elements). 64×64 tiles → 3 × 32 KiB working set, fits L1+L2.
+const BLOCK: usize = 64;
+
+/// `C = A · B`.
+pub fn matmul(a: &DMat, b: &DMat) -> DMat {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let mut c = DMat::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · B` into an existing buffer (C is overwritten).
+pub fn matmul_into(a: &DMat, b: &DMat, c: &mut DMat) {
+    let (m, kk, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(kk, b.rows());
+    assert_eq!((c.rows(), c.cols()), (m, n));
+    if n <= 16 {
+        // Skinny right-hand side (the solver hot loop: V has k ≤ 8
+        // columns). The generic 64-wide j-blocking wastes its tile there;
+        // this path keeps a C-row accumulator in registers and streams A's
+        // row and B contiguously — measured ~2× over the blocked kernel at
+        // n=8 (EXPERIMENTS.md §Perf).
+        matmul_skinny(a, b, c);
+        return;
+    }
+    c.data_mut().fill(0.0);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..kk).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(kk);
+            for j0 in (0..n).step_by(BLOCK) {
+                let j1 = (j0 + BLOCK).min(n);
+                for i in i0..i1 {
+                    let arow = &ad[i * kk..(i + 1) * kk];
+                    let crow = &mut cd[i * n + j0..i * n + j1];
+                    for k in k0..k1 {
+                        let aik = arow[k];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &bd[k * n + j0..k * n + j1];
+                        // contiguous axpy: crow += aik * brow
+                        for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Skinny-B kernel: `C = A·B` with `B.cols() ≤ 16`. One C-row accumulator
+/// lives in registers across the whole k-reduction; B rows are contiguous.
+fn matmul_skinny(a: &DMat, b: &DMat, c: &mut DMat) {
+    let (m, kk, n) = (a.rows(), a.cols(), b.cols());
+    debug_assert!(n <= 16);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    let mut acc = [0.0f64; 16];
+    for i in 0..m {
+        acc[..n].fill(0.0);
+        let arow = &ad[i * kk..(i + 1) * kk];
+        for k in 0..kk {
+            let aik = arow[k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bd[k * n..(k + 1) * n];
+            for (t, &bv) in brow.iter().enumerate() {
+                acc[t] += aik * bv;
+            }
+        }
+        cd[i * n..(i + 1) * n].copy_from_slice(&acc[..n]);
+    }
+}
+
+/// `C = Aᵀ · A` (Gram matrix), exploiting symmetry (half the FLOPs).
+pub fn gram(a: &DMat) -> DMat {
+    let (m, n) = (a.rows(), a.cols());
+    let mut c = DMat::zeros(n, n);
+    for r in 0..m {
+        let row = a.row(r);
+        for i in 0..n {
+            let ri = row[i];
+            if ri == 0.0 {
+                continue;
+            }
+            for j in i..n {
+                c[(i, j)] += ri * row[j];
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            c[(i, j)] = c[(j, i)];
+        }
+    }
+    c
+}
+
+/// `y = A · x` (matrix–vector).
+pub fn gemv(a: &DMat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    let mut y = vec![0.0; a.rows()];
+    for i in 0..a.rows() {
+        y[i] = super::dmat::dot(a.row(i), x);
+    }
+    y
+}
+
+/// `y = Aᵀ · x`.
+pub fn gemv_t(a: &DMat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0; a.cols()];
+    for i in 0..a.rows() {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        super::dmat::vec_axpy(&mut y, xi, a.row(i));
+    }
+    y
+}
+
+/// Reference (naive) multiply — used only by tests to validate the blocked
+/// kernel.
+pub fn matmul_naive(a: &DMat, b: &DMat) -> DMat {
+    assert_eq!(a.cols(), b.rows());
+    let (m, kk, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = DMat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..kk {
+                s += a[(i, k)] * b[(k, j)];
+            }
+            c[(i, j)] = s;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, r: usize, c: usize) -> DMat {
+        DMat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (64, 64, 64), (65, 33, 17), (130, 70, 129)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let c1 = matmul(&a, &b);
+            let c2 = matmul_naive(&a, &b);
+            assert!((&c1 - &c2).max_abs() < 1e-10, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(2);
+        let a = random_mat(&mut rng, 20, 20);
+        let i = DMat::eye(20);
+        assert!((&matmul(&a, &i) - &a).max_abs() < 1e-12);
+        assert!((&matmul(&i, &a) - &a).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_matches_full() {
+        let mut rng = Rng::new(3);
+        let a = random_mat(&mut rng, 30, 7);
+        let g1 = gram(&a);
+        let g2 = matmul(&a.t(), &a);
+        assert!((&g1 - &g2).max_abs() < 1e-10);
+        assert!(g1.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn gemv_consistency() {
+        let mut rng = Rng::new(4);
+        let a = random_mat(&mut rng, 12, 9);
+        let x: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let y = gemv(&a, &x);
+        let xm = DMat::from_vec(9, 1, x.clone());
+        let ym = matmul(&a, &xm);
+        for i in 0..12 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-12);
+        }
+        // gemv_t(a, y) == aᵀ y
+        let z = gemv_t(&a, &y);
+        let zm = matmul(&a.t(), &ym);
+        for j in 0..9 {
+            assert!((z[j] - zm[(j, 0)]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn associativity_property() {
+        // (AB)C == A(BC) — property-test over random shapes.
+        use crate::testkit::{check, SizeGen};
+        check(7, 20, &SizeGen { lo: 1, hi: 24 }, |&n| {
+            let mut rng = Rng::new(n as u64 + 100);
+            let a = random_mat(&mut rng, n, n + 1);
+            let b = random_mat(&mut rng, n + 1, n / 2 + 1);
+            let c = random_mat(&mut rng, n / 2 + 1, n);
+            let lhs = matmul(&matmul(&a, &b), &c);
+            let rhs = matmul(&a, &matmul(&b, &c));
+            (&lhs - &rhs).max_abs() < 1e-8
+        });
+    }
+}

@@ -1,0 +1,317 @@
+//! The paper's §5.2 convergence metrics.
+//!
+//! * **Normalized subspace error** (eq 15):
+//!   `δᵗ = 1 − tr(U* Pᵗ)/k`, where `U* = V*V*ᵀ` is the ground-truth
+//!   projector and `Pᵗ = V V†` the projector of the current estimate.
+//! * **Longest eigenvector streak**: the number of *consecutive* leading
+//!   eigenvector estimates whose absolute alignment with the corresponding
+//!   ground-truth eigenvector exceeds `1 − ε` — a harsher metric that checks
+//!   the individual eigenvectors and their order, not just the subspace.
+
+use super::dmat::{dot, norm, DMat};
+use super::matmul::matmul;
+use super::qr::qr_thin;
+
+/// Normalized subspace error (eq 15). `v_star` and `v` are `n×k` column
+/// bundles; neither needs to be orthonormal (`v` is orthonormalized
+/// internally via thin QR, matching the pseudo-inverse definition
+/// `P = V V†` for full-column-rank V).
+pub fn subspace_error(v_star: &DMat, v: &DMat) -> f64 {
+    assert_eq!(v_star.rows(), v.rows());
+    assert_eq!(v_star.cols(), v.cols());
+    let k = v.cols();
+    if k == 0 {
+        return 0.0;
+    }
+    let (q, _) = qr_thin(v);
+    let (qs, _) = qr_thin(v_star);
+    // tr(U* P) = ‖Qsᵀ Q‖_F² — avoids forming n×n projectors.
+    let m = matmul(&qs.t(), &q);
+    let fro2: f64 = m.data().iter().map(|x| x * x).sum();
+    (1.0 - fro2 / k as f64).max(0.0)
+}
+
+/// Per-vector absolute alignments `|⟨v_i, v*_i⟩| / (‖v_i‖‖v*_i‖)`.
+pub fn alignments(v_star: &DMat, v: &DMat) -> Vec<f64> {
+    assert_eq!(v_star.rows(), v.rows());
+    assert_eq!(v_star.cols(), v.cols());
+    (0..v.cols())
+        .map(|j| {
+            let a = v.col(j);
+            let b = v_star.col(j);
+            let na = norm(&a);
+            let nb = norm(&b);
+            if na == 0.0 || nb == 0.0 {
+                0.0
+            } else {
+                (dot(&a, &b) / (na * nb)).abs()
+            }
+        })
+        .collect()
+}
+
+/// Longest eigenvector streak: largest `s` such that the first `s` columns
+/// of `v` all align with the matching columns of `v_star` within `eps`
+/// (i.e. `|cos angle| ≥ 1 − eps`).
+pub fn eigenvector_streak(v_star: &DMat, v: &DMat, eps: f64) -> usize {
+    alignments(v_star, v)
+        .iter()
+        .take_while(|&&a| a >= 1.0 - eps)
+        .count()
+}
+
+/// Degeneracy-aware eigenvector streak.
+///
+/// Symmetric workloads (e.g. the 3-room MDP, whose per-room vertical modes
+/// are *exactly* degenerate when doors sit on a nodal row) make individual
+/// eigenvectors inside an eigenvalue group non-identifiable — any rotation
+/// of the group is equally correct, so the plain streak stalls at the first
+/// group boundary no matter the solver. Here column `i`'s alignment is the
+/// norm of its projection onto the span of the ground-truth vectors whose
+/// eigenvalues tie with `values[i]` (within `group_tol` relative): exactly
+/// the plain streak when the spectrum is simple.
+pub fn eigenvector_streak_grouped(
+    v_star: &DMat,
+    values: &[f64],
+    v: &DMat,
+    eps: f64,
+    group_tol: f64,
+) -> usize {
+    let k = v.cols();
+    assert!(values.len() >= k, "need an eigenvalue per tracked column");
+    let scale = values
+        .iter()
+        .take(k)
+        .fold(1e-12f64, |m, &x| m.max(x.abs()));
+    // Group boundaries over the first k eigenvalues (consecutive ties).
+    let mut group_of = vec![0usize; k];
+    let mut ranges: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0;
+    for i in 1..=k {
+        let tied = i < k && (values[i] - values[i - 1]).abs() <= group_tol * scale;
+        if !tied {
+            for g in start..i {
+                group_of[g] = ranges.len();
+            }
+            ranges.push((start, i));
+            start = i;
+        }
+    }
+    let mut streak = 0;
+    for i in 0..k {
+        let (a, b) = ranges[group_of[i]];
+        // ‖projection of v_i onto span(v*_a..v*_b)‖ / ‖v_i‖
+        let vi = v.col(i);
+        let nvi = norm(&vi);
+        if nvi == 0.0 {
+            break;
+        }
+        let mut proj2 = 0.0;
+        for j in a..b {
+            let c = dot(&v_star.col(j), &vi) / nvi;
+            proj2 += c * c;
+        }
+        if proj2.sqrt() >= 1.0 - eps {
+            streak += 1;
+        } else {
+            break;
+        }
+    }
+    streak
+}
+
+/// A convergence-curve record: one sampled point during training.
+#[derive(Clone, Debug)]
+pub struct ConvergencePoint {
+    pub step: usize,
+    pub subspace_error: f64,
+    pub streak: usize,
+}
+
+/// A full convergence history for one (solver, transform) pair.
+#[derive(Clone, Debug, Default)]
+pub struct ConvergenceHistory {
+    pub label: String,
+    pub points: Vec<ConvergencePoint>,
+}
+
+impl ConvergenceHistory {
+    pub fn new(label: impl Into<String>) -> Self {
+        ConvergenceHistory { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, step: usize, subspace_error: f64, streak: usize) {
+        self.points.push(ConvergencePoint { step, subspace_error, streak });
+    }
+
+    /// First step at which the streak reached `target`, if ever.
+    pub fn steps_to_streak(&self, target: usize) -> Option<usize> {
+        self.points.iter().find(|p| p.streak >= target).map(|p| p.step)
+    }
+
+    /// First step at which subspace error dropped below `target`, if ever.
+    pub fn steps_to_error(&self, target: f64) -> Option<usize> {
+        self.points
+            .iter()
+            .find(|p| p.subspace_error <= target)
+            .map(|p| p.step)
+    }
+
+    /// Final recorded values.
+    pub fn last(&self) -> Option<&ConvergencePoint> {
+        self.points.last()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::mgs_orthonormalize;
+    use crate::util::rng::Rng;
+
+    fn random_orthonormal(rng: &mut Rng, n: usize, k: usize) -> DMat {
+        let mut v = DMat::from_fn(n, k, |_, _| rng.normal());
+        mgs_orthonormalize(&mut v);
+        v
+    }
+
+    #[test]
+    fn zero_error_for_same_subspace() {
+        let mut rng = Rng::new(1);
+        let v = random_orthonormal(&mut rng, 20, 4);
+        assert!(subspace_error(&v, &v) < 1e-12);
+        // Any rotation of the columns spans the same subspace.
+        let rot = {
+            let mut r = DMat::from_fn(4, 4, |_, _| rng.normal());
+            mgs_orthonormalize(&mut r);
+            r
+        };
+        let vr = matmul(&v, &rot);
+        assert!(subspace_error(&v, &vr) < 1e-10);
+    }
+
+    #[test]
+    fn orthogonal_subspaces_have_error_one() {
+        let n = 10;
+        let v1 = DMat::from_fn(n, 2, |i, j| if i == j { 1.0 } else { 0.0 });
+        let v2 = DMat::from_fn(n, 2, |i, j| if i == j + 5 { 1.0 } else { 0.0 });
+        assert!((subspace_error(&v1, &v2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_overlap_error() {
+        // Share one of two directions → error 0.5.
+        let n = 8;
+        let v1 = DMat::from_fn(n, 2, |i, j| if i == j { 1.0 } else { 0.0 });
+        let v2 = DMat::from_fn(n, 2, |i, j| {
+            if (i, j) == (0, 0) {
+                1.0
+            } else if (i, j) == (5, 1) {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        assert!((subspace_error(&v1, &v2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streak_counts_consecutive_prefix() {
+        let mut rng = Rng::new(2);
+        let v_star = random_orthonormal(&mut rng, 30, 5);
+        // Perfect on 0,1; wrong on 2; perfect on 3,4 → streak 2.
+        let mut v = v_star.clone();
+        let wrong = random_orthonormal(&mut rng, 30, 1);
+        v.set_col(2, &wrong.col(0));
+        // Remove overlap with v*_2 to ensure misalignment.
+        let s = eigenvector_streak(&v_star, &v, 1e-3);
+        assert!(s <= 2, "streak {s}");
+        let full = eigenvector_streak(&v_star, &v_star, 1e-6);
+        assert_eq!(full, 5);
+    }
+
+    #[test]
+    fn streak_sign_invariant() {
+        let mut rng = Rng::new(3);
+        let v_star = random_orthonormal(&mut rng, 12, 3);
+        let mut v = v_star.clone();
+        let negated: Vec<f64> = v.col(1).iter().map(|x| -x).collect();
+        v.set_col(1, &negated);
+        assert_eq!(eigenvector_streak(&v_star, &v, 1e-6), 3);
+    }
+
+    #[test]
+    fn alignment_of_unnormalized_vectors() {
+        let mut rng = Rng::new(4);
+        let v_star = random_orthonormal(&mut rng, 12, 2);
+        let mut v = v_star.clone();
+        let scaled: Vec<f64> = v.col(0).iter().map(|x| 5.0 * x).collect();
+        v.set_col(0, &scaled);
+        let a = alignments(&v_star, &v);
+        assert!((a[0] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn history_thresholds() {
+        let mut h = ConvergenceHistory::new("test");
+        h.push(0, 0.9, 0);
+        h.push(10, 0.5, 1);
+        h.push(20, 0.05, 3);
+        h.push(30, 0.01, 5);
+        assert_eq!(h.steps_to_streak(3), Some(20));
+        assert_eq!(h.steps_to_streak(6), None);
+        assert_eq!(h.steps_to_error(0.1), Some(20));
+        assert_eq!(h.last().unwrap().step, 30);
+    }
+
+    #[test]
+    fn grouped_streak_equals_plain_on_simple_spectrum() {
+        let mut rng = Rng::new(7);
+        let v_star = random_orthonormal(&mut rng, 20, 4);
+        let values = [0.0, 0.5, 1.0, 2.0];
+        let mut v = v_star.clone();
+        let wrong = random_orthonormal(&mut rng, 20, 1);
+        v.set_col(2, &wrong.col(0));
+        let plain = eigenvector_streak(&v_star, &v, 1e-2);
+        let grouped = eigenvector_streak_grouped(&v_star, &values, &v, 1e-2, 1e-9);
+        assert_eq!(plain, grouped);
+    }
+
+    #[test]
+    fn grouped_streak_accepts_rotations_within_degenerate_group() {
+        // Columns 1 and 2 share an eigenvalue; rotate them by 45°.
+        let mut rng = Rng::new(8);
+        let v_star = random_orthonormal(&mut rng, 16, 4);
+        let values = [0.0, 1.0, 1.0, 3.0];
+        let mut v = v_star.clone();
+        let (c1, c2) = (v_star.col(1), v_star.col(2));
+        let r = std::f64::consts::FRAC_1_SQRT_2;
+        let rot1: Vec<f64> = (0..16).map(|i| r * (c1[i] + c2[i])).collect();
+        let rot2: Vec<f64> = (0..16).map(|i| r * (c2[i] - c1[i])).collect();
+        v.set_col(1, &rot1);
+        v.set_col(2, &rot2);
+        // Plain streak breaks at column 1; grouped sees the subspace match.
+        assert_eq!(eigenvector_streak(&v_star, &v, 1e-2), 1);
+        assert_eq!(
+            eigenvector_streak_grouped(&v_star, &values, &v, 1e-2, 1e-9),
+            4
+        );
+        // But a vector outside the group still fails.
+        let stray = random_orthonormal(&mut rng, 16, 1);
+        v.set_col(1, &stray.col(0));
+        assert!(eigenvector_streak_grouped(&v_star, &values, &v, 1e-2, 1e-9) <= 1);
+    }
+
+    #[test]
+    fn property_error_in_unit_interval() {
+        use crate::testkit::{check, SizeGen};
+        check(9, 20, &SizeGen { lo: 4, hi: 30 }, |&n| {
+            let mut rng = Rng::new(n as u64 * 3);
+            let k = (n / 3).max(1);
+            let a = random_orthonormal(&mut rng, n, k);
+            let b = DMat::from_fn(n, k, |_, _| rng.normal());
+            let e = subspace_error(&a, &b);
+            (0.0..=1.0 + 1e-9).contains(&e)
+        });
+    }
+}

@@ -1,0 +1,28 @@
+//! Dense linear-algebra substrate.
+//!
+//! Everything the reproduction needs that would normally come from
+//! LAPACK/BLAS, implemented from scratch in `f64`:
+//!
+//! * [`dmat`] — row-major dense matrices and vector ops.
+//! * [`matmul`] — cache-blocked matrix multiplication (the L3 hot path for
+//!   exact transform construction; see EXPERIMENTS.md §Perf).
+//! * [`eigh`] — symmetric eigendecomposition via Householder
+//!   tridiagonalization (`tred2`) + implicit-shift QL (`tql2`). Provides the
+//!   ground-truth eigensystems for the paper's metrics (eq 15) and the
+//!   *exact* spectral transforms (eq 10).
+//! * [`qr`] — modified Gram–Schmidt orthonormalization (solver re-orthogonalization).
+//! * [`funcs`] — matrix functions: spectral application `f(L)`, matrix
+//!   exponential/logarithm, Horner polynomial evaluation, binary matrix
+//!   powers.
+//! * [`metrics`] — the paper's §5.2 evaluation metrics: normalized subspace
+//!   error and longest eigenvector streak.
+
+pub mod dmat;
+pub mod eigh;
+pub mod funcs;
+pub mod matmul;
+pub mod metrics;
+pub mod qr;
+
+pub use dmat::DMat;
+pub use eigh::{eigh, Eigh};

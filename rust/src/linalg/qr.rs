@@ -1,0 +1,144 @@
+//! Orthonormalization: modified Gram–Schmidt (the re-orthogonalization step
+//! inside Oja's algorithm) and a thin-QR built on it.
+
+use super::dmat::{dot, norm, normalize, vec_axpy, DMat};
+
+/// Orthonormalize the columns of `v` in place via modified Gram–Schmidt
+/// with one re-orthogonalization pass (MGS2 — numerically sufficient for
+/// the k ≤ 32 panels used here). Columns that become numerically zero are
+/// replaced with fresh unit basis vectors orthogonal to the rest.
+pub fn mgs_orthonormalize(v: &mut DMat) {
+    let (n, k) = (v.rows(), v.cols());
+    let mut cols: Vec<Vec<f64>> = (0..k).map(|j| v.col(j)).collect();
+    for j in 0..k {
+        // Two passes of projection-removal against previous columns.
+        for _pass in 0..2 {
+            for i in 0..j {
+                let (head, tail) = cols.split_at_mut(j);
+                let r = dot(&head[i], &tail[0]);
+                vec_axpy(&mut tail[0], -r, &head[i]);
+            }
+        }
+        if normalize(&mut cols[j]) < 1e-12 {
+            // Degenerate column: substitute a canonical basis vector made
+            // orthogonal to the already-fixed columns.
+            for basis in 0..n {
+                let mut cand = vec![0.0; n];
+                cand[basis] = 1.0;
+                for i in 0..j {
+                    let r = dot(&cols[i], &cand);
+                    vec_axpy(&mut cand, -r, &cols[i]);
+                }
+                if normalize(&mut cand) > 0.5 {
+                    cols[j] = cand;
+                    break;
+                }
+            }
+        }
+    }
+    for (j, c) in cols.iter().enumerate() {
+        v.set_col(j, c);
+    }
+}
+
+/// Thin QR: returns `(Q, R)` with `Q` n×k orthonormal and `R` k×k upper
+/// triangular such that `A = Q R` (MGS; assumes full column rank for exact
+/// reconstruction, still returns a valid orthonormal Q otherwise).
+pub fn qr_thin(a: &DMat) -> (DMat, DMat) {
+    let (n, k) = (a.rows(), a.cols());
+    let mut q_cols: Vec<Vec<f64>> = (0..k).map(|j| a.col(j)).collect();
+    let mut r = DMat::zeros(k, k);
+    for j in 0..k {
+        for i in 0..j {
+            let (head, tail) = q_cols.split_at_mut(j);
+            let rij = dot(&head[i], &tail[0]);
+            r[(i, j)] += rij;
+            vec_axpy(&mut tail[0], -rij, &head[i]);
+        }
+        let nrm = normalize(&mut q_cols[j]);
+        r[(j, j)] = nrm;
+    }
+    let mut q = DMat::zeros(n, k);
+    for (j, c) in q_cols.iter().enumerate() {
+        q.set_col(j, c);
+    }
+    (q, r)
+}
+
+/// Column-wise norm check: max |1 − ‖v_j‖|.
+pub fn max_col_norm_deviation(v: &DMat) -> f64 {
+    (0..v.cols())
+        .map(|j| (1.0 - norm(&v.col(j))).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mgs_produces_orthonormal_columns() {
+        let mut rng = Rng::new(1);
+        let mut v = DMat::from_fn(40, 6, |_, _| rng.normal());
+        mgs_orthonormalize(&mut v);
+        let g = matmul(&v.t(), &v);
+        assert!((&g - &DMat::eye(6)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn mgs_handles_dependent_columns() {
+        // Second column is a multiple of the first.
+        let mut v = DMat::from_fn(10, 3, |i, j| match j {
+            0 => (i + 1) as f64,
+            1 => 2.0 * (i + 1) as f64,
+            _ => if i == 3 { 1.0 } else { 0.0 },
+        });
+        mgs_orthonormalize(&mut v);
+        let g = matmul(&v.t(), &v);
+        assert!((&g - &DMat::eye(3)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(2);
+        let a = DMat::from_fn(20, 5, |_, _| rng.normal());
+        let (q, r) = qr_thin(&a);
+        let qr = matmul(&q, &r);
+        assert!((&qr - &a).max_abs() < 1e-10);
+        let g = matmul(&q.t(), &q);
+        assert!((&g - &DMat::eye(5)).max_abs() < 1e-10);
+        // R upper triangular
+        for i in 0..5 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormal_input_is_fixed_point() {
+        let mut rng = Rng::new(3);
+        let mut v = DMat::from_fn(15, 4, |_, _| rng.normal());
+        mgs_orthonormalize(&mut v);
+        let before = v.clone();
+        mgs_orthonormalize(&mut v);
+        assert!((&v - &before).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn property_projector_idempotent() {
+        use crate::testkit::{check, SizeGen};
+        check(5, 15, &SizeGen { lo: 2, hi: 25 }, |&n| {
+            let mut rng = Rng::new(n as u64);
+            let k = (n / 2).max(1);
+            let mut v = DMat::from_fn(n, k, |_, _| rng.normal());
+            mgs_orthonormalize(&mut v);
+            // P = VVᵀ must satisfy P² == P.
+            let p = matmul(&v, &v.t());
+            let p2 = matmul(&p, &p);
+            (&p2 - &p).max_abs() < 1e-8
+        });
+    }
+}

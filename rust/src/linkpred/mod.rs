@@ -1,0 +1,179 @@
+//! Link prediction substrate (Appendix A.1 of the paper).
+//!
+//! The paper's probabilistic-graph experiment: drop each edge of a
+//! well-clustered graph with probability `p`, score the *missing* pairs with
+//! **common-neighbors** (Martínez et al. 2016), normalize scores over the
+//! candidate set into probabilities, and rebuild a *weighted* graph =
+//! surviving edges (weight 1) ∪ predicted edges (weight = probability).
+//! Spectral clustering then runs on the weighted Laplacian `XᵀWX`.
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Result of the drop step.
+#[derive(Clone, Debug)]
+pub struct DroppedGraph {
+    /// Graph with surviving edges only.
+    pub graph: Graph,
+    /// The removed edges (endpoints).
+    pub removed: Vec<(usize, usize)>,
+}
+
+/// Remove each edge independently with probability `p`.
+pub fn drop_edges(g: &Graph, p: f64, seed: u64) -> DroppedGraph {
+    let mut rng = Rng::new(seed);
+    let mut kept: Vec<(usize, usize, f64)> = Vec::new();
+    let mut removed = Vec::new();
+    for e in g.edges() {
+        if rng.bernoulli(p) {
+            removed.push((e.u as usize, e.v as usize));
+        } else {
+            kept.push((e.u as usize, e.v as usize, e.w));
+        }
+    }
+    DroppedGraph { graph: Graph::from_edges(g.num_nodes(), &kept).unwrap(), removed }
+}
+
+/// Common-neighbors score for a node pair: `|N(u) ∩ N(v)|` (weighted
+/// variant: Σ over common neighbors of min(w_u, w_v) — reduces to the count
+/// for unit weights).
+pub fn common_neighbors_score(g: &Graph, u: usize, v: usize) -> f64 {
+    let nu = g.neighbors(u);
+    let nv = g.neighbors(v);
+    // CSR neighbor lists are unsorted here; use a small set for the larger.
+    if nu.is_empty() || nv.is_empty() {
+        return 0.0;
+    }
+    let (small, large) = if nu.len() <= nv.len() { (nu, nv) } else { (nv, nu) };
+    let mut wmap = std::collections::HashMap::with_capacity(small.len());
+    for &(x, w) in small {
+        wmap.insert(x, w);
+    }
+    let mut score = 0.0;
+    for &(x, w) in large {
+        if let Some(&w2) = wmap.get(&x) {
+            score += w.min(w2);
+        }
+    }
+    score
+}
+
+/// Score a candidate set of missing pairs with common neighbors.
+pub fn score_pairs(g: &Graph, pairs: &[(usize, usize)]) -> Vec<f64> {
+    pairs
+        .iter()
+        .map(|&(u, v)| common_neighbors_score(g, u, v))
+        .collect()
+}
+
+/// Normalize non-negative scores to probabilities scaled into `[0, 1]`
+/// (paper: "normalize the scores over all missing edges to produce
+/// probabilities"). Max-normalization keeps the strongest prediction at
+/// weight 1 (comparable to a surviving edge); all-zero scores → zeros.
+pub fn normalize_scores(scores: &[f64]) -> Vec<f64> {
+    let max = scores.iter().cloned().fold(0.0f64, f64::max);
+    if max <= 0.0 {
+        return vec![0.0; scores.len()];
+    }
+    scores.iter().map(|&s| s / max).collect()
+}
+
+/// The full completion pipeline: graph with dropped edges → weighted graph
+/// with predictions filled in on the *candidate* pairs (here: the actually
+/// removed pairs, matching the paper's protocol of predicting the missing
+/// edges).
+pub fn complete_graph(dropped: &DroppedGraph) -> Graph {
+    let g = &dropped.graph;
+    let scores = normalize_scores(&score_pairs(g, &dropped.removed));
+    let mut edges: Vec<(usize, usize, f64)> = g
+        .edges()
+        .iter()
+        .map(|e| (e.u as usize, e.v as usize, e.w))
+        .collect();
+    for (&(u, v), &s) in dropped.removed.iter().zip(scores.iter()) {
+        if s > 0.0 {
+            edges.push((u, v, s));
+        }
+    }
+    Graph::from_edges(g.num_nodes(), &edges).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{adjusted_rand_index, cluster_embedding};
+    use crate::graph::gen::{cliques, CliqueSpec};
+    use crate::linalg::eigh;
+
+    #[test]
+    fn drop_edges_rate() {
+        let g = cliques(&CliqueSpec { n: 60, k: 2, max_short_circuit: 5, seed: 1 }).graph;
+        let d = drop_edges(&g, 0.2, 7);
+        let frac = d.removed.len() as f64 / g.num_edges() as f64;
+        assert!((frac - 0.2).abs() < 0.08, "drop rate {frac}");
+        assert_eq!(d.graph.num_edges() + d.removed.len(), g.num_edges());
+        // p=0 and p=1 extremes
+        assert_eq!(drop_edges(&g, 0.0, 1).removed.len(), 0);
+        assert_eq!(drop_edges(&g, 1.0, 1).graph.num_edges(), 0);
+    }
+
+    #[test]
+    fn common_neighbors_counts() {
+        // 0-1, 0-2, 1-2, 1-3, 2-3: CN(0,3) = {1,2} → 2.
+        let g = Graph::from_pairs(4, &[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)]).unwrap();
+        assert_eq!(common_neighbors_score(&g, 0, 3), 2.0);
+        assert_eq!(common_neighbors_score(&g, 0, 1), 1.0); // via node 2
+    }
+
+    #[test]
+    fn intra_clique_pairs_score_higher() {
+        let gg = cliques(&CliqueSpec { n: 40, k: 2, max_short_circuit: 2, seed: 3 });
+        let d = drop_edges(&gg.graph, 0.2, 5);
+        // Removed intra-clique pairs should have high CN; a random
+        // inter-clique non-edge should score low.
+        let scores = score_pairs(&d.graph, &d.removed);
+        let intra_avg: f64 = scores.iter().sum::<f64>() / scores.len() as f64;
+        let inter = common_neighbors_score(&d.graph, 0, 39); // different cliques
+        assert!(intra_avg > inter + 2.0, "intra {intra_avg} vs inter {inter}");
+    }
+
+    #[test]
+    fn normalize_scores_bounds() {
+        let n = normalize_scores(&[2.0, 4.0, 0.0]);
+        assert_eq!(n, vec![0.5, 1.0, 0.0]);
+        assert_eq!(normalize_scores(&[0.0, 0.0]), vec![0.0, 0.0]);
+        assert!(normalize_scores(&[]).is_empty());
+    }
+
+    #[test]
+    fn completion_restores_clusterability() {
+        // The App A.1 experiment in miniature: drop 20% of edges, complete
+        // with common neighbors, cluster the weighted graph — ground truth
+        // recovered.
+        let gg = cliques(&CliqueSpec { n: 45, k: 3, max_short_circuit: 2, seed: 11 });
+        let d = drop_edges(&gg.graph, 0.2, 13);
+        let completed = complete_graph(&d);
+        assert!(completed.num_edges() > d.graph.num_edges(), "predictions added");
+        // Weighted Laplacian still PSD with zero row sums.
+        let l = completed.laplacian();
+        for i in 0..l.rows() {
+            assert!(l.row(i).iter().sum::<f64>().abs() < 1e-9);
+        }
+        let e = eigh(&l).unwrap();
+        assert!(e.values[0] > -1e-9);
+        let emb = e.bottom_k(3);
+        let r = cluster_embedding(&emb, 3, 17);
+        let ari = adjusted_rand_index(&r.assignments, &gg.labels);
+        assert!(ari > 0.9, "ARI after completion {ari}");
+    }
+
+    #[test]
+    fn predicted_weights_in_unit_interval() {
+        let gg = cliques(&CliqueSpec { n: 30, k: 2, max_short_circuit: 1, seed: 21 });
+        let d = drop_edges(&gg.graph, 0.3, 23);
+        let completed = complete_graph(&d);
+        for e in completed.edges() {
+            assert!(e.w > 0.0 && e.w <= 1.0 + 1e-12, "weight {}", e.w);
+        }
+    }
+}

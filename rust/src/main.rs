@@ -1,0 +1,456 @@
+//! `sped` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `cluster`     — end-to-end spectral clustering of a generated or loaded
+//!                   graph through the SPED pipeline (native or XLA backend).
+//! * `pvf`         — proto-value functions of the 3-room MDP (§5.3, Fig 1).
+//! * `linkpred`    — the probabilistic-graph experiment (App A.1).
+//! * `experiment`  — regenerate the paper's figures (fig2…fig6, walks).
+//! * `walk-bench`  — parallel walker-fleet estimator diagnostics (§4.3).
+//! * `gaps`        — eigengap-dilation report for a graph (Table 2 effect).
+//! * `artifacts`   — list/validate the AOT artifact registry.
+//!
+//! Configuration: every subcommand accepts `--config file.toml` plus
+//! `--set section.key=value` overrides; CLI flags win.
+
+use sped::cluster::{adjusted_rand_index, max_conductance, normalized_mutual_info};
+use sped::coordinator::experiments::{self, ExperimentOptions};
+use sped::pipeline::{Backend, Pipeline, PipelineConfig};
+use sped::transforms::TransformKind;
+use sped::util::cli::ArgSpec;
+use sped::util::config::Config;
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = args.remove(0);
+    let result = match cmd.as_str() {
+        "cluster" => cmd_cluster(args),
+        "pvf" => cmd_pvf(args),
+        "linkpred" => cmd_linkpred(args),
+        "experiment" => cmd_experiment(args),
+        "walk-bench" => cmd_walk_bench(args),
+        "gaps" => cmd_gaps(args),
+        "artifacts" => cmd_artifacts(args),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "sped — Stochastic Parallelizable Eigengap Dilation\n\
+         \n\
+         USAGE: sped <SUBCOMMAND> [OPTIONS]\n\
+         \n\
+         SUBCOMMANDS:\n\
+         \x20 cluster     spectral clustering through the SPED pipeline\n\
+         \x20 pvf         proto-value functions of the 3-room MDP (Fig 1-3)\n\
+         \x20 linkpred    probabilistic-graph clustering (Fig 5 / App A.1)\n\
+         \x20 experiment  regenerate paper figures (--figure fig2|fig3|fig4|fig5|fig6|walks|all)\n\
+         \x20 walk-bench  walker-fleet estimator diagnostics (§4.3)\n\
+         \x20 gaps        eigengap-dilation report (Table 2 effect)\n\
+         \x20 artifacts   list the AOT artifact registry\n\
+         \n\
+         Run `sped <SUBCOMMAND> --help` for options."
+    );
+}
+
+/// Extract `--config` + `--set` into a Config (applied before flag parsing).
+fn load_config(args: &mut Vec<String>) -> anyhow::Result<Config> {
+    let mut cfg = Config::default();
+    let mut rest = Vec::with_capacity(args.len());
+    let drained: Vec<String> = std::mem::take(args);
+    let mut it = drained.into_iter().peekable();
+    while let Some(tok) = it.next() {
+        match tok.as_str() {
+            "--config" => {
+                let path = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--config needs a path"))?;
+                cfg = Config::load(&path).map_err(|e| anyhow::anyhow!(e))?;
+            }
+            "--set" => {
+                let spec = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--set needs key=value"))?;
+                cfg.set_override(&spec).map_err(|e| anyhow::anyhow!(e))?;
+            }
+            _ => rest.push(tok),
+        }
+    }
+    *args = rest;
+    Ok(cfg)
+}
+
+fn graph_spec(name: &'static str) -> ArgSpec {
+    ArgSpec::new(name, "SPED workload")
+        .opt("graph", "cliques", "cliques | mdp | sbm | <edge-list path>")
+        .opt("n", "192", "node count (generators)")
+        .opt("clusters", "4", "cluster count (generators)")
+        .opt("seed", "1234", "RNG seed")
+}
+
+fn pipeline_spec(spec: ArgSpec) -> ArgSpec {
+    spec.opt("k", "4", "bottom-k eigenvectors / clusters")
+        .opt(
+            "transform",
+            "limit_negexp:251",
+            "identity | log[:eps] | negexp | taylor_negexp[:ell] | taylor_log[:ell[:eps]] | limit_negexp[:ell]",
+        )
+        .opt("solver", "oja", "oja | mu-eg | subspace")
+        .opt("eta", "0", "learning rate (0 = auto 0.5/rho(M))")
+        .opt("steps", "10000", "max solver steps")
+        .opt("eval-every", "50", "metric cadence")
+        .opt("stop-error", "1e-4", "early-stop subspace error")
+        .opt("backend", "native", "native | xla")
+        .opt("artifacts", "artifacts", "artifacts dir (xla backend)")
+        .flag("prescale", "pre-scale L by 1/lambda_max before the transform")
+}
+
+fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result<PipelineConfig> {
+    let transform = TransformKind::parse(&a.str("transform"))?;
+    let mut build = sped::transforms::BuildOptions::default();
+    build.prescale = a.flag("prescale") || cfg.bool("pipeline.prescale", false);
+    let backend = match a.str("backend").as_str() {
+        "native" => Backend::Native,
+        "xla" => Backend::Xla { artifacts_dir: a.str("artifacts") },
+        other => anyhow::bail!("unknown backend {other:?}"),
+    };
+    Ok(PipelineConfig {
+        k: cfg.usize("pipeline.k", a.usize("k")),
+        transform,
+        solver: a.str("solver"),
+        eta: a.f64("eta"), // 0 → auto-resolved by the caller
+        steps: cfg.usize("pipeline.steps", a.usize("steps")),
+        eval_every: a.usize("eval-every"),
+        streak_eps: 1e-2,
+        stop_error: a.f64("stop-error"),
+        build,
+        backend,
+        seed: a.u64("seed"),
+        do_cluster: true,
+    })
+}
+
+/// Auto learning rate: η = 0.5/ρ(M), ρ(M) = λ* − f(0) analytically.
+fn auto_eta(graph: &sped::graph::Graph, pcfg: &mut PipelineConfig, verbose: bool) {
+    if pcfg.eta > 0.0 {
+        return;
+    }
+    let l = graph.laplacian();
+    let lam = sped::linalg::funcs::power_lambda_max(&l, 100) * 1.01;
+    let rho_m = (pcfg.transform.lambda_star(lam) - pcfg.transform.scalar_map(0.0)).abs();
+    pcfg.eta = 0.5 / rho_m.max(1e-9);
+    if verbose {
+        println!("auto eta = {:.4} (rho(M) ~ {rho_m:.3})", pcfg.eta);
+    }
+}
+
+fn make_graph(a: &sped::util::cli::Args) -> anyhow::Result<(sped::graph::Graph, Vec<usize>)> {
+    let kind = a.str("graph");
+    let n = a.usize("n");
+    let c = a.usize("clusters");
+    let seed = a.u64("seed");
+    if kind == "cliques" {
+        let gg = sped::graph::gen::cliques(&sped::graph::gen::CliqueSpec {
+            n,
+            k: c,
+            max_short_circuit: 25,
+            seed,
+        });
+        Ok((gg.graph, gg.labels))
+    } else if kind == "sbm" {
+        let gg = sped::graph::gen::sbm(&vec![n / c.max(1); c.max(1)], 0.8, 0.02, seed);
+        Ok((gg.graph, gg.labels))
+    } else if kind == "mdp" {
+        let w = sped::mdp::GridWorld::three_rooms(sped::mdp::ThreeRoomSpec::default())?;
+        let rooms = (0..w.num_states()).map(|s| w.room_of(s)).collect();
+        Ok((w.graph, rooms))
+    } else {
+        Ok((sped::graph::io::load_edge_list(&kind)?, vec![]))
+    }
+}
+
+fn cmd_cluster(mut args: Vec<String>) -> anyhow::Result<()> {
+    let cfg = load_config(&mut args)?;
+    let spec = pipeline_spec(graph_spec("sped cluster"));
+    let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
+    let (graph, labels) = make_graph(&a)?;
+    println!(
+        "graph: {} nodes, {} edges, max degree {}",
+        graph.num_nodes(),
+        graph.num_edges(),
+        graph.max_degree()
+    );
+    let mut pcfg = build_pipeline_cfg(&a, &cfg)?;
+    auto_eta(&graph, &mut pcfg, true);
+    let out = Pipeline::new(pcfg.clone()).run(&graph)?;
+    let last = out.history.last().unwrap();
+    println!(
+        "\ntransform {} | solver {} | steps {} | subspace err {:.3e} | streak {}/{}",
+        pcfg.transform, pcfg.solver, last.step, last.subspace_error, last.streak, pcfg.k
+    );
+    println!(
+        "timings: ground-truth {:.2}s, transform {:.2}s, solve {:.2}s, cluster {:.2}s",
+        out.timings.ground_truth,
+        out.timings.transform_build,
+        out.timings.solve,
+        out.timings.cluster
+    );
+    if let Some(cl) = &out.clustering {
+        println!("k-means inertia {:.4} ({} iters)", cl.inertia, cl.iterations);
+        println!("max conductance phi = {:.4}", max_conductance(&graph, &cl.assignments));
+        if !labels.is_empty() {
+            println!(
+                "vs ground truth: ARI {:.4}, NMI {:.4}",
+                adjusted_rand_index(&cl.assignments, &labels),
+                normalized_mutual_info(&cl.assignments, &labels)
+            );
+        }
+        let mut sizes = std::collections::BTreeMap::new();
+        for &c in &cl.assignments {
+            *sizes.entry(c).or_insert(0usize) += 1;
+        }
+        println!("cluster sizes: {sizes:?}");
+    }
+    Ok(())
+}
+
+fn cmd_pvf(mut args: Vec<String>) -> anyhow::Result<()> {
+    let _cfg = load_config(&mut args)?;
+    let spec = ArgSpec::new("sped pvf", "3-room MDP proto-value functions")
+        .opt("s", "1", "geometry scale (paper Fig 1: s=2)")
+        .opt("h", "10", "door fraction denominator")
+        .opt("k", "8", "number of PVFs")
+        .flag("render", "ASCII-render the world and the 2nd PVF");
+    let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
+    let world = sped::mdp::GridWorld::three_rooms(sped::mdp::ThreeRoomSpec {
+        s: a.usize("s"),
+        h: a.usize("h"),
+    })?;
+    println!(
+        "3-room MDP: {}x{} grid, {} states, {} transitions",
+        world.rows,
+        world.cols,
+        world.num_states(),
+        world.graph.num_edges()
+    );
+    let k = a.usize("k");
+    let pvf = sped::mdp::proto_value_functions(&world, k)?;
+    let e = sped::linalg::eigh(&world.graph.laplacian())?;
+    println!(
+        "bottom-{k} eigenvalues: {:?}",
+        &e.values[..k.min(e.values.len())]
+    );
+    if a.flag("render") {
+        println!("\nworld (Fig 1):\n{}", world.render());
+        println!(
+            "2nd PVF (Fiedler vector — separates outer rooms):\n{}",
+            world.render_field(&pvf.col(1))
+        );
+    }
+    let goal = world.num_states() / 2;
+    let target = sped::mdp::negative_distance_value(&world, goal);
+    let (_, rmse) = sped::mdp::pvf_value_fit(&pvf, &target);
+    println!("value-function fit with {k} PVFs: normalized RMSE {rmse:.4}");
+    Ok(())
+}
+
+fn cmd_linkpred(mut args: Vec<String>) -> anyhow::Result<()> {
+    let cfg = load_config(&mut args)?;
+    let spec = pipeline_spec(graph_spec("sped linkpred")).opt("drop", "0.2", "edge drop probability");
+    let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
+    let (graph, labels) = make_graph(&a)?;
+    let dropped = sped::linkpred::drop_edges(&graph, a.f64("drop"), a.u64("seed") ^ 0xA1);
+    let completed = sped::linkpred::complete_graph(&dropped);
+    println!(
+        "dropped {} of {} edges; completion re-added {} weighted predictions",
+        dropped.removed.len(),
+        graph.num_edges(),
+        completed.num_edges() - dropped.graph.num_edges()
+    );
+    let mut pcfg = build_pipeline_cfg(&a, &cfg)?;
+    auto_eta(&completed, &mut pcfg, true);
+    let out = Pipeline::new(pcfg).run(&completed)?;
+    let last = out.history.last().unwrap();
+    println!(
+        "converged: subspace err {:.3e}, streak {}",
+        last.subspace_error, last.streak
+    );
+    if let (Some(cl), false) = (&out.clustering, labels.is_empty()) {
+        println!(
+            "clustering completed graph: ARI {:.4} vs original ground truth",
+            adjusted_rand_index(&cl.assignments, &labels)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(mut args: Vec<String>) -> anyhow::Result<()> {
+    let _cfg = load_config(&mut args)?;
+    let spec = ArgSpec::new("sped experiment", "regenerate paper figures")
+        .opt("figure", "all", "fig2 | fig3 | fig4 | fig5 | fig6 | walks | all")
+        .opt("out-dir", "results", "CSV output directory")
+        .opt("seed", "1234", "RNG seed")
+        .flag("fast", "smoke-scale budgets")
+        .flag("full-size", "paper-scale graphs (n=1000/2000)");
+    let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
+    let opts = ExperimentOptions {
+        fast: a.flag("fast") || sped::util::bench::fast_mode(),
+        out_dir: a.str("out-dir"),
+        seed: a.u64("seed"),
+        full_size: a.flag("full-size"),
+    };
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let figure = a.str("figure");
+    let run_figs = |f: &str| -> anyhow::Result<()> {
+        match f {
+            "fig2" | "fig3" => {
+                let curves = experiments::fig2_fig3_mdp(&opts)?;
+                println!("\n=== Figures 2 & 3 — 3-room MDP (streak target 8) ===");
+                for row in experiments::summarize(&curves, 8) {
+                    println!("{row}");
+                }
+            }
+            "fig4" => {
+                let curves = experiments::fig4_cliques(&opts)?;
+                println!("\n=== Figure 4 — clique graphs ===");
+                for row in experiments::summarize(&curves, 3) {
+                    println!("{row}");
+                }
+            }
+            "fig5" => {
+                let curves = experiments::fig5_linkpred(&opts)?;
+                println!("\n=== Figure 5 — link prediction ===");
+                for row in experiments::summarize(&curves, 3) {
+                    println!("{row}");
+                }
+            }
+            "fig6" => {
+                let curves = experiments::fig6_series_terms(&opts)?;
+                println!("\n=== Figure 6 — series degree sweep ===");
+                for row in experiments::summarize(&curves, 3) {
+                    println!("{row}");
+                }
+            }
+            "walks" => {
+                println!("\n=== §4.3 — walk estimator ===");
+                for row in experiments::walk_estimator_experiment(&opts)? {
+                    println!("{row}");
+                }
+            }
+            other => anyhow::bail!("unknown figure {other:?}"),
+        }
+        Ok(())
+    };
+    if figure == "all" {
+        for f in ["fig2", "fig4", "fig5", "fig6", "walks"] {
+            run_figs(f)?;
+        }
+    } else {
+        run_figs(&figure)?;
+    }
+    println!("\nCSV series written to {}/", opts.out_dir);
+    Ok(())
+}
+
+fn cmd_walk_bench(mut args: Vec<String>) -> anyhow::Result<()> {
+    let _cfg = load_config(&mut args)?;
+    let spec = graph_spec("sped walk-bench")
+        .opt("len", "3", "walk length (edge-incidence nodes)")
+        .opt("walks", "50000", "total walk trials")
+        .opt("workers", "4", "walker threads")
+        .opt("method", "importance", "rejection | importance");
+    let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
+    let (graph, _) = make_graph(&a)?;
+    let method = sped::walks::SampleMethod::parse(&a.str("method"))?;
+    let t0 = std::time::Instant::now();
+    let pool = sped::coordinator::walkers::WalkerPool::spawn(
+        std::sync::Arc::new(graph.clone()),
+        sped::coordinator::walkers::WalkerPoolConfig {
+            workers: a.usize("workers"),
+            backlog: 8,
+            method,
+        },
+    );
+    let (est, stats) = pool.estimate_power(
+        a.usize("len"),
+        a.usize("walks"),
+        a.usize("workers") * 4,
+        a.u64("seed"),
+    );
+    pool.shutdown();
+    let dt = t0.elapsed().as_secs_f64();
+    let truth = sped::linalg::funcs::matpow(&graph.laplacian(), a.usize("len") as u64);
+    let rel = (&est - &truth).max_abs() / truth.max_abs();
+    println!(
+        "L^{} estimate from {} walks ({} workers, {method:?}): rel err {:.4}, acceptance {:.3}, {:.0} walks/s",
+        a.usize("len"),
+        stats.trials,
+        a.usize("workers"),
+        rel,
+        stats.acceptance_rate(),
+        stats.trials as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_gaps(mut args: Vec<String>) -> anyhow::Result<()> {
+    let _cfg = load_config(&mut args)?;
+    let spec = graph_spec("sped gaps").opt("k", "4", "bottom-k gaps to report");
+    let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
+    let (graph, _) = make_graph(&a)?;
+    let l = graph.laplacian();
+    println!(
+        "eigengap dilation report (max rho/g over bottom-{}):\n",
+        a.usize("k")
+    );
+    for row in experiments::gap_report(&l, a.usize("k"))? {
+        println!("{row}");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(mut args: Vec<String>) -> anyhow::Result<()> {
+    let _cfg = load_config(&mut args)?;
+    let spec = ArgSpec::new("sped artifacts", "AOT artifact registry")
+        .opt("dir", "artifacts", "artifacts directory");
+    let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = sped::runtime::Runtime::load_dir(a.str("dir"))?;
+    println!(
+        "loaded + compiled {} artifacts from {}:",
+        rt.names().len(),
+        a.str("dir")
+    );
+    for name in rt.names() {
+        let art = rt.get(name)?;
+        println!(
+            "  {:<22} kind={:<12} n={:<5} k={} t={} degree={} bits={} batch={}",
+            name,
+            art.meta.kind,
+            art.meta.n,
+            art.meta.k,
+            art.meta.t,
+            art.meta.degree,
+            art.meta.bits,
+            art.meta.batch
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,317 @@
+//! MDP substrate: the 3-room grid world of §5.3 / Figure 1 and
+//! proto-value functions (Mahadevan 2005).
+//!
+//! Geometry (paper): the world is `10s+1` cells tall and `30s+1` cells wide,
+//! three rooms separated by two interior walls; each wall has a doorway
+//! occupying `1/h` of the vertical space (`(10s+1)/h` cells tall), centered
+//! vertically. States are free cells; undirected edges connect 4-adjacent
+//! free cells (both transition directions, as the paper notes).
+//!
+//! Proto-value functions are the bottom-k eigenvectors of the state-graph
+//! Laplacian; [`pvf_value_fit`] demonstrates the downstream use: least-
+//! squares fitting of a value function in the PVF basis.
+
+use crate::graph::Graph;
+use crate::linalg::dmat::DMat;
+use anyhow::Result;
+
+/// 3-room grid world (Figure 1). `s` scales the geometry; `h` controls the
+/// door height fraction.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreeRoomSpec {
+    pub s: usize,
+    pub h: usize,
+}
+
+impl Default for ThreeRoomSpec {
+    fn default() -> Self {
+        // Paper's Figure 1 uses s=2, h=10; s=1 is the single-core-friendly
+        // default (341 → 321 free cells).
+        ThreeRoomSpec { s: 1, h: 10 }
+    }
+}
+
+/// Built grid world: the state graph plus the cell geometry.
+#[derive(Clone, Debug)]
+pub struct GridWorld {
+    pub spec: ThreeRoomSpec,
+    pub rows: usize,
+    pub cols: usize,
+    /// `cell_state[r][c]` = Some(state-id) for free cells, None for walls.
+    pub cell_state: Vec<Vec<Option<usize>>>,
+    /// (row, col) of each state.
+    pub coords: Vec<(usize, usize)>,
+    pub graph: Graph,
+}
+
+impl GridWorld {
+    /// Build the 3-room world.
+    pub fn three_rooms(spec: ThreeRoomSpec) -> Result<GridWorld> {
+        anyhow::ensure!(spec.s >= 1 && spec.h >= 1, "need s ≥ 1, h ≥ 1");
+        let rows = 10 * spec.s + 1;
+        let cols = 30 * spec.s + 1;
+        // Interior walls at the two columns splitting the width in thirds.
+        let wall_cols = [cols / 3, 2 * cols / 3];
+        // Door: (10s+1)/h cells tall (≥1), vertically centered.
+        let door_h = (rows / spec.h).max(1);
+        let door_top = (rows - door_h) / 2;
+        let door_rows = door_top..door_top + door_h;
+        let mut cell_state = vec![vec![None; cols]; rows];
+        let mut coords = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                let is_wall = wall_cols.contains(&c) && !door_rows.contains(&r);
+                if !is_wall {
+                    cell_state[r][c] = Some(coords.len());
+                    coords.push((r, c));
+                }
+            }
+        }
+        // 4-adjacency among free cells.
+        let mut pairs = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if let Some(a) = cell_state[r][c] {
+                    if c + 1 < cols {
+                        if let Some(b) = cell_state[r][c + 1] {
+                            pairs.push((a, b));
+                        }
+                    }
+                    if r + 1 < rows {
+                        if let Some(b) = cell_state[r + 1][c] {
+                            pairs.push((a, b));
+                        }
+                    }
+                }
+            }
+        }
+        let graph = Graph::from_pairs(coords.len(), &pairs)?;
+        Ok(GridWorld { spec, rows, cols, cell_state, coords, graph })
+    }
+
+    pub fn num_states(&self) -> usize {
+        self.coords.len()
+    }
+
+    /// Room index (0, 1, 2) of a state by its column.
+    pub fn room_of(&self, state: usize) -> usize {
+        let (_, c) = self.coords[state];
+        let w1 = self.cols / 3;
+        let w2 = 2 * self.cols / 3;
+        if c < w1 {
+            0
+        } else if c < w2 {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// ASCII rendering (Figure 1): `#` wall, `.` free.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity((self.cols + 1) * self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.push(if self.cell_state[r][c].is_some() { '.' } else { '#' });
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Overlay a per-state scalar field (e.g. a PVF) on the grid as
+    /// quantized characters (space=low … '@'=high), walls as '#'.
+    pub fn render_field(&self, field: &[f64]) -> String {
+        assert_eq!(field.len(), self.num_states());
+        let (lo, hi) = field
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+        let ramp: &[u8] = b" .:-=+*%@";
+        let mut out = String::new();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                match self.cell_state[r][c] {
+                    None => out.push('#'),
+                    Some(s) => {
+                        let t = if hi > lo { (field[s] - lo) / (hi - lo) } else { 0.5 };
+                        let idx = ((t * (ramp.len() - 1) as f64).round() as usize)
+                            .min(ramp.len() - 1);
+                        out.push(ramp[idx] as char);
+                    }
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Proto-value functions: the bottom-`k` eigenvectors of the state-graph
+/// Laplacian (exact, via the dense eigensolver — the oracle the SPED
+/// pipeline accelerates).
+pub fn proto_value_functions(world: &GridWorld, k: usize) -> Result<DMat> {
+    let l = world.graph.laplacian();
+    let e = crate::linalg::eigh(&l)?;
+    Ok(e.bottom_k(k))
+}
+
+/// Least-squares fit of a target value function in the PVF basis; returns
+/// (fitted values, normalized RMSE). Demonstrates the §5.3 use case.
+pub fn pvf_value_fit(basis: &DMat, target: &[f64]) -> (Vec<f64>, f64) {
+    let (n, k) = (basis.rows(), basis.cols());
+    assert_eq!(target.len(), n);
+    // Basis columns are orthonormal → coefficients = Bᵀ t.
+    let coeffs = crate::linalg::matmul::gemv_t(basis, target);
+    let fitted = crate::linalg::matmul::gemv(basis, &coeffs);
+    let mut err = 0.0;
+    let mut scale = 0.0;
+    for i in 0..n {
+        err += (fitted[i] - target[i]).powi(2);
+        scale += target[i].powi(2);
+    }
+    let _ = k;
+    (fitted, (err / scale.max(1e-300)).sqrt())
+}
+
+/// Simple value function for demos: negated shortest-path distance (BFS) to
+/// a goal state under the random-walk MDP.
+pub fn negative_distance_value(world: &GridWorld, goal: usize) -> Vec<f64> {
+    let n = world.num_states();
+    let mut dist = vec![usize::MAX; n];
+    let mut q = std::collections::VecDeque::new();
+    dist[goal] = 0;
+    q.push_back(goal);
+    while let Some(v) = q.pop_front() {
+        for &(u, _) in world.graph.neighbors(v) {
+            if dist[u as usize] == usize::MAX {
+                dist[u as usize] = dist[v] + 1;
+                q.push_back(u as usize);
+            }
+        }
+    }
+    dist.into_iter()
+        .map(|d| if d == usize::MAX { -1e9 } else { -(d as f64) })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigh;
+
+    #[test]
+    fn geometry_matches_paper() {
+        // Figure 1's caption: s=2, h=10 → 21 × 61 grid.
+        let w = GridWorld::three_rooms(ThreeRoomSpec { s: 2, h: 10 }).unwrap();
+        assert_eq!(w.rows, 21);
+        assert_eq!(w.cols, 61);
+        // Two wall columns minus the door cells.
+        let door_h = (21 / 10).max(1); // 2
+        let expected_states = 21 * 61 - 2 * (21 - door_h);
+        assert_eq!(w.num_states(), expected_states);
+    }
+
+    #[test]
+    fn default_world_connected() {
+        let w = GridWorld::three_rooms(ThreeRoomSpec::default()).unwrap();
+        assert_eq!(w.graph.num_components(), 1, "doors must connect rooms");
+        assert_eq!(w.rows, 11);
+        assert_eq!(w.cols, 31);
+    }
+
+    #[test]
+    fn rooms_partition_states() {
+        let w = GridWorld::three_rooms(ThreeRoomSpec::default()).unwrap();
+        let mut counts = [0usize; 3];
+        for s in 0..w.num_states() {
+            counts[w.room_of(s)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0));
+        // Rooms roughly equal size.
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min < 1.3, "{counts:?}");
+    }
+
+    #[test]
+    fn render_shows_walls_and_door() {
+        let w = GridWorld::three_rooms(ThreeRoomSpec::default()).unwrap();
+        let pic = w.render();
+        let lines: Vec<&str> = pic.lines().collect();
+        assert_eq!(lines.len(), 11);
+        // Top row contains wall characters at the wall columns.
+        assert_eq!(&lines[0][10..11], "#");
+        // Middle row is all free (door).
+        assert!(!lines[5].contains('#'));
+    }
+
+    #[test]
+    fn pvf_first_is_constant_second_separates_rooms() {
+        let w = GridWorld::three_rooms(ThreeRoomSpec::default()).unwrap();
+        let pvf = proto_value_functions(&w, 4).unwrap();
+        // First PVF = constant (kernel of L).
+        let c0 = pvf.col(0);
+        let spread = c0.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| {
+            (l.min(x), h.max(x))
+        });
+        assert!((spread.1 - spread.0).abs() < 1e-6, "first PVF not constant");
+        // Second PVF (Fiedler) separates room 0 from room 2 by sign.
+        let c1 = pvf.col(1);
+        let avg_room: Vec<f64> = (0..3)
+            .map(|room| {
+                let (mut s, mut n) = (0.0, 0);
+                for st in 0..w.num_states() {
+                    if w.room_of(st) == room {
+                        s += c1[st];
+                        n += 1;
+                    }
+                }
+                s / n as f64
+            })
+            .collect();
+        assert!(
+            avg_room[0] * avg_room[2] < 0.0,
+            "Fiedler vector must split outer rooms: {avg_room:?}"
+        );
+    }
+
+    #[test]
+    fn spectrum_has_three_small_eigenvalues() {
+        // 3 rooms → 3 eigenvalues ≪ rest (the paper's premise for Fig 2).
+        let w = GridWorld::three_rooms(ThreeRoomSpec::default()).unwrap();
+        let e = eigh(&w.graph.laplacian()).unwrap();
+        assert!(e.values[0].abs() < 1e-9);
+        assert!(e.values[1] < 0.02, "λ₂ = {}", e.values[1]);
+        assert!(e.values[2] < 0.05, "λ₃ = {}", e.values[2]);
+        assert!(e.values[3] > 2.0 * e.values[2], "λ₄ = {} no jump", e.values[3]);
+    }
+
+    #[test]
+    fn value_fit_improves_with_basis_size() {
+        let w = GridWorld::three_rooms(ThreeRoomSpec::default()).unwrap();
+        let goal = w.num_states() / 2;
+        let target = negative_distance_value(&w, goal);
+        let errs: Vec<f64> = [2usize, 8, 24]
+            .iter()
+            .map(|&k| {
+                let basis = proto_value_functions(&w, k).unwrap();
+                pvf_value_fit(&basis, &target).1
+            })
+            .collect();
+        assert!(errs[1] < errs[0] && errs[2] < errs[1], "{errs:?}");
+        assert!(errs[2] < 0.2, "24 PVFs should fit well: {errs:?}");
+    }
+
+    #[test]
+    fn render_field_runs() {
+        let w = GridWorld::three_rooms(ThreeRoomSpec::default()).unwrap();
+        let pvf = proto_value_functions(&w, 2).unwrap();
+        let pic = w.render_field(&pvf.col(1));
+        assert_eq!(pic.lines().count(), w.rows);
+    }
+
+    #[test]
+    fn invalid_spec_rejected() {
+        assert!(GridWorld::three_rooms(ThreeRoomSpec { s: 0, h: 10 }).is_err());
+    }
+}

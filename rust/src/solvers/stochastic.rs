@@ -1,0 +1,193 @@
+//! Stochastic [`MatVecOp`] oracles — the paper's optimization model, where
+//! the solver never sees the full matrix, only minibatch estimates.
+//!
+//! * [`MinibatchLaplacianOp`] — the classic streaming-PCA model (§3): each
+//!   step samples a batch of edges and applies the unbiased estimate
+//!   `L̂ = (|E|/B) Σ_{e∈batch} w_e x_e x_eᵀ` (reversed per eq 8) to `V`
+//!   without materializing anything dense.
+//! * [`StochasticPolyOp`] — the full stochastic SPED operator: each step
+//!   draws fresh random walks on the edge-incidence graph and applies an
+//!   unbiased estimate of `λ*I − p(L)` (sub-walk harvesting; §4.3).
+
+use super::MatVecOp;
+use crate::graph::Graph;
+use crate::linalg::DMat;
+use crate::util::rng::Rng;
+use crate::walks::{SampleMethod, WalkEstimator};
+
+/// Minibatch edge-sampling oracle for `M = λ*I − L` (identity transform).
+pub struct MinibatchLaplacianOp<'g> {
+    graph: &'g Graph,
+    pub lambda_star: f64,
+    pub batch: usize,
+    rng: Rng,
+}
+
+impl<'g> MinibatchLaplacianOp<'g> {
+    pub fn new(graph: &'g Graph, lambda_star: f64, batch: usize, seed: u64) -> Self {
+        assert!(graph.num_edges() > 0);
+        MinibatchLaplacianOp { graph, lambda_star, batch, rng: Rng::new(seed) }
+    }
+}
+
+impl MatVecOp for MinibatchLaplacianOp<'_> {
+    fn apply(&mut self, v: &DMat) -> DMat {
+        let (n, k) = (v.rows(), v.cols());
+        let m = self.graph.num_edges();
+        let mut out = v.clone();
+        out.scale(self.lambda_star);
+        let scale = -(m as f64) / self.batch as f64;
+        let edges = self.graph.edges();
+        for _ in 0..self.batch {
+            let e = edges[self.rng.below(m)];
+            let (u, w) = (e.u as usize, e.v as usize);
+            // x_e x_eᵀ V = x_e · (V[u,:] − V[v,:])
+            for t in 0..k {
+                let d = (v[(u, t)] - v[(w, t)]) * e.w * scale;
+                out[(u, t)] += d;
+                out[(w, t)] -= d;
+            }
+        }
+        let _ = n;
+        out
+    }
+    fn dim(&self) -> usize {
+        self.graph.num_nodes()
+    }
+    fn label(&self) -> String {
+        format!("minibatch[B={}]", self.batch)
+    }
+}
+
+/// Stochastic SPED oracle: `M̂V = λ*·V − p̂(L)·V` with `p̂` estimated from
+/// `walks_per_step` fresh random walks each application.
+pub struct StochasticPolyOp<'g> {
+    estimator: WalkEstimator<'g>,
+    /// Monomial coefficients of `p` (`p(x) = Σ coeffs[i] xⁱ`).
+    pub coeffs: Vec<f64>,
+    pub lambda_star: f64,
+    pub walks_per_step: usize,
+    rng: Rng,
+}
+
+impl<'g> StochasticPolyOp<'g> {
+    pub fn new(
+        graph: &'g Graph,
+        coeffs: Vec<f64>,
+        lambda_star: f64,
+        walks_per_step: usize,
+        method: SampleMethod,
+        seed: u64,
+    ) -> Self {
+        StochasticPolyOp {
+            estimator: WalkEstimator::new(graph, method),
+            coeffs,
+            lambda_star,
+            walks_per_step,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl MatVecOp for StochasticPolyOp<'_> {
+    fn apply(&mut self, v: &DMat) -> DMat {
+        let est =
+            self.estimator
+                .estimate_poly_apply(&self.coeffs, v, self.walks_per_step, &mut self.rng);
+        let mut out = v.clone();
+        out.scale(self.lambda_star);
+        out.axpy(-1.0, &est);
+        out
+    }
+    fn dim(&self) -> usize {
+        self.estimator.engine.graph().num_nodes()
+    }
+    fn label(&self) -> String {
+        format!(
+            "stoch-poly[deg={},W={}]",
+            self.coeffs.len().saturating_sub(1),
+            self.walks_per_step
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{cliques, CliqueSpec};
+    use crate::linalg::eigh;
+    use crate::linalg::matmul::matmul;
+    use crate::solvers::{run_convergence, DenseOp, Oja, RunConfig};
+
+    fn small() -> Graph {
+        cliques(&CliqueSpec { n: 18, k: 2, max_short_circuit: 1, seed: 2 }).graph
+    }
+
+    #[test]
+    fn minibatch_op_unbiased() {
+        let g = small();
+        let l = g.laplacian();
+        let lam_star = 1.1 * crate::linalg::funcs::power_lambda_max(&l, 100);
+        let v = crate::solvers::random_init(g.num_nodes(), 3, 7);
+        // Average many applications ≈ (λ*I − L)V.
+        let mut op = MinibatchLaplacianOp::new(&g, lam_star, 8, 3);
+        let mut acc = DMat::zeros(g.num_nodes(), 3);
+        let reps = 3000;
+        for _ in 0..reps {
+            acc.axpy(1.0 / reps as f64, &op.apply(&v));
+        }
+        let mut expect = v.clone();
+        expect.scale(lam_star);
+        expect.axpy(-1.0, &matmul(&l, &v));
+        let err = (&acc - &expect).max_abs() / expect.max_abs();
+        assert!(err < 0.12, "rel err {err}"); // ~1/√(reps·B) Monte-Carlo noise
+    }
+
+    #[test]
+    fn stochastic_poly_op_unbiased() {
+        let g = small();
+        let l = g.laplacian();
+        let coeffs = vec![0.0, 1.0, 0.05]; // p(x) = x + 0.05x²
+        let v = crate::solvers::random_init(g.num_nodes(), 2, 11);
+        let mut op =
+            StochasticPolyOp::new(&g, coeffs.clone(), 2.0, 2000, SampleMethod::Importance, 5);
+        let mut acc = DMat::zeros(g.num_nodes(), 2);
+        let reps = 60;
+        for _ in 0..reps {
+            acc.axpy(1.0 / reps as f64, &op.apply(&v));
+        }
+        let p = crate::linalg::funcs::poly_horner(&l, &coeffs);
+        let mut expect = v.clone();
+        expect.scale(2.0);
+        expect.axpy(-1.0, &matmul(&p, &v));
+        let err = (&acc - &expect).max_abs() / expect.max_abs();
+        assert!(err < 0.1, "rel err {err}");
+    }
+
+    #[test]
+    fn oja_converges_under_minibatch_noise() {
+        // The stochastic optimization model end-to-end: Oja + minibatch
+        // Laplacian reaches a decent subspace estimate of the bottom-k.
+        let g = small();
+        let l = g.laplacian();
+        let e = eigh(&l).unwrap();
+        let v_star = e.bottom_k(2);
+        let lam_star = 1.1 * e.lambda_max();
+        let mut op = MinibatchLaplacianOp::new(&g, lam_star, 16, 9);
+        let mut solver = Oja { eta: 0.002 };
+        let cfg = RunConfig { steps: 4000, eval_every: 100, ..Default::default() };
+        let hist = run_convergence(&mut solver, &mut op, &v_star, &cfg);
+        let noisy_err = hist.last().unwrap().subspace_error;
+        assert!(noisy_err < 0.2, "stochastic Oja err {noisy_err}");
+        // Dense reference should do at least as well — sanity anchor.
+        let mut mm = l.clone();
+        mm.scale(-1.0);
+        mm.add_diag(lam_star);
+        let mut dop = DenseOp { m: mm };
+        let dense_err = run_convergence(&mut Oja { eta: 0.002 }, &mut dop, &v_star, &cfg)
+            .last()
+            .unwrap()
+            .subspace_error;
+        assert!(dense_err <= noisy_err + 1e-6);
+    }
+}

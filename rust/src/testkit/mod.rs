@@ -1,0 +1,281 @@
+//! Property-based testing mini-framework (offline stand-in for `proptest`).
+//!
+//! A property is a closure over values drawn from a [`Gen`]; the runner
+//! executes `cases` random trials and, on failure, greedily **shrinks** the
+//! failing input before reporting. Generators compose with `map`/`filter`
+//! and tuple helpers. Used across the crate's test suites for invariants
+//! such as "every generated Laplacian is PSD with row sums 0" or "walk
+//! acceptance probabilities are in (0, 1]".
+
+use crate::util::rng::Rng;
+
+/// A value generator: produces a random instance and can propose shrinks.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate simpler values (tried in order during shrinking).
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Integers in `[lo, hi]` shrinking toward `lo`.
+pub struct IntGen {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Gen for IntGen {
+    type Value = i64;
+    fn generate(&self, rng: &mut Rng) -> i64 {
+        self.lo + rng.below((self.hi - self.lo + 1) as usize) as i64
+    }
+    fn shrink(&self, v: &i64) -> Vec<i64> {
+        let mut out = Vec::new();
+        if *v != self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (*v - self.lo) / 2;
+            if mid != *v && mid != self.lo {
+                out.push(mid);
+            }
+            if *v - 1 >= self.lo {
+                out.push(*v - 1);
+            }
+        }
+        out
+    }
+}
+
+/// `usize` in `[lo, hi]` shrinking toward `lo`.
+pub struct SizeGen {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for SizeGen {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.range(self.lo, self.hi + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (*v - self.lo) / 2;
+            if mid != *v && mid != self.lo {
+                out.push(mid);
+            }
+            out.push(*v - 1);
+        }
+        out
+    }
+}
+
+/// Uniform floats in `[lo, hi)` shrinking toward zero / lo.
+pub struct FloatGen {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for FloatGen {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.uniform(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if self.lo <= 0.0 && 0.0 <= *v && *v != 0.0 {
+            out.push(0.0);
+        }
+        if *v != self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2.0);
+        }
+        out
+    }
+}
+
+/// Vectors of a base generator with length in `[min_len, max_len]`;
+/// shrinks by halving length, then element-wise.
+pub struct VecGen<G: Gen> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = rng.range(self.min_len, self.max_len + 1);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // Halve, drop-first, drop-last.
+            let half = self.min_len.max(v.len() / 2);
+            out.push(v[..half].to_vec());
+            out.push(v[1..].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        // Shrink one element at a time (first few positions only — cheap).
+        for i in 0..v.len().min(4) {
+            for s in self.elem.shrink(&v[i]) {
+                let mut w = v.clone();
+                w[i] = s;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairGen<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(a).into_iter().map(|a2| (a2, b.clone())).collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+        out
+    }
+}
+
+/// Mapped generator (no shrinking through the map).
+pub struct MapGen<G: Gen, T, F: Fn(G::Value) -> T> {
+    pub base: G,
+    pub f: F,
+}
+
+impl<G: Gen, T: Clone + std::fmt::Debug, F: Fn(G::Value) -> T> Gen for MapGen<G, T, F> {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        (self.f)(self.base.generate(rng))
+    }
+}
+
+/// Outcome of a property check.
+pub enum PropResult {
+    Pass,
+    Fail(String),
+}
+
+impl From<bool> for PropResult {
+    fn from(ok: bool) -> Self {
+        if ok {
+            PropResult::Pass
+        } else {
+            PropResult::Fail("property returned false".into())
+        }
+    }
+}
+
+impl From<Result<(), String>> for PropResult {
+    fn from(r: Result<(), String>) -> Self {
+        match r {
+            Ok(()) => PropResult::Pass,
+            Err(e) => PropResult::Fail(e),
+        }
+    }
+}
+
+/// Run `cases` random trials of `prop` on values from `gen`, shrinking any
+/// failure. Panics with the minimal counterexample.
+pub fn check<G, P, R>(seed: u64, cases: usize, gen: &G, prop: P)
+where
+    G: Gen,
+    P: Fn(&G::Value) -> R,
+    R: Into<PropResult>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if let PropResult::Fail(msg) = prop(&value).into() {
+            let (min_value, min_msg, steps) = shrink_failure(gen, &prop, value, msg);
+            panic!(
+                "property failed (case {case}/{cases}, {steps} shrink steps)\n  input: {min_value:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_failure<G, P, R>(gen: &G, prop: &P, mut value: G::Value, mut msg: String) -> (G::Value, String, usize)
+where
+    G: Gen,
+    P: Fn(&G::Value) -> R,
+    R: Into<PropResult>,
+{
+    let mut steps = 0;
+    'outer: loop {
+        if steps > 200 {
+            break;
+        }
+        for cand in gen.shrink(&value) {
+            if let PropResult::Fail(m) = prop(&cand).into() {
+                value = cand;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (value, msg, steps)
+}
+
+/// Helper: assert two floats are close (absolute + relative tolerance),
+/// returning a `Result` usable inside properties.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 100, &IntGen { lo: 0, hi: 100 }, |&x| x >= 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(2, 100, &IntGen { lo: 0, hi: 100 }, |&x| x < 90);
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        let result = std::panic::catch_unwind(|| {
+            check(3, 200, &IntGen { lo: 0, hi: 1000 }, |&x| x < 500);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The minimal failing input for x < 500 is exactly 500.
+        assert!(msg.contains("input: 500"), "msg: {msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecGen { elem: IntGen { lo: -5, hi: 5 }, min_len: 2, max_len: 8 };
+        check(4, 100, &g, |v: &Vec<i64>| {
+            v.len() >= 2 && v.len() <= 8 && v.iter().all(|&x| (-5..=5).contains(&x))
+        });
+    }
+
+    #[test]
+    fn pair_gen_and_close() {
+        let g = PairGen(FloatGen { lo: 0.1, hi: 2.0 }, FloatGen { lo: 0.1, hi: 2.0 });
+        check(5, 100, &g, |&(a, b)| close((a * b).ln(), a.ln() + b.ln(), 1e-9));
+    }
+}

@@ -1,0 +1,516 @@
+//! Spectral transforms — the paper's core contribution (§4, Table 2).
+//!
+//! A transform is a scalar function `f` applied to the spectrum of the graph
+//! Laplacian: `f(L) = V diag(f(λ)) Vᵀ`. Because `f` is monotone increasing
+//! (below the cutoff of interest), it **preserves eigenvectors and their
+//! rank** while reshaping eigen*values* — chosen so the bottom-of-spectrum
+//! eigengaps grow relative to the spectral radius, which is what iterative
+//! stochastic solvers' convergence rates depend on.
+//!
+//! Table 2 of the paper, reproduced here in full:
+//!
+//! | name | f(x) |
+//! |------|------|
+//! | [`TransformKind::MatrixLog`]    | `log(x + ε)` (exact, via eigh) |
+//! | [`TransformKind::TaylorLog`]    | `Σ_{i=1}^{ℓ} (−1)^{i+1} (x+ε−1)^i / i` |
+//! | [`TransformKind::NegExp`]       | `−e^{−x}` (exact, via eigh) |
+//! | [`TransformKind::TaylorNegExp`] | `−Σ_{i=0}^{ℓ} (−x)^i / i!` |
+//! | [`TransformKind::LimitNegExp`]  | `−(1 − x/ℓ)^ℓ` (ℓ odd) |
+//!
+//! plus [`TransformKind::Identity`] as the baseline. After transforming, the
+//! spectrum is *reversed* (eq 8): `M = λ*I − f(L)` turns the bottom-k
+//! eigenvectors of `L` into the top-k of `M`, so any top-k solver applies.
+//! For the `−e^{−x}` family `f < 0` everywhere, so `λ* = 0` works and
+//! `ρ(M) ≤ 1` (§4.2).
+//!
+//! Series transforms are evaluated as polynomials **in the shifted matrix**
+//! `B = L − sI` (not expanded to monomials — a degree-251 monomial expansion
+//! of the log series would need binomials ~1e74 and is numerically
+//! meaningless). The same (shift, coeffs) representation is consumed by the
+//! L1 Pallas kernel `poly_horner` and the AOT artifact, keeping the native
+//! and XLA paths bit-compatible in structure.
+
+use crate::linalg::dmat::DMat;
+use crate::linalg::funcs::{matpow, poly_horner, power_lambda_max, spectral_apply};
+use anyhow::{bail, Result};
+
+/// A spectral transform from Table 2 (or the identity baseline).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TransformKind {
+    /// Baseline: `f(x) = x`.
+    Identity,
+    /// Exact `log(x + ε)` via full eigendecomposition.
+    MatrixLog { eps: f64 },
+    /// Degree-`ell` Taylor series of `log(x + ε)` about `x + ε = 1`.
+    TaylorLog { ell: usize, eps: f64 },
+    /// Exact `−e^{−x}` via full eigendecomposition.
+    NegExp,
+    /// Degree-`ell` Taylor series of `−e^{−x}` about 0.
+    TaylorNegExp { ell: usize },
+    /// Limit approximation `−(1 − x/ℓ)^ℓ`, `ℓ` odd (the paper's best series).
+    LimitNegExp { ell: usize },
+}
+
+/// A polynomial in the shifted matrix `B = A − shift·I`:
+/// `p(A) = Σ_i coeffs[i] · B^i`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SeriesForm {
+    pub shift: f64,
+    pub coeffs: Vec<f64>,
+}
+
+impl SeriesForm {
+    /// Evaluate at a scalar.
+    pub fn eval_scalar(&self, x: f64) -> f64 {
+        let b = x - self.shift;
+        let mut acc = 0.0;
+        for &c in self.coeffs.iter().rev() {
+            acc = acc * b + c;
+        }
+        acc
+    }
+
+    /// Evaluate at a matrix via Horner (deg(p) dense multiplies).
+    pub fn eval_matrix(&self, a: &DMat) -> DMat {
+        let mut b = a.clone();
+        b.add_diag(-self.shift);
+        poly_horner(&b, &self.coeffs)
+    }
+
+    pub fn degree(&self) -> usize {
+        self.coeffs.len().saturating_sub(1)
+    }
+}
+
+impl TransformKind {
+    /// Parse from a CLI/config name, e.g. `identity`, `log:0.05`,
+    /// `taylor_log:251:0.05`, `negexp`, `taylor_negexp:251`,
+    /// `limit_negexp:251`.
+    pub fn parse(s: &str) -> Result<TransformKind> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let kind = match parts[0] {
+            "identity" | "id" => TransformKind::Identity,
+            "log" | "matrix_log" => TransformKind::MatrixLog {
+                eps: parts.get(1).map(|p| p.parse()).transpose()?.unwrap_or(0.05),
+            },
+            "taylor_log" => TransformKind::TaylorLog {
+                ell: parts.get(1).map(|p| p.parse()).transpose()?.unwrap_or(251),
+                eps: parts.get(2).map(|p| p.parse()).transpose()?.unwrap_or(0.05),
+            },
+            "negexp" | "neg_exp" => TransformKind::NegExp,
+            "taylor_negexp" => TransformKind::TaylorNegExp {
+                ell: parts.get(1).map(|p| p.parse()).transpose()?.unwrap_or(251),
+            },
+            "limit_negexp" => TransformKind::LimitNegExp {
+                ell: parts.get(1).map(|p| p.parse()).transpose()?.unwrap_or(251),
+            },
+            other => bail!("unknown transform {other:?}"),
+        };
+        if let TransformKind::LimitNegExp { ell } = kind {
+            if ell % 2 == 0 {
+                bail!("limit_negexp requires odd ℓ (got {ell})");
+            }
+        }
+        Ok(kind)
+    }
+
+    /// Canonical display name (used in CSV labels and figure legends).
+    pub fn name(&self) -> String {
+        match self {
+            TransformKind::Identity => "identity".into(),
+            TransformKind::MatrixLog { eps } => format!("log(L+{eps})"),
+            TransformKind::TaylorLog { ell, eps } => format!("taylor_log_T{ell}(eps={eps})"),
+            TransformKind::NegExp => "-exp(-L)".into(),
+            TransformKind::TaylorNegExp { ell } => format!("taylor_negexp_T{ell}"),
+            TransformKind::LimitNegExp { ell } => format!("limit_negexp_T{ell}"),
+        }
+    }
+
+    /// True for transforms that require a full eigendecomposition (the
+    /// expensive oracles the series forms approximate).
+    pub fn is_exact(&self) -> bool {
+        matches!(self, TransformKind::MatrixLog { .. } | TransformKind::NegExp)
+    }
+
+    /// The scalar spectrum map this transform applies (for series kinds:
+    /// the *truncated* series, which is what actually hits the matrix).
+    pub fn scalar_map(&self, x: f64) -> f64 {
+        match *self {
+            TransformKind::Identity => x,
+            TransformKind::MatrixLog { eps } => (x + eps).max(f64::MIN_POSITIVE).ln(),
+            TransformKind::NegExp => -(-x).exp(),
+            TransformKind::LimitNegExp { ell } => limit_negexp_scalar(x, ell),
+            TransformKind::TaylorLog { .. } | TransformKind::TaylorNegExp { .. } => {
+                self.series().expect("series kind").eval_scalar(x)
+            }
+        }
+    }
+
+    /// The series representation, for the polynomial kinds.
+    pub fn series(&self) -> Option<SeriesForm> {
+        match *self {
+            TransformKind::TaylorLog { ell, eps } => {
+                // Σ_{i=1}^{ℓ} (−1)^{i+1} B^i / i with B = L + εI − I.
+                let mut coeffs = vec![0.0; ell + 1];
+                for (i, c) in coeffs.iter_mut().enumerate().skip(1) {
+                    let sign = if i % 2 == 1 { 1.0 } else { -1.0 };
+                    *c = sign / i as f64;
+                }
+                Some(SeriesForm { shift: 1.0 - eps, coeffs })
+            }
+            TransformKind::TaylorNegExp { ell } => {
+                // −Σ_{i=0}^{ℓ} (−x)^i / i!  →  c_i = −(−1)^i / i!
+                let mut coeffs = Vec::with_capacity(ell + 1);
+                let mut fact = 1.0f64;
+                for i in 0..=ell {
+                    if i > 0 {
+                        fact *= i as f64;
+                    }
+                    coeffs.push(if i % 2 == 0 { -1.0 } else { 1.0 } / fact);
+                }
+                Some(SeriesForm { shift: 0.0, coeffs })
+            }
+            TransformKind::LimitNegExp { .. } => {
+                // Not expanded: evaluated by matpow (binomial monomial
+                // coefficients at ℓ=251 would be ~1e74 — ill-conditioned).
+                None
+            }
+            _ => None,
+        }
+    }
+
+    /// Materialize `f(L)` natively.
+    ///
+    /// * exact kinds → full eigendecomposition (O(n³), the oracle);
+    /// * Taylor kinds → Horner in the shifted matrix (ℓ multiplies);
+    /// * limit kind → binary matrix power (≈ 2·log₂ℓ multiplies).
+    pub fn build(&self, l: &DMat) -> Result<DMat> {
+        match *self {
+            TransformKind::Identity => Ok(l.clone()),
+            TransformKind::MatrixLog { eps } => {
+                spectral_apply(l, |x| (x + eps).max(f64::MIN_POSITIVE).ln())
+            }
+            TransformKind::NegExp => spectral_apply(l, |x| -(-x).exp()),
+            TransformKind::TaylorLog { .. } | TransformKind::TaylorNegExp { .. } => {
+                Ok(self.series().unwrap().eval_matrix(l))
+            }
+            TransformKind::LimitNegExp { ell } => {
+                // −(I − L/ℓ)^ℓ via square-and-multiply.
+                let n = l.rows();
+                let mut b = l.clone();
+                b.scale(-1.0 / ell as f64);
+                b.add_diag(1.0);
+                let mut p = matpow(&b, ell as u64);
+                p.scale(-1.0);
+                let _ = n;
+                Ok(p)
+            }
+        }
+    }
+
+    /// The reversal shift `λ*` of eq 8, given `rho` = (an upper bound on)
+    /// the spectral radius of the *input* matrix. Must satisfy
+    /// `λ* > max_x≤rho f(x)` so that `M = λ*I − f(L)` is PSD-ordered with
+    /// the bottom of `L` on top.
+    pub fn lambda_star(&self, rho: f64) -> f64 {
+        match *self {
+            // −e^{−x} family: f < 0 everywhere → λ* = 0 (§4.2).
+            TransformKind::NegExp
+            | TransformKind::TaylorNegExp { .. }
+            | TransformKind::LimitNegExp { .. } => 0.0,
+            _ => {
+                // Monotone increasing on [0, rho] → max at rho. Pad by 1% of
+                // the spread so the top eigenvalue of M stays strictly
+                // positive.
+                let hi = self.scalar_map(rho);
+                let lo = self.scalar_map(0.0);
+                hi + 0.01 * (hi - lo).abs().max(1e-6)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for TransformKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Scalar version of LimitNegExp (used by `scalar_map` via this helper to
+/// avoid constructing matrices).
+pub fn limit_negexp_scalar(x: f64, ell: usize) -> f64 {
+    -(1.0 - x / ell as f64).powi(ell as i32)
+}
+
+/// The matrix a solver actually iterates on, with provenance.
+#[derive(Clone, Debug)]
+pub struct SolverMatrix {
+    /// `M = λ*I − f(L/scale)` — top-k eigenvectors of `M` are the bottom-k
+    /// of `L`.
+    pub m: DMat,
+    /// Reversal shift used (eq 8).
+    pub lambda_star: f64,
+    /// Pre-scaling applied to `L` before the transform (`L ← L/scale`).
+    pub scale: f64,
+    /// The transform that produced `m`.
+    pub kind: TransformKind,
+}
+
+/// Options for [`build_solver_matrix`].
+#[derive(Clone, Copy, Debug)]
+pub struct BuildOptions {
+    /// Pre-scale `L` by `1/λ̂_max` before transforming (eigenvector
+    /// preserving). **Default false**: the dilation benefit of the
+    /// `−e^{−x}` family comes precisely from crushing the *raw* large
+    /// eigenvalues; compressing the spectrum into `[0,1]` first would make
+    /// `−e^{−x}` near-linear and neutralize it. Pre-scaling exists for the
+    /// Taylor-log transform, whose series only converges for ρ(L+εI−I) < 1.
+    pub prescale: bool,
+    /// Power-iteration steps for the λ_max estimate.
+    pub power_iters: usize,
+    /// Safety factor multiplied onto the λ_max estimate.
+    pub safety: f64,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        BuildOptions { prescale: false, power_iters: 100, safety: 1.01 }
+    }
+}
+
+/// Full native pipeline from Laplacian to solver matrix:
+/// (optionally) pre-scale → `f(·)` → reverse (eq 8).
+pub fn build_solver_matrix(l: &DMat, kind: TransformKind, opts: &BuildOptions) -> Result<SolverMatrix> {
+    let lam_est = power_lambda_max(l, opts.power_iters) * opts.safety;
+    let scale = if opts.prescale && lam_est > 0.0 { lam_est } else { 1.0 };
+    let mut scaled = l.clone();
+    scaled.scale(1.0 / scale);
+    let f_l = kind.build(&scaled)?;
+    // Spectral radius of the transform *input*: 1 after pre-scaling, else
+    // the λ_max estimate (safety-padded; Gershgorin as a fallback bound).
+    let rho = if opts.prescale {
+        1.0
+    } else if lam_est > 0.0 {
+        lam_est
+    } else {
+        crate::linalg::funcs::gershgorin_bound(&scaled)
+    };
+    let lambda_star = kind.lambda_star(rho);
+    // M = λ*I − f(L)
+    let mut m = f_l;
+    m.scale(-1.0);
+    m.add_diag(lambda_star);
+    Ok(SolverMatrix { m, lambda_star, scale, kind })
+}
+
+/// Relative eigengap diagnostics: for a spectrum `λ` (ascending) returns
+/// `ρ / g_i` for the bottom `k` gaps — the quantity the paper argues
+/// controls solver convergence (smaller is better).
+pub fn gap_ratios(spectrum: &[f64], k: usize) -> Vec<f64> {
+    if spectrum.len() < 2 {
+        return vec![];
+    }
+    let rho = spectrum
+        .iter()
+        .fold(0.0f64, |m, &x| m.max(x.abs()));
+    (0..k.min(spectrum.len() - 1))
+        .map(|i| {
+            let g = (spectrum[i + 1] - spectrum[i]).abs();
+            if g > 0.0 {
+                rho / g
+            } else {
+                f64::INFINITY
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{cliques, CliqueSpec};
+    use crate::linalg::eigh;
+
+    fn test_laplacian() -> DMat {
+        cliques(&CliqueSpec { n: 32, k: 4, max_short_circuit: 3, seed: 1 })
+            .graph
+            .laplacian()
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in [
+            "identity",
+            "log:0.05",
+            "taylor_log:51:0.1",
+            "negexp",
+            "taylor_negexp:31",
+            "limit_negexp:251",
+        ] {
+            let t = TransformKind::parse(s).unwrap();
+            assert!(!t.name().is_empty());
+        }
+        assert!(TransformKind::parse("bogus").is_err());
+        assert!(TransformKind::parse("limit_negexp:10").is_err(), "even ℓ rejected");
+    }
+
+    #[test]
+    fn exact_transforms_preserve_eigenvectors() {
+        let l = test_laplacian();
+        let e_l = eigh(&l).unwrap();
+        for kind in [TransformKind::NegExp, TransformKind::MatrixLog { eps: 0.05 }] {
+            let fl = kind.build(&l).unwrap();
+            let e_f = eigh(&fl).unwrap();
+            // Spectrum maps elementwise; since f is monotone increasing the
+            // ascending order is preserved, so sorted spectra correspond.
+            for i in 0..l.rows() {
+                let expected = kind.scalar_map(e_l.values[i]);
+                assert!(
+                    (e_f.values[i] - expected).abs() < 1e-8,
+                    "{kind}: λ_{i} {} vs {}",
+                    e_f.values[i],
+                    expected
+                );
+            }
+            // Bottom-k eigenvectors span the same subspace.
+            let k = 4;
+            let err = crate::linalg::metrics::subspace_error(
+                &e_l.bottom_k(k),
+                &e_f.bottom_k(k),
+            );
+            assert!(err < 1e-8, "{kind}: subspace err {err}");
+        }
+    }
+
+    #[test]
+    fn series_transforms_approximate_exact_on_unit_interval() {
+        // After pre-scaling, eigenvalues live in [0,1]; both series should
+        // track their exact counterparts closely there.
+        let te = TransformKind::TaylorNegExp { ell: 31 };
+        let le = TransformKind::LimitNegExp { ell: 251 };
+        let tl = TransformKind::TaylorLog { ell: 251, eps: 0.05 };
+        for i in 0..=20 {
+            let x = i as f64 / 20.0;
+            assert!((te.scalar_map(x) - (-(-x).exp())).abs() < 1e-10);
+            assert!((le.scalar_map(x) - (-(-x).exp())).abs() < 2e-3, "x={x}");
+            // Taylor-log truncation is slowest at x=0 (r = 0.95):
+            // 0.95^252/(252·0.05) ≈ 2.4e-7.
+            assert!((tl.scalar_map(x) - (x + 0.05).ln()).abs() < 1e-5, "x={x}");
+        }
+    }
+
+    #[test]
+    fn limit_negexp_monotone_everywhere_odd_ell() {
+        // ℓ odd → monotone increasing on all of ℝ (the reason Table 2
+        // requires odd ℓ).
+        let t = TransformKind::LimitNegExp { ell: 11 };
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..200 {
+            let x = -2.0 + i as f64 * 0.05; // range [-2, 8], beyond ℓ scale
+            let y = t.scalar_map(x);
+            assert!(y >= prev - 1e-12, "not monotone at x={x}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn matrix_series_matches_scalar_on_spectrum() {
+        let l = test_laplacian();
+        let mut scaled = l.clone();
+        let lam = eigh(&l).unwrap().lambda_max();
+        scaled.scale(1.0 / lam);
+        let e_s = eigh(&scaled).unwrap();
+        for kind in [
+            TransformKind::TaylorNegExp { ell: 31 },
+            TransformKind::LimitNegExp { ell: 51 },
+            TransformKind::TaylorLog { ell: 61, eps: 0.05 },
+        ] {
+            let fl = kind.build(&scaled).unwrap();
+            let e_f = eigh(&fl).unwrap();
+            for i in 0..scaled.rows() {
+                let expected = kind.scalar_map(e_s.values[i]);
+                assert!(
+                    (e_f.values[i] - expected).abs() < 1e-6,
+                    "{kind} λ_{i}: {} vs {}",
+                    e_f.values[i],
+                    expected
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn solver_matrix_reverses_spectrum() {
+        let l = test_laplacian();
+        let e_l = eigh(&l).unwrap();
+        for kind in [
+            TransformKind::Identity,
+            TransformKind::NegExp,
+            TransformKind::LimitNegExp { ell: 51 },
+        ] {
+            let sm = build_solver_matrix(&l, kind, &BuildOptions::default()).unwrap();
+            let e_m = eigh(&sm.m).unwrap();
+            // Top eigenvector of M == bottom eigenvector of L (up to sign).
+            let top_m = e_m.vectors.col(l.rows() - 1);
+            let bot_l = e_l.vectors.col(0);
+            let dot = crate::linalg::dmat::dot(&top_m, &bot_l).abs();
+            assert!(dot > 1.0 - 1e-6, "{kind}: alignment {dot}");
+            // And M's spectrum is bounded: for negexp family ρ(M) ≤ 1.
+            if matches!(kind, TransformKind::NegExp | TransformKind::LimitNegExp { .. }) {
+                assert!(e_m.lambda_max() <= 1.0 + 1e-9, "{kind}");
+                assert!(e_m.values[0] >= -1e-9, "{kind}: M not PSD");
+            }
+        }
+    }
+
+    #[test]
+    fn transforms_dilate_relative_gaps() {
+        // The headline claim: on a well-clustered graph, ρ/g_k shrinks after
+        // the −e^{−x} transform (with pre-scaling).
+        let l = test_laplacian();
+        let e_l = eigh(&l).unwrap();
+        let k = 4;
+        let before = gap_ratios(&e_l.values, k);
+        let sm = build_solver_matrix(&l, TransformKind::NegExp, &BuildOptions::default()).unwrap();
+        // Spectrum of M = λ*I − f(L) in *original L order* (ascending in L
+        // = descending in M): gaps then line up with eigenvector indices.
+        let e_m = eigh(&sm.m).unwrap();
+        let mut m_spec_in_l_order: Vec<f64> = e_m.values.clone();
+        m_spec_in_l_order.reverse(); // M-top first = L-bottom first
+        let rho = e_m.lambda_max().abs().max(e_m.values[0].abs());
+        let after: Vec<f64> = (0..k)
+            .map(|i| rho / (m_spec_in_l_order[i] - m_spec_in_l_order[i + 1]).abs())
+            .collect();
+        // The *binding* constraint on solver convergence is the worst
+        // (largest) ratio among the bottom-k gaps; it must improve by a
+        // large factor. (Individual bulk gaps may shrink — that's fine and
+        // expected: −e^{−x} compresses the top of the spectrum.)
+        let worst_before = before.iter().cloned().fold(0.0f64, f64::max);
+        let worst_after = after.iter().cloned().fold(0.0f64, f64::max);
+        assert!(
+            worst_after < worst_before * 0.25,
+            "binding gap ratio did not improve ≥4×: before={before:?} after={after:?}"
+        );
+    }
+
+    #[test]
+    fn gap_ratio_helper() {
+        let r = gap_ratios(&[0.0, 0.1, 1.0], 2);
+        assert!((r[0] - 10.0).abs() < 1e-12);
+        assert!((r[1] - 1.0 / 0.9).abs() < 1e-12);
+        assert!(gap_ratios(&[1.0], 3).is_empty());
+    }
+
+    #[test]
+    fn property_series_scalar_matrix_consistency() {
+        use crate::testkit::{check, SizeGen};
+        check(31, 6, &SizeGen { lo: 3, hi: 12 }, |&ell| {
+            let ell = ell * 2 + 1; // odd
+            let t = TransformKind::LimitNegExp { ell };
+            let x = 0.37;
+            let m = DMat::diag(&[x, 0.9, 0.0]);
+            let fm = t.build(&m).unwrap();
+            (fm[(0, 0)] - t.scalar_map(x)).abs() < 1e-9
+        });
+    }
+}

@@ -1,0 +1,207 @@
+//! Custom benchmark harness (offline stand-in for `criterion`).
+//!
+//! Benches are `harness = false` binaries that build a [`BenchSuite`],
+//! register cases, and call [`BenchSuite::finish`]. The harness does warmup,
+//! adaptive iteration-count selection, and reports mean/p50/p95 wall time
+//! plus optional user-defined throughput units. It honours the arguments
+//! `cargo bench` passes through (`--bench`, filter strings) and the
+//! `SPED_BENCH_FAST=1` env var used by CI-style smoke runs.
+
+use super::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Measurement configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub min_iters: u32,
+    pub max_iters: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        if fast_mode() {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                target_time: Duration::from_millis(120),
+                min_iters: 3,
+                max_iters: 50,
+            }
+        } else {
+            BenchConfig {
+                warmup: Duration::from_millis(200),
+                target_time: Duration::from_secs(1),
+                min_iters: 5,
+                max_iters: 2000,
+            }
+        }
+    }
+}
+
+/// `SPED_BENCH_FAST=1` shrinks warmup/measurement budgets (used in smoke
+/// runs; full runs leave it unset).
+pub fn fast_mode() -> bool {
+    std::env::var("SPED_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// A benchmark suite: named timing cases + free-form report lines.
+pub struct BenchSuite {
+    name: String,
+    cfg: BenchConfig,
+    filter: Option<String>,
+    results: Vec<String>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> BenchSuite {
+        // cargo bench passes "--bench" plus any user filter strings.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'));
+        BenchSuite { name: name.to_string(), cfg: BenchConfig::default(), filter, results: Vec::new() }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    fn selected(&self, case: &str) -> bool {
+        match &self.filter {
+            Some(f) => case.contains(f.as_str()) || self.name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Time `f` adaptively and report. Returns mean seconds per iteration
+    /// (0.0 when filtered out).
+    pub fn bench<F: FnMut()>(&mut self, case: &str, mut f: F) -> f64 {
+        self.bench_with_throughput(case, None, &mut f)
+    }
+
+    /// Time `f`; `units_per_iter` (e.g. FLOPs, edges, steps) adds a
+    /// throughput column.
+    pub fn bench_units<F: FnMut()>(&mut self, case: &str, units_per_iter: f64, unit: &str, mut f: F) -> f64 {
+        self.bench_with_throughput(case, Some((units_per_iter, unit.to_string())), &mut f)
+    }
+
+    fn bench_with_throughput(
+        &mut self,
+        case: &str,
+        throughput: Option<(f64, String)>,
+        f: &mut dyn FnMut(),
+    ) -> f64 {
+        if !self.selected(case) {
+            return 0.0;
+        }
+        // Warmup + estimate per-iter cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u32;
+        while warm_start.elapsed() < self.cfg.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+            if warm_iters >= self.cfg.max_iters {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let iters = ((self.cfg.target_time.as_secs_f64() / per_iter.max(1e-9)) as u32)
+            .clamp(self.cfg.min_iters, self.cfg.max_iters);
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let s = Summary::of(&samples);
+        let tp = throughput
+            .map(|(u, name)| format!("  {:>10}/s", human(u / s.mean, &name)))
+            .unwrap_or_default();
+        self.results.push(format!(
+            "{:<44} {:>12} ±{:>9}  p50 {:>10}  p95 {:>10}  n={}{}",
+            case,
+            human_time(s.mean),
+            human_time(s.stddev),
+            human_time(s.p50),
+            human_time(s.p95),
+            s.n,
+            tp
+        ));
+        s.mean
+    }
+
+    /// Attach a non-timing line (experiment summaries, table rows).
+    pub fn report(&mut self, line: &str) {
+        self.results.push(line.to_string());
+    }
+
+    /// Print the suite report.
+    pub fn finish(self) {
+        println!("\n=== bench: {} ===", self.name);
+        for line in &self.results {
+            println!("{line}");
+        }
+        println!("=== end {} ===\n", self.name);
+    }
+}
+
+/// Human-readable seconds.
+pub fn human_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Human-readable count with SI prefix.
+pub fn human(x: f64, unit: &str) -> String {
+    let (v, p) = if x >= 1e9 {
+        (x / 1e9, "G")
+    } else if x >= 1e6 {
+        (x / 1e6, "M")
+    } else if x >= 1e3 {
+        (x / 1e3, "k")
+    } else {
+        (x, "")
+    };
+    format!("{v:.2} {p}{unit}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_time_ranges() {
+        assert!(human_time(2.0).ends_with(" s"));
+        assert!(human_time(2e-3).ends_with(" ms"));
+        assert!(human_time(2e-6).ends_with(" µs"));
+        assert!(human_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn human_prefixes() {
+        assert_eq!(human(1.5e9, "F"), "1.50 GF");
+        assert_eq!(human(2.5e6, "F"), "2.50 MF");
+        assert_eq!(human(3.0e3, "F"), "3.00 kF");
+        assert_eq!(human(5.0, "F"), "5.00 F");
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("SPED_BENCH_FAST", "1");
+        let mut suite = BenchSuite::new("selftest");
+        suite.filter = None;
+        let mean = suite.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(mean >= 0.0);
+        assert_eq!(suite.results.len(), 1);
+    }
+}

@@ -1,0 +1,244 @@
+//! Declarative command-line parsing (offline stand-in for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, typed accessors with defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// A declarative argument parser for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct ArgSpec {
+    command: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(command: &str, about: &str) -> Self {
+        ArgSpec { command: command.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default: Some(default.into()) });
+        self
+    }
+
+    /// Declare `--name <value>` without a default (optional).
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    /// Declare a positional argument (documentation only; all positionals
+    /// are collected in order).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.command, self.about);
+        let _ = writeln!(s, "\nUSAGE:\n  {} [OPTIONS]{}", self.command,
+            self.positionals.iter().map(|(n, _)| format!(" <{n}>")).collect::<String>());
+        if !self.positionals.is_empty() {
+            let _ = writeln!(s, "\nARGS:");
+            for (n, h) in &self.positionals {
+                let _ = writeln!(s, "  <{n}>  {h}");
+            }
+        }
+        let _ = writeln!(s, "\nOPTIONS:");
+        for o in &self.opts {
+            let mut left = format!("--{}", o.name);
+            if o.takes_value {
+                left.push_str(" <v>");
+            }
+            let default = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {left:<24} {}{default}", o.help);
+        }
+        s
+    }
+
+    /// Parse a token stream. Returns an error string on unknown options or a
+    /// missing value; `--help` produces `Err(help_text)`.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                out.values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut it = args.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.help()))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} requires a value"))?,
+                    };
+                    out.values.insert(name, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_default().to_string()
+    }
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_or_die(name)
+    }
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_or_die(name)
+    }
+    pub fn f64(&self, name: &str) -> f64 {
+        self.parse_or_die(name)
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+    /// Comma-separated list of a parseable type.
+    pub fn list<T: std::str::FromStr>(&self, name: &str) -> Vec<T> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("bad element {s:?} in --{name}"))
+            })
+            .collect()
+    }
+
+    fn parse_or_die<T: std::str::FromStr>(&self, name: &str) -> T {
+        let raw = self
+            .get(name)
+            .unwrap_or_else(|| panic!("missing required option --{name}"));
+        raw.parse()
+            .unwrap_or_else(|_| panic!("invalid value {raw:?} for --{name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test", "test command")
+            .opt("n", "100", "node count")
+            .opt("name", "foo", "a name")
+            .opt_req("out", "output path")
+            .flag("verbose", "chatty")
+            .positional("input", "input file")
+    }
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(toks("")).unwrap();
+        assert_eq!(a.usize("n"), 100);
+        assert_eq!(a.str("name"), "foo");
+        assert!(a.get("out").is_none());
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let a = spec()
+            .parse(toks("--n 42 --verbose file.txt --name=bar"))
+            .unwrap();
+        assert_eq!(a.usize("n"), 42);
+        assert_eq!(a.str("name"), "bar");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(0), Some("file.txt"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec().parse(toks("--bogus 1")).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse(toks("--n")).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = spec().parse(toks("--help")).unwrap_err();
+        assert!(h.contains("--n"));
+        assert!(h.contains("--verbose"));
+        assert!(h.contains("<input>"));
+    }
+
+    #[test]
+    fn list_parses_csv() {
+        let a = spec().parse(toks("--name 1,2,3")).unwrap();
+        let v: Vec<usize> = a.list("name");
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+}

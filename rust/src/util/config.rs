@@ -1,0 +1,256 @@
+//! TOML-subset configuration parser (offline stand-in for `serde` + `toml`).
+//!
+//! Supports the subset the launcher needs: `[section]` headers, `key = value`
+//! with string / integer / float / boolean / flat-array values, `#` comments.
+//! Values are addressed as `"section.key"`; CLI `--set section.key=value`
+//! overrides compose on top.
+
+use std::collections::BTreeMap;
+
+/// A scalar or flat-array configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed configuration: a flat map of `section.key` → [`Value`].
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse from TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = inner.trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section header", lineno + 1));
+                }
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            cfg.entries.insert(full, value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    /// Apply a `section.key=value` override (CLI `--set`).
+    pub fn set_override(&mut self, spec: &str) -> Result<(), String> {
+        let (key, val) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("override {spec:?}: expected key=value"))?;
+        let value = parse_value(val.trim())?;
+        self.entries.insert(key.trim().to_string(), value);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.as_i64())
+            .map(|i| i as usize)
+            .unwrap_or(default)
+    }
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string {s:?}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array {s:?}"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare word: treat as string (ergonomic for transform names etc).
+    Ok(Value::Str(s.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig4"
+[graph]
+n = 512
+clusters = 4
+short_circuit = 25  # max cross edges
+weighted = false
+[solver]
+eta = 0.05
+transforms = ["identity", "limit_negexp"]
+ells = [11, 51, 151, 251]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name", ""), "fig4");
+        assert_eq!(c.usize("graph.n", 0), 512);
+        assert_eq!(c.usize("graph.clusters", 0), 4);
+        assert!(!c.bool("graph.weighted", true));
+        assert!((c.f64("solver.eta", 0.0) - 0.05).abs() < 1e-12);
+        let arr = c.get("solver.ells").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[3].as_i64(), Some(251));
+    }
+
+    #[test]
+    fn comments_and_defaults() {
+        let c = Config::parse("x = 1 # trailing").unwrap();
+        assert_eq!(c.usize("x", 0), 1);
+        assert_eq!(c.usize("missing", 9), 9);
+    }
+
+    #[test]
+    fn hash_inside_string_preserved() {
+        let c = Config::parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(c.str("s", ""), "a#b");
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse("[a]\nx = 1").unwrap();
+        c.set_override("a.x=5").unwrap();
+        assert_eq!(c.usize("a.x", 0), 5);
+        c.set_override("a.name=\"hello\"").unwrap();
+        assert_eq!(c.str("a.name", ""), "hello");
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(Config::parse("[]\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("x = \"unterminated\n").is_err());
+        assert!(Config::parse("x = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let c = Config::parse("xs = []").unwrap();
+        assert_eq!(c.get("xs").unwrap().as_array().unwrap().len(), 0);
+    }
+}

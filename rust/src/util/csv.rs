@@ -1,0 +1,82 @@
+//! Minimal CSV writing for experiment series (`results/*.csv`).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncate) `path` and write the header row. Parent directories
+    /// are created as needed.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, columns: header.len() })
+    }
+
+    /// Write a row of string fields (must match header arity).
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(fields.len(), self.columns, "CSV row arity mismatch");
+        let escaped: Vec<String> = fields.iter().map(|f| escape(f)).collect();
+        writeln!(self.out, "{}", escaped.join(","))
+    }
+
+    /// Write a row of `f64` values.
+    pub fn row_f64(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|v| format!("{v}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("sped_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x,y".into()]).unwrap();
+            w.row_f64(&[2.5, 3.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert_eq!(lines[1], "1,\"x,y\"");
+        assert_eq!(lines[2], "2.5,3");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let dir = std::env::temp_dir().join("sped_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,86 @@
+//! Leveled stderr logging controlled by `SPED_LOG` (error|warn|info|debug).
+//! Default level is `info`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static INIT: OnceLock<()> = OnceLock::new();
+
+fn ensure_init() {
+    INIT.get_or_init(|| {
+        if let Ok(v) = std::env::var("SPED_LOG") {
+            let lvl = match v.to_ascii_lowercase().as_str() {
+                "error" => Level::Error,
+                "warn" => Level::Warn,
+                "debug" => Level::Debug,
+                _ => Level::Info,
+            };
+            LEVEL.store(lvl as u8, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Set the level programmatically (overrides the env var).
+pub fn set_level(level: Level) {
+    ensure_init();
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    ensure_init();
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[sped {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! warnlog {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! debuglog {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! errorlog {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

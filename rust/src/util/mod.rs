@@ -1,0 +1,26 @@
+//! Utility substrate.
+//!
+//! The build environment is fully offline (no crates.io access beyond the
+//! vendored set), so the usual ecosystem crates (`rand`, `rayon`, `clap`,
+//! `serde`, `criterion`) are implemented here from scratch at the size this
+//! project needs:
+//!
+//! * [`rng`] — SplitMix64 seeding + Xoshiro256++ PRNG, distributions.
+//! * [`pool`] — scoped worker pool (the paper's "d parallel walkers").
+//! * [`cli`] — declarative command-line parser.
+//! * [`config`] — TOML-subset configuration parser.
+//! * [`csv`] — CSV writer for experiment series.
+//! * [`stats`] — online/batch statistics used by benches and estimators.
+//! * [`bench`] — the custom benchmark harness behind `cargo bench`.
+//! * [`log`] — leveled stderr logger (`SPED_LOG=debug|info|warn|error`).
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod csv;
+pub mod log;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,526 @@
+//! The stochastic heart of SPED (§4.3): unbiased estimation of Laplacian
+//! powers `L^ℓ` — and of whole polynomials `Σ_i γ_i L^i` — from random walks
+//! on the **edge-incidence graph**.
+//!
+//! Eq 12 of the paper rewrites `L^ℓ = Σ_{c ∈ E^ℓ} α_c · x_{e₁} x_{e_ℓ}ᵀ`,
+//! where `α_c = Π_j x_{e_j}ᵀ x_{e_{j+1}}` is non-zero only when consecutive
+//! edges share an endpoint — i.e. only *walks in the edge-incidence graph*
+//! contribute, with per-step factors given by Table 1 (±1, +2).
+//!
+//! Two estimators are provided:
+//!
+//! * [`SampleMethod::Rejection`] — the paper's scheme (eqs 13–14): walks are
+//!   sampled naturally (uniform start edge, uniform incident-edge steps) and
+//!   accepted with probability `p_min/p_walk`, making every chain equally
+//!   likely to be sampled-and-accepted (probability exactly `p_min` per
+//!   trial); a trial contributes `α_c x_{e₁} x_{e_ℓ}ᵀ / p_min` when accepted
+//!   and 0 otherwise — unbiased.
+//! * [`SampleMethod::Importance`] — the variance-reduction alternative the
+//!   paper lists as future work: no rejection, each walk contributes
+//!   `α_c x_{e₁} x_{e_ℓ}ᵀ / p_walk`. Same expectation, no wasted samples.
+//!
+//! **Sub-walk harvesting** (linearity of expectation, §4.3): every prefix of
+//! a length-ℓ walk is a valid walk of its own length, so one walk yields
+//! simultaneous unbiased estimates of *all* `L^i, i ≤ ℓ` — and hence of any
+//! polynomial `Σ γ_i L^i` — correlated across powers but still unbiased.
+//!
+//! Convention note: the paper's eq 13 writes `p_ℓ = (1/|E|) Π_{i=1}^{ℓ}
+//! 1/deg(e_i)`; we index *transitions*, so a walk visiting `ℓ` edge-nodes
+//! makes `ℓ−1` uniform neighbor choices and `p = (1/|E|) Π_{i=1}^{ℓ−1}
+//! 1/deg(e_i)`. `p_min` (eq 14) uses the matching exponent; acceptance
+//! ratios and unbiasedness are unchanged.
+
+use crate::graph::incidence::{incidence_degree_bound, EdgeIncidenceGraph};
+use crate::graph::Graph;
+use crate::linalg::DMat;
+use crate::util::pool::parallel_fold;
+use crate::util::rng::Rng;
+use crate::util::stats::OnlineStats;
+
+/// How walk trials are converted into unbiased contributions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SampleMethod {
+    /// Paper's rejection scheme (eqs 13–14).
+    Rejection,
+    /// Importance-weighted (future-work variance reduction).
+    Importance,
+}
+
+impl SampleMethod {
+    pub fn parse(s: &str) -> anyhow::Result<SampleMethod> {
+        match s {
+            "rejection" => Ok(SampleMethod::Rejection),
+            "importance" => Ok(SampleMethod::Importance),
+            other => anyhow::bail!("unknown sample method {other:?}"),
+        }
+    }
+}
+
+/// One sampled walk in the edge-incidence graph, with per-prefix
+/// chain-weight and probability bookkeeping for sub-walk harvesting.
+#[derive(Clone, Debug)]
+pub struct WalkSample {
+    /// Visited edge ids `e₁ … e_ℓ`.
+    pub edges: Vec<u32>,
+    /// `alpha[j]` = chain weight `α` of the length-`j+1` prefix
+    /// (`alpha[0] = 1`).
+    pub alpha: Vec<f64>,
+    /// `prob[j]` = sampling probability of the length-`j+1` prefix.
+    pub prob: Vec<f64>,
+}
+
+/// Walk engine bound to one graph: owns the edge-incidence CSR.
+pub struct WalkEngine<'g> {
+    graph: &'g Graph,
+    inc: EdgeIncidenceGraph,
+    deg_star_inc: usize,
+}
+
+impl<'g> WalkEngine<'g> {
+    pub fn new(graph: &'g Graph) -> Self {
+        let inc = EdgeIncidenceGraph::build(graph);
+        let deg_star_inc = incidence_degree_bound(graph.max_degree());
+        WalkEngine { graph, inc, deg_star_inc }
+    }
+
+    pub fn graph(&self) -> &Graph {
+        self.graph
+    }
+    pub fn incidence(&self) -> &EdgeIncidenceGraph {
+        &self.inc
+    }
+
+    /// Minimum probability of any walk visiting `len` edge-nodes (eq 14,
+    /// transition-count convention).
+    pub fn p_min(&self, len: usize) -> f64 {
+        let m = self.graph.num_edges() as f64;
+        (1.0 / m) * (self.deg_star_inc as f64).powi(-(len as i32 - 1))
+    }
+
+    /// Sample one walk visiting `len` edge-nodes into a reusable buffer.
+    pub fn sample_walk_into(&self, len: usize, rng: &mut Rng, out: &mut WalkSample) {
+        assert!(len >= 1);
+        let m = self.graph.num_edges();
+        assert!(m > 0, "cannot walk an edgeless graph");
+        out.edges.clear();
+        out.alpha.clear();
+        out.prob.clear();
+        let start = rng.below(m) as u32;
+        out.edges.push(start);
+        out.alpha.push(1.0);
+        out.prob.push(1.0 / m as f64);
+        let all_edges = self.graph.edges();
+        for _ in 1..len {
+            let cur = *out.edges.last().unwrap() as usize;
+            let nbrs = self.inc.neighbors(cur);
+            let next = *rng.choose(nbrs);
+            let ip = crate::graph::incidence::inner_product(
+                all_edges[cur],
+                all_edges[next as usize],
+            );
+            out.edges.push(next);
+            out.alpha.push(out.alpha.last().unwrap() * ip);
+            out.prob.push(out.prob.last().unwrap() / nbrs.len() as f64);
+        }
+    }
+
+    /// Sample one walk (allocating convenience wrapper).
+    pub fn sample_walk(&self, len: usize, rng: &mut Rng) -> WalkSample {
+        let mut w = WalkSample { edges: vec![], alpha: vec![], prob: vec![] };
+        self.sample_walk_into(len, rng, &mut w);
+        w
+    }
+
+    /// One prefix's unbiased sparse contribution to `L^{prefix_len}`:
+    /// `Some((e_first, e_last, weight))` means add
+    /// `weight · x_{e_first} x_{e_last}ᵀ`; `None` means a rejected trial
+    /// (rejection method only; contributes zero).
+    pub fn prefix_contribution(
+        &self,
+        walk: &WalkSample,
+        prefix_len: usize,
+        method: SampleMethod,
+        rng: &mut Rng,
+    ) -> Option<(u32, u32, f64)> {
+        let j = prefix_len - 1;
+        let a = walk.alpha[j];
+        match method {
+            SampleMethod::Importance => Some((
+                walk.edges[0],
+                walk.edges[j],
+                if a == 0.0 { 0.0 } else { a / walk.prob[j] },
+            )),
+            SampleMethod::Rejection => {
+                let p_min = self.p_min(prefix_len);
+                let accept_p = p_min / walk.prob[j];
+                debug_assert!(accept_p <= 1.0 + 1e-12, "p_min exceeded a walk probability");
+                if rng.bernoulli(accept_p) {
+                    Some((walk.edges[0], walk.edges[j], a / p_min))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// Add `weight · x_a x_bᵀ` (±1 incidence vectors) into a dense accumulator.
+#[inline]
+fn add_outer(acc: &mut DMat, g: &Graph, ea: u32, eb: u32, weight: f64) {
+    if weight == 0.0 {
+        return;
+    }
+    let a = g.edges()[ea as usize];
+    let b = g.edges()[eb as usize];
+    let (ai, aj) = (a.u as usize, a.v as usize);
+    let (bi, bj) = (b.u as usize, b.v as usize);
+    acc[(ai, bi)] += weight;
+    acc[(ai, bj)] -= weight;
+    acc[(aj, bi)] -= weight;
+    acc[(aj, bj)] += weight;
+}
+
+/// Estimator statistics.
+#[derive(Clone, Debug, Default)]
+pub struct EstimatorStats {
+    pub trials: u64,
+    pub accepted: u64,
+    /// Online stats over nonzero contribution weights (variance proxy).
+    pub weight_stats: OnlineStats,
+}
+
+impl EstimatorStats {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.trials == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.trials as f64
+        }
+    }
+
+    pub fn merge(self, o: EstimatorStats) -> EstimatorStats {
+        EstimatorStats {
+            trials: self.trials + o.trials,
+            accepted: self.accepted + o.accepted,
+            weight_stats: self.weight_stats.merge(o.weight_stats),
+        }
+    }
+}
+
+/// Unbiased estimate of `L^len` from `num_walks` trials split across
+/// `workers` parallel walkers (each walker owns one engine + RNG stream —
+/// the paper's "d graph walkers"). Returns `(estimate, stats)`.
+pub fn estimate_l_power(
+    g: &Graph,
+    len: usize,
+    num_walks: usize,
+    workers: usize,
+    method: SampleMethod,
+    seed: u64,
+) -> (DMat, EstimatorStats) {
+    let n = g.num_nodes();
+    let workers = workers.max(1);
+    let chunk = num_walks.div_ceil(workers);
+    let (mut acc, stats, done) = parallel_fold(
+        workers,
+        workers,
+        || (DMat::zeros(n, n), EstimatorStats::default(), 0usize),
+        |(acc, stats, done), widx| {
+            let engine = WalkEngine::new(g);
+            let mut rng = Rng::new(seed ^ (widx as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+            let todo = chunk.min(num_walks - (widx * chunk).min(num_walks));
+            let mut walk = WalkSample { edges: vec![], alpha: vec![], prob: vec![] };
+            for _ in 0..todo {
+                engine.sample_walk_into(len, &mut rng, &mut walk);
+                stats.trials += 1;
+                if let Some((ea, eb, w)) =
+                    engine.prefix_contribution(&walk, len, method, &mut rng)
+                {
+                    stats.accepted += 1;
+                    if w != 0.0 {
+                        stats.weight_stats.push(w);
+                    }
+                    add_outer(acc, g, ea, eb, w);
+                }
+            }
+            *done += todo;
+        },
+        |(mut a1, s1, d1), (a2, s2, d2)| {
+            a1.axpy(1.0, &a2);
+            (a1, s1.merge(s2), d1 + d2)
+        },
+    );
+    debug_assert_eq!(done, num_walks);
+    acc.scale(1.0 / num_walks as f64);
+    (acc, stats)
+}
+
+/// A reusable estimator owning its engine — the hot-path object used by the
+/// coordinator's walker pool and the stochastic solver oracle.
+pub struct WalkEstimator<'g> {
+    pub engine: WalkEngine<'g>,
+    pub method: SampleMethod,
+}
+
+impl<'g> WalkEstimator<'g> {
+    pub fn new(g: &'g Graph, method: SampleMethod) -> Self {
+        WalkEstimator { engine: WalkEngine::new(g), method }
+    }
+
+    /// Accumulate `batch` trials of `L^len` mass into `acc` (caller divides
+    /// by total trials). Returns `(trials, accepted)`.
+    pub fn accumulate_power(
+        &self,
+        len: usize,
+        batch: usize,
+        acc: &mut DMat,
+        rng: &mut Rng,
+    ) -> (u64, u64) {
+        let g = self.engine.graph;
+        let mut accepted = 0;
+        let mut walk = WalkSample { edges: vec![], alpha: vec![], prob: vec![] };
+        for _ in 0..batch {
+            self.engine.sample_walk_into(len, rng, &mut walk);
+            if let Some((ea, eb, w)) =
+                self.engine.prefix_contribution(&walk, len, self.method, rng)
+            {
+                accepted += 1;
+                add_outer(acc, g, ea, eb, w);
+            }
+        }
+        (batch as u64, accepted)
+    }
+
+    /// Unbiased estimate of `p(L)·V` for `p(x) = Σ_i coeffs[i] xⁱ` applied
+    /// to an `n×k` matrix `V`, from `num_walks` walks of length `deg(p)`,
+    /// with sub-walk harvesting (one walk feeds every power). The constant
+    /// term `coeffs[0]·V` is added exactly.
+    ///
+    /// Never materializes an `n×n` matrix: each prefix contributes
+    /// `w · x_{e₁}(x_{e_j}ᵀ V)` — two row reads and two row updates of the
+    /// output. This is the native twin of the L1 `stoch_apply` Pallas
+    /// kernel.
+    pub fn estimate_poly_apply(
+        &self,
+        coeffs: &[f64],
+        v: &DMat,
+        num_walks: usize,
+        rng: &mut Rng,
+    ) -> DMat {
+        let g = self.engine.graph;
+        let k = v.cols();
+        let mut out = DMat::zeros(v.rows(), k);
+        let maxdeg = coeffs.len().saturating_sub(1);
+        if maxdeg > 0 && num_walks > 0 {
+            let inv_walks = 1.0 / num_walks as f64;
+            let mut walk = WalkSample { edges: vec![], alpha: vec![], prob: vec![] };
+            let mut row_buf = vec![0.0f64; k];
+            for _ in 0..num_walks {
+                self.engine.sample_walk_into(maxdeg, rng, &mut walk);
+                for (i, &c) in coeffs.iter().enumerate().skip(1) {
+                    if c == 0.0 {
+                        continue;
+                    }
+                    if let Some((ea, eb, w)) =
+                        self.engine.prefix_contribution(&walk, i, self.method, rng)
+                    {
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let scale = c * w * inv_walks;
+                        let b = g.edges()[eb as usize];
+                        for (t, rb) in row_buf.iter_mut().enumerate() {
+                            *rb = v[(b.u as usize, t)] - v[(b.v as usize, t)];
+                        }
+                        let a = g.edges()[ea as usize];
+                        for (t, rb) in row_buf.iter().enumerate() {
+                            let val = scale * rb;
+                            out[(a.u as usize, t)] += val;
+                            out[(a.v as usize, t)] -= val;
+                        }
+                    }
+                }
+            }
+        }
+        if !coeffs.is_empty() && coeffs[0] != 0.0 {
+            out.axpy(coeffs[0], v);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{cliques, ring, CliqueSpec};
+    use crate::linalg::funcs::matpow;
+    use crate::linalg::matmul::matmul;
+
+    fn small_graph() -> Graph {
+        // Two triangles joined by one edge: 6 nodes, 7 edges.
+        Graph::from_pairs(6, &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5), (2, 3)]).unwrap()
+    }
+
+    #[test]
+    fn walk_probabilities_are_consistent() {
+        let g = small_graph();
+        let engine = WalkEngine::new(&g);
+        let mut rng = Rng::new(1);
+        for len in 1..=4 {
+            let p_min = engine.p_min(len);
+            for _ in 0..200 {
+                let w = engine.sample_walk(len, &mut rng);
+                assert_eq!(w.edges.len(), len);
+                assert!(w.prob[len - 1] >= p_min - 1e-15, "p_min not a lower bound");
+                for j in 1..len {
+                    assert!(w.prob[j] <= w.prob[j - 1]);
+                    // consecutive edges genuinely incident
+                    let ip = crate::graph::incidence::inner_product(
+                        g.edges()[w.edges[j - 1] as usize],
+                        g.edges()[w.edges[j] as usize],
+                    );
+                    assert!(ip != 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_tracks_inner_products() {
+        let g = small_graph();
+        let engine = WalkEngine::new(&g);
+        let mut rng = Rng::new(2);
+        let w = engine.sample_walk(5, &mut rng);
+        let mut expect = 1.0;
+        for j in 1..5 {
+            expect *= crate::graph::incidence::inner_product(
+                g.edges()[w.edges[j - 1] as usize],
+                g.edges()[w.edges[j] as usize],
+            );
+            assert_eq!(w.alpha[j], expect);
+        }
+    }
+
+    #[test]
+    fn l1_estimate_is_unbiased() {
+        // L¹: every importance trial contributes w·x_e x_eᵀ with E[·] = L.
+        let g = small_graph();
+        let l = g.laplacian();
+        for method in [SampleMethod::Importance, SampleMethod::Rejection] {
+            let (est, stats) = estimate_l_power(&g, 1, 20_000, 2, method, 7);
+            assert_eq!(stats.trials, 20_000);
+            let err = (&est - &l).max_abs() / l.max_abs();
+            assert!(err < 0.05, "{method:?}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn l2_and_l3_estimates_converge() {
+        let g = small_graph();
+        let l = g.laplacian();
+        let l2 = matmul(&l, &l);
+        let l3 = matmul(&l2, &l);
+        for (len, truth) in [(2usize, &l2), (3usize, &l3)] {
+            let (est, _) = estimate_l_power(&g, len, 60_000, 2, SampleMethod::Importance, 11);
+            let err = (&est - truth).max_abs() / truth.max_abs();
+            assert!(err < 0.15, "len={len}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn rejection_and_importance_agree_in_expectation() {
+        // Non-regular graph: the bridge between triangles gives the
+        // incidence graph varying degrees, so rejection actually rejects.
+        let g = small_graph();
+        let l = g.laplacian();
+        let l2 = matmul(&l, &l);
+        let (est_r, stats_r) = estimate_l_power(&g, 2, 80_000, 2, SampleMethod::Rejection, 3);
+        let (est_i, _) = estimate_l_power(&g, 2, 20_000, 2, SampleMethod::Importance, 4);
+        assert!((&est_r - &l2).max_abs() / l2.max_abs() < 0.2, "rejection biased?");
+        assert!((&est_i - &l2).max_abs() / l2.max_abs() < 0.1, "importance biased?");
+        assert!(stats_r.acceptance_rate() < 1.0, "non-regular graph must reject some walks");
+        assert!(stats_r.acceptance_rate() > 0.0);
+    }
+
+    #[test]
+    fn rejection_accepts_everything_on_regular_graphs() {
+        // On a degree-regular graph every walk has probability exactly
+        // p_min → acceptance rate 1 (rejection sampling degenerates to
+        // uniform sampling, as eq 13-14 predict).
+        let g = ring(8).graph;
+        let (_, stats) = estimate_l_power(&g, 2, 5_000, 2, SampleMethod::Rejection, 5);
+        assert!((stats.acceptance_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_decreases_with_more_walks() {
+        let g = small_graph();
+        let l = g.laplacian();
+        let l2 = matmul(&l, &l);
+        let errs: Vec<f64> = [2_000usize, 64_000]
+            .iter()
+            .map(|&n| {
+                let (est, _) = estimate_l_power(&g, 2, n, 2, SampleMethod::Importance, 5);
+                (&est - &l2).max_abs() / l2.max_abs()
+            })
+            .collect();
+        assert!(errs[1] < errs[0] * 0.6, "no ~1/√n decay: {errs:?}");
+    }
+
+    #[test]
+    fn poly_apply_estimate_unbiased() {
+        // p(L)·V for p(x) = 0.5 + x − 0.2x² vs exact.
+        let g = small_graph();
+        let l = g.laplacian();
+        let coeffs = [0.5, 1.0, -0.2];
+        let v = DMat::from_fn(6, 3, |i, j| ((i * 3 + j) as f64).sin());
+        let exact = matmul(&crate::linalg::funcs::poly_horner(&l, &coeffs), &v);
+        let est = WalkEstimator::new(&g, SampleMethod::Importance);
+        let mut rng = Rng::new(13);
+        let approx = est.estimate_poly_apply(&coeffs, &v, 60_000, &mut rng);
+        let err = (&approx - &exact).max_abs() / exact.max_abs().max(1e-12);
+        assert!(err < 0.15, "rel err {err}");
+    }
+
+    #[test]
+    fn estimator_scales_with_clique_graph() {
+        let g = cliques(&CliqueSpec { n: 24, k: 3, max_short_circuit: 2, seed: 9 }).graph;
+        let l = g.laplacian();
+        let l2 = matpow(&l, 2);
+        let (est, stats) = estimate_l_power(&g, 2, 40_000, 3, SampleMethod::Importance, 21);
+        assert_eq!(stats.trials, 40_000);
+        let rel = (est.trace() - l2.trace()).abs() / l2.trace();
+        assert!(rel < 0.2, "trace rel err {rel}");
+    }
+
+    #[test]
+    fn parallel_and_serial_estimates_both_unbiased() {
+        let g = ring(6).graph;
+        let l = g.laplacian();
+        let (e1, _) = estimate_l_power(&g, 1, 30_000, 1, SampleMethod::Importance, 42);
+        let (e4, _) = estimate_l_power(&g, 1, 30_000, 4, SampleMethod::Importance, 42);
+        assert!((&e1 - &l).max_abs() / l.max_abs() < 0.08);
+        assert!((&e4 - &l).max_abs() / l.max_abs() < 0.08);
+    }
+
+    #[test]
+    fn property_acceptance_probability_valid() {
+        use crate::testkit::{check, SizeGen};
+        check(17, 10, &SizeGen { lo: 6, hi: 24 }, |&n| {
+            let g = cliques(&CliqueSpec { n, k: 2, max_short_circuit: 2, seed: n as u64 }).graph;
+            let engine = WalkEngine::new(&g);
+            let mut rng = Rng::new(n as u64);
+            for len in 1..=4 {
+                let p_min = engine.p_min(len);
+                for _ in 0..50 {
+                    let w = engine.sample_walk(len, &mut rng);
+                    let ratio = p_min / w.prob[len - 1];
+                    if !(ratio > 0.0 && ratio <= 1.0 + 1e-12) {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+}

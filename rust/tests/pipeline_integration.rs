@@ -1,0 +1,163 @@
+//! Native-backend integration across modules: graph generators →
+//! transforms → solvers → clustering → metrics, plus the stochastic
+//! (walk-estimated) path. No artifacts required.
+
+use sped::cluster::adjusted_rand_index;
+use sped::graph::gen::{cliques, ring_of_cliques, CliqueSpec};
+use sped::linkpred::{complete_graph, drop_edges};
+use sped::mdp::{GridWorld, ThreeRoomSpec};
+use sped::pipeline::{Pipeline, PipelineConfig};
+use sped::transforms::TransformKind;
+
+#[test]
+fn full_native_pipeline_all_transforms() {
+    let gg = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 1 });
+    for transform in [
+        TransformKind::Identity,
+        TransformKind::NegExp,
+        TransformKind::LimitNegExp { ell: 51 },
+        // ℓ must cover the raw spectrum (ρ(L) ≈ 14 here): a degree-31
+        // Taylor of −e^{−x} diverges above x ≈ 12 and *fails* (the paper's
+        // Fig 6 finding — exercised deliberately in fig6_series_terms).
+        TransformKind::TaylorNegExp { ell: 101 },
+        TransformKind::MatrixLog { eps: 0.05 },
+    ] {
+        let cfg = PipelineConfig {
+            k: 3,
+            transform,
+            solver: "subspace".into(),
+            steps: 800,
+            eval_every: 20,
+            stop_error: 1e-8,
+            ..Default::default()
+        };
+        let out = Pipeline::new(cfg).run(&gg.graph).unwrap();
+        let ari = adjusted_rand_index(
+            &out.clustering.as_ref().unwrap().assignments,
+            &gg.labels,
+        );
+        assert!(ari > 0.9, "{transform}: ARI {ari}");
+    }
+}
+
+#[test]
+fn pipeline_on_mdp_pvfs() {
+    let world = GridWorld::three_rooms(ThreeRoomSpec { s: 1, h: 10 }).unwrap();
+    let cfg = PipelineConfig {
+        k: 3,
+        transform: TransformKind::NegExp,
+        solver: "oja".into(),
+        eta: 0.5,
+        steps: 3000,
+        eval_every: 50,
+        stop_error: 1e-5,
+        do_cluster: true,
+        ..Default::default()
+    };
+    let out = Pipeline::new(cfg).run(&world.graph).unwrap();
+    assert!(out.history.last().unwrap().subspace_error < 1e-2);
+    // Spectral clustering of the 3-room world ≈ the rooms.
+    let rooms: Vec<usize> = (0..world.num_states()).map(|s| world.room_of(s)).collect();
+    let ari = adjusted_rand_index(
+        &out.clustering.as_ref().unwrap().assignments,
+        &rooms,
+    );
+    assert!(ari > 0.6, "room recovery ARI {ari}");
+}
+
+#[test]
+fn pipeline_on_linkpred_completed_graph() {
+    let gg = cliques(&CliqueSpec { n: 45, k: 3, max_short_circuit: 2, seed: 3 });
+    let completed = complete_graph(&drop_edges(&gg.graph, 0.2, 7));
+    let cfg = PipelineConfig {
+        k: 3,
+        transform: TransformKind::LimitNegExp { ell: 251 },
+        solver: "mu-eg".into(),
+        eta: 0.5,
+        steps: 6000,
+        eval_every: 100,
+        stop_error: 1e-4,
+        ..Default::default()
+    };
+    let out = Pipeline::new(cfg).run(&completed).unwrap();
+    let ari = adjusted_rand_index(
+        &out.clustering.as_ref().unwrap().assignments,
+        &gg.labels,
+    );
+    assert!(ari > 0.85, "ARI {ari}");
+}
+
+#[test]
+fn stochastic_walk_oracle_drives_oja() {
+    use sped::solvers::stochastic::StochasticPolyOp;
+    use sped::solvers::{run_convergence, Oja, RunConfig};
+    use sped::walks::SampleMethod;
+    // p(x) = x (identity through the walk estimator), λ* from power iter.
+    let gg = cliques(&CliqueSpec { n: 20, k: 2, max_short_circuit: 1, seed: 5 });
+    let l = gg.graph.laplacian();
+    let e = sped::linalg::eigh(&l).unwrap();
+    let v_star = e.bottom_k(2);
+    let lam_star = e.lambda_max() * 1.05;
+    let mut op = StochasticPolyOp::new(
+        &gg.graph,
+        vec![0.0, 1.0],
+        lam_star,
+        400,
+        SampleMethod::Importance,
+        11,
+    );
+    let mut solver = Oja { eta: 0.01 / lam_star };
+    let cfg = RunConfig { steps: 3000, eval_every: 100, ..Default::default() };
+    let hist = run_convergence(&mut solver, &mut op, &v_star, &cfg);
+    let err = hist.last().unwrap().subspace_error;
+    assert!(err < 0.25, "stochastic-walk Oja err {err}");
+}
+
+#[test]
+fn ring_of_cliques_multiway() {
+    let gg = ring_of_cliques(4, 8, 0);
+    let cfg = PipelineConfig {
+        k: 4,
+        transform: TransformKind::NegExp,
+        solver: "subspace".into(),
+        steps: 500,
+        eval_every: 20,
+        stop_error: 1e-8,
+        ..Default::default()
+    };
+    let out = Pipeline::new(cfg).run(&gg.graph).unwrap();
+    let ari = adjusted_rand_index(
+        &out.clustering.as_ref().unwrap().assignments,
+        &gg.labels,
+    );
+    assert!(ari > 0.9, "ARI {ari}");
+}
+
+#[test]
+fn walker_fleet_feeds_transform_build() {
+    // §4.3 end-to-end: estimate L and L² with the parallel fleet, assemble
+    // p(L̂) = L̂ − 0.05·L̂², reverse, and check the Fiedler vector survives.
+    use sped::coordinator::walkers::{WalkerPool, WalkerPoolConfig};
+    use std::sync::Arc;
+    let gg = cliques(&CliqueSpec { n: 16, k: 2, max_short_circuit: 1, seed: 9 });
+    let g = Arc::new(gg.graph.clone());
+    let pool = WalkerPool::spawn(g.clone(), WalkerPoolConfig::default());
+    let (l1, _) = pool.estimate_power(1, 40_000, 8, 1);
+    let (l2, _) = pool.estimate_power(2, 80_000, 8, 2);
+    pool.shutdown();
+    let mut p = l1.clone();
+    p.axpy(-0.05, &l2);
+    p.symmetrize();
+    // M = λ*I − p(L̂)
+    let lam = sped::linalg::funcs::power_lambda_max(&p, 100) * 1.05;
+    let mut m = p;
+    m.scale(-1.0);
+    m.add_diag(lam);
+    let e_m = sped::linalg::eigh(&m).unwrap();
+    let e_l = sped::linalg::eigh(&gg.graph.laplacian()).unwrap();
+    // 2nd-from-top of M ≈ Fiedler vector of L (top is the ones vector).
+    let est = e_m.vectors.col(m.rows() - 2);
+    let truth = e_l.vectors.col(1);
+    let align = sped::linalg::dmat::dot(&est, &truth).abs();
+    assert!(align > 0.9, "Fiedler alignment {align}");
+}
