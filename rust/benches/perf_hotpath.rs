@@ -1,18 +1,25 @@
 //! Whole-stack hot-path profile — the measurement side of EXPERIMENTS.md
 //! §Perf. Times every layer's inner loops:
 //!
-//! * L3 native: blocked matmul (vs naive), symmetric eigh, MGS, solver
-//!   steps (Oja / µ-EG), transform builders (Horner vs matpow), k-means,
-//!   walk sampling.
+//! * L3 native: blocked matmul (vs naive), the row-sharded parallel kernels
+//!   (matmul / Horner polynomial apply at 1–`threads` workers, with a
+//!   bitwise-equality check against the serial path), symmetric eigh, MGS,
+//!   solver steps (Oja / µ-EG), transform builders (Horner vs matpow),
+//!   k-means, walk sampling.
 //! * XLA path (when artifacts exist): chunked solver steps, poly build,
 //!   matpow, matvec round-trip — including the PJRT call overhead.
+//!
+//! The worker count for the parallel cases comes from `--threads=N`
+//! (e.g. `cargo bench --bench perf_hotpath -- --threads=8`) or the
+//! `SPED_THREADS` env var; default 4.
 
 use sped::graph::gen::{cliques, CliqueSpec};
 use sped::linalg::dmat::DMat;
 use sped::linalg::matmul::{matmul, matmul_naive};
+use sped::linalg::par::{matmul_par, poly_horner_par};
 use sped::solvers::{EigenSolver, MatVecOp};
 use sped::transforms::TransformKind;
-use sped::util::bench::{fast_mode, BenchSuite};
+use sped::util::bench::{fast_mode, human_time, BenchSuite};
 use sped::util::rng::Rng;
 
 fn random_mat(seed: u64, r: usize, c: usize) -> DMat {
@@ -20,8 +27,41 @@ fn random_mat(seed: u64, r: usize, c: usize) -> DMat {
     DMat::from_fn(r, c, |_, _| rng.normal())
 }
 
+/// Worker-count knob: `--threads=N` argument or `SPED_THREADS=N` env var
+/// (flag form keeps it invisible to the bench-name filter).
+fn threads_param() -> usize {
+    for arg in std::env::args().skip(1) {
+        if let Some(v) = arg.strip_prefix("--threads=") {
+            return v.parse().expect("--threads=N needs an integer");
+        }
+    }
+    std::env::var("SPED_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+}
+
+/// Best-of-`reps` wall time of `f` (returns the last result for checking).
+fn best_of<T>(reps: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    let mut best = f64::INFINITY;
+    let mut out = f();
+    for _ in 0..reps {
+        let t = std::time::Instant::now();
+        out = f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    (best, out)
+}
+
+fn bitwise_eq(a: &DMat, b: &DMat) -> bool {
+    a.rows() == b.rows()
+        && a.cols() == b.cols()
+        && a.data().iter().zip(b.data().iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
 fn main() {
     let mut suite = BenchSuite::new("perf_hotpath");
+    let threads = threads_param();
     let n = if fast_mode() { 128 } else { 256 };
 
     // ---- L3: matmul ----
@@ -35,6 +75,49 @@ fn main() {
         suite.bench_units(&format!("matmul naive {n}x{n}"), flops, "FLOP", || {
             std::hint::black_box(matmul_naive(&a, &b));
         });
+    }
+    let mut worker_sweep = vec![2usize];
+    if threads.max(2) != 2 {
+        worker_sweep.push(threads);
+    }
+    for workers in worker_sweep {
+        suite.bench_units(
+            &format!("matmul row-sharded {n}x{n} ({workers} workers)"),
+            flops,
+            "FLOP",
+            || {
+                std::hint::black_box(matmul_par(&a, &b, workers));
+            },
+        );
+    }
+
+    // ---- Tentpole measurement: parallel polynomial apply on the 512-node
+    // clique workload (acceptance: ≥2× at 4 workers on multi-core hosts,
+    // bitwise-identical to serial at any worker count) ----
+    {
+        let np = if fast_mode() { 256 } else { 512 };
+        let gg = cliques(&CliqueSpec { n: np, k: 4, max_short_circuit: 25, seed: 9 });
+        let l = gg.graph.laplacian();
+        // Degree-8 shifted-Horner apply: 8 dense np³ multiplies per call —
+        // the exact shape of a TaylorNegExp transform build term.
+        let series = TransformKind::TaylorNegExp { ell: 8 }.series().expect("series kind");
+        let mut shifted = l.clone();
+        shifted.add_diag(-series.shift);
+        let reps = if fast_mode() { 1 } else { 2 };
+        let (t_serial, r_serial) =
+            best_of(reps, || poly_horner_par(&shifted, &series.coeffs, 1));
+        let (t_par, r_par) =
+            best_of(reps, || poly_horner_par(&shifted, &series.coeffs, threads));
+        assert!(
+            bitwise_eq(&r_serial, &r_par),
+            "parallel poly apply diverged from serial (determinism contract broken)"
+        );
+        suite.report(&format!(
+            "poly apply deg-8, n={np} cliques: serial {} | {threads} workers {} | speedup {:.2}x | bitwise-identical: yes",
+            human_time(t_serial),
+            human_time(t_par),
+            t_serial / t_par.max(1e-12),
+        ));
     }
 
     // ---- L3: eigh ----
@@ -54,12 +137,21 @@ fn main() {
     .unwrap();
     let k = 8;
     let mut v = sped::solvers::random_init(n, k, 7);
-    let mut op = sped::solvers::DenseOp { m: sm.m.clone() };
+    let mut op = sped::solvers::DenseOp { m: sm.m.clone(), threads: 1 };
     let step_flops = 2.0 * (n * n * k) as f64;
     let mut oja = sped::solvers::Oja { eta: 0.1 };
     suite.bench_units(&format!("oja step n={n} k={k}"), step_flops, "FLOP", || {
         oja.step(&mut op, &mut v);
     });
+    let mut op_par = sped::solvers::DenseOp { m: sm.m.clone(), threads };
+    suite.bench_units(
+        &format!("oja step n={n} k={k} ({threads} workers)"),
+        step_flops,
+        "FLOP",
+        || {
+            oja.step(&mut op_par, &mut v);
+        },
+    );
     let mut eg = sped::solvers::MuEigenGame { eta: 0.1 };
     suite.bench_units(&format!("mu-eg step n={n} k={k}"), step_flops, "FLOP", || {
         eg.step(&mut op, &mut v);
@@ -73,6 +165,16 @@ fn main() {
     suite.bench("transform build: limit_negexp T251 (matpow, ~13 matmuls)", || {
         std::hint::black_box(TransformKind::LimitNegExp { ell: 251 }.build(&l).unwrap());
     });
+    suite.bench(
+        &format!("transform build: limit_negexp T251 ({threads} workers)"),
+        || {
+            std::hint::black_box(
+                TransformKind::LimitNegExp { ell: 251 }
+                    .build_threaded(&l, threads)
+                    .unwrap(),
+            );
+        },
+    );
     if !fast_mode() {
         suite.bench("transform build: taylor_negexp T51 (Horner, 51 matmuls)", || {
             std::hint::black_box(TransformKind::TaylorNegExp { ell: 51 }.build(&l).unwrap());

@@ -84,7 +84,7 @@ pub fn run_grid(
         let eta = eta_base / rho_m;
         for &s in solvers {
             let mut solver = solver_by_name(s, eta)?;
-            let mut op = DenseOp { m: sm.m.clone() };
+            let mut op = DenseOp::new(sm.m.clone());
             let cfg = RunConfig {
                 steps,
                 eval_every,

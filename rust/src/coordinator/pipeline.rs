@@ -51,6 +51,10 @@ pub struct PipelineConfig {
     pub seed: u64,
     /// Run k-means on the converged embedding.
     pub do_cluster: bool,
+    /// Worker threads for the native dense hot paths (transform build and
+    /// the solver's `M·V`). Results are bitwise identical for every value
+    /// (`linalg::par` determinism contract); `1` = serial.
+    pub threads: usize,
 }
 
 impl Default for PipelineConfig {
@@ -68,6 +72,7 @@ impl Default for PipelineConfig {
             backend: Backend::Native,
             seed: 0,
             do_cluster: true,
+            threads: 1,
         }
     }
 }
@@ -142,12 +147,17 @@ impl Pipeline {
     ) -> Result<PipelineOutput> {
         let cfg = &self.cfg;
         let t0 = Instant::now();
-        let sm = build_solver_matrix(l, cfg.transform, &cfg.build)?;
+        // The pipeline-level knob overrides the build options' default so a
+        // single `threads` setting drives both the transform build and the
+        // solver's M·V products.
+        let mut build = cfg.build;
+        build.threads = cfg.threads.max(build.threads).max(1);
+        let sm = build_solver_matrix(l, cfg.transform, &build)?;
         timings.transform_build = t0.elapsed().as_secs_f64();
 
         let t0 = Instant::now();
         let mut solver = solver_by_name(&cfg.solver, cfg.eta)?;
-        let mut op = DenseOp { m: sm.m };
+        let mut op = DenseOp { m: sm.m, threads: build.threads };
         let run_cfg = RunConfig {
             steps: cfg.steps,
             eval_every: cfg.eval_every,
@@ -369,6 +379,39 @@ mod tests {
         );
         assert!(ari > 0.9, "ARI {ari}");
         assert!(out.timings.ground_truth > 0.0);
+    }
+
+    #[test]
+    fn threaded_pipeline_bitwise_matches_serial() {
+        // The whole native pipeline — transform build AND solver steps —
+        // must be invariant to the worker count, bit for bit.
+        let gg = cliques(&CliqueSpec { n: 30, k: 3, max_short_circuit: 2, seed: 4 });
+        let mk = |threads| PipelineConfig {
+            k: 3,
+            transform: TransformKind::LimitNegExp { ell: 51 },
+            solver: "oja".into(),
+            eta: 0.3,
+            steps: 400,
+            eval_every: 20,
+            stop_error: 1e-9,
+            threads,
+            ..Default::default()
+        };
+        let serial = Pipeline::new(mk(1)).run(&gg.graph).unwrap();
+        let par = Pipeline::new(mk(4)).run(&gg.graph).unwrap();
+        assert!(serial
+            .embedding
+            .data()
+            .iter()
+            .zip(par.embedding.data().iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(serial.history.points.len(), par.history.points.len());
+        for (a, b) in serial.history.points.iter().zip(par.history.points.iter()) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.subspace_error.to_bits(), b.subspace_error.to_bits());
+            assert_eq!(a.streak, b.streak);
+        }
+        assert_eq!(serial.lambda_star.to_bits(), par.lambda_star.to_bits());
     }
 
     #[test]

@@ -4,7 +4,6 @@
 
 use super::dmat::DMat;
 use super::eigh::eigh;
-use super::matmul::{matmul, matmul_into};
 use anyhow::Result;
 
 /// Exact `f(A)` for symmetric `A` via full eigendecomposition (eq 10 of the
@@ -30,53 +29,21 @@ pub fn logm(a: &DMat) -> Result<DMat> {
 ///
 /// This mirrors the L1 Pallas kernel `poly_horner` (same recurrence, same
 /// coefficient order) so the native and AOT paths are interchangeable.
+///
+/// One implementation serves serial and parallel: this is the
+/// single-worker case of [`super::par::poly_horner_par`], so the two can
+/// never drift apart (the bitwise-identity contract of `linalg::par`).
 pub fn poly_horner(a: &DMat, coeffs: &[f64]) -> DMat {
-    assert!(a.is_square());
-    let n = a.rows();
-    if coeffs.is_empty() {
-        return DMat::zeros(n, n);
-    }
-    let d = coeffs.len() - 1;
-    // R = c_d · I
-    let mut r = DMat::eye(n);
-    r.scale(coeffs[d]);
-    let mut tmp = DMat::zeros(n, n);
-    for i in (0..d).rev() {
-        // R = R·A + c_i·I
-        matmul_into(&r, a, &mut tmp);
-        std::mem::swap(&mut r, &mut tmp);
-        r.add_diag(coeffs[i]);
-    }
-    r
+    super::par::poly_horner_par(a, coeffs, 1)
 }
 
 /// `A^p` by binary exponentiation (square-and-multiply): ⌈log₂ p⌉ squarings
 /// plus popcount multiplies. Used for the paper's best-performing transform,
 /// the limit approximation `−(I − L/ℓ)^ℓ`, where expanding to monomial
 /// coefficients would be catastrophically ill-conditioned.
+/// Single-worker case of [`super::par::matpow_par`].
 pub fn matpow(a: &DMat, p: u64) -> DMat {
-    assert!(a.is_square());
-    let n = a.rows();
-    if p == 0 {
-        return DMat::eye(n);
-    }
-    let mut base = a.clone();
-    let mut acc: Option<DMat> = None;
-    let mut e = p;
-    loop {
-        if e & 1 == 1 {
-            acc = Some(match acc {
-                None => base.clone(),
-                Some(m) => matmul(&m, &base),
-            });
-        }
-        e >>= 1;
-        if e == 0 {
-            break;
-        }
-        base = matmul(&base, &base);
-    }
-    acc.unwrap()
+    super::par::matpow_par(a, p, 1)
 }
 
 /// Taylor coefficients of `−e^{−x}` of degree `ell`:
@@ -122,26 +89,9 @@ pub fn taylor_log_coeffs(ell: usize, eps: f64) -> Vec<f64> {
 /// iteration (with a deterministic start vector salted by the diagonal).
 /// Returns an estimate within `tol` relative error for well-separated tops,
 /// and is always an underestimate ≤ λ_max; callers multiply by a safety
-/// factor.
+/// factor. Single-worker case of [`super::par::power_lambda_max_par`].
 pub fn power_lambda_max(a: &DMat, iters: usize) -> f64 {
-    let n = a.rows();
-    if n == 0 {
-        return 0.0;
-    }
-    let mut v: Vec<f64> = (0..n)
-        .map(|i| 1.0 + 0.01 * ((i * 2654435761 % 97) as f64 / 97.0))
-        .collect();
-    super::dmat::normalize(&mut v);
-    let mut lambda = 0.0;
-    for _ in 0..iters {
-        let mut w = super::matmul::gemv(a, &v);
-        lambda = super::dmat::dot(&v, &w);
-        if super::dmat::normalize(&mut w) == 0.0 {
-            return 0.0;
-        }
-        v = w;
-    }
-    lambda.max(0.0)
+    super::par::power_lambda_max_par(a, iters, 1)
 }
 
 /// Gershgorin upper bound on the spectral radius of a symmetric matrix:
@@ -156,6 +106,7 @@ pub fn gershgorin_bound(a: &DMat) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::matmul::matmul;
     use crate::util::rng::Rng;
 
     fn random_symmetric(rng: &mut Rng, n: usize) -> DMat {

@@ -25,28 +25,43 @@ pub fn matmul_into(a: &DMat, b: &DMat, c: &mut DMat) {
     let (m, kk, n) = (a.rows(), a.cols(), b.cols());
     assert_eq!(kk, b.rows());
     assert_eq!((c.rows(), c.cols()), (m, n));
+    matmul_row_range(a, b, c.data_mut(), 0, m);
+}
+
+/// Row-range kernel: compute C rows `r0..r1` into `c_rows`, a buffer
+/// holding exactly those rows (`(r1 − r0) × B.cols()` elements, row-major).
+///
+/// This is the unit of work both the serial path (full range) and the
+/// row-sharded parallel path ([`super::par`]) dispatch — one shared inner
+/// loop is what makes the parallel output *bitwise identical* to serial:
+/// each C row is a sum accumulated in exactly the same order regardless of
+/// which shard computes it.
+pub(crate) fn matmul_row_range(a: &DMat, b: &DMat, c_rows: &mut [f64], r0: usize, r1: usize) {
+    let (kk, n) = (a.cols(), b.cols());
+    debug_assert_eq!(kk, b.rows());
+    debug_assert!(r0 <= r1 && r1 <= a.rows());
+    debug_assert_eq!(c_rows.len(), (r1 - r0) * n);
     if n <= 16 {
         // Skinny right-hand side (the solver hot loop: V has k ≤ 8
         // columns). The generic 64-wide j-blocking wastes its tile there;
         // this path keeps a C-row accumulator in registers and streams A's
         // row and B contiguously — measured ~2× over the blocked kernel at
         // n=8 (EXPERIMENTS.md §Perf).
-        matmul_skinny(a, b, c);
+        matmul_skinny_range(a, b, c_rows, r0, r1);
         return;
     }
-    c.data_mut().fill(0.0);
+    c_rows.fill(0.0);
     let ad = a.data();
     let bd = b.data();
-    let cd = c.data_mut();
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
+    for i0 in (r0..r1).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(r1);
         for k0 in (0..kk).step_by(BLOCK) {
             let k1 = (k0 + BLOCK).min(kk);
             for j0 in (0..n).step_by(BLOCK) {
                 let j1 = (j0 + BLOCK).min(n);
                 for i in i0..i1 {
                     let arow = &ad[i * kk..(i + 1) * kk];
-                    let crow = &mut cd[i * n + j0..i * n + j1];
+                    let crow = &mut c_rows[(i - r0) * n + j0..(i - r0) * n + j1];
                     for k in k0..k1 {
                         let aik = arow[k];
                         if aik == 0.0 {
@@ -64,16 +79,16 @@ pub fn matmul_into(a: &DMat, b: &DMat, c: &mut DMat) {
     }
 }
 
-/// Skinny-B kernel: `C = A·B` with `B.cols() ≤ 16`. One C-row accumulator
-/// lives in registers across the whole k-reduction; B rows are contiguous.
-fn matmul_skinny(a: &DMat, b: &DMat, c: &mut DMat) {
-    let (m, kk, n) = (a.rows(), a.cols(), b.cols());
+/// Skinny-B kernel over rows `r0..r1`: `B.cols() ≤ 16`. One C-row
+/// accumulator lives in registers across the whole k-reduction; B rows are
+/// contiguous.
+pub(crate) fn matmul_skinny_range(a: &DMat, b: &DMat, c_rows: &mut [f64], r0: usize, r1: usize) {
+    let (kk, n) = (a.cols(), b.cols());
     debug_assert!(n <= 16);
     let ad = a.data();
     let bd = b.data();
-    let cd = c.data_mut();
     let mut acc = [0.0f64; 16];
-    for i in 0..m {
+    for i in r0..r1 {
         acc[..n].fill(0.0);
         let arow = &ad[i * kk..(i + 1) * kk];
         for k in 0..kk {
@@ -86,7 +101,7 @@ fn matmul_skinny(a: &DMat, b: &DMat, c: &mut DMat) {
                 acc[t] += aik * bv;
             }
         }
-        cd[i * n..(i + 1) * n].copy_from_slice(&acc[..n]);
+        c_rows[(i - r0) * n..(i - r0 + 1) * n].copy_from_slice(&acc[..n]);
     }
 }
 
@@ -118,10 +133,19 @@ pub fn gram(a: &DMat) -> DMat {
 pub fn gemv(a: &DMat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.cols(), x.len());
     let mut y = vec![0.0; a.rows()];
-    for i in 0..a.rows() {
-        y[i] = super::dmat::dot(a.row(i), x);
-    }
+    gemv_row_range(a, x, &mut y, 0, a.rows());
     y
+}
+
+/// Row-range gemv kernel: `y_rows[i − r0] = A[i,:]·x` for `i ∈ r0..r1`.
+/// Shared by the serial path and the row-sharded parallel path so both
+/// produce bitwise-identical results.
+pub(crate) fn gemv_row_range(a: &DMat, x: &[f64], y_rows: &mut [f64], r0: usize, r1: usize) {
+    debug_assert_eq!(a.cols(), x.len());
+    debug_assert_eq!(y_rows.len(), r1 - r0);
+    for i in r0..r1 {
+        y_rows[i - r0] = super::dmat::dot(a.row(i), x);
+    }
 }
 
 /// `y = Aᵀ · x`.

@@ -16,12 +16,16 @@
 //!   powers.
 //! * [`metrics`] — the paper's §5.2 evaluation metrics: normalized subspace
 //!   error and longest eigenvector streak.
+//! * [`par`] — row-sharded parallel execution of the dense hot paths
+//!   (matmul, Horner polynomial apply, matpow, power iteration), bitwise
+//!   identical to the serial kernels for every worker count.
 
 pub mod dmat;
 pub mod eigh;
 pub mod funcs;
 pub mod matmul;
 pub mod metrics;
+pub mod par;
 pub mod qr;
 
 pub use dmat::DMat;

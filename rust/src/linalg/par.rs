@@ -1,0 +1,291 @@
+//! Row-sharded parallel execution layer for the dense hot paths.
+//!
+//! The paper's headline word is *parallelizable*: every transform build is
+//! a chain of dense multiplies (Horner terms, matpow squarings) and every
+//! solver step is one `M·V`. This module shards those kernels by **rows of
+//! the output** across `util::pool` workers.
+//!
+//! ## Determinism contract
+//!
+//! Output is **bitwise identical** to the serial path for every worker
+//! count. This falls out of the design rather than being patched in:
+//!
+//! * the shard boundaries partition output *rows*, and a dense-multiply
+//!   row is an independent reduction — no cross-shard accumulation exists;
+//! * each shard runs the *same* row-range kernel the serial path runs
+//!   ([`matmul::matmul_row_range`] / [`matmul::gemv_row_range`]), so each
+//!   row's floating-point reduction order never depends on the partition.
+//!
+//! Anything built on these primitives (Horner polynomial apply, binary
+//! matrix powers, power iteration) is therefore deterministic too — the
+//! property the determinism tests below pin down for 1, 2, and 8 workers.
+
+use super::dmat::DMat;
+use super::matmul::{gemv_row_range, matmul_row_range};
+use crate::util::pool::parallel_shards;
+
+/// Split `rows` into at most `threads` contiguous shards (first shards get
+/// the remainder), returned as per-shard row counts.
+fn row_shards(rows: usize, threads: usize) -> Vec<usize> {
+    let threads = threads.max(1).min(rows.max(1));
+    let base = rows / threads;
+    let extra = rows % threads;
+    (0..threads)
+        .map(|t| base + usize::from(t < extra))
+        .filter(|&len| len > 0)
+        .collect()
+}
+
+/// `C = A · B` with output rows sharded across `threads` workers.
+/// Bitwise identical to [`super::matmul::matmul`] for any `threads`.
+pub fn matmul_par(a: &DMat, b: &DMat, threads: usize) -> DMat {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let mut c = DMat::zeros(a.rows(), b.cols());
+    matmul_into_par(a, b, &mut c, threads);
+    c
+}
+
+/// `C = A · B` into an existing buffer, row-sharded. `threads ≤ 1` is the
+/// serial path itself.
+pub fn matmul_into_par(a: &DMat, b: &DMat, c: &mut DMat, threads: usize) {
+    let (m, kk, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(kk, b.rows());
+    assert_eq!((c.rows(), c.cols()), (m, n));
+    let shards = row_shards(m, threads);
+    if shards.len() <= 1 {
+        matmul_row_range(a, b, c.data_mut(), 0, m);
+        return;
+    }
+    // Row offsets per shard (prefix sums), so each worker knows its range.
+    let mut starts = Vec::with_capacity(shards.len());
+    let mut acc = 0usize;
+    for &len in &shards {
+        starts.push(acc);
+        acc += len;
+    }
+    let elem_lens: Vec<usize> = shards.iter().map(|&len| len * n).collect();
+    parallel_shards(c.data_mut(), &elem_lens, |idx, chunk| {
+        let r0 = starts[idx];
+        let r1 = r0 + shards[idx];
+        matmul_row_range(a, b, chunk, r0, r1);
+    });
+}
+
+/// `y = A·x` row-sharded. Bitwise identical to [`super::matmul::gemv`].
+pub fn gemv_par(a: &DMat, x: &[f64], threads: usize) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    let m = a.rows();
+    let mut y = vec![0.0; m];
+    let shards = row_shards(m, threads);
+    if shards.len() <= 1 {
+        gemv_row_range(a, x, &mut y, 0, m);
+        return y;
+    }
+    let mut starts = Vec::with_capacity(shards.len());
+    let mut acc = 0usize;
+    for &len in &shards {
+        starts.push(acc);
+        acc += len;
+    }
+    parallel_shards(&mut y, &shards, |idx, chunk| {
+        let r0 = starts[idx];
+        gemv_row_range(a, x, chunk, r0, r0 + chunk.len());
+    });
+    y
+}
+
+/// Matrix polynomial `p(A) = Σ_i c_i A^i` by Horner's rule with every dense
+/// multiply row-sharded across `threads` workers. Exactly `deg(p)`
+/// multiplies; bitwise identical to [`super::funcs::poly_horner`].
+pub fn poly_horner_par(a: &DMat, coeffs: &[f64], threads: usize) -> DMat {
+    assert!(a.is_square());
+    let n = a.rows();
+    if coeffs.is_empty() {
+        return DMat::zeros(n, n);
+    }
+    let d = coeffs.len() - 1;
+    // R = c_d · I
+    let mut r = DMat::eye(n);
+    r.scale(coeffs[d]);
+    let mut tmp = DMat::zeros(n, n);
+    for i in (0..d).rev() {
+        // R = R·A + c_i·I
+        matmul_into_par(&r, a, &mut tmp, threads);
+        std::mem::swap(&mut r, &mut tmp);
+        r.add_diag(coeffs[i]);
+    }
+    r
+}
+
+/// `A^p` by binary exponentiation with row-sharded multiplies. Bitwise
+/// identical to [`super::funcs::matpow`].
+pub fn matpow_par(a: &DMat, p: u64, threads: usize) -> DMat {
+    assert!(a.is_square());
+    let n = a.rows();
+    if p == 0 {
+        return DMat::eye(n);
+    }
+    let mut base = a.clone();
+    let mut acc: Option<DMat> = None;
+    let mut e = p;
+    loop {
+        if e & 1 == 1 {
+            acc = Some(match acc {
+                None => base.clone(),
+                Some(m) => matmul_par(&m, &base, threads),
+            });
+        }
+        e >>= 1;
+        if e == 0 {
+            break;
+        }
+        base = matmul_par(&base, &base, threads);
+    }
+    acc.unwrap()
+}
+
+/// Largest-eigenvalue estimate by power iteration with the matrix–vector
+/// product row-sharded. Bitwise identical to
+/// [`super::funcs::power_lambda_max`].
+pub fn power_lambda_max_par(a: &DMat, iters: usize, threads: usize) -> f64 {
+    let n = a.rows();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = (0..n)
+        .map(|i| 1.0 + 0.01 * ((i * 2654435761 % 97) as f64 / 97.0))
+        .collect();
+    super::dmat::normalize(&mut v);
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let mut w = gemv_par(a, &v, threads);
+        lambda = super::dmat::dot(&v, &w);
+        if super::dmat::normalize(&mut w) == 0.0 {
+            return 0.0;
+        }
+        v = w;
+    }
+    lambda.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::funcs::{matpow, poly_horner, power_lambda_max};
+    use crate::linalg::matmul::{gemv, matmul};
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, r: usize, c: usize) -> DMat {
+        DMat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    /// Bitwise equality — the contract is exact, not within-tolerance.
+    fn bitwise_eq(a: &DMat, b: &DMat) -> bool {
+        a.rows() == b.rows()
+            && a.cols() == b.cols()
+            && a
+                .data()
+                .iter()
+                .zip(b.data().iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn matmul_par_bitwise_matches_serial_across_worker_counts() {
+        let mut rng = Rng::new(41);
+        // Shapes straddling the 64-wide block edge, plus skinny-B (n ≤ 16)
+        // and degenerate single-row cases.
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 4, 5),
+            (64, 64, 64),
+            (65, 33, 17),
+            (130, 70, 129),
+            (97, 128, 8), // skinny kernel
+            (5, 200, 3),  // skinny, fewer rows than workers
+        ] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let serial = matmul(&a, &b);
+            for &workers in &[1usize, 2, 8] {
+                let par = matmul_par(&a, &b, workers);
+                assert!(
+                    bitwise_eq(&par, &serial),
+                    "({m},{k},{n}) diverged at {workers} workers"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn poly_horner_par_bitwise_matches_serial() {
+        let mut rng = Rng::new(42);
+        for &n in &[1usize, 7, 65, 96] {
+            let mut a = random_mat(&mut rng, n, n);
+            a.symmetrize();
+            a.scale(0.25);
+            let coeffs = [0.5, -1.0, 2.0, 0.25, -0.125];
+            let serial = poly_horner(&a, &coeffs);
+            for &workers in &[1usize, 2, 8] {
+                let par = poly_horner_par(&a, &coeffs, workers);
+                assert!(bitwise_eq(&par, &serial), "n={n}, {workers} workers");
+            }
+        }
+        // Edge cases mirror the serial ones.
+        let a = DMat::eye(3);
+        assert_eq!(poly_horner_par(&a, &[], 4).max_abs(), 0.0);
+        assert!(bitwise_eq(&poly_horner_par(&a, &[7.0], 4), &poly_horner(&a, &[7.0])));
+    }
+
+    #[test]
+    fn matpow_par_bitwise_matches_serial() {
+        let mut rng = Rng::new(43);
+        let mut a = random_mat(&mut rng, 48, 48);
+        a.symmetrize();
+        a.scale(0.3);
+        for &p in &[1u64, 2, 7, 251] {
+            let serial = matpow(&a, p);
+            for &workers in &[2usize, 8] {
+                assert!(bitwise_eq(&matpow_par(&a, p, workers), &serial), "p={p}");
+            }
+        }
+        assert!(bitwise_eq(&matpow_par(&a, 0, 4), &DMat::eye(48)));
+    }
+
+    #[test]
+    fn gemv_and_power_iteration_bitwise_match_serial() {
+        let mut rng = Rng::new(44);
+        let x = random_mat(&mut rng, 80, 50);
+        let g = crate::linalg::matmul::gram(&x);
+        let v: Vec<f64> = (0..g.cols()).map(|_| rng.normal()).collect();
+        let serial = gemv(&g, &v);
+        for &workers in &[1usize, 2, 8] {
+            let par = gemv_par(&g, &v, workers);
+            assert!(serial
+                .iter()
+                .zip(par.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+            let lam_s = power_lambda_max(&g, 60);
+            let lam_p = power_lambda_max_par(&g, 60, workers);
+            assert_eq!(lam_s.to_bits(), lam_p.to_bits(), "{workers} workers");
+        }
+    }
+
+    #[test]
+    fn property_determinism_over_random_shapes() {
+        // The satellite determinism property: random shapes, random worker
+        // counts ∈ {1, 2, 8}, always bitwise equal.
+        use crate::testkit::{check, SizeGen};
+        check(45, 12, &SizeGen { lo: 1, hi: 90 }, |&m| {
+            let mut rng = Rng::new(m as u64 + 500);
+            let k = (m % 37) + 1;
+            let n = (m % 23) + 1;
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let serial = matmul(&a, &b);
+            [1usize, 2, 8]
+                .iter()
+                .all(|&w| bitwise_eq(&matmul_par(&a, &b, w), &serial))
+        });
+    }
+}

@@ -118,6 +118,7 @@ fn pipeline_spec(spec: ArgSpec) -> ArgSpec {
         .opt("steps", "10000", "max solver steps")
         .opt("eval-every", "50", "metric cadence")
         .opt("stop-error", "1e-4", "early-stop subspace error")
+        .opt("threads", "1", "worker threads for dense kernels (bitwise-identical output)")
         .opt("backend", "native", "native | xla")
         .opt("artifacts", "artifacts", "artifacts dir (xla backend)")
         .flag("prescale", "pre-scale L by 1/lambda_max before the transform")
@@ -145,6 +146,7 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
         backend,
         seed: a.u64("seed"),
         do_cluster: true,
+        threads: cfg.usize("pipeline.threads", a.usize("threads")).max(1),
     })
 }
 

@@ -1,0 +1,131 @@
+//! Offline stand-in for the PJRT runtime (default build, no `xla` feature).
+//!
+//! Presents the exact API of [`super::pjrt`] so that the pipeline's XLA
+//! backend, the benches, and the integration tests all compile without the
+//! PJRT bindings. Nothing here can actually execute: [`Runtime::load_dir`]
+//! always returns an error (distinguishing "no artifacts" from "artifacts
+//! present but built without `xla`"), and every other type carries an
+//! uninhabited field, so the remaining methods are statically unreachable.
+
+use super::{read_manifest, ArtifactMeta, ChunkOutput};
+use crate::linalg::DMat;
+use crate::solvers::MatVecOp;
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Uninhabited: makes the stub types impossible to construct.
+#[derive(Clone, Copy, Debug)]
+enum Never {}
+
+const NO_XLA: &str =
+    "sped was built without the `xla` feature; rebuild with `--features xla` \
+     (and the real PJRT bindings in rust/vendor/xla) to execute AOT artifacts";
+
+/// A compiled artifact (unconstructible in this build).
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    _never: Never,
+}
+
+/// The artifact registry (unconstructible in this build).
+pub struct Runtime {
+    _never: Never,
+}
+
+impl Runtime {
+    /// Always fails: either the artifacts are missing (same behaviour as
+    /// the real runtime) or they exist but this build cannot execute them.
+    pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        read_manifest(dir.as_ref())?;
+        bail!("{NO_XLA}");
+    }
+
+    pub fn dir(&self) -> &Path {
+        match self._never {}
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        match self._never {}
+    }
+
+    pub fn get(&self, _name: &str) -> Result<Arc<Artifact>> {
+        match self._never {}
+    }
+
+    pub fn best_fit(&self, _kind: &str, _n: usize) -> Result<Arc<Artifact>> {
+        match self._never {}
+    }
+}
+
+/// Chunked-solver driver (unconstructible in this build).
+pub struct XlaChunkRunner {
+    pub n: usize,
+    pub k: usize,
+    pub t: usize,
+    _never: Never,
+}
+
+impl XlaChunkRunner {
+    pub fn new(_artifact: Arc<Artifact>, _m: &DMat) -> Result<Self> {
+        bail!("{NO_XLA}");
+    }
+
+    pub fn run_chunk(&self, _v: &DMat, _v_star: &DMat, _eta: f64) -> Result<ChunkOutput> {
+        match self._never {}
+    }
+}
+
+/// Dense XLA-backed operator (unconstructible in this build).
+pub struct XlaDenseOp {
+    _never: Never,
+}
+
+impl XlaDenseOp {
+    pub fn new(_artifact: Arc<Artifact>, _m: &DMat) -> Result<Self> {
+        bail!("{NO_XLA}");
+    }
+}
+
+impl MatVecOp for XlaDenseOp {
+    fn apply(&mut self, _v: &DMat) -> DMat {
+        match self._never {}
+    }
+    fn dim(&self) -> usize {
+        match self._never {}
+    }
+    fn label(&self) -> String {
+        match self._never {}
+    }
+}
+
+/// Polynomial build through the `poly_horner` artifact — unreachable here
+/// because no [`Artifact`] can exist without the `xla` feature.
+pub fn xla_poly_build(artifact: &Artifact, _l: &DMat, _shift: f64, _coeffs: &[f64]) -> Result<DMat> {
+    match artifact._never {}
+}
+
+/// Matrix power through the `matpow` artifact — unreachable here because no
+/// [`Artifact`] can exist without the `xla` feature.
+pub fn xla_matpow(artifact: &Artifact, _b: &DMat, _p: u64) -> Result<DMat> {
+    match artifact._never {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        // With a valid manifest on disk, the stub must fail with a message
+        // pointing at the feature flag rather than a confusing I/O error.
+        let dir = std::env::temp_dir().join("sped_stub_runtime_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule stub").unwrap();
+        std::fs::write(dir.join("manifest.cfg"), "[m]\nfile = \"m.hlo.txt\"\nkind = \"matvec\"\nn = 8\n")
+            .unwrap();
+        let err = Runtime::load_dir(&dir).unwrap_err().to_string();
+        assert!(err.contains("xla"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -33,14 +33,31 @@ pub trait MatVecOp {
     }
 }
 
-/// Dense in-memory operator.
+/// Dense in-memory operator. `threads > 1` row-shards the `M·V` product
+/// across `util::pool` workers — bitwise identical to the serial product
+/// (`linalg::par` determinism contract), so solver trajectories do not
+/// depend on the worker count.
 pub struct DenseOp {
     pub m: DMat,
+    pub threads: usize,
+}
+
+impl DenseOp {
+    /// Serial operator (threads = 1).
+    pub fn new(m: DMat) -> DenseOp {
+        DenseOp { m, threads: 1 }
+    }
 }
 
 impl MatVecOp for DenseOp {
     fn apply(&mut self, v: &DMat) -> DMat {
-        matmul(&self.m, v)
+        // Per-call sharding spawns scoped threads; on skinny products the
+        // spawn/join overhead rivals the FLOPs. Below ~1M multiply-adds run
+        // serial — the output is bitwise identical either way, so this is
+        // purely a latency decision.
+        let work = self.m.rows() * self.m.cols() * v.cols();
+        let threads = if work < 1_000_000 { 1 } else { self.threads };
+        crate::linalg::par::matmul_par(&self.m, v, threads)
     }
     fn dim(&self) -> usize {
         self.m.rows()
@@ -260,7 +277,7 @@ mod tests {
     #[test]
     fn oja_converges_on_reversed_identity() {
         let (m, v_star) = fixture(TransformKind::Identity, 3);
-        let mut op = DenseOp { m };
+        let mut op = DenseOp::new(m);
         let mut solver = Oja { eta: 0.05 };
         let cfg = RunConfig { steps: 4000, eval_every: 50, ..Default::default() };
         let hist = run_convergence(&mut solver, &mut op, &v_star, &cfg);
@@ -271,7 +288,7 @@ mod tests {
     #[test]
     fn mu_eg_recovers_ordered_eigenvectors() {
         let (m, v_star) = fixture(TransformKind::NegExp, 3);
-        let mut op = DenseOp { m };
+        let mut op = DenseOp::new(m);
         let mut solver = MuEigenGame { eta: 0.1 };
         let cfg = RunConfig { steps: 6000, eval_every: 100, ..Default::default() };
         let hist = run_convergence(&mut solver, &mut op, &v_star, &cfg);
@@ -282,7 +299,7 @@ mod tests {
     #[test]
     fn subspace_iteration_baseline() {
         let (m, v_star) = fixture(TransformKind::NegExp, 3);
-        let mut op = DenseOp { m };
+        let mut op = DenseOp::new(m);
         let mut solver = SubspaceIteration;
         let cfg = RunConfig { steps: 500, eval_every: 10, ..Default::default() };
         let hist = run_convergence(&mut solver, &mut op, &v_star, &cfg);
@@ -304,7 +321,7 @@ mod tests {
         let run = |kind: TransformKind| {
             let sm = build_solver_matrix(&l, kind, &BuildOptions::default()).unwrap();
             let rho_m = (sm.lambda_star - kind.scalar_map(0.0)).abs().max(1e-9);
-            let mut op = DenseOp { m: sm.m };
+            let mut op = DenseOp::new(sm.m);
             let mut solver = Oja { eta: 0.5 / rho_m };
             run_convergence(&mut solver, &mut op, &v_star, &cfg)
         };
@@ -342,7 +359,7 @@ mod tests {
     #[test]
     fn early_stop_honored() {
         let (m, v_star) = fixture(TransformKind::NegExp, 2);
-        let mut op = DenseOp { m };
+        let mut op = DenseOp::new(m);
         let mut solver = SubspaceIteration;
         let cfg = RunConfig {
             steps: 100_000,

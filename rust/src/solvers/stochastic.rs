@@ -183,7 +183,7 @@ mod tests {
         let mut mm = l.clone();
         mm.scale(-1.0);
         mm.add_diag(lam_star);
-        let mut dop = DenseOp { m: mm };
+        let mut dop = DenseOp::new(mm);
         let dense_err = run_convergence(&mut Oja { eta: 0.002 }, &mut dop, &v_star, &cfg)
             .last()
             .unwrap()

@@ -72,9 +72,19 @@ impl SeriesForm {
 
     /// Evaluate at a matrix via Horner (deg(p) dense multiplies).
     pub fn eval_matrix(&self, a: &DMat) -> DMat {
+        self.eval_matrix_threads(a, 1)
+    }
+
+    /// Evaluate at a matrix with every Horner multiply row-sharded across
+    /// `threads` workers. Bitwise identical to [`Self::eval_matrix`].
+    pub fn eval_matrix_threads(&self, a: &DMat, threads: usize) -> DMat {
         let mut b = a.clone();
         b.add_diag(-self.shift);
-        poly_horner(&b, &self.coeffs)
+        if threads > 1 {
+            crate::linalg::par::poly_horner_par(&b, &self.coeffs, threads)
+        } else {
+            poly_horner(&b, &self.coeffs)
+        }
     }
 
     pub fn degree(&self) -> usize {
@@ -185,6 +195,14 @@ impl TransformKind {
     /// * Taylor kinds → Horner in the shifted matrix (ℓ multiplies);
     /// * limit kind → binary matrix power (≈ 2·log₂ℓ multiplies).
     pub fn build(&self, l: &DMat) -> Result<DMat> {
+        self.build_threaded(l, 1)
+    }
+
+    /// [`Self::build`] with the series hot paths (Horner / matpow)
+    /// row-sharded across `threads` workers. Bitwise identical to the
+    /// serial build for every worker count; the exact (eigh-based) kinds
+    /// are unaffected by `threads`.
+    pub fn build_threaded(&self, l: &DMat, threads: usize) -> Result<DMat> {
         match *self {
             TransformKind::Identity => Ok(l.clone()),
             TransformKind::MatrixLog { eps } => {
@@ -192,17 +210,19 @@ impl TransformKind {
             }
             TransformKind::NegExp => spectral_apply(l, |x| -(-x).exp()),
             TransformKind::TaylorLog { .. } | TransformKind::TaylorNegExp { .. } => {
-                Ok(self.series().unwrap().eval_matrix(l))
+                Ok(self.series().unwrap().eval_matrix_threads(l, threads))
             }
             TransformKind::LimitNegExp { ell } => {
                 // −(I − L/ℓ)^ℓ via square-and-multiply.
-                let n = l.rows();
                 let mut b = l.clone();
                 b.scale(-1.0 / ell as f64);
                 b.add_diag(1.0);
-                let mut p = matpow(&b, ell as u64);
+                let mut p = if threads > 1 {
+                    crate::linalg::par::matpow_par(&b, ell as u64, threads)
+                } else {
+                    matpow(&b, ell as u64)
+                };
                 p.scale(-1.0);
-                let _ = n;
                 Ok(p)
             }
         }
@@ -270,22 +290,32 @@ pub struct BuildOptions {
     pub power_iters: usize,
     /// Safety factor multiplied onto the λ_max estimate.
     pub safety: f64,
+    /// Worker threads for the dense build kernels (Horner / matpow / power
+    /// iteration). `1` = serial; any value produces bitwise-identical
+    /// output (`linalg::par` determinism contract).
+    pub threads: usize,
 }
 
 impl Default for BuildOptions {
     fn default() -> Self {
-        BuildOptions { prescale: false, power_iters: 100, safety: 1.01 }
+        BuildOptions { prescale: false, power_iters: 100, safety: 1.01, threads: 1 }
     }
 }
 
 /// Full native pipeline from Laplacian to solver matrix:
 /// (optionally) pre-scale → `f(·)` → reverse (eq 8).
 pub fn build_solver_matrix(l: &DMat, kind: TransformKind, opts: &BuildOptions) -> Result<SolverMatrix> {
-    let lam_est = power_lambda_max(l, opts.power_iters) * opts.safety;
+    let threads = opts.threads.max(1);
+    let lam_raw = if threads > 1 {
+        crate::linalg::par::power_lambda_max_par(l, opts.power_iters, threads)
+    } else {
+        power_lambda_max(l, opts.power_iters)
+    };
+    let lam_est = lam_raw * opts.safety;
     let scale = if opts.prescale && lam_est > 0.0 { lam_est } else { 1.0 };
     let mut scaled = l.clone();
     scaled.scale(1.0 / scale);
-    let f_l = kind.build(&scaled)?;
+    let f_l = kind.build_threaded(&scaled, threads)?;
     // Spectral radius of the transform *input*: 1 after pre-scaling, else
     // the λ_max estimate (safety-padded; Gershgorin as a fallback bound).
     let rho = if opts.prescale {
@@ -499,6 +529,38 @@ mod tests {
         assert!((r[0] - 10.0).abs() < 1e-12);
         assert!((r[1] - 1.0 / 0.9).abs() < 1e-12);
         assert!(gap_ratios(&[1.0], 3).is_empty());
+    }
+
+    #[test]
+    fn threaded_build_bitwise_matches_serial() {
+        let l = test_laplacian();
+        for kind in [
+            TransformKind::TaylorNegExp { ell: 31 },
+            TransformKind::LimitNegExp { ell: 51 },
+            TransformKind::TaylorLog { ell: 41, eps: 0.05 },
+        ] {
+            let serial = kind.build(&l).unwrap();
+            for threads in [2usize, 8] {
+                let par = kind.build_threaded(&l, threads).unwrap();
+                let identical = serial
+                    .data()
+                    .iter()
+                    .zip(par.data().iter())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(identical, "{kind} diverged at {threads} threads");
+            }
+        }
+        // And the full solver-matrix build, threads knob included.
+        let serial = build_solver_matrix(&l, TransformKind::LimitNegExp { ell: 51 }, &BuildOptions::default()).unwrap();
+        let opts = BuildOptions { threads: 4, ..BuildOptions::default() };
+        let par = build_solver_matrix(&l, TransformKind::LimitNegExp { ell: 51 }, &opts).unwrap();
+        assert_eq!(serial.lambda_star.to_bits(), par.lambda_star.to_bits());
+        assert!(serial
+            .m
+            .data()
+            .iter()
+            .zip(par.m.data().iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

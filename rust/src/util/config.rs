@@ -253,4 +253,86 @@ ells = [11, 51, 151, 251]
         let c = Config::parse("xs = []").unwrap();
         assert_eq!(c.get("xs").unwrap().as_array().unwrap().len(), 0);
     }
+
+    /// Render a Config back to TOML-subset text (test-only: the crate only
+    /// ever writes manifests via templates, but the parser must round-trip
+    /// what it accepts).
+    fn render(c: &Config) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        // Top-level keys must precede any section header.
+        for key in c.keys().filter(|k| !k.contains('.')) {
+            let _ = writeln!(out, "{key} = {}", render_value(c.get(key).unwrap()));
+        }
+        let mut current_section = String::new();
+        for key in c.keys().filter(|k| k.contains('.')) {
+            let (section, bare) = key.split_once('.').unwrap();
+            if section != current_section {
+                let _ = writeln!(out, "[{section}]");
+                current_section = section.to_string();
+            }
+            let _ = writeln!(out, "{bare} = {}", render_value(c.get(key).unwrap()));
+        }
+        out
+    }
+
+    fn render_value(v: &Value) -> String {
+        match v {
+            Value::Str(s) => format!("{s:?}"),
+            Value::Int(i) => i.to_string(),
+            Value::Float(f) => format!("{f:?}"),
+            Value::Bool(b) => b.to_string(),
+            Value::Array(items) => {
+                let inner: Vec<String> = items.iter().map(render_value).collect();
+                format!("[{}]", inner.join(", "))
+            }
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_preserves_values() {
+        // Parse → render → write → load → compare: the manifest path the
+        // runtime depends on (`runtime::read_manifest` goes through
+        // `Config::load`).
+        let c1 = Config::parse(SAMPLE).unwrap();
+        let text = render(&c1);
+        let dir = std::env::temp_dir().join("sped_config_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.cfg");
+        std::fs::write(&path, &text).unwrap();
+        let c2 = Config::load(path.to_str().unwrap()).unwrap();
+        let k1: Vec<&str> = c1.keys().collect();
+        let k2: Vec<&str> = c2.keys().collect();
+        assert_eq!(k1, k2, "key sets differ after roundtrip:\n{text}");
+        for key in c1.keys() {
+            assert_eq!(c1.get(key), c2.get(key), "value for {key} changed:\n{text}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_shaped_roundtrip() {
+        // The exact shape runtime manifests use: sections of string + int
+        // fields, several sections, comments.
+        let text = "\
+# AOT artifact registry
+[oja_chunk_n128]
+file = \"oja_chunk_n128.hlo.txt\"
+kind = \"oja_chunk\"
+n = 128
+k = 8
+t = 25
+[poly_horner_n256]
+file = \"poly_horner_n256.hlo.txt\"
+kind = \"poly_horner\"
+n = 256
+degree = 256
+";
+        let c1 = Config::parse(text).unwrap();
+        let c2 = Config::parse(&render(&c1)).unwrap();
+        assert_eq!(c2.str("oja_chunk_n128.kind", ""), "oja_chunk");
+        assert_eq!(c2.usize("oja_chunk_n128.t", 0), 25);
+        assert_eq!(c2.usize("poly_horner_n256.degree", 0), 256);
+        assert_eq!(c1.keys().count(), c2.keys().count());
+    }
 }

@@ -79,4 +79,63 @@ mod tests {
         let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
         let _ = w.row(&["only-one".into()]);
     }
+
+    /// Minimal RFC-4180 line parser (test-only) to round-trip what the
+    /// writer escapes.
+    fn parse_line(line: &str) -> Vec<String> {
+        let mut fields = Vec::new();
+        let mut cur = String::new();
+        let mut chars = line.chars().peekable();
+        let mut in_quotes = false;
+        while let Some(c) = chars.next() {
+            match c {
+                '"' if in_quotes => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        cur.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                '"' => in_quotes = true,
+                ',' if !in_quotes => fields.push(std::mem::take(&mut cur)),
+                c => cur.push(c),
+            }
+        }
+        fields.push(cur);
+        fields
+    }
+
+    #[test]
+    fn roundtrip_escaped_fields_and_floats() {
+        let dir = std::env::temp_dir().join("sped_csv_roundtrip");
+        let path = dir.join("rt.csv");
+        let rows: Vec<Vec<String>> = vec![
+            vec!["plain".into(), "with,comma".into(), "with \"quotes\"".into()],
+            vec!["multi\"esc\",x".into(), String::new(), "trailing".into()],
+        ];
+        let floats = [0.1f64, -3.25e-7, 12345.0];
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b", "c"]).unwrap();
+            for r in &rows {
+                w.row(r).unwrap();
+            }
+            w.row_f64(&floats).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(parse_line(lines[0]), vec!["a", "b", "c"]);
+        for (line, want) in lines[1..3].iter().zip(rows.iter()) {
+            assert_eq!(&parse_line(line), want);
+        }
+        // Floats written with Rust's shortest-roundtrip formatting: parsing
+        // them back recovers the exact f64.
+        let back: Vec<f64> = parse_line(lines[3]).iter().map(|s| s.parse().unwrap()).collect();
+        for (b, f) in back.iter().zip(floats.iter()) {
+            assert_eq!(b.to_bits(), f.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

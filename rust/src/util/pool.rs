@@ -86,6 +86,38 @@ where
         .unwrap_or_else(init)
 }
 
+/// Run `f` once per contiguous shard of `data`, each shard on its own
+/// worker thread. `shard_lens` gives the length of every shard in order and
+/// must sum to `data.len()`; `f` receives the shard index and the shard's
+/// mutable slice.
+///
+/// This is the execution substrate of the deterministic row-sharded dense
+/// kernels (`linalg::par`): the *partition* decides what runs where, while
+/// each shard's inner loop is the unchanged serial kernel — so results are
+/// bitwise identical for every worker count.
+pub fn parallel_shards<T, F>(data: &mut [T], shard_lens: &[usize], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    debug_assert_eq!(shard_lens.iter().sum::<usize>(), data.len(), "shards must tile data");
+    if shard_lens.len() <= 1 {
+        if !data.is_empty() || shard_lens.len() == 1 {
+            f(0, data);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        for (idx, &len) in shard_lens.iter().enumerate() {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            let f = &f;
+            scope.spawn(move || f(idx, chunk));
+        }
+    });
+}
+
 /// A long-lived leader/worker job pool with bounded queues.
 ///
 /// The leader submits `Job`s; workers pull, execute, and push `Out`s into a
@@ -178,6 +210,26 @@ mod tests {
     fn parallel_map_empty_and_single() {
         assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
         assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn parallel_shards_tiles_exactly() {
+        let mut data: Vec<usize> = vec![0; 103];
+        let lens = [40usize, 40, 23];
+        parallel_shards(&mut data, &lens, |idx, chunk| {
+            for x in chunk.iter_mut() {
+                *x = idx + 1;
+            }
+        });
+        assert!(data[..40].iter().all(|&x| x == 1));
+        assert!(data[40..80].iter().all(|&x| x == 2));
+        assert!(data[80..].iter().all(|&x| x == 3));
+        // Degenerate cases: one shard, and empty input.
+        let mut one = vec![0u8; 5];
+        parallel_shards(&mut one, &[5], |_, c| c.fill(9));
+        assert_eq!(one, vec![9; 5]);
+        let mut empty: Vec<u8> = vec![];
+        parallel_shards(&mut empty, &[], |_, _| panic!("no shards"));
     }
 
     #[test]

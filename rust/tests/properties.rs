@@ -1,0 +1,156 @@
+//! Property-based invariants (via the in-crate `testkit` Gen/shrink
+//! framework) for the two pillars the paper rests on:
+//!
+//! 1. every generated graph yields a *valid Laplacian* — symmetric PSD with
+//!    zero row sums (eq 1: `L = XᵀWX` ⪰ 0, `L·1 = 0`);
+//! 2. every Table-2 transform is a *monotone spectrum map*: it reshapes
+//!    eigenvalues without reordering them, so the bottom-k eigenvectors —
+//!    the object spectral clustering needs — are preserved.
+
+use sped::graph::gen::{
+    barbell, cliques, erdos_renyi, grid2d, path, ring, ring_of_cliques, sbm, CliqueSpec,
+};
+use sped::graph::Graph;
+use sped::linalg::eigh;
+use sped::linalg::metrics::subspace_error;
+use sped::testkit::{check, SizeGen};
+use sped::transforms::TransformKind;
+
+/// Zero row sums + symmetry + PSD, checked exactly the way the paper's
+/// algebra requires them.
+fn assert_valid_laplacian(g: &Graph, context: &str) -> Result<(), String> {
+    let l = g.laplacian();
+    for i in 0..l.rows() {
+        let s: f64 = l.row(i).iter().sum();
+        if s.abs() > 1e-9 {
+            return Err(format!("{context}: row {i} sums to {s}"));
+        }
+    }
+    if !l.is_symmetric(1e-12) {
+        return Err(format!("{context}: Laplacian not symmetric"));
+    }
+    let e = eigh(&l).map_err(|e| format!("{context}: eigh failed: {e}"))?;
+    match e.values.first() {
+        Some(&lo) if lo < -1e-9 => Err(format!("{context}: negative eigenvalue {lo}")),
+        _ => Ok(()),
+    }
+}
+
+#[test]
+fn property_every_generator_yields_psd_zero_rowsum_laplacian() {
+    check(101, 10, &SizeGen { lo: 6, hi: 28 }, |&n| {
+        let seed = n as u64;
+        let cases: Vec<(&str, Graph)> = vec![
+            (
+                "cliques",
+                cliques(&CliqueSpec { n, k: (n / 6).max(1), max_short_circuit: 3, seed }).graph,
+            ),
+            ("sbm", sbm(&[n / 2, n - n / 2], 0.8, 0.05, seed).graph),
+            ("erdos_renyi", erdos_renyi(n, 0.3, seed).graph),
+            ("grid2d", grid2d(n / 3 + 1, 3).graph),
+            ("path", path(n).graph),
+            ("ring", ring(n.max(3)).graph),
+            ("barbell", barbell(n / 2 + 2).graph),
+            ("ring_of_cliques", ring_of_cliques(3, n / 3 + 2, seed).graph),
+        ];
+        for (name, g) in cases {
+            assert_valid_laplacian(&g, name)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_weighted_laplacians_also_valid() {
+    // Link-prediction completion produces *weighted* graphs; the Laplacian
+    // invariants must survive arbitrary positive weights.
+    check(102, 10, &SizeGen { lo: 8, hi: 30 }, |&n| {
+        let gg = cliques(&CliqueSpec { n, k: 2, max_short_circuit: 3, seed: n as u64 });
+        let mut rng = sped::util::rng::Rng::new(n as u64 ^ 0xBEEF);
+        let weights: Vec<f64> = (0..gg.graph.num_edges()).map(|_| rng.uniform(0.05, 2.0)).collect();
+        let weighted = gg.graph.with_weights(&weights).map_err(|e| e.to_string())?;
+        assert_valid_laplacian(&weighted, "reweighted cliques")
+    });
+}
+
+/// The Table-2 transform set, on a spectrum pre-scaled into [0, 1] (the
+/// regime where every series in the table converges; pre-scaling is itself
+/// eigenvector-preserving).
+fn table2_transforms() -> Vec<TransformKind> {
+    vec![
+        TransformKind::Identity,
+        TransformKind::MatrixLog { eps: 0.05 },
+        TransformKind::NegExp,
+        TransformKind::TaylorNegExp { ell: 31 },
+        TransformKind::TaylorLog { ell: 61, eps: 0.05 },
+        TransformKind::LimitNegExp { ell: 51 },
+    ]
+}
+
+#[test]
+fn property_table2_transforms_are_monotone_spectrum_maps() {
+    check(103, 8, &SizeGen { lo: 8, hi: 24 }, |&n| {
+        let gg = cliques(&CliqueSpec { n, k: 2, max_short_circuit: 2, seed: n as u64 + 7 });
+        let l_raw = gg.graph.laplacian();
+        let e_raw = eigh(&l_raw).map_err(|e| e.to_string())?;
+        let lam_max = e_raw.lambda_max().max(1e-9);
+        let mut l = l_raw.clone();
+        l.scale(1.0 / lam_max);
+        let e_l = eigh(&l).map_err(|e| e.to_string())?;
+        for t in table2_transforms() {
+            // (a) the scalar map is monotone non-decreasing on [0, 1].
+            let mut prev = f64::NEG_INFINITY;
+            for i in 0..=40 {
+                let y = t.scalar_map(i as f64 / 40.0);
+                if y < prev - 1e-9 {
+                    return Err(format!("{t}: scalar map decreases at x={}", i as f64 / 40.0));
+                }
+                prev = y;
+            }
+            // (b) the matrix spectrum is the elementwise image, in the same
+            // ascending order — i.e. no eigenvalue reordering.
+            let fl = t.build(&l).map_err(|e| e.to_string())?;
+            let e_f = eigh(&fl).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                let want = t.scalar_map(e_l.values[i]);
+                let got = e_f.values[i];
+                if (got - want).abs() > 1e-6 * (1.0 + want.abs()) {
+                    return Err(format!("{t}: λ_{i} mapped to {got}, want {want}"));
+                }
+            }
+            // (c) the bottom-k eigenvectors (k = #clusters) span the same
+            // subspace — the object spectral clustering consumes.
+            let err = subspace_error(&e_l.bottom_k(2), &e_f.bottom_k(2));
+            if err > 1e-6 {
+                return Err(format!("{t}: bottom-2 subspace err {err}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_transform_ordering_survives_reversal() {
+    // After eq 8's reversal M = λ*I − f(L), the *top*-k eigenvectors of M
+    // must be the bottom-k of L — order reversed, subspace intact.
+    check(104, 8, &SizeGen { lo: 8, hi: 24 }, |&n| {
+        let gg = cliques(&CliqueSpec { n, k: 2, max_short_circuit: 2, seed: n as u64 + 31 });
+        let l = gg.graph.laplacian();
+        let e_l = eigh(&l).map_err(|e| e.to_string())?;
+        for t in [TransformKind::NegExp, TransformKind::LimitNegExp { ell: 51 }] {
+            let sm = sped::transforms::build_solver_matrix(
+                &l,
+                t,
+                &sped::transforms::BuildOptions::default(),
+            )
+            .map_err(|e| e.to_string())?;
+            let e_m = eigh(&sm.m).map_err(|e| e.to_string())?;
+            let top2 = sped::linalg::DMat::from_fn(n, 2, |i, j| e_m.vectors[(i, n - 1 - j)]);
+            let err = subspace_error(&e_l.bottom_k(2), &top2);
+            if err > 1e-6 {
+                return Err(format!("{t}: reversed top-2 subspace err {err}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,119 @@
+//! API-compatible stand-in for the PJRT `xla` bindings.
+//!
+//! The production image ships real PJRT bindings (xla_extension); this
+//! offline checkout vendors only the type surface the `sped::runtime`
+//! module compiles against, so `cargo build --features xla` type-checks
+//! everywhere. Every entry point that would touch PJRT returns an error
+//! (or is unreachable because no client can be constructed). To execute
+//! AOT artifacts for real, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the actual bindings.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real bindings' crate error.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla (stub): {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error("PJRT runtime not linked in this build (vendored stub crate)".to_string())
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side tensor value.
+#[derive(Clone, Debug, Default)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module (text interchange).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
