@@ -41,6 +41,50 @@ fn full_native_pipeline_all_transforms() {
 }
 
 #[test]
+fn threaded_pipeline_reproduces_serial_clustering_end_to_end() {
+    // The user-facing contract of the `threads` knob: same graph, same
+    // seed, any worker count → the same convergence history, embedding,
+    // and hard clustering, bit for bit, while still recovering the
+    // ground-truth communities. At this graph size the knob genuinely
+    // parallelizes the transform build (matpow sharding); the solver's
+    // M·V product stays serial under DenseOp's small-product guard — its
+    // sharded determinism is pinned separately by the `linalg::par`
+    // worker-count tests, which include solver-shaped skinny products.
+    let gg = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 6 });
+    let mk = |threads| PipelineConfig {
+        k: 3,
+        transform: TransformKind::LimitNegExp { ell: 51 },
+        solver: "subspace".into(),
+        steps: 600,
+        eval_every: 20,
+        stop_error: 1e-8,
+        threads,
+        ..Default::default()
+    };
+    let serial = Pipeline::new(mk(1)).run(&gg.graph).unwrap();
+    let par = Pipeline::new(mk(8)).run(&gg.graph).unwrap();
+    assert!(serial
+        .embedding
+        .data()
+        .iter()
+        .zip(par.embedding.data().iter())
+        .all(|(a, b)| a.to_bits() == b.to_bits()));
+    assert_eq!(serial.lambda_star.to_bits(), par.lambda_star.to_bits());
+    assert_eq!(serial.history.points.len(), par.history.points.len());
+    for (a, b) in serial.history.points.iter().zip(par.history.points.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.subspace_error.to_bits(), b.subspace_error.to_bits());
+        assert_eq!(a.streak, b.streak);
+    }
+    assert_eq!(
+        serial.clustering.as_ref().unwrap().assignments,
+        par.clustering.as_ref().unwrap().assignments
+    );
+    let ari = adjusted_rand_index(&par.clustering.as_ref().unwrap().assignments, &gg.labels);
+    assert!(ari > 0.9, "ARI {ari}");
+}
+
+#[test]
 fn pipeline_on_mdp_pvfs() {
     let world = GridWorld::three_rooms(ThreeRoomSpec { s: 1, h: 10 }).unwrap();
     let cfg = PipelineConfig {

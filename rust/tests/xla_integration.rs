@@ -4,7 +4,10 @@
 //! converge end-to-end.
 //!
 //! Requires `make artifacts` (skipped with a notice when absent, so plain
-//! `cargo test` works on a fresh checkout).
+//! `cargo test` works on a fresh checkout) **and** a build with the `xla`
+//! cargo feature: without it `sped::runtime` is the API-identical offline
+//! stub, whose `Runtime::load_dir` reports the missing feature instead of
+//! executing artifacts.
 
 use sped::graph::gen::{cliques, CliqueSpec};
 use sped::linalg::dmat::DMat;
@@ -14,6 +17,10 @@ use sped::transforms::TransformKind;
 use sped::util::rng::Rng;
 
 fn artifacts_dir() -> Option<String> {
+    if !cfg!(feature = "xla") {
+        eprintln!("[skip] built without the `xla` feature — rebuild with `--features xla` to run XLA integration tests");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.cfg").exists() {
         Some(dir.to_string_lossy().into_owned())
