@@ -6,6 +6,11 @@
 //!   bitwise-equality check against the serial path), symmetric eigh, MGS,
 //!   solver steps (Oja / µ-EG), transform builders (Horner vs matpow),
 //!   k-means, walk sampling.
+//! * Sparse vs dense operator crossover: the `OpMode::MatrixFree` path
+//!   (CSR SpMM solver steps, no materialized `p(L)`) against the dense
+//!   build + dense-step path on clique workloads, n ∈ {256, 1024, 4096} ×
+//!   ℓ ∈ {15, 251} (shrunk under `SPED_BENCH_FAST=1`), with results also
+//!   written to `BENCH_sparse_vs_dense.json` at the repo root.
 //! * XLA path (when artifacts exist): chunked solver steps, poly build,
 //!   matpow, matvec round-trip — including the PJRT call overhead.
 //!
@@ -17,9 +22,9 @@ use sped::graph::gen::{cliques, CliqueSpec};
 use sped::linalg::dmat::DMat;
 use sped::linalg::matmul::{matmul, matmul_naive};
 use sped::linalg::par::{matmul_par, poly_horner_par};
-use sped::solvers::{EigenSolver, MatVecOp};
-use sped::transforms::TransformKind;
-use sped::util::bench::{fast_mode, human_time, BenchSuite};
+use sped::solvers::{DenseOp, EigenSolver, MatVecOp, SparsePolyOp};
+use sped::transforms::{build_solver_matrix, BuildOptions, TransformKind};
+use sped::util::bench::{fast_mode, human, human_time, BenchSuite, JsonVal};
 use sped::util::rng::Rng;
 
 fn random_mat(seed: u64, r: usize, c: usize) -> DMat {
@@ -57,6 +62,104 @@ fn bitwise_eq(a: &DMat, b: &DMat) -> bool {
     a.rows() == b.rows()
         && a.cols() == b.cols()
         && a.data().iter().zip(b.data().iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// One-shot wall time of `f` (builds that are too expensive to repeat).
+fn timed<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t = std::time::Instant::now();
+    let out = f();
+    (t.elapsed().as_secs_f64(), out)
+}
+
+/// Sparse-vs-dense operator crossover (the `OpMode::MatrixFree` acceptance
+/// measurement): for each (n, ℓ) on the §5.4 clique workload, time the
+/// dense path (materialize `M = λ*I − p(L)`, then `M·V` per step) against
+/// the matrix-free path (CSR build ≈ free, `ℓ` SpMMs per step), and emit
+/// `BENCH_sparse_vs_dense.json` at the repo root for CI trend tracking.
+///
+/// `full_grid` adds the n = 4096 column, whose *dense* builds alone are
+/// ~10¹² multiply-adds — only enabled when the group is selected by an
+/// explicit filter (`cargo bench --bench perf_hotpath -- sparse-vs-dense`),
+/// never as a side effect of an unfiltered full-suite run.
+fn sparse_vs_dense_crossover(suite: &mut BenchSuite, threads: usize, full_grid: bool) {
+    let ns: &[usize] = if fast_mode() {
+        &[256, 1024]
+    } else if full_grid {
+        &[256, 1024, 4096]
+    } else {
+        &[256, 1024]
+    };
+    let ells: &[usize] = if fast_mode() { &[15] } else { &[15, 251] };
+    let k = 8;
+    let step_reps = if fast_mode() { 3 } else { 10 };
+    // Steps a real solve takes before early stop on this workload — the
+    // horizon over which the dense build must amortize.
+    const AMORTIZE_STEPS: f64 = 100.0;
+    let mut rows: Vec<Vec<(String, JsonVal)>> = Vec::new();
+    for &n in ns {
+        // 16-node cliques: a genuinely sparse community graph (nnz/n² ≈ 1%
+        // at n=4096) rather than the dense 4-clique variant.
+        let gg = cliques(&CliqueSpec { n, k: (n / 16).max(2), max_short_circuit: 2, seed: 42 });
+        let l = gg.graph.laplacian();
+        let v = sped::solvers::random_init(n, k, 7);
+        for &ell in ells {
+            let kind = TransformKind::LimitNegExp { ell };
+            let opts = BuildOptions { threads, ..BuildOptions::default() };
+            let (dense_build_s, sm) = timed(|| build_solver_matrix(&l, kind, &opts).unwrap());
+            let mut dop = DenseOp { m: sm.m, threads };
+            let (dense_step_s, dense_out) = best_of(step_reps, || dop.apply(&v));
+            let (sparse_build_s, mut sop) =
+                timed(|| SparsePolyOp::from_graph(&gg.graph, kind, &opts).unwrap());
+            let (sparse_step_s, sparse_out) = best_of(step_reps, || sop.apply(&v));
+            // Cross-path sanity: the two operators agree (tolerance, not
+            // bitwise — different association of the same polynomial).
+            let diff = (&dense_out - &sparse_out).max_abs();
+            assert!(
+                diff < 1e-6 * (1.0 + dense_out.max_abs()),
+                "sparse/dense operator divergence {diff} at n={n}, ell={ell}"
+            );
+            let nnz = sop.nnz();
+            let dense_total = dense_build_s + AMORTIZE_STEPS * dense_step_s;
+            let sparse_total = sparse_build_s + AMORTIZE_STEPS * sparse_step_s;
+            suite.report(&format!(
+                "sparse-vs-dense n={n} ell={ell} nnz={} ({}): dense build {} + step {} | sparse build {} + step {} | {:.2}x total @{} steps",
+                nnz,
+                human(nnz as f64 / (n * n) as f64 * 100.0, "% fill"),
+                human_time(dense_build_s),
+                human_time(dense_step_s),
+                human_time(sparse_build_s),
+                human_time(sparse_step_s),
+                dense_total / sparse_total.max(1e-12),
+                AMORTIZE_STEPS as usize,
+            ));
+            rows.push(vec![
+                ("n".into(), JsonVal::Int(n as u64)),
+                ("ell".into(), JsonVal::Int(ell as u64)),
+                ("k".into(), JsonVal::Int(k as u64)),
+                ("nnz".into(), JsonVal::Int(nnz as u64)),
+                ("threads".into(), JsonVal::Int(threads as u64)),
+                ("workload".into(), JsonVal::Str("cliques16".into())),
+                ("dense_build_s".into(), JsonVal::Num(dense_build_s)),
+                ("dense_step_s".into(), JsonVal::Num(dense_step_s)),
+                ("sparse_build_s".into(), JsonVal::Num(sparse_build_s)),
+                ("sparse_step_s".into(), JsonVal::Num(sparse_step_s)),
+                (
+                    "step_speedup".into(),
+                    JsonVal::Num(dense_step_s / sparse_step_s.max(1e-12)),
+                ),
+                (
+                    "total_speedup_100_steps".into(),
+                    JsonVal::Num(dense_total / sparse_total.max(1e-12)),
+                ),
+                ("fast_mode".into(), JsonVal::Int(u64::from(fast_mode()))),
+            ]);
+        }
+    }
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_sparse_vs_dense.json");
+    suite.write_json(&path, &rows).expect("write BENCH_sparse_vs_dense.json");
+    suite.report(&format!("wrote {}", path.display()));
 }
 
 fn main() {
@@ -182,6 +285,22 @@ fn main() {
         suite.bench("transform build: exact negexp (full eigh)", || {
             std::hint::black_box(TransformKind::NegExp.build(&l).unwrap());
         });
+    }
+
+    // ---- sparse vs dense operator crossover (OpMode::MatrixFree) ----
+    // Honors the bench-name filter like every other case (CI selects it
+    // with the literal filter "sparse-vs-dense"). The heavy n=4096 column
+    // runs only under that explicit filter — neither unrelated filters nor
+    // a plain unfiltered full-suite run should pay for ~10¹²-FLOP dense
+    // builds incidentally.
+    let case = "sparse-vs-dense crossover";
+    if suite.selected(case) {
+        let explicitly_selected = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'))
+            .map(|f| case.contains(f.as_str()))
+            .unwrap_or(false);
+        sparse_vs_dense_crossover(&mut suite, threads, explicitly_selected);
     }
 
     // ---- L3: clustering + walks ----

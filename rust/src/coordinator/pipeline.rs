@@ -15,8 +15,8 @@ use crate::linalg::dmat::DMat;
 use crate::linalg::eigh;
 use crate::linalg::metrics::ConvergenceHistory;
 use crate::runtime::{pad_matrix, pad_rows, Runtime, XlaChunkRunner};
-use crate::solvers::{solver_by_name, DenseOp, RunConfig};
-use crate::transforms::{build_solver_matrix, BuildOptions, TransformKind};
+use crate::solvers::{solver_by_name, DenseOp, MatVecOp, RunConfig, SparsePolyOp};
+use crate::transforms::{build_solver_matrix, BuildOptions, OpMode, TransformKind};
 use anyhow::{bail, Context, Result};
 use std::time::Instant;
 
@@ -55,6 +55,18 @@ pub struct PipelineConfig {
     /// the solver's `M·V`). Results are bitwise identical for every value
     /// (`linalg::par` determinism contract); `1` = serial.
     pub threads: usize,
+    /// How the native solver operator is realized: materialized dense
+    /// `n×n`, or matrix-free sparse (`O(ℓ·nnz·k)` per step, no `n×n`
+    /// allocation after graph load).
+    pub op_mode: OpMode,
+    /// Compute the exact bottom-k eigenvectors (an `O(n³)` dense `eigh`)
+    /// as the metric oracle. **Default true** to preserve the historical
+    /// output; set false when only cluster assignments are wanted — for
+    /// n ≳ 2000 the oracle dominates wall-time, and with
+    /// `OpMode::MatrixFree` disabling it makes the pipeline dense-free end
+    /// to end. When false, the convergence history is empty and early stop
+    /// is unavailable (the solver runs exactly `steps` steps).
+    pub ground_truth: bool,
 }
 
 impl Default for PipelineConfig {
@@ -73,6 +85,8 @@ impl Default for PipelineConfig {
             seed: 0,
             do_cluster: true,
             threads: 1,
+            op_mode: OpMode::DenseMaterialized,
+            ground_truth: true,
         }
     }
 }
@@ -116,63 +130,106 @@ impl Pipeline {
         if cfg.k == 0 || cfg.k > n {
             bail!("k={} out of range for n={n}", cfg.k);
         }
-        let mut timings = StageTimings::default();
-        let l = graph.laplacian();
-
-        // Ground truth for metrics (the oracle; the thing SPED avoids
-        // needing *during* iteration — but the experiment protocol of §5.2
-        // measures against it).
-        let t0 = Instant::now();
-        let e = eigh(&l).context("ground-truth eigendecomposition")?;
-        let v_star = e.bottom_k(cfg.k);
-        let values = e.values[..cfg.k].to_vec();
-        timings.ground_truth = t0.elapsed().as_secs_f64();
+        let timings = StageTimings::default();
 
         match &cfg.backend {
-            Backend::Native => self.run_native(graph, &l, &v_star, &values, timings),
+            Backend::Native => self.run_native(graph, timings),
             Backend::Xla { artifacts_dir } => {
+                if cfg.op_mode == OpMode::MatrixFree {
+                    bail!("matrix-free op mode requires the native backend");
+                }
+                if !cfg.ground_truth {
+                    // The XLA chunk protocol consumes the oracle bundle.
+                    bail!("ground_truth=false requires the native backend");
+                }
+                let mut timings = timings;
+                let l = graph.laplacian();
+                // Ground truth for metrics (the oracle; the thing SPED
+                // avoids needing *during* iteration — but the experiment
+                // protocol of §5.2 measures against it).
+                let t0 = Instant::now();
+                let e = eigh(&l).context("ground-truth eigendecomposition")?;
+                let v_star = e.bottom_k(cfg.k);
+                let values = e.values[..cfg.k].to_vec();
+                timings.ground_truth = t0.elapsed().as_secs_f64();
                 let rt = Runtime::load_dir(artifacts_dir)?;
                 self.run_xla(&rt, graph, &l, &v_star, &values, timings)
             }
         }
     }
 
-    fn run_native(
-        &self,
-        graph: &Graph,
-        l: &DMat,
-        v_star: &DMat,
-        values: &[f64],
-        mut timings: StageTimings,
-    ) -> Result<PipelineOutput> {
+    fn run_native(&self, graph: &Graph, mut timings: StageTimings) -> Result<PipelineOutput> {
         let cfg = &self.cfg;
-        let t0 = Instant::now();
         // The pipeline-level knob overrides the build options' default so a
         // single `threads` setting drives both the transform build and the
         // solver's M·V products.
         let mut build = cfg.build;
         build.threads = cfg.threads.max(build.threads).max(1);
-        let sm = build_solver_matrix(l, cfg.transform, &build)?;
+
+        // The dense Laplacian is needed by the ground-truth oracle and the
+        // dense operator path; the matrix-free path without metrics never
+        // materializes it (or any other n×n buffer).
+        let need_dense_l = cfg.ground_truth || cfg.op_mode == OpMode::DenseMaterialized;
+        let l: Option<DMat> = if need_dense_l { Some(graph.laplacian()) } else { None };
+
+        // Ground truth for metrics (the oracle; the thing SPED avoids
+        // needing *during* iteration — the experiment protocol of §5.2
+        // measures against it, but callers who only want assignments can
+        // skip the O(n³) eigh entirely).
+        let t0 = Instant::now();
+        let ground: Option<(DMat, Vec<f64>)> = if cfg.ground_truth {
+            let e = eigh(l.as_ref().unwrap()).context("ground-truth eigendecomposition")?;
+            timings.ground_truth = t0.elapsed().as_secs_f64();
+            Some((e.bottom_k(cfg.k), e.values[..cfg.k].to_vec()))
+        } else {
+            None
+        };
+
+        let t0 = Instant::now();
+        let (mut op, lambda_star): (Box<dyn MatVecOp>, f64) = match cfg.op_mode {
+            OpMode::DenseMaterialized => {
+                let sm = build_solver_matrix(l.as_ref().unwrap(), cfg.transform, &build)?;
+                let lambda_star = sm.lambda_star;
+                let op = Box::new(DenseOp { m: sm.m, threads: build.threads }) as Box<dyn MatVecOp>;
+                (op, lambda_star)
+            }
+            OpMode::MatrixFree => {
+                let sp = SparsePolyOp::from_graph(graph, cfg.transform, &build)?;
+                let lambda_star = sp.lambda_star;
+                (Box::new(sp) as Box<dyn MatVecOp>, lambda_star)
+            }
+        };
         timings.transform_build = t0.elapsed().as_secs_f64();
 
         let t0 = Instant::now();
         let mut solver = solver_by_name(&cfg.solver, cfg.eta)?;
-        let mut op = DenseOp { m: sm.m, threads: build.threads };
-        let run_cfg = RunConfig {
-            steps: cfg.steps,
-            eval_every: cfg.eval_every,
-            streak_eps: cfg.streak_eps,
-            stop_error: cfg.stop_error,
-            seed: cfg.seed,
-            // Degeneracy-aware streak: symmetric workloads (3-room MDP)
-            // have exactly tied eigenvalues.
-            group_values: Some(values.to_vec()),
+        let (mut history, embedding) = match &ground {
+            Some((v_star, values)) => {
+                let run_cfg = RunConfig {
+                    steps: cfg.steps,
+                    eval_every: cfg.eval_every,
+                    streak_eps: cfg.streak_eps,
+                    stop_error: cfg.stop_error,
+                    seed: cfg.seed,
+                    // Degeneracy-aware streak: symmetric workloads (3-room
+                    // MDP) have exactly tied eigenvalues.
+                    group_values: Some(values.clone()),
+                };
+                crate::solvers::run_convergence_full(solver.as_mut(), op.as_mut(), v_star, &run_cfg)
+            }
+            None => {
+                let v = crate::solvers::run_steps(
+                    solver.as_mut(),
+                    op.as_mut(),
+                    cfg.k,
+                    cfg.steps,
+                    cfg.seed,
+                );
+                (ConvergenceHistory::new(""), v)
+            }
         };
-        let (mut history, embedding) =
-            crate::solvers::run_convergence_full(solver.as_mut(), &mut op, v_star, &run_cfg);
         history.label = format!("{}:{}", cfg.solver, cfg.transform.name());
         timings.solve = t0.elapsed().as_secs_f64();
-        let _ = graph;
 
         let t0 = Instant::now();
         let clustering = if cfg.do_cluster {
@@ -182,7 +239,7 @@ impl Pipeline {
         };
         timings.cluster = t0.elapsed().as_secs_f64();
 
-        Ok(PipelineOutput { history, embedding, clustering, timings, lambda_star: sm.lambda_star })
+        Ok(PipelineOutput { history, embedding, clustering, timings, lambda_star })
     }
 
     fn run_xla(
@@ -412,6 +469,57 @@ mod tests {
             assert_eq!(a.streak, b.streak);
         }
         assert_eq!(serial.lambda_star.to_bits(), par.lambda_star.to_bits());
+    }
+
+    #[test]
+    fn matrix_free_mode_skips_oracle_and_matches_dense_mode() {
+        let gg = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 9 });
+        let mk = |op_mode, ground_truth| PipelineConfig {
+            k: 3,
+            transform: TransformKind::LimitNegExp { ell: 51 },
+            solver: "subspace".into(),
+            steps: 300,
+            eval_every: 20,
+            stop_error: 0.0, // fixed step count → comparable endpoints
+            op_mode,
+            ground_truth,
+            ..Default::default()
+        };
+        let dense = Pipeline::new(mk(OpMode::DenseMaterialized, true)).run(&gg.graph).unwrap();
+        let sparse = Pipeline::new(mk(OpMode::MatrixFree, false)).run(&gg.graph).unwrap();
+        // Dense-free run: no oracle timing, no history points.
+        assert_eq!(sparse.timings.ground_truth, 0.0);
+        assert!(sparse.history.points.is_empty());
+        assert!(!dense.history.points.is_empty());
+        // Same λ* (negexp family: exactly 0) and near-identical embeddings.
+        assert_eq!(sparse.lambda_star, 0.0);
+        assert_eq!(dense.lambda_star, 0.0);
+        let err = crate::linalg::metrics::subspace_error(&dense.embedding, &sparse.embedding);
+        assert!(err < 1e-6, "dense vs matrix-free subspace err {err}");
+        // And identical hard clusters.
+        assert_eq!(
+            dense.clustering.as_ref().unwrap().assignments,
+            sparse.clustering.as_ref().unwrap().assignments
+        );
+    }
+
+    #[test]
+    fn matrix_free_rejects_exact_transforms_and_xla_backend() {
+        let gg = cliques(&CliqueSpec { n: 12, k: 2, max_short_circuit: 1, seed: 2 });
+        let cfg = PipelineConfig {
+            k: 2,
+            transform: TransformKind::NegExp,
+            op_mode: OpMode::MatrixFree,
+            ..Default::default()
+        };
+        assert!(Pipeline::new(cfg).run(&gg.graph).is_err(), "exact transform must be rejected");
+        let cfg = PipelineConfig {
+            k: 2,
+            op_mode: OpMode::MatrixFree,
+            backend: Backend::Xla { artifacts_dir: "artifacts".into() },
+            ..Default::default()
+        };
+        assert!(Pipeline::new(cfg).run(&gg.graph).is_err(), "matrix-free is native-only");
     }
 
     #[test]

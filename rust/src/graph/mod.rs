@@ -5,6 +5,7 @@ pub mod gen;
 pub mod incidence;
 pub mod io;
 
+use crate::linalg::sparse::CsrMat;
 use crate::linalg::DMat;
 use anyhow::{bail, Result};
 
@@ -130,6 +131,82 @@ impl Graph {
             l[(v, u)] -= w;
         }
         l
+    }
+
+    /// Shared CSR Laplacian assembly: one row per node, columns strictly
+    /// ascending, the diagonal always structurally present (isolated nodes
+    /// store an explicit `0.0`) so spectral shifts can edit it in place.
+    ///
+    /// This scaffold carries the bitwise-parity invariant with the dense
+    /// builders: `neighbors(v)` is ascending (ids < v first, then ids > v —
+    /// the incident-edge order the dense build accumulates in), and the
+    /// diagonal is spliced in at its sorted position. `diag(v)` and
+    /// `offdiag(v, u, w)` supply the entry values.
+    fn assemble_laplacian_csr(
+        &self,
+        diag: impl Fn(usize) -> f64,
+        offdiag: impl Fn(usize, usize, f64) -> f64,
+    ) -> CsrMat {
+        let n = self.n;
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices: Vec<u32> = Vec::with_capacity(self.neighbors.len() + n);
+        let mut values: Vec<f64> = Vec::with_capacity(self.neighbors.len() + n);
+        indptr.push(0);
+        for v in 0..n {
+            let mut placed_diag = false;
+            for &(u, w) in self.neighbors(v) {
+                if !placed_diag && (u as usize) > v {
+                    indices.push(v as u32);
+                    values.push(diag(v));
+                    placed_diag = true;
+                }
+                indices.push(u);
+                values.push(offdiag(v, u as usize, w));
+            }
+            if !placed_diag {
+                indices.push(v as u32);
+                values.push(diag(v));
+            }
+            indptr.push(indices.len());
+        }
+        CsrMat::new(n, n, indptr, indices, values)
+    }
+
+    /// Sparse (CSR) graph Laplacian `L = D − A` — the matrix-free
+    /// counterpart of [`Self::laplacian`]: `O(n + nnz)` memory instead of
+    /// `O(n²)`, with entries bitwise identical to the dense build, which is
+    /// what makes [`crate::linalg::sparse::spmm`] bitwise-equal to the
+    /// dense product.
+    pub fn laplacian_csr(&self) -> CsrMat {
+        // `0.0 - w`, not `-w`: the dense build subtracts from a zeroed
+        // matrix, and for a (legal) zero-weight edge `-0.0 != +0.0` bitwise.
+        self.assemble_laplacian_csr(|v| self.weighted_degree(v), |_, _, w| 0.0 - w)
+    }
+
+    /// Sparse (CSR) *normalized* Laplacian `D^{-1/2} L D^{-1/2}` — entries
+    /// bitwise identical to [`Self::normalized_laplacian`]; diagonal always
+    /// structurally present (isolated nodes store `0.0`).
+    pub fn normalized_laplacian_csr(&self) -> CsrMat {
+        let d: Vec<f64> = (0..self.n)
+            .map(|v| {
+                let wd = self.weighted_degree(v);
+                if wd > 0.0 {
+                    1.0 / wd.sqrt()
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        self.assemble_laplacian_csr(
+            |v| if self.weighted_degree(v) > 0.0 { 1.0 } else { 0.0 },
+            |v, u, w| {
+                // Multiply in canonical (smaller-endpoint-first) order and
+                // subtract from zero — the exact f64 operation sequence of
+                // the dense build, so the representations agree bitwise.
+                let (lo, hi) = if u < v { (u, v) } else { (v, u) };
+                0.0 - w * d[lo] * d[hi]
+            },
+        )
     }
 
     /// Dense *normalized* Laplacian `D^{-1/2} L D^{-1/2}` (isolated nodes
@@ -339,6 +416,59 @@ mod tests {
         let e = crate::linalg::eigh(&nl).unwrap();
         assert!(e.values[0] > -1e-10);
         assert!(e.lambda_max() <= 2.0 + 1e-10);
+    }
+
+    #[test]
+    fn csr_laplacians_bitwise_match_dense() {
+        // Both Laplacian variants, with weights, short circuits, and an
+        // isolated node (n=7 below only wires 0..=5).
+        let weighted = Graph::from_edges(
+            7,
+            &[(0, 1, 0.5), (1, 2, 2.0), (0, 2, 1.25), (3, 4, 0.75), (4, 5, 1.0)],
+        )
+        .unwrap();
+        let generated =
+            gen::cliques(&gen::CliqueSpec { n: 30, k: 3, max_short_circuit: 5, seed: 2 }).graph;
+        // Duplicate edges summing to exactly 0.0: the dense build writes
+        // +0.0 (0.0 − 0.0), and the CSR build must too, not −0.0.
+        let zero_weight =
+            Graph::from_edges(3, &[(0, 1, 1.0), (0, 1, -1.0), (1, 2, 0.5)]).unwrap();
+        for g in [&weighted, &generated, &zero_weight] {
+            for (dense, sparse) in [
+                (g.laplacian(), g.laplacian_csr()),
+                (g.normalized_laplacian(), g.normalized_laplacian_csr()),
+            ] {
+                let densified = sparse.to_dense();
+                let identical = dense
+                    .data()
+                    .iter()
+                    .zip(densified.data().iter())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(identical, "CSR/dense Laplacian mismatch");
+                // Diagonal is structurally present in every row.
+                for i in 0..g.num_nodes() {
+                    let (cols, _) = sparse.row(i);
+                    assert!(cols.contains(&(i as u32)), "row {i} missing diagonal");
+                }
+            }
+        }
+        // Isolated node 6: an explicit structural zero on the diagonal.
+        let lcsr = weighted.laplacian_csr();
+        let (cols, vals) = lcsr.row(6);
+        assert_eq!(cols, &[6]);
+        assert_eq!(vals, &[0.0]);
+    }
+
+    #[test]
+    fn csr_laplacian_quadratic_form_consistency() {
+        // vᵀ(Lv) through the sparse product equals the edge-sum form (eq 1).
+        let g = gen::cliques(&gen::CliqueSpec { n: 24, k: 2, max_short_circuit: 3, seed: 8 }).graph;
+        let l = g.laplacian_csr();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let v: Vec<f64> = (0..24).map(|_| rng.normal()).collect();
+        let lv = crate::linalg::sparse::spmv(&l, &v, 1);
+        let quad: f64 = v.iter().zip(lv.iter()).map(|(a, b)| a * b).sum();
+        assert!((quad - g.quadratic_form(&v)).abs() < 1e-9);
     }
 
     #[test]

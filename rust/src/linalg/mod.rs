@@ -19,6 +19,9 @@
 //! * [`par`] — row-sharded parallel execution of the dense hot paths
 //!   (matmul, Horner polynomial apply, matpow, power iteration), bitwise
 //!   identical to the serial kernels for every worker count.
+//! * [`sparse`] — CSR matrices and the matrix-free kernels (row-sharded
+//!   SpMM / SpMV / λ_max power iteration) behind `OpMode::MatrixFree`,
+//!   with the same determinism contract as [`par`].
 
 pub mod dmat;
 pub mod eigh;
@@ -27,6 +30,7 @@ pub mod matmul;
 pub mod metrics;
 pub mod par;
 pub mod qr;
+pub mod sparse;
 
 pub use dmat::DMat;
 pub use eigh::{eigh, Eigh};

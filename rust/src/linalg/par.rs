@@ -24,9 +24,42 @@ use super::dmat::DMat;
 use super::matmul::{gemv_row_range, matmul_row_range};
 use crate::util::pool::parallel_shards;
 
+/// Below this many multiply-adds a row-sharded dispatch runs serial: the
+/// scoped spawn/join overhead of a per-call shard rivals the FLOPs. Shared
+/// by every operator call site through [`effective_threads`] so the latency
+/// heuristic cannot drift between them.
+pub const SERIAL_WORK_THRESHOLD: usize = 1_000_000;
+
+/// The one work-size guard for "is this product worth sharding": returns
+/// `1` (serial) when `work` (multiply-add count) is below
+/// [`SERIAL_WORK_THRESHOLD`], else `threads`. Output is bitwise identical
+/// either way (the determinism contract), so this is purely a latency
+/// decision — used by `DenseOp::apply`, `SparsePolyOp::apply`, and
+/// `SeriesForm::eval_matrix_threads`.
+pub fn effective_threads(work: usize, threads: usize) -> usize {
+    if work < SERIAL_WORK_THRESHOLD {
+        1
+    } else {
+        threads.max(1)
+    }
+}
+
+/// Starting offset of each shard (prefix sums of the shard lengths), so a
+/// worker knows which row range it owns. Shared by every row-sharded
+/// dispatch site (dense and sparse).
+pub(crate) fn shard_starts(shards: &[usize]) -> Vec<usize> {
+    let mut starts = Vec::with_capacity(shards.len());
+    let mut acc = 0usize;
+    for &len in shards {
+        starts.push(acc);
+        acc += len;
+    }
+    starts
+}
+
 /// Split `rows` into at most `threads` contiguous shards (first shards get
 /// the remainder), returned as per-shard row counts.
-fn row_shards(rows: usize, threads: usize) -> Vec<usize> {
+pub(crate) fn row_shards(rows: usize, threads: usize) -> Vec<usize> {
     let threads = threads.max(1).min(rows.max(1));
     let base = rows / threads;
     let extra = rows % threads;
@@ -56,13 +89,7 @@ pub fn matmul_into_par(a: &DMat, b: &DMat, c: &mut DMat, threads: usize) {
         matmul_row_range(a, b, c.data_mut(), 0, m);
         return;
     }
-    // Row offsets per shard (prefix sums), so each worker knows its range.
-    let mut starts = Vec::with_capacity(shards.len());
-    let mut acc = 0usize;
-    for &len in &shards {
-        starts.push(acc);
-        acc += len;
-    }
+    let starts = shard_starts(&shards);
     let elem_lens: Vec<usize> = shards.iter().map(|&len| len * n).collect();
     parallel_shards(c.data_mut(), &elem_lens, |idx, chunk| {
         let r0 = starts[idx];
@@ -81,12 +108,7 @@ pub fn gemv_par(a: &DMat, x: &[f64], threads: usize) -> Vec<f64> {
         gemv_row_range(a, x, &mut y, 0, m);
         return y;
     }
-    let mut starts = Vec::with_capacity(shards.len());
-    let mut acc = 0usize;
-    for &len in &shards {
-        starts.push(acc);
-        acc += len;
-    }
+    let starts = shard_starts(&shards);
     parallel_shards(&mut y, &shards, |idx, chunk| {
         let r0 = starts[idx];
         gemv_row_range(a, x, chunk, r0, r0 + chunk.len());
@@ -144,21 +166,28 @@ pub fn matpow_par(a: &DMat, p: u64, threads: usize) -> DMat {
     acc.unwrap()
 }
 
-/// Largest-eigenvalue estimate by power iteration with the matrix–vector
-/// product row-sharded. Bitwise identical to
-/// [`super::funcs::power_lambda_max`].
-pub fn power_lambda_max_par(a: &DMat, iters: usize, threads: usize) -> f64 {
-    let n = a.rows();
+/// The one power-iteration recurrence, parameterized by the matrix–vector
+/// product. The dense ([`power_lambda_max_par`]) and sparse
+/// (`sparse::power_lambda_max_csr`) λ_max estimates both dispatch here, so
+/// their start vector and recurrence can never drift apart — which is what
+/// keeps `--op dense` and `--op sparse` operator builds (λ*, pre-scale)
+/// agreeing on the same graph.
+pub(crate) fn power_iteration_with(
+    n: usize,
+    iters: usize,
+    matvec: impl Fn(&[f64]) -> Vec<f64>,
+) -> f64 {
     if n == 0 {
         return 0.0;
     }
+    // Deterministic start vector salted away from any single eigenvector.
     let mut v: Vec<f64> = (0..n)
         .map(|i| 1.0 + 0.01 * ((i * 2654435761 % 97) as f64 / 97.0))
         .collect();
     super::dmat::normalize(&mut v);
     let mut lambda = 0.0;
     for _ in 0..iters {
-        let mut w = gemv_par(a, &v, threads);
+        let mut w = matvec(&v);
         lambda = super::dmat::dot(&v, &w);
         if super::dmat::normalize(&mut w) == 0.0 {
             return 0.0;
@@ -166,6 +195,13 @@ pub fn power_lambda_max_par(a: &DMat, iters: usize, threads: usize) -> f64 {
         v = w;
     }
     lambda.max(0.0)
+}
+
+/// Largest-eigenvalue estimate by power iteration with the matrix–vector
+/// product row-sharded. Bitwise identical to
+/// [`super::funcs::power_lambda_max`].
+pub fn power_lambda_max_par(a: &DMat, iters: usize, threads: usize) -> f64 {
+    power_iteration_with(a.rows(), iters, |v| gemv_par(a, v, threads))
 }
 
 #[cfg(test)]
@@ -269,6 +305,14 @@ mod tests {
             let lam_p = power_lambda_max_par(&g, 60, workers);
             assert_eq!(lam_s.to_bits(), lam_p.to_bits(), "{workers} workers");
         }
+    }
+
+    #[test]
+    fn effective_threads_guard() {
+        assert_eq!(effective_threads(0, 8), 1);
+        assert_eq!(effective_threads(SERIAL_WORK_THRESHOLD - 1, 8), 1);
+        assert_eq!(effective_threads(SERIAL_WORK_THRESHOLD, 8), 8);
+        assert_eq!(effective_threads(usize::MAX, 0), 1, "threads floor is 1");
     }
 
     #[test]

@@ -1,0 +1,459 @@
+//! Sparse (CSR) matrices and the matrix-free operator kernels.
+//!
+//! The paper's premise (§4) is that the dilated operator `M = λ*I − p(L)`
+//! never needs to exist as a dense matrix: iterative solvers only consume
+//! products `M·V`, and each such product is `deg(p)` sparse multiplies
+//! against the Laplacian — `O(ℓ·nnz·k)` work instead of the `O(ℓ·n³)`
+//! dense build plus `O(n²·k)` per step. This module supplies the substrate:
+//!
+//! * [`CsrMat`] — compressed sparse rows, columns sorted strictly
+//!   ascending within each row (built from [`crate::graph::Graph`] via
+//!   `laplacian_csr` / `normalized_laplacian_csr`, which reuse the
+//!   already-sorted CSR adjacency arrays).
+//! * [`spmm`] — sparse × dense-bundle multiply, row-sharded across
+//!   `util::pool` workers.
+//! * [`spmv`], [`power_lambda_max_csr`] — sparse matrix–vector product and
+//!   the λ_max power iteration on top of it (the dense-free replacement for
+//!   `linalg::funcs::power_lambda_max` in operator construction).
+//!
+//! ## Determinism contract
+//!
+//! Same contract as [`super::par`]: output is **bitwise identical** to the
+//! serial path for every worker count, because shards partition output rows
+//! and each row is an independent reduction executed by the one shared
+//! row-range kernel.
+//!
+//! ## Bitwise compatibility with the dense kernels
+//!
+//! [`spmm`] is additionally bitwise identical to `matmul(A_dense, B)` when
+//! `A_dense` is the densification of the CSR matrix. Both kernels reduce
+//! each output element over the contribution index `k` in ascending order
+//! and skip zero-valued `A` entries, so the floating-point operation
+//! sequence per output element is the same — the property the
+//! generator-sweep tests in `tests/properties.rs` pin down.
+
+use super::dmat::DMat;
+use super::par::{row_shards, shard_starts};
+use crate::util::pool::parallel_shards;
+
+/// A sparse matrix in compressed-sparse-row form.
+///
+/// Invariants (validated on construction): `indptr` has `rows + 1`
+/// monotonically non-decreasing entries ending at `nnz`; within each row
+/// the column `indices` are strictly increasing and `< cols`. Values may be
+/// zero (structural entries such as an isolated node's Laplacian diagonal
+/// are kept so in-place diagonal edits stay O(1) per row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMat {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CsrMat {
+    /// Build from raw CSR arrays, validating the invariants.
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> CsrMat {
+        assert_eq!(indptr.len(), rows + 1, "indptr length");
+        assert_eq!(indptr[0], 0, "indptr must start at 0");
+        assert_eq!(*indptr.last().unwrap(), indices.len(), "indptr must end at nnz");
+        assert_eq!(indices.len(), values.len(), "indices/values length mismatch");
+        for r in 0..rows {
+            assert!(indptr[r] <= indptr[r + 1], "indptr not monotone at row {r}");
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            for w in row.windows(2) {
+                assert!(w[0] < w[1], "row {r}: columns not strictly increasing");
+            }
+            if let Some(&last) = row.last() {
+                assert!((last as usize) < cols, "row {r}: column {last} out of range");
+            }
+        }
+        CsrMat { rows, cols, indptr, indices, values }
+    }
+
+    /// Build from `(row, col, value)` triplets; duplicates have their
+    /// values summed (in triplet-sorted order), rows come out sorted.
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> CsrMat {
+        let mut t: Vec<(usize, usize, f64)> = triplets.to_vec();
+        t.sort_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices: Vec<u32> = Vec::with_capacity(t.len());
+        let mut values: Vec<f64> = Vec::with_capacity(t.len());
+        let mut entries: Vec<(usize, usize, f64)> = Vec::with_capacity(t.len());
+        for (r, c, v) in t {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of range");
+            match entries.last_mut() {
+                Some(last) if last.0 == r && last.1 == c => last.2 += v,
+                _ => entries.push((r, c, v)),
+            }
+        }
+        for &(r, c, v) in &entries {
+            indptr[r + 1] += 1;
+            indices.push(c as u32);
+            values.push(v);
+        }
+        for r in 0..rows {
+            indptr[r + 1] += indptr[r];
+        }
+        CsrMat::new(rows, cols, indptr, indices, values)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+    /// Number of stored entries (structural zeros included).
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// One row as parallel `(columns, values)` slices.
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let span = self.indptr[i]..self.indptr[i + 1];
+        (&self.indices[span.clone()], &self.values[span])
+    }
+
+    /// Scale every stored value in place (`A ← a·A`).
+    pub fn scale_values(&mut self, a: f64) {
+        for v in &mut self.values {
+            *v *= a;
+        }
+    }
+
+    /// Add `delta` to every *structurally present* diagonal entry. Panics
+    /// if some diagonal entry is missing (the graph CSR builders always
+    /// store the full diagonal).
+    pub fn add_diag(&mut self, delta: f64) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            let span = self.indptr[i]..self.indptr[i + 1];
+            let row_cols = &self.indices[span.clone()];
+            let pos = row_cols
+                .binary_search(&(i as u32))
+                .unwrap_or_else(|_| panic!("row {i} has no stored diagonal"));
+            self.values[span.start + pos] += delta;
+        }
+    }
+
+    /// Densify (tests, small problems, diagnostics).
+    pub fn to_dense(&self) -> DMat {
+        let mut m = DMat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                m[(i, j as usize)] = v;
+            }
+        }
+        m
+    }
+
+    /// Gershgorin upper bound on the spectral radius (symmetric matrices):
+    /// `max_i Σ_j |a_ij|`. Sparse counterpart of
+    /// [`crate::linalg::funcs::gershgorin_bound`].
+    pub fn gershgorin_bound(&self) -> f64 {
+        (0..self.rows)
+            .map(|i| self.row(i).1.iter().map(|v| v.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    /// Fraction of stored entries relative to a dense matrix.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+}
+
+/// Row-range SpMM kernel: C rows `r0..r1` into `c_rows` (a buffer holding
+/// exactly those rows). The single kernel both the serial and sharded paths
+/// dispatch — the source of the bitwise-determinism contract. Zero-valued
+/// entries are skipped to match the dense kernels' `aik == 0.0` skip, which
+/// is what makes [`spmm`] bitwise-equal to `matmul` on the densified matrix.
+fn spmm_row_range(a: &CsrMat, b: &DMat, c_rows: &mut [f64], r0: usize, r1: usize) {
+    let n = b.cols();
+    debug_assert_eq!(a.cols, b.rows());
+    debug_assert_eq!(c_rows.len(), (r1 - r0) * n);
+    c_rows.fill(0.0);
+    let bd = b.data();
+    for i in r0..r1 {
+        let crow = &mut c_rows[(i - r0) * n..(i - r0 + 1) * n];
+        for idx in a.indptr[i]..a.indptr[i + 1] {
+            let v = a.values[idx];
+            if v == 0.0 {
+                continue;
+            }
+            let j = a.indices[idx] as usize;
+            let brow = &bd[j * n..(j + 1) * n];
+            // contiguous axpy: crow += v * brow
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += v * bv;
+            }
+        }
+    }
+}
+
+/// `C = A · B` for sparse `A` and a dense bundle `B`, with output rows
+/// sharded across `threads` workers. `O(nnz · B.cols())`.
+///
+/// Bitwise identical to the serial path for every worker count, and
+/// bitwise identical to [`super::matmul::matmul`]`(A.to_dense(), B)`.
+pub fn spmm(a: &CsrMat, b: &DMat, threads: usize) -> DMat {
+    let mut c = DMat::zeros(a.rows, b.cols());
+    spmm_into(a, b, &mut c, threads);
+    c
+}
+
+/// [`spmm`] into an existing buffer (`C` is overwritten) — the
+/// allocation-free form the solver hot loop ping-pongs between two
+/// preallocated bundles (ℓ SpMMs per operator apply would otherwise mean
+/// ℓ fresh `n×k` allocations per solver step).
+pub fn spmm_into(a: &CsrMat, b: &DMat, c: &mut DMat, threads: usize) {
+    assert_eq!(a.cols, b.rows(), "spmm shape mismatch");
+    let (m, n) = (a.rows, b.cols());
+    assert_eq!((c.rows(), c.cols()), (m, n), "spmm output shape mismatch");
+    let shards = row_shards(m, threads);
+    if shards.len() <= 1 {
+        spmm_row_range(a, b, c.data_mut(), 0, m);
+        return;
+    }
+    let starts = shard_starts(&shards);
+    let elem_lens: Vec<usize> = shards.iter().map(|&len| len * n).collect();
+    parallel_shards(c.data_mut(), &elem_lens, |idx, chunk| {
+        let r0 = starts[idx];
+        spmm_row_range(a, b, chunk, r0, r0 + shards[idx]);
+    });
+}
+
+/// Row-range SpMV kernel (shared serial/sharded inner loop).
+fn spmv_row_range(a: &CsrMat, x: &[f64], y_rows: &mut [f64], r0: usize, r1: usize) {
+    debug_assert_eq!(a.cols, x.len());
+    debug_assert_eq!(y_rows.len(), r1 - r0);
+    for i in r0..r1 {
+        let mut s = 0.0;
+        for idx in a.indptr[i]..a.indptr[i + 1] {
+            s += a.values[idx] * x[a.indices[idx] as usize];
+        }
+        y_rows[i - r0] = s;
+    }
+}
+
+/// `y = A·x` row-sharded. Bitwise identical to serial for every worker
+/// count. `O(nnz)`.
+pub fn spmv(a: &CsrMat, x: &[f64], threads: usize) -> Vec<f64> {
+    assert_eq!(a.cols, x.len(), "spmv shape mismatch");
+    let m = a.rows;
+    let mut y = vec![0.0; m];
+    let shards = row_shards(m, threads);
+    if shards.len() <= 1 {
+        spmv_row_range(a, x, &mut y, 0, m);
+        return y;
+    }
+    let starts = shard_starts(&shards);
+    parallel_shards(&mut y, &shards, |idx, chunk| {
+        let r0 = starts[idx];
+        spmv_row_range(a, x, chunk, r0, r0 + chunk.len());
+    });
+    y
+}
+
+/// Largest-eigenvalue estimate of a symmetric PSD sparse matrix by power
+/// iteration — the shared recurrence of
+/// [`super::par::power_lambda_max_par`] (one implementation, dispatched by
+/// matvec), with the matrix–vector product in `O(nnz)` instead of `O(n²)`.
+/// Bitwise identical across worker counts.
+pub fn power_lambda_max_csr(a: &CsrMat, iters: usize, threads: usize) -> f64 {
+    assert!(a.is_square());
+    super::par::power_iteration_with(a.rows, iters, |v| spmv(a, v, threads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{gemv, matmul};
+    use crate::util::rng::Rng;
+
+    fn random_bundle(seed: u64, r: usize, c: usize) -> DMat {
+        let mut rng = Rng::new(seed);
+        DMat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    /// A random symmetric sparse matrix with a full structural diagonal.
+    fn random_sym_csr(seed: u64, n: usize, fill: f64) -> CsrMat {
+        let mut rng = Rng::new(seed);
+        let mut trips: Vec<(usize, usize, f64)> = Vec::new();
+        for i in 0..n {
+            trips.push((i, i, rng.normal().abs() + 0.1));
+            for j in (i + 1)..n {
+                if rng.uniform(0.0, 1.0) < fill {
+                    let w = rng.normal();
+                    trips.push((i, j, w));
+                    trips.push((j, i, w));
+                }
+            }
+        }
+        CsrMat::from_triplets(n, n, &trips)
+    }
+
+    fn bitwise_eq(a: &DMat, b: &DMat) -> bool {
+        a.rows() == b.rows()
+            && a.cols() == b.cols()
+            && a
+                .data()
+                .iter()
+                .zip(b.data().iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn from_triplets_merges_and_sorts() {
+        let m = CsrMat::from_triplets(
+            3,
+            3,
+            &[(1, 2, 1.0), (0, 0, 2.0), (1, 2, 0.5), (1, 0, -1.0)],
+        );
+        assert_eq!(m.nnz(), 3);
+        let (cols, vals) = m.row(1);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[-1.0, 1.5]);
+        let d = m.to_dense();
+        assert_eq!(d[(0, 0)], 2.0);
+        assert_eq!(d[(1, 2)], 1.5);
+        assert_eq!(d[(2, 2)], 0.0);
+    }
+
+    #[test]
+    fn dense_roundtrip_and_accessors() {
+        let m = random_sym_csr(1, 12, 0.3);
+        let d = m.to_dense();
+        assert!(d.is_symmetric(0.0));
+        assert_eq!(m.indptr().len(), 13);
+        assert_eq!(m.indices().len(), m.nnz());
+        assert!(m.density() > 0.0 && m.density() <= 1.0);
+        // Gershgorin bound from CSR equals the dense one.
+        let gd = crate::linalg::funcs::gershgorin_bound(&d);
+        assert_eq!(m.gershgorin_bound().to_bits(), gd.to_bits());
+    }
+
+    #[test]
+    fn scale_and_add_diag() {
+        let mut m = random_sym_csr(2, 8, 0.4);
+        let before = m.to_dense();
+        m.scale_values(0.5);
+        m.add_diag(1.25);
+        let after = m.to_dense();
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = before[(i, j)] * 0.5 + if i == j { 1.25 } else { 0.0 };
+                assert!((after[(i, j)] - want).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_bitwise_matches_dense_matmul_both_kernels() {
+        // B widths straddle the dense skinny/blocked kernel split (16).
+        for &(n, k) in &[(1usize, 1usize), (7, 3), (40, 8), (40, 20), (65, 33), (90, 17)] {
+            let a = random_sym_csr(n as u64 + 10, n, 0.25);
+            let ad = a.to_dense();
+            let b = random_bundle(n as u64 ^ 0xB0, n, k);
+            let dense = matmul(&ad, &b);
+            for &workers in &[1usize, 2, 8] {
+                let s = spmm(&a, &b, workers);
+                assert!(bitwise_eq(&s, &dense), "(n={n},k={k}) at {workers} workers");
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_skips_structural_zeros_like_dense() {
+        // A structurally-present zero (isolated-node diagonal) must not
+        // perturb the product relative to the dense kernel's zero skip.
+        let m = CsrMat::from_triplets(
+            3,
+            3,
+            &[(0, 0, 0.0), (1, 1, 2.0), (1, 2, -1.0), (2, 1, -1.0), (2, 2, 1.0)],
+        );
+        let b = random_bundle(3, 3, 5);
+        let dense = matmul(&m.to_dense(), &b);
+        assert!(bitwise_eq(&spmm(&m, &b, 1), &dense));
+        assert_eq!(spmm(&m, &b, 4).row(0), &[0.0; 5]);
+    }
+
+    #[test]
+    fn spmv_matches_dense_gemv() {
+        let a = random_sym_csr(5, 37, 0.3);
+        let ad = a.to_dense();
+        let mut rng = Rng::new(99);
+        let x: Vec<f64> = (0..37).map(|_| rng.normal()).collect();
+        let dense = gemv(&ad, &x);
+        for &workers in &[1usize, 2, 8] {
+            let y = spmv(&a, &x, workers);
+            for (got, want) in y.iter().zip(dense.iter()) {
+                assert!((got - want).abs() < 1e-12);
+            }
+            // Worker-count determinism is exact.
+            let serial = spmv(&a, &x, 1);
+            assert!(y.iter().zip(serial.iter()).all(|(p, q)| p.to_bits() == q.to_bits()));
+        }
+    }
+
+    #[test]
+    fn power_iteration_matches_dense_path() {
+        let g = crate::graph::gen::cliques(&crate::graph::gen::CliqueSpec {
+            n: 40,
+            k: 4,
+            max_short_circuit: 3,
+            seed: 3,
+        })
+        .graph;
+        let lc = g.laplacian_csr();
+        let ld = g.laplacian();
+        let sparse = power_lambda_max_csr(&lc, 100, 1);
+        let dense = crate::linalg::funcs::power_lambda_max(&ld, 100);
+        assert!(
+            (sparse - dense).abs() <= 1e-9 * dense.max(1.0),
+            "sparse {sparse} vs dense {dense}"
+        );
+        // And across worker counts, bitwise.
+        for &workers in &[2usize, 8] {
+            assert_eq!(
+                power_lambda_max_csr(&lc, 100, workers).to_bits(),
+                sparse.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let m = CsrMat::from_triplets(0, 0, &[]);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(power_lambda_max_csr(&m, 10, 4), 0.0);
+        let one = CsrMat::from_triplets(1, 1, &[(0, 0, 3.0)]);
+        let b = DMat::from_vec(1, 2, vec![2.0, -1.0]);
+        let c = spmm(&one, &b, 4);
+        assert_eq!(c.row(0), &[6.0, -3.0]);
+        assert_eq!(spmv(&one, &[2.0], 4), vec![6.0]);
+    }
+}

@@ -18,6 +18,8 @@ use crate::linalg::dmat::{dot, normalize, DMat};
 use crate::linalg::matmul::matmul;
 use crate::linalg::metrics::{eigenvector_streak, subspace_error, ConvergenceHistory};
 use crate::linalg::qr::mgs_orthonormalize;
+use crate::linalg::sparse::CsrMat;
+use crate::transforms::{SeriesForm, TransformKind};
 
 pub mod stochastic;
 
@@ -51,12 +53,11 @@ impl DenseOp {
 
 impl MatVecOp for DenseOp {
     fn apply(&mut self, v: &DMat) -> DMat {
-        // Per-call sharding spawns scoped threads; on skinny products the
-        // spawn/join overhead rivals the FLOPs. Below ~1M multiply-adds run
-        // serial — the output is bitwise identical either way, so this is
-        // purely a latency decision.
+        // Shared work-size guard: below the threshold the scoped spawn/join
+        // overhead rivals the FLOPs, so run serial. Output is bitwise
+        // identical either way — purely a latency decision.
         let work = self.m.rows() * self.m.cols() * v.cols();
-        let threads = if work < 1_000_000 { 1 } else { self.threads };
+        let threads = crate::linalg::par::effective_threads(work, self.threads);
         crate::linalg::par::matmul_par(&self.m, v, threads)
     }
     fn dim(&self) -> usize {
@@ -64,6 +65,139 @@ impl MatVecOp for DenseOp {
     }
     fn label(&self) -> String {
         format!("dense[{}]", self.m.rows())
+    }
+}
+
+/// The matrix-free SPED operator (`OpMode::MatrixFree`): evaluates
+/// `M·V = λ*·V − p(L)·V` per solver step through sparse multiplies against
+/// the CSR Laplacian — `O(ℓ·nnz·k)` per step, `O(n + nnz)` memory, and no
+/// `n×n` intermediate, ever. This is the operator shape the paper's §4
+/// premise describes, and what Block Chebyshev–Davidson / LOBPCG-style
+/// production solvers drive their polynomial filters through.
+///
+/// Construction ([`SparsePolyOp::from_graph`]) mirrors
+/// [`crate::transforms::build_solver_matrix`] — λ_max power iteration,
+/// optional pre-scaling, reversal shift λ* (eq 8) — but entirely in
+/// `O(nnz)` primitives. Exact (eigh-based) transforms are rejected: they
+/// are the dense oracles the series forms exist to avoid.
+///
+/// Output is bitwise identical for every worker count (the
+/// [`crate::linalg::sparse`] determinism contract), so solver trajectories
+/// do not depend on `threads`.
+pub struct SparsePolyOp {
+    /// CSR of the (pre-scaled) Laplacian the polynomial is evaluated in.
+    l: CsrMat,
+    form: SparsePolyForm,
+    /// Reversal shift λ* of eq 8.
+    pub lambda_star: f64,
+    /// Pre-scaling applied to `L` before the transform (`L ← L/scale`).
+    pub scale: f64,
+    /// The transform this operator realizes.
+    pub kind: TransformKind,
+    pub threads: usize,
+}
+
+/// How `p(L)·V` is evaluated.
+enum SparsePolyForm {
+    /// Horner in `B = L − shift·I`: `deg(p)` SpMMs per apply.
+    Series(SeriesForm),
+    /// `−(I − L/ℓ)^ℓ·V` by `ℓ` repeated SpMMs (`LimitNegExp`; the monomial
+    /// `SeriesForm` equivalent would need the coefficient `ℓ^{−ℓ}`, which
+    /// underflows f64 at ℓ = 251).
+    NegPower { ell: usize },
+}
+
+impl SparsePolyOp {
+    /// Build the matrix-free operator for `kind` directly from a graph —
+    /// the dense-free counterpart of `build_solver_matrix`.
+    pub fn from_graph(
+        graph: &crate::graph::Graph,
+        kind: TransformKind,
+        opts: &crate::transforms::BuildOptions,
+    ) -> anyhow::Result<SparsePolyOp> {
+        SparsePolyOp::from_csr(graph.laplacian_csr(), kind, opts)
+    }
+
+    /// Build from an already-assembled CSR Laplacian (callers that reuse
+    /// one CSR across transforms, or bring a normalized Laplacian).
+    pub fn from_csr(
+        l: CsrMat,
+        kind: TransformKind,
+        opts: &crate::transforms::BuildOptions,
+    ) -> anyhow::Result<SparsePolyOp> {
+        let form = match kind {
+            TransformKind::Identity => {
+                SparsePolyForm::Series(SeriesForm { shift: 0.0, coeffs: vec![0.0, 1.0] })
+            }
+            TransformKind::TaylorLog { .. } | TransformKind::TaylorNegExp { .. } => {
+                SparsePolyForm::Series(kind.series().expect("series kind"))
+            }
+            TransformKind::LimitNegExp { ell } => SparsePolyForm::NegPower { ell },
+            TransformKind::MatrixLog { .. } | TransformKind::NegExp => anyhow::bail!(
+                "exact transform {kind} needs a full eigendecomposition — \
+                 use OpMode::DenseMaterialized"
+            ),
+        };
+        let threads = opts.threads.max(1);
+        let lam_raw = crate::linalg::sparse::power_lambda_max_csr(&l, opts.power_iters, threads);
+        let lam_est = lam_raw * opts.safety;
+        let scale = if opts.prescale && lam_est > 0.0 { lam_est } else { 1.0 };
+        let mut l = l;
+        if scale != 1.0 {
+            l.scale_values(1.0 / scale);
+        }
+        // Spectral radius of the transform input — mirrors build_solver_matrix.
+        let rho = if opts.prescale {
+            1.0
+        } else if lam_est > 0.0 {
+            lam_est
+        } else {
+            l.gershgorin_bound()
+        };
+        let lambda_star = kind.lambda_star(rho);
+        Ok(SparsePolyOp { l, form, lambda_star, scale, kind, threads })
+    }
+
+    /// Stored entries of the underlying CSR Laplacian.
+    pub fn nnz(&self) -> usize {
+        self.l.nnz()
+    }
+}
+
+impl MatVecOp for SparsePolyOp {
+    fn apply(&mut self, v: &DMat) -> DMat {
+        // Shared work-size guard; work per SpMM is nnz·k multiply-adds.
+        let work = self.l.nnz().saturating_mul(v.cols());
+        let threads = crate::linalg::par::effective_threads(work, self.threads);
+        let p_v = match &self.form {
+            SparsePolyForm::Series(series) => series.apply_bundle(&self.l, v, threads),
+            SparsePolyForm::NegPower { ell } => {
+                // W ← (I − L/ℓ)·W, ℓ times; p(L)·V = −W. Two preallocated
+                // bundles ping-pong so the ℓ SpMMs allocate nothing.
+                let inv = -1.0 / *ell as f64;
+                let mut w = v.clone();
+                let mut t = DMat::zeros(v.rows(), v.cols());
+                for _ in 0..*ell {
+                    crate::linalg::sparse::spmm_into(&self.l, &w, &mut t, threads);
+                    t.scale(inv);
+                    t.axpy(1.0, &w);
+                    std::mem::swap(&mut w, &mut t);
+                }
+                w.scale(-1.0);
+                w
+            }
+        };
+        // M·V = λ*·V − p(L)·V
+        let mut out = v.clone();
+        out.scale(self.lambda_star);
+        out.axpy(-1.0, &p_v);
+        out
+    }
+    fn dim(&self) -> usize {
+        self.l.rows()
+    }
+    fn label(&self) -> String {
+        format!("sparse[{},nnz={}]", self.l.rows(), self.l.nnz())
     }
 }
 
@@ -246,6 +380,26 @@ pub fn run_convergence_full(
     (hist, v)
 }
 
+/// Ground-truth-free driver: advance `solver` on `op` for exactly `steps`
+/// steps with no metrics and no early stop, returning the final `n×k`
+/// estimate. This is the dense-free path (`PipelineConfig::ground_truth =
+/// false`): [`run_convergence_full`] needs the exact bottom-k bundle from
+/// an `O(n³)` eigendecomposition, which callers who only want cluster
+/// assignments never have to pay for.
+pub fn run_steps(
+    solver: &mut dyn EigenSolver,
+    op: &mut dyn MatVecOp,
+    k: usize,
+    steps: usize,
+    seed: u64,
+) -> DMat {
+    let mut v = random_init(op.dim(), k, seed);
+    for _ in 0..steps {
+        solver.step(op, &mut v);
+    }
+    v
+}
+
 /// Metrics-only convenience wrapper around [`run_convergence_full`].
 pub fn run_convergence(
     solver: &mut dyn EigenSolver,
@@ -337,6 +491,111 @@ mod tests {
             s_exp * 2 <= s_id,
             "no ≥2× acceleration: identity {s_id} steps vs negexp {s_exp}"
         );
+    }
+
+    #[test]
+    fn sparse_poly_op_matches_dense_op_on_series_transforms() {
+        // The matrix-free operator must agree with the materialized-dense
+        // operator to 1e-9 for every Table-2 series transform (prescaled,
+        // the regime where all series converge) plus the identity baseline.
+        let g = cliques(&CliqueSpec { n: 40, k: 4, max_short_circuit: 3, seed: 13 }).graph;
+        let l = g.laplacian();
+        let opts = BuildOptions { prescale: true, ..BuildOptions::default() };
+        let v = random_init(40, 6, 21);
+        for kind in [
+            TransformKind::Identity,
+            TransformKind::TaylorNegExp { ell: 31 },
+            TransformKind::TaylorLog { ell: 61, eps: 0.05 },
+            TransformKind::LimitNegExp { ell: 51 },
+        ] {
+            let sm = build_solver_matrix(&l, kind, &opts).unwrap();
+            let mut dense = DenseOp::new(sm.m);
+            let mut sparse = SparsePolyOp::from_graph(&g, kind, &opts).unwrap();
+            assert_eq!(sparse.dim(), 40);
+            assert!(
+                (sparse.lambda_star - sm.lambda_star).abs() < 1e-12,
+                "{kind}: λ* {} vs {}",
+                sparse.lambda_star,
+                sm.lambda_star
+            );
+            let want = dense.apply(&v);
+            let got = sparse.apply(&v);
+            let err = (&got - &want).max_abs();
+            assert!(err < 1e-9, "{kind}: operator divergence {err}");
+        }
+    }
+
+    #[test]
+    fn sparse_poly_op_deterministic_across_worker_counts() {
+        let g = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 7 }).graph;
+        let v = random_init(36, 4, 3);
+        for kind in [
+            TransformKind::TaylorNegExp { ell: 21 },
+            TransformKind::LimitNegExp { ell: 31 },
+        ] {
+            let mk = |threads| {
+                let opts = BuildOptions { threads, ..BuildOptions::default() };
+                SparsePolyOp::from_graph(&g, kind, &opts).unwrap()
+            };
+            let serial = mk(1).apply(&v);
+            for threads in [2usize, 8] {
+                let mut op = mk(threads);
+                assert_eq!(op.lambda_star.to_bits(), mk(1).lambda_star.to_bits());
+                let par = op.apply(&v);
+                let identical = serial
+                    .data()
+                    .iter()
+                    .zip(par.data().iter())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(identical, "{kind} diverged at {threads} workers");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_poly_op_rejects_exact_transforms() {
+        let g = cliques(&CliqueSpec { n: 12, k: 2, max_short_circuit: 1, seed: 1 }).graph;
+        let opts = BuildOptions::default();
+        assert!(SparsePolyOp::from_graph(&g, TransformKind::NegExp, &opts).is_err());
+        assert!(
+            SparsePolyOp::from_graph(&g, TransformKind::MatrixLog { eps: 0.05 }, &opts).is_err()
+        );
+    }
+
+    #[test]
+    fn sparse_poly_op_drives_subspace_iteration_to_ground_truth() {
+        // Matrix-free end-to-end at the solver level: the dilated sparse
+        // operator recovers the exact bottom-k subspace of L.
+        let g = cliques(&CliqueSpec { n: 24, k: 3, max_short_circuit: 1, seed: 5 }).graph;
+        let v_star = eigh(&g.laplacian()).unwrap().bottom_k(3);
+        let opts = BuildOptions::default();
+        let mut op =
+            SparsePolyOp::from_graph(&g, TransformKind::LimitNegExp { ell: 51 }, &opts).unwrap();
+        assert_eq!(op.lambda_star, 0.0, "negexp family reverses with λ* = 0");
+        let mut solver = SubspaceIteration;
+        let cfg = RunConfig { steps: 500, eval_every: 10, ..Default::default() };
+        let hist = run_convergence(&mut solver, &mut op, &v_star, &cfg);
+        assert!(hist.last().unwrap().subspace_error < 1e-6);
+        assert!(op.label().starts_with("sparse["));
+        assert!(op.nnz() > 0);
+    }
+
+    #[test]
+    fn run_steps_matches_metric_driver_trajectory() {
+        // The ground-truth-free driver advances the identical trajectory —
+        // same init, same steps — it just never measures.
+        let (m, v_star) = fixture(TransformKind::NegExp, 2);
+        let cfg = RunConfig { steps: 120, eval_every: 40, stop_error: 0.0, ..Default::default() };
+        let mut op_a = DenseOp::new(m.clone());
+        let mut op_b = DenseOp::new(m);
+        let (_, with_metrics) =
+            run_convergence_full(&mut SubspaceIteration, &mut op_a, &v_star, &cfg);
+        let without = run_steps(&mut SubspaceIteration, &mut op_b, 2, 120, cfg.seed);
+        assert!(with_metrics
+            .data()
+            .iter()
+            .zip(without.data().iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

@@ -29,9 +29,33 @@
 //! meaningless). The same (shift, coeffs) representation is consumed by the
 //! L1 Pallas kernel `poly_horner` and the AOT artifact, keeping the native
 //! and XLA paths bit-compatible in structure.
+//!
+//! ## Dense vs matrix-free evaluation ([`OpMode`])
+//!
+//! A series transform can reach the solver two ways:
+//!
+//! * **[`OpMode::DenseMaterialized`]** — build `p(L)` once as an `n×n`
+//!   matrix (`O(ℓ·n³)` via [`SeriesForm::eval_matrix_threads`] / matpow),
+//!   then every solver step is one `O(n²·k)` dense multiply.
+//! * **[`OpMode::MatrixFree`]** — never form anything `n×n`: each solver
+//!   step evaluates `p(L)·V` directly through `ℓ` sparse multiplies against
+//!   the CSR Laplacian ([`SeriesForm::apply_bundle`] /
+//!   `solvers::SparsePolyOp`), `O(ℓ·nnz·k)` per step and `O(n + nnz)`
+//!   memory.
+//!
+//! Crossover guidance: matrix-free wins whenever the dense build does not
+//! amortize — per step it wins while `ℓ·nnz ≲ n²` (sparsity below `1/ℓ`),
+//! and including the build it wins for any short-to-moderate solve because
+//! the `O(ℓ·n³)` build alone costs as much as `ℓ·n/k` matrix-free steps.
+//! On large sparse graphs (`nnz ≪ n²`) the dense path additionally needs
+//! `8n²` bytes (a 50k-node graph → 20 GB) while CSR needs a few MB, so
+//! beyond ~5k nodes matrix-free is effectively the only native option.
+//! Exact transforms ([`TransformKind::MatrixLog`], [`TransformKind::NegExp`])
+//! are eigendecomposition-based oracles and stay dense-only.
 
 use crate::linalg::dmat::DMat;
 use crate::linalg::funcs::{matpow, poly_horner, power_lambda_max, spectral_apply};
+use crate::linalg::sparse::{spmm_into, CsrMat};
 use anyhow::{bail, Result};
 
 /// A spectral transform from Table 2 (or the identity baseline).
@@ -49,6 +73,44 @@ pub enum TransformKind {
     TaylorNegExp { ell: usize },
     /// Limit approximation `−(1 − x/ℓ)^ℓ`, `ℓ` odd (the paper's best series).
     LimitNegExp { ell: usize },
+}
+
+/// How the solver operator `M = λ*I − p(L)` is realized on the native
+/// backend (see the module docs for the asymptotics and crossover).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OpMode {
+    /// Materialize `p(L)` as a dense `n×n` matrix once, then dense `M·V`
+    /// per solver step. The historical default.
+    #[default]
+    DenseMaterialized,
+    /// Never materialize: each solver step evaluates `(λ*I − p(L))·V`
+    /// through sparse multiplies against the CSR Laplacian.
+    MatrixFree,
+}
+
+impl OpMode {
+    /// Parse from a CLI/config name (`dense` | `sparse`).
+    pub fn parse(s: &str) -> Result<OpMode> {
+        Ok(match s {
+            "dense" | "materialized" => OpMode::DenseMaterialized,
+            "sparse" | "matrix-free" | "matrix_free" | "matrixfree" => OpMode::MatrixFree,
+            other => bail!("unknown op mode {other:?} (expected dense | sparse)"),
+        })
+    }
+
+    /// Canonical display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpMode::DenseMaterialized => "dense",
+            OpMode::MatrixFree => "sparse",
+        }
+    }
+}
+
+impl std::fmt::Display for OpMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
 }
 
 /// A polynomial in the shifted matrix `B = A − shift·I`:
@@ -80,11 +142,51 @@ impl SeriesForm {
     pub fn eval_matrix_threads(&self, a: &DMat, threads: usize) -> DMat {
         let mut b = a.clone();
         b.add_diag(-self.shift);
+        // Work per Horner multiply is n³ multiply-adds; the shared guard
+        // keeps tiny builds serial (bitwise-identical either way).
+        let n = b.rows();
+        let threads = crate::linalg::par::effective_threads(
+            n.saturating_mul(n).saturating_mul(n),
+            threads,
+        );
         if threads > 1 {
             crate::linalg::par::poly_horner_par(&b, &self.coeffs, threads)
         } else {
             poly_horner(&b, &self.coeffs)
         }
+    }
+
+    /// Matrix-free bundle apply: `p(A)·V` for sparse `A` via Horner on the
+    /// *columns* — `deg(p)` sparse multiplies (`R ← A·R − shift·R + c_i·V`),
+    /// never an `n×n` intermediate. `O(deg(p)·nnz·k)` work, `O(n·k)` memory.
+    ///
+    /// This is the solver-step kernel behind `OpMode::MatrixFree`
+    /// (`solvers::SparsePolyOp`). Output is bitwise identical for every
+    /// worker count (the [`crate::linalg::sparse`] determinism contract).
+    pub fn apply_bundle(&self, a: &CsrMat, v: &DMat, threads: usize) -> DMat {
+        assert!(a.is_square(), "apply_bundle needs a square operator");
+        assert_eq!(a.cols(), v.rows(), "apply_bundle shape mismatch");
+        if self.coeffs.is_empty() {
+            return DMat::zeros(v.rows(), v.cols());
+        }
+        let d = self.coeffs.len() - 1;
+        let mut r = v.clone();
+        r.scale(self.coeffs[d]);
+        // Ping-pong between two preallocated bundles: deg(p) SpMMs per
+        // apply with zero per-iteration allocations.
+        let mut t = DMat::zeros(v.rows(), v.cols());
+        for i in (0..d).rev() {
+            // R ← B·R + c_i·V with B = A − shift·I.
+            spmm_into(a, &r, &mut t, threads);
+            if self.shift != 0.0 {
+                t.axpy(-self.shift, &r);
+            }
+            if self.coeffs[i] != 0.0 {
+                t.axpy(self.coeffs[i], v);
+            }
+            std::mem::swap(&mut r, &mut t);
+        }
+        r
     }
 
     pub fn degree(&self) -> usize {
@@ -140,6 +242,12 @@ impl TransformKind {
     /// expensive oracles the series forms approximate).
     pub fn is_exact(&self) -> bool {
         matches!(self, TransformKind::MatrixLog { .. } | TransformKind::NegExp)
+    }
+
+    /// True for transforms expressible as a polynomial apply — i.e. usable
+    /// under [`OpMode::MatrixFree`]. The exact (eigh-based) kinds are not.
+    pub fn supports_matrix_free(&self) -> bool {
+        !self.is_exact()
     }
 
     /// The scalar spectrum map this transform applies (for series kinds:
@@ -561,6 +669,63 @@ mod tests {
             .iter()
             .zip(par.m.data().iter())
             .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn op_mode_parse_and_display() {
+        assert_eq!(OpMode::parse("dense").unwrap(), OpMode::DenseMaterialized);
+        assert_eq!(OpMode::parse("sparse").unwrap(), OpMode::MatrixFree);
+        assert_eq!(OpMode::parse("matrix-free").unwrap(), OpMode::MatrixFree);
+        assert!(OpMode::parse("bogus").is_err());
+        assert_eq!(OpMode::default(), OpMode::DenseMaterialized);
+        assert_eq!(OpMode::MatrixFree.to_string(), "sparse");
+        assert!(TransformKind::Identity.supports_matrix_free());
+        assert!(TransformKind::LimitNegExp { ell: 51 }.supports_matrix_free());
+        assert!(!TransformKind::NegExp.supports_matrix_free());
+        assert!(!TransformKind::MatrixLog { eps: 0.05 }.supports_matrix_free());
+    }
+
+    #[test]
+    fn apply_bundle_matches_materialized_series() {
+        // p(L)·V through sparse Horner-on-columns vs. the dense p(L) build
+        // followed by a multiply — same polynomial, different association;
+        // agreement to ~machine precision on a prescaled spectrum.
+        let g = cliques(&CliqueSpec { n: 32, k: 4, max_short_circuit: 3, seed: 1 }).graph;
+        let mut l = g.laplacian();
+        let lam = crate::linalg::funcs::power_lambda_max(&l, 100) * 1.01;
+        l.scale(1.0 / lam);
+        let mut lc = g.laplacian_csr();
+        lc.scale_values(1.0 / lam);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let v = DMat::from_fn(32, 5, |_, _| rng.normal());
+        for kind in [
+            TransformKind::TaylorNegExp { ell: 31 },
+            TransformKind::TaylorLog { ell: 61, eps: 0.05 },
+        ] {
+            let series = kind.series().expect("series kind");
+            let dense = crate::linalg::matmul::matmul(&series.eval_matrix(&l), &v);
+            for threads in [1usize, 2, 8] {
+                let sparse = series.apply_bundle(&lc, &v, threads);
+                let err = (&sparse - &dense).max_abs();
+                assert!(err < 1e-9, "{kind} @ {threads} threads: err {err}");
+            }
+            // Worker-count determinism is bitwise.
+            let serial = series.apply_bundle(&lc, &v, 1);
+            let par = series.apply_bundle(&lc, &v, 8);
+            assert!(serial
+                .data()
+                .iter()
+                .zip(par.data().iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        // Degenerate polynomials.
+        let empty = SeriesForm { shift: 0.0, coeffs: vec![] };
+        assert_eq!(empty.apply_bundle(&lc, &v, 4).max_abs(), 0.0);
+        let constant = SeriesForm { shift: 0.3, coeffs: vec![2.5] };
+        let cv = constant.apply_bundle(&lc, &v, 4);
+        let mut want = v.clone();
+        want.scale(2.5);
+        assert!((&cv - &want).max_abs() == 0.0);
     }
 
     #[test]

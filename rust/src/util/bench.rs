@@ -67,7 +67,11 @@ impl BenchSuite {
         self
     }
 
-    fn selected(&self, case: &str) -> bool {
+    /// Whether `case` passes the user's bench-name filter (the first
+    /// non-flag `cargo bench` argument). Public so bench groups that time
+    /// outside [`Self::bench`] (one-shot builds, custom comparisons) can
+    /// honor the same filter instead of running unconditionally.
+    pub fn selected(&self, case: &str) -> bool {
         match &self.filter {
             Some(f) => case.contains(f.as_str()) || self.name.contains(f.as_str()),
             None => true,
@@ -136,6 +140,36 @@ impl BenchSuite {
         self.results.push(line.to_string());
     }
 
+    /// Emit a machine-readable result file: `rows` of `(key, value)` cells
+    /// serialized as `{"suite": <name>, "rows": [{...}, ...]}`. This is how
+    /// bench groups publish comparable numbers for CI trend tracking (e.g.
+    /// `BENCH_sparse_vs_dense.json` at the repo root) without pulling a
+    /// serde dependency into the offline build.
+    pub fn write_json(
+        &self,
+        path: &std::path::Path,
+        rows: &[Vec<(String, JsonVal)>],
+    ) -> std::io::Result<()> {
+        let mut out = String::new();
+        out.push_str(&format!("{{\n  \"suite\": {},\n  \"rows\": [\n", json_string(&self.name)));
+        for (i, row) in rows.iter().enumerate() {
+            out.push_str("    {");
+            for (j, (key, val)) in row.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("{}: {}", json_string(key), val.render()));
+            }
+            out.push('}');
+            if i + 1 < rows.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(path, out)
+    }
+
     /// Print the suite report.
     pub fn finish(self) {
         println!("\n=== bench: {} ===", self.name);
@@ -144,6 +178,54 @@ impl BenchSuite {
         }
         println!("=== end {} ===\n", self.name);
     }
+}
+
+/// A scalar cell in a machine-readable bench row (see
+/// [`BenchSuite::write_json`]).
+#[derive(Clone, Debug)]
+pub enum JsonVal {
+    Int(u64),
+    Num(f64),
+    Str(String),
+}
+
+impl JsonVal {
+    fn render(&self) -> String {
+        match self {
+            JsonVal::Int(i) => i.to_string(),
+            // Non-finite floats have no JSON representation; emit null.
+            JsonVal::Num(x) if !x.is_finite() => "null".into(),
+            JsonVal::Num(x) => {
+                let s = format!("{x}");
+                // "1" would parse as an integer; keep floats float-typed.
+                if s.contains('.') || s.contains('e') || s.contains('E') {
+                    s
+                } else {
+                    format!("{s}.0")
+                }
+            }
+            JsonVal::Str(s) => json_string(s),
+        }
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 /// Human-readable seconds.
@@ -191,6 +273,39 @@ mod tests {
         assert_eq!(human(2.5e6, "F"), "2.50 MF");
         assert_eq!(human(3.0e3, "F"), "3.00 kF");
         assert_eq!(human(5.0, "F"), "5.00 F");
+    }
+
+    #[test]
+    fn json_emission_roundtrip() {
+        let suite = BenchSuite {
+            name: "jsontest".into(),
+            cfg: BenchConfig::default(),
+            filter: None,
+            results: Vec::new(),
+        };
+        let rows = vec![
+            vec![
+                ("n".to_string(), JsonVal::Int(256)),
+                ("sparse_step_s".to_string(), JsonVal::Num(0.5)),
+                ("speedup".to_string(), JsonVal::Num(3.0)),
+                ("bad".to_string(), JsonVal::Num(f64::NAN)),
+                ("label".to_string(), JsonVal::Str("clique \"w\"\n".into())),
+            ],
+            vec![("n".to_string(), JsonVal::Int(1024))],
+        ];
+        let path = std::env::temp_dir().join("sped_bench_json_test.json");
+        suite.write_json(&path, &rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(text.contains("\"suite\": \"jsontest\""));
+        assert!(text.contains("\"n\": 256"));
+        assert!(text.contains("\"sparse_step_s\": 0.5"));
+        assert!(text.contains("\"speedup\": 3.0"), "integral floats stay floats: {text}");
+        assert!(text.contains("\"bad\": null"));
+        assert!(text.contains("\\\"w\\\"\\n"));
+        // Balanced braces/brackets — cheap well-formedness check.
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
+        assert_eq!(text.matches('[').count(), text.matches(']').count());
     }
 
     #[test]

@@ -7,7 +7,7 @@ use sped::graph::gen::{cliques, ring_of_cliques, CliqueSpec};
 use sped::linkpred::{complete_graph, drop_edges};
 use sped::mdp::{GridWorld, ThreeRoomSpec};
 use sped::pipeline::{Pipeline, PipelineConfig};
-use sped::transforms::TransformKind;
+use sped::transforms::{OpMode, TransformKind};
 
 #[test]
 fn full_native_pipeline_all_transforms() {
@@ -82,6 +82,91 @@ fn threaded_pipeline_reproduces_serial_clustering_end_to_end() {
     );
     let ari = adjusted_rand_index(&par.clustering.as_ref().unwrap().assignments, &gg.labels);
     assert!(ari > 0.9, "ARI {ari}");
+}
+
+#[test]
+fn matrix_free_pipeline_recovers_dense_clusters_on_cliques() {
+    // The OpMode contract on the paper's §5.4 clique benchmark: the
+    // matrix-free path (no ground truth, no dense anything) recovers the
+    // same communities as the materialized-dense path.
+    let gg = cliques(&CliqueSpec { n: 48, k: 3, max_short_circuit: 2, seed: 11 });
+    let mk = |op_mode, ground_truth| PipelineConfig {
+        k: 3,
+        transform: TransformKind::LimitNegExp { ell: 51 },
+        solver: "subspace".into(),
+        steps: 400,
+        eval_every: 20,
+        stop_error: 0.0, // fixed step count in both modes
+        op_mode,
+        ground_truth,
+        ..Default::default()
+    };
+    let dense = Pipeline::new(mk(OpMode::DenseMaterialized, true)).run(&gg.graph).unwrap();
+    let sparse = Pipeline::new(mk(OpMode::MatrixFree, false)).run(&gg.graph).unwrap();
+    let a_dense = &dense.clustering.as_ref().unwrap().assignments;
+    let a_sparse = &sparse.clustering.as_ref().unwrap().assignments;
+    let cross = adjusted_rand_index(a_sparse, a_dense);
+    assert!(cross > 0.999, "dense vs matrix-free cluster ARI {cross}");
+    let ari = adjusted_rand_index(a_sparse, &gg.labels);
+    assert!(ari > 0.9, "matrix-free ARI vs ground truth {ari}");
+}
+
+#[test]
+fn matrix_free_pipeline_runs_where_dense_would_blow_a_256mb_cap() {
+    // n = 6000: the dense Laplacian alone (one DMat::zeros(n, n)) would be
+    // 288 MB — over a 256 MB cap — before the transform build even starts.
+    // The matrix-free pipeline handles the same graph in O(n + nnz): the
+    // acceptance check that OpMode::MatrixFree performs zero n×n dense
+    // allocations after graph load.
+    let n = 6000usize;
+    assert!(
+        n * n * std::mem::size_of::<f64>() > 256 * 1024 * 1024,
+        "cap sanity: dense n×n must exceed 256 MB"
+    );
+    let gg = ring_of_cliques(n / 20, 20, 0);
+    assert_eq!(gg.graph.num_nodes(), n);
+    let cfg = PipelineConfig {
+        k: 4,
+        transform: TransformKind::Identity,
+        solver: "subspace".into(),
+        steps: 20,
+        eval_every: 10,
+        stop_error: 0.0,
+        op_mode: OpMode::MatrixFree,
+        ground_truth: false,
+        ..Default::default()
+    };
+    let out = Pipeline::new(cfg).run(&gg.graph).unwrap();
+    assert_eq!(out.embedding.rows(), n);
+    assert_eq!(out.embedding.cols(), 4);
+    assert!(out.embedding.data().iter().all(|x| x.is_finite()));
+    assert_eq!(out.clustering.unwrap().assignments.len(), n);
+    // Dense-free: the oracle never ran, and the "transform build" stage is
+    // just CSR assembly + a power iteration — no O(ℓn³) materialization.
+    assert_eq!(out.timings.ground_truth, 0.0);
+    assert!(out.history.points.is_empty());
+}
+
+#[test]
+fn sparse_poly_op_direct_on_large_graph() {
+    // SparsePolyOp itself (no pipeline) on a graph size where a single
+    // dense n×n buffer would exceed the 256 MB cap: one operator apply is
+    // O(ℓ·nnz·k) and touches nothing quadratic.
+    use sped::solvers::{MatVecOp, SparsePolyOp};
+    let n = 6000usize;
+    assert!(n * n * std::mem::size_of::<f64>() > 256 * 1024 * 1024);
+    let gg = ring_of_cliques(n / 20, 20, 0);
+    let mut op = SparsePolyOp::from_graph(
+        &gg.graph,
+        TransformKind::LimitNegExp { ell: 15 },
+        &sped::transforms::BuildOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(op.dim(), n);
+    let v = sped::solvers::random_init(n, 4, 17);
+    let out = op.apply(&v);
+    assert_eq!((out.rows(), out.cols()), (n, 4));
+    assert!(out.data().iter().all(|x| x.is_finite()));
 }
 
 #[test]

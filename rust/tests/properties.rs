@@ -13,6 +13,8 @@ use sped::graph::gen::{
 use sped::graph::Graph;
 use sped::linalg::eigh;
 use sped::linalg::metrics::subspace_error;
+use sped::linalg::sparse::spmm;
+use sped::linalg::DMat;
 use sped::testkit::{check, SizeGen};
 use sped::transforms::TransformKind;
 
@@ -70,6 +72,57 @@ fn property_weighted_laplacians_also_valid() {
         let weights: Vec<f64> = (0..gg.graph.num_edges()).map(|_| rng.uniform(0.05, 2.0)).collect();
         let weighted = gg.graph.with_weights(&weights).map_err(|e| e.to_string())?;
         assert_valid_laplacian(&weighted, "reweighted cliques")
+    });
+}
+
+#[test]
+fn property_spmm_bitwise_matches_dense_matmul_across_generators() {
+    // The sparse-kernel contract behind OpMode::MatrixFree: for every graph
+    // generator, both Laplacian variants, random bundles on both sides of
+    // the dense skinny/blocked kernel split, and 1/2/8 workers, the CSR
+    // product is bit-for-bit the dense product.
+    check(105, 8, &SizeGen { lo: 6, hi: 26 }, |&n| {
+        let seed = n as u64;
+        let cases: Vec<(&str, Graph)> = vec![
+            (
+                "cliques",
+                cliques(&CliqueSpec { n, k: (n / 6).max(1), max_short_circuit: 3, seed }).graph,
+            ),
+            ("sbm", sbm(&[n / 2, n - n / 2], 0.8, 0.05, seed).graph),
+            ("erdos_renyi", erdos_renyi(n, 0.3, seed).graph),
+            ("grid2d", grid2d(n / 3 + 1, 3).graph),
+            ("path", path(n).graph),
+            ("ring", ring(n.max(3)).graph),
+            ("barbell", barbell(n / 2 + 2).graph),
+            ("ring_of_cliques", ring_of_cliques(3, n / 3 + 2, seed).graph),
+        ];
+        for (name, g) in cases {
+            let nn = g.num_nodes();
+            for (variant, dense, sparse) in [
+                ("laplacian", g.laplacian(), g.laplacian_csr()),
+                ("normalized", g.normalized_laplacian(), g.normalized_laplacian_csr()),
+            ] {
+                for k in [3usize, 20] {
+                    let mut rng = sped::util::rng::Rng::new(seed ^ (k as u64) << 8);
+                    let v = DMat::from_fn(nn, k, |_, _| rng.normal());
+                    let want = sped::linalg::matmul::matmul(&dense, &v);
+                    for workers in [1usize, 2, 8] {
+                        let got = spmm(&sparse, &v, workers);
+                        let identical = want
+                            .data()
+                            .iter()
+                            .zip(got.data().iter())
+                            .all(|(a, b)| a.to_bits() == b.to_bits());
+                        if !identical {
+                            return Err(format!(
+                                "{name}/{variant}: spmm diverged from matmul at n={nn}, k={k}, {workers} workers"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
     });
 }
 
