@@ -11,6 +11,11 @@
 //!   build + dense-step path on clique workloads, n ∈ {256, 1024, 4096} ×
 //!   ℓ ∈ {15, 251} (shrunk under `SPED_BENCH_FAST=1`), with results also
 //!   written to `BENCH_sparse_vs_dense.json` at the repo root.
+//! * Blocked vs streaming skinny SpMM: the register-blocked kernel family
+//!   against the streaming reference per bundle width (single SpMM and the
+//!   ℓ-SpMM matrix-free solver step), plus the RCM reordering locality
+//!   effect on a scrambled power-law graph — written to
+//!   `BENCH_spmm_blocked.json`.
 //! * XLA path (when artifacts exist): chunked solver steps, poly build,
 //!   matpow, matvec round-trip — including the PJRT call overhead.
 //!
@@ -18,7 +23,7 @@
 //! (e.g. `cargo bench --bench perf_hotpath -- --threads=8`) or the
 //! `SPED_THREADS` env var; default 4.
 
-use sped::graph::gen::{cliques, CliqueSpec};
+use sped::graph::gen::{barabasi_albert, cliques, CliqueSpec};
 use sped::linalg::dmat::DMat;
 use sped::linalg::matmul::{matmul, matmul_naive};
 use sped::linalg::par::{matmul_par, poly_horner_par};
@@ -162,6 +167,139 @@ fn sparse_vs_dense_crossover(suite: &mut BenchSuite, threads: usize, full_grid: 
     suite.report(&format!("wrote {}", path.display()));
 }
 
+/// Blocked-vs-streaming skinny SpMM + RCM locality (the register-blocked
+/// kernel acceptance measurement): per-SpMM and matrix-free solver-step
+/// times per bundle width, streaming reference vs blocked dispatch (with a
+/// bitwise-equality check — the determinism contract), plus the RCM
+/// bandwidth/locality effect on a scrambled power-law graph. Emits
+/// `BENCH_spmm_blocked.json` at the repo root for CI trend tracking.
+fn spmm_blocked_group(suite: &mut BenchSuite, threads: usize) {
+    use sped::linalg::sparse::{spmm_into, spmm_streaming_into};
+    let ns: &[usize] = &[1024, 4096];
+    let ks: &[usize] = if fast_mode() { &[8, 16] } else { &[4, 8, 16] };
+    let ell = if fast_mode() { 15 } else { 251 };
+    let reps = if fast_mode() { 3 } else { 10 };
+    let step_reps = if fast_mode() { 2 } else { 5 };
+    let mut rows: Vec<Vec<(String, JsonVal)>> = Vec::new();
+    for &n in ns {
+        // Same 16-node-clique community workload as the crossover group.
+        let gg = cliques(&CliqueSpec { n, k: (n / 16).max(2), max_short_circuit: 2, seed: 42 });
+        let l = gg.graph.laplacian_csr();
+        let nnz = l.nnz();
+        for &k in ks {
+            let v = sped::solvers::random_init(n, k, 7);
+            let mut c_streaming = DMat::zeros(n, k);
+            let mut c_blocked = DMat::zeros(n, k);
+            // Single-SpMM kernel comparison at 1 worker (register blocking
+            // is a per-core effect; sharding multiplies both paths alike).
+            let (t_stream, _) =
+                best_of(reps, || spmm_streaming_into(&l, &v, &mut c_streaming, 1));
+            let (t_block, _) = best_of(reps, || spmm_into(&l, &v, &mut c_blocked, 1));
+            assert!(
+                bitwise_eq(&c_blocked, &c_streaming),
+                "blocked/streaming SpMM divergence at n={n}, k={k}"
+            );
+            // Matrix-free solver step: the ℓ-SpMM ping-pong of
+            // SparsePolyOp's NegPower loop, per kernel, at the bench's
+            // worker count.
+            let step = |use_blocked: bool| {
+                let inv = -1.0 / ell as f64;
+                let mut w = v.clone();
+                let mut t = DMat::zeros(n, k);
+                for _ in 0..ell {
+                    if use_blocked {
+                        spmm_into(&l, &w, &mut t, threads);
+                    } else {
+                        spmm_streaming_into(&l, &w, &mut t, threads);
+                    }
+                    t.scale(inv);
+                    t.axpy(1.0, &w);
+                    std::mem::swap(&mut w, &mut t);
+                }
+                w
+            };
+            let (step_stream, w_s) = best_of(step_reps, || step(false));
+            let (step_block, w_b) = best_of(step_reps, || step(true));
+            assert!(
+                bitwise_eq(&w_s, &w_b),
+                "blocked/streaming solver-step divergence at n={n}, k={k}"
+            );
+            suite.report(&format!(
+                "spmm-blocked n={n} k={k} nnz={nnz}: spmm streaming {} | blocked {} | {:.2}x; step(ell={ell}, {threads}w) streaming {} | blocked {} | {:.2}x",
+                human_time(t_stream),
+                human_time(t_block),
+                t_stream / t_block.max(1e-12),
+                human_time(step_stream),
+                human_time(step_block),
+                step_stream / step_block.max(1e-12),
+            ));
+            rows.push(vec![
+                ("kind".into(), JsonVal::Str("width-sweep".into())),
+                ("n".into(), JsonVal::Int(n as u64)),
+                ("k".into(), JsonVal::Int(k as u64)),
+                ("ell".into(), JsonVal::Int(ell as u64)),
+                ("nnz".into(), JsonVal::Int(nnz as u64)),
+                // spmm_* fields are measured at 1 worker (per-core kernel
+                // effect); step_* fields at the bench's worker count.
+                ("spmm_threads".into(), JsonVal::Int(1)),
+                ("step_threads".into(), JsonVal::Int(threads as u64)),
+                ("spmm_streaming_s".into(), JsonVal::Num(t_stream)),
+                ("spmm_blocked_s".into(), JsonVal::Num(t_block)),
+                ("spmm_speedup".into(), JsonVal::Num(t_stream / t_block.max(1e-12))),
+                ("step_streaming_s".into(), JsonVal::Num(step_stream)),
+                ("step_blocked_s".into(), JsonVal::Num(step_block)),
+                ("step_speedup".into(), JsonVal::Num(step_stream / step_block.max(1e-12))),
+                ("fast_mode".into(), JsonVal::Int(u64::from(fast_mode()))),
+            ]);
+        }
+    }
+    // RCM locality: a scrambled Barabási–Albert power-law graph (no
+    // locality in the baseline order), blocked kernel, k = 16 — the
+    // --reorder rcm effect in isolation.
+    {
+        let n = 4096usize;
+        let k = 16usize;
+        let ba = barabasi_albert(n, 4, 7).graph;
+        // Affine scramble (odd multiplier mod a power of two is bijective).
+        let scramble: Vec<usize> =
+            (0..n).map(|i| i.wrapping_mul(1103515245).wrapping_add(12345) % n).collect();
+        let scrambled = ba.permute(&scramble).expect("scramble permutation");
+        let order = scrambled.rcm_permutation();
+        let rcm = scrambled.permute(&order).expect("rcm permutation");
+        let v = sped::solvers::random_init(n, k, 3);
+        let ls = scrambled.laplacian_csr();
+        let lr = rcm.laplacian_csr();
+        let mut c = DMat::zeros(n, k);
+        let (t_scrambled, _) = best_of(reps, || spmm_into(&ls, &v, &mut c, 1));
+        let (t_rcm, _) = best_of(reps, || spmm_into(&lr, &v, &mut c, 1));
+        suite.report(&format!(
+            "rcm-locality barabasi_albert n={n} m=4 k={k}: bandwidth {} -> {} | spmm scrambled {} | rcm {} | {:.2}x",
+            scrambled.bandwidth(),
+            rcm.bandwidth(),
+            human_time(t_scrambled),
+            human_time(t_rcm),
+            t_scrambled / t_rcm.max(1e-12),
+        ));
+        rows.push(vec![
+            ("kind".into(), JsonVal::Str("rcm-locality".into())),
+            ("n".into(), JsonVal::Int(n as u64)),
+            ("k".into(), JsonVal::Int(k as u64)),
+            ("nnz".into(), JsonVal::Int(ls.nnz() as u64)),
+            ("bandwidth_scrambled".into(), JsonVal::Int(scrambled.bandwidth() as u64)),
+            ("bandwidth_rcm".into(), JsonVal::Int(rcm.bandwidth() as u64)),
+            ("spmm_scrambled_s".into(), JsonVal::Num(t_scrambled)),
+            ("spmm_rcm_s".into(), JsonVal::Num(t_rcm)),
+            ("rcm_speedup".into(), JsonVal::Num(t_scrambled / t_rcm.max(1e-12))),
+            ("fast_mode".into(), JsonVal::Int(u64::from(fast_mode()))),
+        ]);
+    }
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_spmm_blocked.json");
+    suite.write_json(&path, &rows).expect("write BENCH_spmm_blocked.json");
+    suite.report(&format!("wrote {}", path.display()));
+}
+
 fn main() {
     let mut suite = BenchSuite::new("perf_hotpath");
     let threads = threads_param();
@@ -301,6 +439,14 @@ fn main() {
             .map(|f| case.contains(f.as_str()))
             .unwrap_or(false);
         sparse_vs_dense_crossover(&mut suite, threads, explicitly_selected);
+    }
+
+    // ---- blocked-vs-streaming skinny SpMM + RCM locality ----
+    // No dense builds anywhere in the group, so unlike the crossover's
+    // n=4096 column it is cheap enough to run unconditionally (CI selects
+    // it with the literal filter "spmm-blocked").
+    if suite.selected("spmm-blocked kernels + rcm locality") {
+        spmm_blocked_group(&mut suite, threads);
     }
 
     // ---- L3: clustering + walks ----

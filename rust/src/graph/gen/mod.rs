@@ -159,6 +159,44 @@ pub fn barbell(m: usize) -> GeneratedGraph {
     GeneratedGraph { graph: Graph::from_pairs(2 * m, &pairs).unwrap(), labels }
 }
 
+/// Barabási–Albert preferential attachment: seed with a complete graph on
+/// `m + 1` nodes, then each new node attaches `m` edges to distinct
+/// existing nodes with probability ∝ current degree (sampling uniformly
+/// from the edge-endpoint multiset). Produces the power-law degree tail —
+/// the workload class where RCM row reordering
+/// ([`crate::graph::Graph::rcm_permutation`]) pays off for the sparse
+/// solver kernels.
+pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> GeneratedGraph {
+    assert!(m >= 1 && n > m, "need n > m ≥ 1");
+    let mut rng = Rng::new(seed);
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    // Each edge contributes both endpoints, so a uniform draw from this
+    // multiset is exactly degree-proportional sampling.
+    let mut endpoints: Vec<usize> = Vec::new();
+    for i in 0..=m {
+        for j in (i + 1)..=m {
+            pairs.push((i, j));
+            endpoints.push(i);
+            endpoints.push(j);
+        }
+    }
+    for v in (m + 1)..n {
+        let mut chosen: Vec<usize> = Vec::with_capacity(m);
+        while chosen.len() < m {
+            let t = endpoints[rng.below(endpoints.len())];
+            if !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &t in &chosen {
+            pairs.push((v, t));
+            endpoints.push(v);
+            endpoints.push(t);
+        }
+    }
+    GeneratedGraph { graph: Graph::from_pairs(n, &pairs).unwrap(), labels: vec![] }
+}
+
 /// Ring of `k` cliques of size `m`, adjacent cliques joined by one edge.
 pub fn ring_of_cliques(k: usize, m: usize, _seed: u64) -> GeneratedGraph {
     assert!(k >= 3 && m >= 2);
@@ -260,6 +298,25 @@ mod tests {
         let g = ring_of_cliques(4, 5, 0);
         assert_eq!(g.graph.num_nodes(), 20);
         assert_eq!(g.graph.num_components(), 1);
+    }
+
+    #[test]
+    fn barabasi_albert_structure() {
+        let g = barabasi_albert(200, 3, 5);
+        assert_eq!(g.graph.num_nodes(), 200);
+        // Seed clique C(4,2)=6 edges + 3 per subsequent node.
+        assert_eq!(g.graph.num_edges(), 6 + 196 * 3);
+        assert_eq!(g.graph.num_components(), 1);
+        // Power-law tail: the max degree dwarfs the mean (2·E/n ≈ 6).
+        assert!(g.graph.max_degree() >= 15, "max degree {}", g.graph.max_degree());
+        // Deterministic per seed.
+        assert_eq!(g.graph.edges(), barabasi_albert(200, 3, 5).graph.edges());
+        assert_valid(&g.graph);
+    }
+
+    fn assert_valid(g: &Graph) {
+        let e = eigh(&g.laplacian()).unwrap();
+        assert!(e.values[0] > -1e-9);
     }
 
     #[test]

@@ -11,7 +11,12 @@
 //!   `laplacian_csr` / `normalized_laplacian_csr`, which reuse the
 //!   already-sorted CSR adjacency arrays).
 //! * [`spmm`] — sparse × dense-bundle multiply, row-sharded across
-//!   `util::pool` workers.
+//!   `util::pool` workers. Bundle widths `k ≤ 16` (the solver's skinny
+//!   regime) dispatch to a register-blocked kernel family — one
+//!   monomorphized inner loop per width that accumulates all `k` columns
+//!   in a `[f64; K]` register array while sweeping each CSR row's
+//!   nonzeros once ([`spmm_streaming`] keeps the generic streaming kernel
+//!   callable as the reference).
 //! * [`spmv`], [`power_lambda_max_csr`] — sparse matrix–vector product and
 //!   the λ_max power iteration on top of it (the dense-free replacement for
 //!   `linalg::funcs::power_lambda_max` in operator construction).
@@ -186,12 +191,29 @@ impl CsrMat {
     }
 }
 
-/// Row-range SpMM kernel: C rows `r0..r1` into `c_rows` (a buffer holding
-/// exactly those rows). The single kernel both the serial and sharded paths
-/// dispatch — the source of the bitwise-determinism contract. Zero-valued
-/// entries are skipped to match the dense kernels' `aik == 0.0` skip, which
-/// is what makes [`spmm`] bitwise-equal to `matmul` on the densified matrix.
-fn spmm_row_range(a: &CsrMat, b: &DMat, c_rows: &mut [f64], r0: usize, r1: usize) {
+/// The one sparse row-accumulation primitive: visit every stored entry
+/// `(value, column)` of row `i` in ascending-column CSR order, skipping
+/// zero values to match the dense kernels' `aik == 0.0` skip. Every sparse
+/// kernel in this module — streaming SpMM, the register-blocked SpMM
+/// family, and SpMV — reduces through this helper, so there is exactly one
+/// reference semantics (entry order + zero skip) for the bitwise contracts
+/// to pin down.
+#[inline(always)]
+fn for_each_nonzero(a: &CsrMat, i: usize, mut visit: impl FnMut(f64, usize)) {
+    for idx in a.indptr[i]..a.indptr[i + 1] {
+        let v = a.values[idx];
+        if v == 0.0 {
+            continue;
+        }
+        visit(v, a.indices[idx] as usize);
+    }
+}
+
+/// Streaming row-range SpMM kernel: C rows `r0..r1` into `c_rows` (a buffer
+/// holding exactly those rows), accumulating through memory one contiguous
+/// axpy per nonzero. Handles any bundle width; the reference semantics the
+/// blocked kernels must match bitwise.
+fn spmm_row_range_streaming(a: &CsrMat, b: &DMat, c_rows: &mut [f64], r0: usize, r1: usize) {
     let n = b.cols();
     debug_assert_eq!(a.cols, b.rows());
     debug_assert_eq!(c_rows.len(), (r1 - r0) * n);
@@ -199,26 +221,75 @@ fn spmm_row_range(a: &CsrMat, b: &DMat, c_rows: &mut [f64], r0: usize, r1: usize
     let bd = b.data();
     for i in r0..r1 {
         let crow = &mut c_rows[(i - r0) * n..(i - r0 + 1) * n];
-        for idx in a.indptr[i]..a.indptr[i + 1] {
-            let v = a.values[idx];
-            if v == 0.0 {
-                continue;
-            }
-            let j = a.indices[idx] as usize;
+        for_each_nonzero(a, i, |v, j| {
             let brow = &bd[j * n..(j + 1) * n];
             // contiguous axpy: crow += v * brow
             for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
                 *cv += v * bv;
             }
-        }
+        });
     }
 }
 
-/// `C = A · B` for sparse `A` and a dense bundle `B`, with output rows
-/// sharded across `threads` workers. `O(nnz · B.cols())`.
+/// Register-blocked row-range SpMM kernel for a fixed bundle width `K`
+/// (monomorphized per width, mirroring `matmul_skinny_range`'s split): all
+/// `K` output columns of a row accumulate in a `[f64; K]` register array
+/// across the whole nonzero sweep, so each CSR entry is loaded once and C
+/// is written once per row instead of read-modify-written per nonzero.
 ///
-/// Bitwise identical to the serial path for every worker count, and
-/// bitwise identical to [`super::matmul::matmul`]`(A.to_dense(), B)`.
+/// Bitwise identical to [`spmm_row_range_streaming`]: per output element
+/// the floating-point reduction is the same CSR-order, zero-skipping
+/// sequence (via [`for_each_nonzero`]) — only the residence of the
+/// accumulator changes.
+fn spmm_row_range_blocked<const K: usize>(
+    a: &CsrMat,
+    b: &DMat,
+    c_rows: &mut [f64],
+    r0: usize,
+    r1: usize,
+) {
+    debug_assert_eq!(b.cols(), K);
+    debug_assert_eq!(a.cols, b.rows());
+    debug_assert_eq!(c_rows.len(), (r1 - r0) * K);
+    let bd = b.data();
+    for i in r0..r1 {
+        let mut acc = [0.0f64; K];
+        for_each_nonzero(a, i, |v, j| {
+            let brow: &[f64; K] = bd[j * K..(j + 1) * K].try_into().unwrap();
+            for t in 0..K {
+                acc[t] += v * brow[t];
+            }
+        });
+        c_rows[(i - r0) * K..(i - r0 + 1) * K].copy_from_slice(&acc);
+    }
+}
+
+/// A row-range SpMM kernel (the unit of work the serial and sharded
+/// dispatch paths share).
+type RowRangeKernel = fn(&CsrMat, &DMat, &mut [f64], usize, usize);
+
+/// Kernel selection by bundle width: a monomorphized register-blocked
+/// kernel for each k ∈ 1..=16 (the solver's `k ≤ 16` skinny regime, same
+/// split as the dense `matmul_skinny_range`), streaming above that.
+fn kernel_for_width(k: usize) -> RowRangeKernel {
+    macro_rules! blocked_widths {
+        ($($w:literal),*) => {
+            match k {
+                $($w => spmm_row_range_blocked::<$w>,)*
+                _ => spmm_row_range_streaming,
+            }
+        };
+    }
+    blocked_widths!(1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16)
+}
+
+/// `C = A · B` for sparse `A` and a dense bundle `B`, with output rows
+/// sharded across `threads` workers. `O(nnz · B.cols())`. Dispatches to a
+/// register-blocked kernel for `B.cols() ≤ 16`, streaming otherwise.
+///
+/// Bitwise identical to the serial path for every worker count, bitwise
+/// identical to [`spmm_streaming`] for every bundle width, and bitwise
+/// identical to [`super::matmul::matmul`]`(A.to_dense(), B)`.
 pub fn spmm(a: &CsrMat, b: &DMat, threads: usize) -> DMat {
     let mut c = DMat::zeros(a.rows, b.cols());
     spmm_into(a, b, &mut c, threads);
@@ -230,31 +301,53 @@ pub fn spmm(a: &CsrMat, b: &DMat, threads: usize) -> DMat {
 /// preallocated bundles (ℓ SpMMs per operator apply would otherwise mean
 /// ℓ fresh `n×k` allocations per solver step).
 pub fn spmm_into(a: &CsrMat, b: &DMat, c: &mut DMat, threads: usize) {
+    spmm_into_with(a, b, c, threads, kernel_for_width(b.cols()));
+}
+
+/// [`spmm`] forced onto the streaming kernel for every bundle width — the
+/// reference implementation the blocked family is tested and benchmarked
+/// against (`tests/kernel_equivalence.rs`, the `perf_hotpath`
+/// blocked-vs-streaming group). Production callers want [`spmm`].
+pub fn spmm_streaming(a: &CsrMat, b: &DMat, threads: usize) -> DMat {
+    let mut c = DMat::zeros(a.rows, b.cols());
+    spmm_streaming_into(a, b, &mut c, threads);
+    c
+}
+
+/// [`spmm_streaming`] into an existing buffer.
+pub fn spmm_streaming_into(a: &CsrMat, b: &DMat, c: &mut DMat, threads: usize) {
+    spmm_into_with(a, b, c, threads, spmm_row_range_streaming);
+}
+
+/// Shared shard dispatch: every public SpMM entry point funnels here, so
+/// the row partition (and with it the determinism contract) cannot drift
+/// between the blocked and streaming paths.
+fn spmm_into_with(a: &CsrMat, b: &DMat, c: &mut DMat, threads: usize, kernel: RowRangeKernel) {
     assert_eq!(a.cols, b.rows(), "spmm shape mismatch");
     let (m, n) = (a.rows, b.cols());
     assert_eq!((c.rows(), c.cols()), (m, n), "spmm output shape mismatch");
     let shards = row_shards(m, threads);
     if shards.len() <= 1 {
-        spmm_row_range(a, b, c.data_mut(), 0, m);
+        kernel(a, b, c.data_mut(), 0, m);
         return;
     }
     let starts = shard_starts(&shards);
     let elem_lens: Vec<usize> = shards.iter().map(|&len| len * n).collect();
     parallel_shards(c.data_mut(), &elem_lens, |idx, chunk| {
         let r0 = starts[idx];
-        spmm_row_range(a, b, chunk, r0, r0 + shards[idx]);
+        kernel(a, b, chunk, r0, r0 + shards[idx]);
     });
 }
 
-/// Row-range SpMV kernel (shared serial/sharded inner loop).
+/// Row-range SpMV kernel (shared serial/sharded inner loop) — the width-1
+/// reduction through [`for_each_nonzero`], so SpMV shares the SpMM entry
+/// order and zero-skip semantics instead of duplicating the loop.
 fn spmv_row_range(a: &CsrMat, x: &[f64], y_rows: &mut [f64], r0: usize, r1: usize) {
     debug_assert_eq!(a.cols, x.len());
     debug_assert_eq!(y_rows.len(), r1 - r0);
     for i in r0..r1 {
         let mut s = 0.0;
-        for idx in a.indptr[i]..a.indptr[i + 1] {
-            s += a.values[idx] * x[a.indices[idx] as usize];
-        }
+        for_each_nonzero(a, i, |v, j| s += v * x[j]);
         y_rows[i - r0] = s;
     }
 }
@@ -382,6 +475,53 @@ mod tests {
             for &workers in &[1usize, 2, 8] {
                 let s = spmm(&a, &b, workers);
                 assert!(bitwise_eq(&s, &dense), "(n={n},k={k}) at {workers} workers");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_bitwise_match_streaming_for_every_width() {
+        // Every dispatch width 1..=16 plus the first streaming fallback
+        // width (17), serial and sharded: the blocked family must be
+        // indistinguishable from the streaming reference, bit for bit.
+        let a = random_sym_csr(31, 29, 0.3);
+        for k in 1..=17usize {
+            let b = random_bundle(k as u64 + 77, 29, k);
+            let reference = spmm_streaming(&a, &b, 1);
+            for &workers in &[1usize, 2, 8] {
+                assert!(
+                    bitwise_eq(&spmm(&a, &b, workers), &reference),
+                    "blocked k={k} diverged from streaming at {workers} workers"
+                );
+                assert!(
+                    bitwise_eq(&spmm_streaming(&a, &b, workers), &reference),
+                    "streaming k={k} not worker-invariant at {workers} workers"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_handle_empty_rows() {
+        // Rows with no stored entries at all (not even a structural zero):
+        // blocked, streaming, and dense all agree the output row is zero.
+        let m = CsrMat::from_triplets(
+            5,
+            5,
+            &[(0, 0, 0.0), (2, 1, 1.5), (2, 3, -2.0), (4, 4, 3.0)],
+        );
+        let dense = m.to_dense();
+        for k in 1..=17usize {
+            let b = random_bundle(k as u64 ^ 0xE0, 5, k);
+            let want = matmul(&dense, &b);
+            for &workers in &[1usize, 2, 8] {
+                let got = spmm(&m, &b, workers);
+                assert!(bitwise_eq(&got, &want), "k={k}, {workers} workers");
+                assert!(bitwise_eq(&spmm_streaming(&m, &b, workers), &want));
+                // Empty rows 1 and 3 (and the structurally-zero row 0).
+                for row in [0usize, 1, 3] {
+                    assert!(got.row(row).iter().all(|x| x.to_bits() == 0), "row {row}");
+                }
             }
         }
     }

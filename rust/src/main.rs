@@ -120,6 +120,12 @@ fn pipeline_spec(spec: ArgSpec) -> ArgSpec {
         .opt("stop-error", "1e-4", "early-stop subspace error")
         .opt("threads", "1", "worker threads for dense kernels (bitwise-identical output)")
         .opt("op", "dense", "dense (materialize p(L)) | sparse (matrix-free CSR operator)")
+        .opt(
+            "reorder",
+            "none",
+            "none | rcm (Reverse Cuthill-McKee node reordering for cache-local sparse access; \
+             outputs are un-permuted back to input node order)",
+        )
         .opt("backend", "native", "native | xla")
         .opt("artifacts", "artifacts", "artifacts dir (xla backend)")
         .flag("prescale", "pre-scale L by 1/lambda_max before the transform")
@@ -140,6 +146,7 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
         other => anyhow::bail!("unknown backend {other:?}"),
     };
     let op_mode = OpMode::parse(&cfg.str("pipeline.op", &a.str("op")))?;
+    let reorder = sped::graph::Reorder::parse(&cfg.str("pipeline.reorder", &a.str("reorder")))?;
     let ground_truth = !a.flag("no-ground-truth") && cfg.bool("pipeline.ground_truth", true);
     Ok(PipelineConfig {
         k: cfg.usize("pipeline.k", a.usize("k")),
@@ -156,6 +163,7 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
         do_cluster: true,
         threads: cfg.usize("pipeline.threads", a.usize("threads")).max(1),
         op_mode,
+        reorder,
         ground_truth,
     })
 }
@@ -223,6 +231,19 @@ fn cmd_cluster(mut args: Vec<String>) -> anyhow::Result<()> {
     );
     let mut pcfg = build_pipeline_cfg(&a, &cfg)?;
     auto_eta(&graph, &mut pcfg, true);
+    if pcfg.reorder == sped::graph::Reorder::Rcm {
+        // Bandwidth under the RCM order straight from the permutation —
+        // no need to rebuild the relabeled graph just for this line (the
+        // pipeline builds its own copy internally).
+        let inv = sped::graph::invert_permutation(&graph.rcm_permutation());
+        let rcm_bw = graph
+            .edges()
+            .iter()
+            .map(|e| inv[e.u as usize].abs_diff(inv[e.v as usize]))
+            .max()
+            .unwrap_or(0);
+        println!("rcm reorder: bandwidth {} -> {}", graph.bandwidth(), rcm_bw);
+    }
     let out = Pipeline::new(pcfg.clone()).run(&graph)?;
     match out.history.last() {
         Some(last) => println!(

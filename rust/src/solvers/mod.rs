@@ -81,6 +81,12 @@ impl MatVecOp for DenseOp {
 /// `O(nnz)` primitives. Exact (eigh-based) transforms are rejected: they
 /// are the dense oracles the series forms exist to avoid.
 ///
+/// Every SpMM dispatches through [`crate::linalg::sparse::spmm_into`], so
+/// the `k ≤ 16` bundle widths the solvers actually use run on the
+/// register-blocked kernel family (each CSR row's nonzeros swept once, all
+/// `k` columns accumulating in registers) rather than the streaming
+/// reference kernel.
+///
 /// Output is bitwise identical for every worker count (the
 /// [`crate::linalg::sparse`] determinism contract), so solver trajectories
 /// do not depend on `threads`.

@@ -161,8 +161,10 @@ impl SeriesForm {
     /// never an `n×n` intermediate. `O(deg(p)·nnz·k)` work, `O(n·k)` memory.
     ///
     /// This is the solver-step kernel behind `OpMode::MatrixFree`
-    /// (`solvers::SparsePolyOp`). Output is bitwise identical for every
-    /// worker count (the [`crate::linalg::sparse`] determinism contract).
+    /// (`solvers::SparsePolyOp`); each SpMM dispatches to the
+    /// register-blocked kernel family for `k ≤ 16` bundles. Output is
+    /// bitwise identical for every worker count (the
+    /// [`crate::linalg::sparse`] determinism contract).
     pub fn apply_bundle(&self, a: &CsrMat, v: &DMat, threads: usize) -> DMat {
         assert!(a.is_square(), "apply_bundle needs a square operator");
         assert_eq!(a.cols(), v.rows(), "apply_bundle shape mismatch");

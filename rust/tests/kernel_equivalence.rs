@@ -1,0 +1,236 @@
+//! Kernel-equivalence + reordering-invariance harness (the determinism
+//! contract of the matrix-free path, exhaustively):
+//!
+//! 1. the register-blocked SpMM family is **bitwise** equal to the
+//!    streaming reference kernel and to the dense `matmul` of the
+//!    densified matrix, for every bundle width k ∈ 1..=17 (all 16 blocked
+//!    widths plus the first streaming-fallback width), every graph
+//!    generator × both Laplacian variants × 1/2/8 workers, including
+//!    empty rows and structural-zero diagonals;
+//! 2. RCM row reordering is a pure relabeling: permutations round-trip,
+//!    bandwidth shrinks on a scrambled power-law sample, and the pipeline
+//!    recovers the identical partition (after un-permutation) with the
+//!    identical λ*.
+
+use sped::graph::gen::{
+    barabasi_albert, barbell, cliques, erdos_renyi, grid2d, path, ring, ring_of_cliques, sbm,
+    CliqueSpec,
+};
+use sped::graph::{invert_permutation, Graph, Reorder};
+use sped::linalg::sparse::{spmm, spmm_streaming, CsrMat};
+use sped::linalg::DMat;
+use sped::pipeline::{Pipeline, PipelineConfig};
+use sped::transforms::{OpMode, TransformKind};
+use sped::util::rng::Rng;
+
+/// Every generator in the crate, at a size small enough that the full
+/// width × variant × worker sweep stays cheap.
+fn generator_zoo(n: usize, seed: u64) -> Vec<(&'static str, Graph)> {
+    vec![
+        (
+            "cliques",
+            cliques(&CliqueSpec { n, k: (n / 6).max(1), max_short_circuit: 3, seed }).graph,
+        ),
+        ("sbm", sbm(&[n / 2, n - n / 2], 0.8, 0.05, seed).graph),
+        ("erdos_renyi", erdos_renyi(n, 0.3, seed).graph),
+        ("grid2d", grid2d(n / 3 + 1, 3).graph),
+        ("path", path(n).graph),
+        ("ring", ring(n.max(3)).graph),
+        ("barbell", barbell(n / 2 + 2).graph),
+        ("ring_of_cliques", ring_of_cliques(3, n / 3 + 2, seed).graph),
+        ("barabasi_albert", barabasi_albert(n.max(5), 3, seed).graph),
+    ]
+}
+
+fn bitwise_eq(a: &DMat, b: &DMat) -> bool {
+    a.rows() == b.rows()
+        && a.cols() == b.cols()
+        && a.data().iter().zip(b.data().iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn blocked_spmm_bitwise_equals_streaming_and_dense_everywhere() {
+    for (name, g) in generator_zoo(22, 3) {
+        let nn = g.num_nodes();
+        for (variant, sparse) in [
+            ("laplacian", g.laplacian_csr()),
+            ("normalized", g.normalized_laplacian_csr()),
+        ] {
+            let dense = sparse.to_dense();
+            for k in 1..=17usize {
+                let mut rng = Rng::new((k as u64) << 8 ^ nn as u64);
+                let v = DMat::from_fn(nn, k, |_, _| rng.normal());
+                let want = sped::linalg::matmul::matmul(&dense, &v);
+                let reference = spmm_streaming(&sparse, &v, 1);
+                assert!(
+                    bitwise_eq(&reference, &want),
+                    "{name}/{variant}: streaming vs dense at k={k}"
+                );
+                for workers in [1usize, 2, 8] {
+                    assert!(
+                        bitwise_eq(&spmm(&sparse, &v, workers), &reference),
+                        "{name}/{variant}: blocked vs streaming at k={k}, {workers} workers"
+                    );
+                    assert!(
+                        bitwise_eq(&spmm_streaming(&sparse, &v, workers), &reference),
+                        "{name}/{variant}: streaming not worker-invariant at k={k}, {workers} workers"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_spmm_empty_rows_and_structural_zero_diagonals() {
+    // Rows 1 and 3 store nothing at all; row 0 stores only an explicit 0.0
+    // diagonal (the isolated-node Laplacian shape); row 2 mixes signs.
+    let m = CsrMat::from_triplets(
+        6,
+        6,
+        &[
+            (0, 0, 0.0),
+            (2, 1, 1.5),
+            (2, 2, 0.0),
+            (2, 4, -2.0),
+            (4, 0, 0.25),
+            (4, 4, 3.0),
+            (5, 5, -1.0),
+        ],
+    );
+    let dense = m.to_dense();
+    for k in 1..=17usize {
+        let mut rng = Rng::new(k as u64 + 400);
+        let v = DMat::from_fn(6, k, |_, _| rng.normal());
+        let want = sped::linalg::matmul::matmul(&dense, &v);
+        for workers in [1usize, 2, 8] {
+            let got = spmm(&m, &v, workers);
+            assert!(bitwise_eq(&got, &want), "k={k}, {workers} workers");
+            assert!(bitwise_eq(&spmm_streaming(&m, &v, workers), &want));
+            for row in [0usize, 1, 3] {
+                assert!(got.row(row).iter().all(|x| x.to_bits() == 0), "row {row} not +0.0");
+            }
+        }
+    }
+}
+
+#[test]
+fn matrix_free_operator_rides_the_blocked_kernel_deterministically() {
+    // SparsePolyOp (ℓ SpMMs per apply) end-to-end over the blocked widths
+    // the solvers use: worker counts stay bitwise-invariant, and k > 16
+    // (streaming fallback) behaves identically.
+    use sped::solvers::{MatVecOp, SparsePolyOp};
+    let g = cliques(&CliqueSpec { n: 30, k: 3, max_short_circuit: 2, seed: 9 }).graph;
+    for k in [1usize, 4, 8, 16, 17] {
+        let v = sped::solvers::random_init(30, k, 21);
+        let mk = |threads| {
+            let opts = sped::transforms::BuildOptions { threads, ..Default::default() };
+            SparsePolyOp::from_graph(&g, TransformKind::LimitNegExp { ell: 31 }, &opts).unwrap()
+        };
+        let serial = mk(1).apply(&v);
+        for threads in [2usize, 8] {
+            assert!(
+                bitwise_eq(&mk(threads).apply(&v), &serial),
+                "k={k} diverged at {threads} workers"
+            );
+        }
+    }
+}
+
+/// Mean edge span `Σ_e |u − v| / |E|` — the profile counterpart of
+/// [`Graph::bandwidth`]; robust to the single widest hub edge.
+fn mean_span(g: &Graph) -> f64 {
+    g.edges().iter().map(|e| (e.v - e.u) as f64).sum::<f64>() / g.num_edges().max(1) as f64
+}
+
+#[test]
+fn rcm_roundtrips_and_reduces_bandwidth_on_power_law() {
+    // A power-law sample whose natural order is deliberately scrambled by
+    // an affine relabeling, so the baseline carries no locality at all —
+    // the seed-triangle edge (0, 1) alone is forced to span 379 of the 400
+    // positions (19⁻¹ ≡ 379 mod 400), so the baseline bandwidth is pinned.
+    let n = 400usize;
+    let ba = barabasi_albert(n, 2, 11).graph;
+    let scramble: Vec<usize> = (0..n).map(|i| (i * 19) % n).collect(); // gcd(19, 400) = 1
+    let scrambled = ba.permute(&scramble).unwrap();
+    assert!(scrambled.bandwidth() >= 379, "scramble too weak: {}", scrambled.bandwidth());
+
+    let order = scrambled.rcm_permutation();
+    // perm ∘ inv-perm = id, both ways.
+    let inv = invert_permutation(&order);
+    for i in 0..n {
+        assert_eq!(inv[order[i]], i);
+        assert_eq!(order[inv[i]], i);
+    }
+    // Applying the ordering and then its inverse recovers the graph.
+    let rcm_graph = scrambled.permute(&order).unwrap();
+    assert_eq!(rcm_graph.permute(&inv).unwrap().edges(), scrambled.edges());
+    // Bandwidth shrinks (RCM edges only connect BFS-adjacent levels, so no
+    // edge can span the whole ordering the way the scramble forces)...
+    assert!(
+        rcm_graph.bandwidth() < scrambled.bandwidth(),
+        "rcm bandwidth {} !< scrambled {}",
+        rcm_graph.bandwidth(),
+        scrambled.bandwidth()
+    );
+    // ...and so does the mean span — the bulk-locality effect the SpMM
+    // bundle accesses actually feel, by a wide margin.
+    assert!(
+        mean_span(&rcm_graph) < 0.75 * mean_span(&scrambled),
+        "rcm mean span {:.1} !< 0.75 × scrambled {:.1}",
+        mean_span(&rcm_graph),
+        mean_span(&scrambled)
+    );
+}
+
+#[test]
+fn rcm_pipeline_recovers_identical_clusters_and_lambda_star() {
+    // Pipeline-level invariance: cluster a *scrambled* clique graph with
+    // --reorder rcm and with --reorder none; after the pipeline's internal
+    // un-permutation both must yield the same partition of the same input
+    // node ids, and the same λ* (exactly 0.0 for the negexp family).
+    let gg = cliques(&CliqueSpec { n: 48, k: 3, max_short_circuit: 2, seed: 11 });
+    let n = gg.graph.num_nodes();
+    let scramble: Vec<usize> = (0..n).map(|i| (i * 7) % n).collect(); // gcd(7, 48) = 1
+    let scrambled = gg.graph.permute(&scramble).unwrap();
+    // Labels move with the nodes: scrambled node i is original node scramble[i].
+    let scrambled_labels: Vec<usize> = scramble.iter().map(|&old| gg.labels[old]).collect();
+
+    let mk = |reorder| PipelineConfig {
+        k: 3,
+        transform: TransformKind::LimitNegExp { ell: 51 },
+        solver: "subspace".into(),
+        steps: 400,
+        eval_every: 20,
+        stop_error: 0.0,
+        op_mode: OpMode::MatrixFree,
+        ground_truth: false,
+        reorder,
+        ..Default::default()
+    };
+    let plain = Pipeline::new(mk(Reorder::None)).run(&scrambled).unwrap();
+    let rcm = Pipeline::new(mk(Reorder::Rcm)).run(&scrambled).unwrap();
+
+    assert_eq!(plain.lambda_star.to_bits(), rcm.lambda_star.to_bits());
+    assert_eq!(rcm.lambda_star, 0.0, "negexp family reverses with λ* = 0");
+
+    // Identical partition up to cluster-id naming.
+    let canon = |a: &[usize]| {
+        let mut map = std::collections::HashMap::new();
+        a.iter()
+            .map(|&c| {
+                let next = map.len();
+                *map.entry(c).or_insert(next)
+            })
+            .collect::<Vec<usize>>()
+    };
+    let a_plain = &plain.clustering.as_ref().unwrap().assignments;
+    let a_rcm = &rcm.clustering.as_ref().unwrap().assignments;
+    assert_eq!(canon(a_plain), canon(a_rcm), "reordered partition differs");
+    // And both recover the planted communities of the scrambled graph.
+    let ari = sped::cluster::adjusted_rand_index(a_rcm, &scrambled_labels);
+    assert!(ari > 0.9, "ARI {ari}");
+    // Embeddings span the same converged subspace.
+    let err = sped::linalg::metrics::subspace_error(&plain.embedding, &rcm.embedding);
+    assert!(err < 1e-6, "subspace err {err}");
+}

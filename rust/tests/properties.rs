@@ -126,6 +126,44 @@ fn property_spmm_bitwise_matches_dense_matmul_across_generators() {
     });
 }
 
+#[test]
+fn property_minibatch_estimator_unbiased_with_tolerance_shrinking_in_batch() {
+    // Eq 8's stochastic model: each MinibatchLaplacianOp application is an
+    // unbiased draw of (λ*I − L)·V, so the average of many applications
+    // converges to the exact product — and with a fixed number of
+    // applications, the Monte-Carlo error shrinks as the batch grows
+    // (σ ∝ 1/√(reps·B)).
+    use sped::solvers::stochastic::MinibatchLaplacianOp;
+    use sped::solvers::MatVecOp;
+    let gg = cliques(&CliqueSpec { n: 18, k: 2, max_short_circuit: 1, seed: 2 });
+    let l = gg.graph.laplacian();
+    let lam_star = 1.1 * sped::linalg::funcs::power_lambda_max(&l, 100);
+    let v = sped::solvers::random_init(18, 3, 7);
+    let mut expect = v.clone();
+    expect.scale(lam_star);
+    expect.axpy(-1.0, &sped::linalg::matmul::matmul(&l, &v));
+    let reps = 2000usize;
+    let mut errs = Vec::new();
+    for (i, &batch) in [4usize, 16, 64].iter().enumerate() {
+        let mut op = MinibatchLaplacianOp::new(&gg.graph, lam_star, batch, 100 + i as u64);
+        let mut acc = DMat::zeros(18, 3);
+        for _ in 0..reps {
+            acc.axpy(1.0 / reps as f64, &op.apply(&v));
+        }
+        let rel = (&acc - &expect).max_abs() / expect.max_abs();
+        // Tolerance calibrated against the B=8 × reps=3000 bound of 0.12
+        // in `solvers::stochastic`'s unit test, scaled by 1/√(reps·B) and
+        // doubled for slack: the bound itself shrinks as the batch grows.
+        let tol = 0.24 * ((3000.0 * 8.0) / (reps as f64 * batch as f64)).sqrt();
+        assert!(rel < tol, "B={batch}: rel err {rel} ≥ tol {tol}");
+        errs.push(rel);
+    }
+    assert!(
+        errs[2] < errs[0],
+        "error did not shrink with batch size: {errs:?}"
+    );
+}
+
 /// The Table-2 transform set, on a spectrum pre-scaled into [0, 1] (the
 /// regime where every series in the table converges; pre-scaling is itself
 /// eigenvector-preserving).
