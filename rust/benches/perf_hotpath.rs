@@ -16,6 +16,10 @@
 //!   ℓ-SpMM matrix-free solver step), plus the RCM reordering locality
 //!   effect on a scrambled power-law graph — written to
 //!   `BENCH_spmm_blocked.json`.
+//! * Polynomial bases: the monomial solver step unfused (pre-refactor
+//!   SpMM + scale + axpy) vs fused (`spmm_step_into`) vs the
+//!   Chebyshev-basis three-term recurrence, with the max float divergence
+//!   between the bases — written to `BENCH_poly_basis.json`.
 //! * XLA path (when artifacts exist): chunked solver steps, poly build,
 //!   matpow, matvec round-trip — including the PJRT call overhead.
 //!
@@ -300,6 +304,117 @@ fn spmm_blocked_group(suite: &mut BenchSuite, threads: usize) {
     suite.report(&format!("wrote {}", path.display()));
 }
 
+/// Horner-vs-Chebyshev polynomial bases (the basis-generic operator
+/// acceptance measurement): per (n, ℓ) on the clique workload at the
+/// solver's k = 16 bundle width, time the `LimitNegExp` solver step three
+/// ways — the pre-refactor **unfused** monomial composition
+/// (SpMM + `scale` + `axpy` per degree), the **fused** monomial path
+/// (one `spmm_step_into` pass per degree, bitwise-equal by contract), and
+/// the **Chebyshev recurrence** through the fused kernel — and record the
+/// max float divergence between the bases. Emits `BENCH_poly_basis.json`
+/// at the repo root for CI trend tracking.
+fn poly_basis_group(suite: &mut BenchSuite, threads: usize) {
+    use sped::linalg::sparse::{spmm_into, spmm_step_into};
+    let ns: &[usize] = &[1024, 4096];
+    let ells: &[usize] = if fast_mode() { &[15] } else { &[15, 251] };
+    let k = 16usize;
+    let step_reps = if fast_mode() { 2 } else { 5 };
+    let mut rows: Vec<Vec<(String, JsonVal)>> = Vec::new();
+    for &n in ns {
+        // Same 16-node-clique community workload as the other sparse
+        // groups, prescaled so the spectrum sits in [0, ~1] — the regime
+        // where both bases are numerically meaningful and the recorded
+        // divergence is an accuracy signal, not overflow noise.
+        let gg = cliques(&CliqueSpec { n, k: (n / 16).max(2), max_short_circuit: 2, seed: 42 });
+        let mut l = gg.graph.laplacian_csr();
+        let lam = sped::linalg::sparse::power_lambda_max_csr(&l, 100, threads) * 1.01;
+        l.scale_values(1.0 / lam);
+        let nnz = l.nnz();
+        let v = sped::solvers::random_init(n, k, 7);
+        for &ell in ells {
+            let kind = TransformKind::LimitNegExp { ell };
+            // Monomial basis, unfused: the pre-refactor NegPower loop —
+            // three passes over the bundle per degree.
+            let unfused = || {
+                let inv = -1.0 / ell as f64;
+                let mut w = v.clone();
+                let mut t = DMat::zeros(n, k);
+                for _ in 0..ell {
+                    spmm_into(&l, &w, &mut t, threads);
+                    t.scale(inv);
+                    t.axpy(1.0, &w);
+                    std::mem::swap(&mut w, &mut t);
+                }
+                w.scale(-1.0);
+                w
+            };
+            // Monomial basis, fused: one pass per degree.
+            let fused = || {
+                let inv = -1.0 / ell as f64;
+                let mut w = v.clone();
+                let mut t = DMat::zeros(n, k);
+                for _ in 0..ell {
+                    spmm_step_into(&l, &w, &v, 1.0, inv, 0.0, &mut t, threads);
+                    std::mem::swap(&mut w, &mut t);
+                }
+                w.scale(-1.0);
+                w
+            };
+            // Chebyshev basis: three-term recurrence, fused steps, on the
+            // same safe domain policy as the production operator (rho = 1
+            // after prescale, widened to the guaranteed Gershgorin bound).
+            let (lo, hi) = sped::transforms::cheb_domain(1.0, l.gershgorin_bound());
+            let cheb = kind.cheb_series(lo, hi).expect("polynomial kind");
+            let (t_unfused, w_u) = best_of(step_reps, unfused);
+            let (t_fused, w_f) = best_of(step_reps, fused);
+            let (t_cheb, w_c) = best_of(step_reps, || cheb.apply_bundle(&l, &v, threads));
+            assert!(
+                bitwise_eq(&w_u, &w_f),
+                "fused/unfused monomial divergence at n={n}, ell={ell} (bitwise contract broken)"
+            );
+            let divergence = (&w_c - &w_u).max_abs();
+            assert!(
+                divergence < 1e-6,
+                "basis divergence {divergence} at n={n}, ell={ell}"
+            );
+            suite.report(&format!(
+                "poly-basis n={n} ell={ell} k={k} nnz={nnz} ({threads}w): step unfused {} | fused {} | {:.2}x; cheb recurrence {} | {:.2}x vs unfused | max divergence {divergence:.2e}",
+                human_time(t_unfused),
+                human_time(t_fused),
+                t_unfused / t_fused.max(1e-12),
+                human_time(t_cheb),
+                t_unfused / t_cheb.max(1e-12),
+            ));
+            rows.push(vec![
+                ("kind".into(), JsonVal::Str("limit_negexp".into())),
+                ("n".into(), JsonVal::Int(n as u64)),
+                ("ell".into(), JsonVal::Int(ell as u64)),
+                ("k".into(), JsonVal::Int(k as u64)),
+                ("nnz".into(), JsonVal::Int(nnz as u64)),
+                ("threads".into(), JsonVal::Int(threads as u64)),
+                ("horner_unfused_s".into(), JsonVal::Num(t_unfused)),
+                ("horner_fused_s".into(), JsonVal::Num(t_fused)),
+                ("cheb_recurrence_s".into(), JsonVal::Num(t_cheb)),
+                (
+                    "fused_step_speedup".into(),
+                    JsonVal::Num(t_unfused / t_fused.max(1e-12)),
+                ),
+                (
+                    "cheb_vs_unfused_speedup".into(),
+                    JsonVal::Num(t_unfused / t_cheb.max(1e-12)),
+                ),
+                ("max_divergence".into(), JsonVal::Num(divergence)),
+                ("fast_mode".into(), JsonVal::Int(u64::from(fast_mode()))),
+            ]);
+        }
+    }
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_poly_basis.json");
+    suite.write_json(&path, &rows).expect("write BENCH_poly_basis.json");
+    suite.report(&format!("wrote {}", path.display()));
+}
+
 fn main() {
     let mut suite = BenchSuite::new("perf_hotpath");
     let threads = threads_param();
@@ -447,6 +562,13 @@ fn main() {
     // it with the literal filter "spmm-blocked").
     if suite.selected("spmm-blocked kernels + rcm locality") {
         spmm_blocked_group(&mut suite, threads);
+    }
+
+    // ---- polynomial bases: unfused vs fused Horner vs Chebyshev ----
+    // CSR-only (prescale via CSR power iteration, no dense builds), so it
+    // runs unconditionally like spmm-blocked (CI filter: "poly-basis").
+    if suite.selected("poly-basis horner vs chebyshev recurrence") {
+        poly_basis_group(&mut suite, threads);
     }
 
     // ---- L3: clustering + walks ----

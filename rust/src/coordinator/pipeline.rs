@@ -16,7 +16,7 @@ use crate::linalg::eigh;
 use crate::linalg::metrics::ConvergenceHistory;
 use crate::runtime::{pad_matrix, pad_rows, Runtime, XlaChunkRunner};
 use crate::solvers::{solver_by_name, DenseOp, MatVecOp, RunConfig, SparsePolyOp};
-use crate::transforms::{build_solver_matrix, BuildOptions, OpMode, TransformKind};
+use crate::transforms::{build_solver_matrix, BuildOptions, OpMode, PolyBasis, TransformKind};
 use anyhow::{bail, Context, Result};
 use std::time::Instant;
 
@@ -59,6 +59,15 @@ pub struct PipelineConfig {
     /// `n×n`, or matrix-free sparse (`O(ℓ·nnz·k)` per step, no `n×n`
     /// allocation after graph load).
     pub op_mode: OpMode,
+    /// A precomputed node order for [`Reorder::Rcm`] (`order[new] = old`,
+    /// the [`crate::graph::Graph::rcm_permutation`] convention), e.g. one
+    /// persisted alongside the graph by
+    /// [`crate::graph::io::save_edge_list_with_order`] and loaded back via
+    /// the `# order:` header. When present the pipeline **skips the
+    /// `O(E log E)` RCM rebuild** and relabels with the stored order
+    /// directly (validated as a permutation; invalid orders error out).
+    /// Ignored under [`Reorder::None`].
+    pub rcm_order: Option<Vec<usize>>,
     /// Node reordering applied before the solve (`--reorder none|rcm`).
     /// [`Reorder::Rcm`] relabels nodes by Reverse Cuthill–McKee so the CSR
     /// nonzeros cluster around the diagonal — cache-local bundle access for
@@ -97,6 +106,7 @@ impl Default for PipelineConfig {
             do_cluster: true,
             threads: 1,
             op_mode: OpMode::DenseMaterialized,
+            rcm_order: None,
             reorder: Reorder::None,
             ground_truth: true,
         }
@@ -150,7 +160,13 @@ impl Pipeline {
         match cfg.reorder {
             Reorder::None => self.run_ordered(graph),
             Reorder::Rcm => {
-                let order = graph.rcm_permutation();
+                // A persisted order (graph IO `# order:` header →
+                // `PipelineConfig::rcm_order`) skips the O(E log E)
+                // rebuild; `permute` validates it is a permutation.
+                let order = match &cfg.rcm_order {
+                    Some(stored) => stored.clone(),
+                    None => graph.rcm_permutation(),
+                };
                 let permuted = graph.permute(&order)?;
                 let mut out = self.run_ordered(&permuted)?;
                 // Permuted row `new` holds node `order[new]`: scatter the
@@ -183,6 +199,14 @@ impl Pipeline {
             Backend::Xla { artifacts_dir } => {
                 if cfg.op_mode == OpMode::MatrixFree {
                     bail!("matrix-free op mode requires the native backend");
+                }
+                if cfg.build.basis == PolyBasis::Chebyshev {
+                    // The AOT artifacts encode the Horner (monomial)
+                    // evaluation; no silent fallback.
+                    bail!(
+                        "--basis chebyshev requires the native backend (the XLA \
+                         poly_horner/matpow artifacts are monomial-basis)"
+                    );
                 }
                 if !cfg.ground_truth {
                     // The XLA chunk protocol consumes the oracle bundle.
@@ -610,6 +634,108 @@ mod tests {
         );
         let ari = adjusted_rand_index(&rcm.clustering.as_ref().unwrap().assignments, &gg.labels);
         assert!(ari > 0.9, "ARI {ari}");
+    }
+
+    #[test]
+    fn chebyshev_basis_pipeline_matches_monomial_partition() {
+        // --basis chebyshev is an evaluation detail: same clusters, same
+        // λ* (exactly 0 for the negexp family), near-identical embedding
+        // subspace as the monomial default, in both op modes.
+        let gg = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 9 });
+        let mk = |basis, op_mode| PipelineConfig {
+            k: 3,
+            transform: TransformKind::LimitNegExp { ell: 51 },
+            solver: "subspace".into(),
+            steps: 300,
+            eval_every: 20,
+            stop_error: 0.0,
+            op_mode,
+            ground_truth: false,
+            build: BuildOptions { basis, ..BuildOptions::default() },
+            ..Default::default()
+        };
+        for op_mode in [OpMode::DenseMaterialized, OpMode::MatrixFree] {
+            let mono = Pipeline::new(mk(PolyBasis::Monomial, op_mode)).run(&gg.graph).unwrap();
+            let cheb = Pipeline::new(mk(PolyBasis::Chebyshev, op_mode)).run(&gg.graph).unwrap();
+            assert_eq!(mono.lambda_star, 0.0);
+            assert_eq!(cheb.lambda_star, 0.0);
+            let err =
+                crate::linalg::metrics::subspace_error(&mono.embedding, &cheb.embedding);
+            assert!(err < 1e-6, "{op_mode:?}: basis subspace err {err}");
+            assert_eq!(
+                mono.clustering.as_ref().unwrap().assignments,
+                cheb.clustering.as_ref().unwrap().assignments,
+                "{op_mode:?}: partitions differ across bases"
+            );
+        }
+    }
+
+    #[test]
+    fn chebyshev_basis_rejected_on_xla_and_exact_transforms() {
+        let gg = cliques(&CliqueSpec { n: 12, k: 2, max_short_circuit: 1, seed: 2 });
+        let cheb_build = BuildOptions { basis: PolyBasis::Chebyshev, ..BuildOptions::default() };
+        let cfg = PipelineConfig {
+            k: 2,
+            build: cheb_build,
+            backend: Backend::Xla { artifacts_dir: "artifacts".into() },
+            ..Default::default()
+        };
+        let err = Pipeline::new(cfg).run(&gg.graph).unwrap_err();
+        assert!(format!("{err:#}").contains("native backend"), "{err:#}");
+        // Exact transform + chebyshev: clear error, not a silent fallback.
+        let cfg = PipelineConfig {
+            k: 2,
+            transform: TransformKind::NegExp,
+            build: cheb_build,
+            ..Default::default()
+        };
+        let err = Pipeline::new(cfg).run(&gg.graph).unwrap_err();
+        assert!(format!("{err:#}").contains("--basis monomial"), "{err:#}");
+    }
+
+    #[test]
+    fn stored_rcm_order_skips_rebuild_and_matches_computed() {
+        // Feeding the pipeline the persisted permutation must reproduce
+        // the freshly-computed-RCM run bit for bit (it is the same order),
+        // and a corrupt stored order must error, not mis-cluster.
+        let gg = cliques(&CliqueSpec { n: 48, k: 3, max_short_circuit: 2, seed: 11 });
+        let order = gg.graph.rcm_permutation();
+        let mk = |rcm_order| PipelineConfig {
+            k: 3,
+            transform: TransformKind::LimitNegExp { ell: 51 },
+            solver: "subspace".into(),
+            steps: 300,
+            eval_every: 20,
+            stop_error: 0.0,
+            op_mode: OpMode::MatrixFree,
+            ground_truth: false,
+            reorder: crate::graph::Reorder::Rcm,
+            rcm_order,
+            ..Default::default()
+        };
+        let fresh = Pipeline::new(mk(None)).run(&gg.graph).unwrap();
+        let stored = Pipeline::new(mk(Some(order.clone()))).run(&gg.graph).unwrap();
+        assert!(fresh
+            .embedding
+            .data()
+            .iter()
+            .zip(stored.embedding.data().iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(
+            fresh.clustering.as_ref().unwrap().assignments,
+            stored.clustering.as_ref().unwrap().assignments
+        );
+        // Not a permutation → rejected by the relabeling validation.
+        let mut bad = order;
+        bad[0] = bad[1];
+        assert!(Pipeline::new(mk(Some(bad))).run(&gg.graph).is_err());
+        // Under Reorder::None a stored order is ignored entirely.
+        let cfg = PipelineConfig {
+            reorder: crate::graph::Reorder::None,
+            rcm_order: Some(vec![0, 1, 2]), // wrong length, but unused
+            ..mk(None)
+        };
+        assert!(Pipeline::new(cfg).run(&gg.graph).is_ok());
     }
 
     #[test]

@@ -2,16 +2,24 @@
 //!
 //! Format: one edge per line, `u v [w]`, `#` comments, blank lines ignored.
 //! Node count is `max id + 1` unless a `# nodes: N` header is present.
+//!
+//! An optional `# order: i0 i1 …` header persists a node ordering
+//! (`order[new] = old`, the [`Graph::rcm_permutation`] convention)
+//! alongside the graph, so repeated solves on the same file can skip the
+//! `O(E log E)` RCM rebuild (`PipelineConfig::rcm_order`). The order is
+//! validated as a permutation of `0..n` at parse time.
 
 use super::Graph;
 use anyhow::{bail, Context, Result};
 use std::io::Write;
 use std::path::Path;
 
-/// Parse a graph from edge-list text.
-pub fn parse_edge_list(text: &str) -> Result<Graph> {
+/// Parse a graph from edge-list text, returning the persisted node order
+/// (the `# order:` header) when one is present.
+pub fn parse_edge_list_with_order(text: &str) -> Result<(Graph, Option<Vec<usize>>)> {
     let mut edges: Vec<(usize, usize, f64)> = Vec::new();
     let mut declared_n: Option<usize> = None;
+    let mut order: Option<Vec<usize>> = None;
     let mut max_id = 0usize;
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.trim();
@@ -25,6 +33,15 @@ pub fn parse_edge_list(text: &str) -> Result<Graph> {
                         .parse()
                         .with_context(|| format!("line {}: bad node count", lineno + 1))?,
                 );
+            } else if let Some(ids) = rest.trim().strip_prefix("order:") {
+                let parsed: Result<Vec<usize>> = ids
+                    .split_whitespace()
+                    .map(|s| {
+                        s.parse::<usize>()
+                            .with_context(|| format!("line {}: bad order id {s:?}", lineno + 1))
+                    })
+                    .collect();
+                order = Some(parsed?);
             }
             continue;
         }
@@ -52,26 +69,66 @@ pub fn parse_edge_list(text: &str) -> Result<Graph> {
         edges.push((u, v, w));
     }
     let n = declared_n.unwrap_or(if edges.is_empty() { 0 } else { max_id + 1 });
-    Graph::from_edges(n, &edges)
+    let g = Graph::from_edges(n, &edges)?;
+    if let Some(ord) = &order {
+        // Validate eagerly so a corrupt header fails at load, not deep in
+        // the pipeline: must be a permutation of 0..n.
+        if ord.len() != n {
+            bail!("# order: header has {} ids for n = {n} nodes", ord.len());
+        }
+        let mut seen = vec![false; n];
+        for &v in ord {
+            if v >= n || seen[v] {
+                bail!("# order: header is not a permutation of 0..{n}");
+            }
+            seen[v] = true;
+        }
+    }
+    Ok((g, order))
+}
+
+/// Parse a graph from edge-list text (node order, if any, discarded).
+pub fn parse_edge_list(text: &str) -> Result<Graph> {
+    Ok(parse_edge_list_with_order(text)?.0)
+}
+
+/// Load a graph and its optional persisted node order from a file.
+pub fn load_edge_list_with_order<P: AsRef<Path>>(path: P) -> Result<(Graph, Option<Vec<usize>>)> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse_edge_list_with_order(&text)
 }
 
 /// Load a graph from an edge-list file.
 pub fn load_edge_list<P: AsRef<Path>>(path: P) -> Result<Graph> {
-    let text = std::fs::read_to_string(&path)
-        .with_context(|| format!("reading {}", path.as_ref().display()))?;
-    parse_edge_list(&text)
+    Ok(load_edge_list_with_order(path)?.0)
 }
 
 /// Save a graph as an edge list (with a `# nodes:` header so isolated
-/// trailing nodes round-trip).
-pub fn save_edge_list<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
+/// trailing nodes round-trip), optionally persisting a node ordering
+/// (`order[new] = old` — e.g. [`Graph::rcm_permutation`]) as a
+/// `# order:` header so later loads skip recomputing it.
+pub fn save_edge_list_with_order<P: AsRef<Path>>(
+    g: &Graph,
+    path: P,
+    order: Option<&[usize]>,
+) -> Result<()> {
     if let Some(parent) = path.as_ref().parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
         }
     }
+    if let Some(ord) = order {
+        if ord.len() != g.num_nodes() {
+            bail!("order has {} ids for n = {} nodes", ord.len(), g.num_nodes());
+        }
+    }
     let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
     writeln!(f, "# nodes: {}", g.num_nodes())?;
+    if let Some(ord) = order {
+        let ids: Vec<String> = ord.iter().map(|v| v.to_string()).collect();
+        writeln!(f, "# order: {}", ids.join(" "))?;
+    }
     for e in g.edges() {
         if (e.w - 1.0).abs() < 1e-15 {
             writeln!(f, "{} {}", e.u, e.v)?;
@@ -80,6 +137,11 @@ pub fn save_edge_list<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Save a graph as an edge list without a persisted order.
+pub fn save_edge_list<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
+    save_edge_list_with_order(g, path, None)
 }
 
 #[cfg(test)]
@@ -130,5 +192,51 @@ mod tests {
         let g = parse_edge_list("").unwrap();
         assert_eq!(g.num_nodes(), 0);
         assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn order_header_roundtrips() {
+        let g = crate::graph::gen::cliques(&crate::graph::gen::CliqueSpec {
+            n: 24,
+            k: 3,
+            max_short_circuit: 2,
+            seed: 7,
+        })
+        .graph;
+        let order = g.rcm_permutation();
+        let dir = std::env::temp_dir().join("sped_io_order_test");
+        let path = dir.join("g.edges");
+        save_edge_list_with_order(&g, &path, Some(&order)).unwrap();
+        let (g2, loaded) = load_edge_list_with_order(&path).unwrap();
+        assert_eq!(g.edges(), g2.edges());
+        assert_eq!(loaded.as_deref(), Some(order.as_slice()));
+        // The legacy loader ignores the header transparently.
+        let g3 = load_edge_list(&path).unwrap();
+        assert_eq!(g.edges(), g3.edges());
+        // Saving without an order yields None on load.
+        let plain = dir.join("plain.edges");
+        save_edge_list(&g, &plain).unwrap();
+        assert_eq!(load_edge_list_with_order(&plain).unwrap().1, None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn order_header_validation() {
+        // Wrong length.
+        assert!(parse_edge_list_with_order("# nodes: 3\n# order: 0 1\n0 1\n").is_err());
+        // Duplicate id.
+        assert!(parse_edge_list_with_order("# nodes: 3\n# order: 0 0 1\n0 1\n").is_err());
+        // Out-of-range id.
+        assert!(parse_edge_list_with_order("# nodes: 3\n# order: 0 1 5\n0 1\n").is_err());
+        // Garbage id.
+        assert!(parse_edge_list_with_order("# nodes: 3\n# order: a b c\n0 1\n").is_err());
+        // A valid header parses.
+        let (g, ord) = parse_edge_list_with_order("# nodes: 3\n# order: 2 0 1\n0 1\n").unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(ord, Some(vec![2, 0, 1]));
+        // Mismatched save is rejected before writing.
+        let dir = std::env::temp_dir().join("sped_io_order_bad");
+        assert!(save_edge_list_with_order(&g, dir.join("x.edges"), Some(&[0, 1])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

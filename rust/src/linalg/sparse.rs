@@ -17,6 +17,13 @@
 //!   in a `[f64; K]` register array while sweeping each CSR row's
 //!   nonzeros once ([`spmm_streaming`] keeps the generic streaming kernel
 //!   callable as the reference).
+//! * [`spmm_step_into`] — the **fused solver-step kernel**: one pass over
+//!   the bundle computing `C = α·W + β·(A·W) + γ·U`, the exact shape of
+//!   every polynomial-operator recurrence step (Horner's
+//!   `B·R + c_i·V`, the NegPower `(I − L/ℓ)·W`, and the Chebyshev
+//!   three-term `2Y·T_j − T_{j−1}`). Replaces the three-pass
+//!   SpMM + `scale` + `axpy` composition — same register-blocked kernel
+//!   family, ~⅓ the bundle memory traffic, bit-for-bit the same result.
 //! * [`spmv`], [`power_lambda_max_csr`] — sparse matrix–vector product and
 //!   the λ_max power iteration on top of it (the dense-free replacement for
 //!   `linalg::funcs::power_lambda_max` in operator construction).
@@ -339,6 +346,190 @@ fn spmm_into_with(a: &CsrMat, b: &DMat, c: &mut DMat, threads: usize, kernel: Ro
     });
 }
 
+/// Streaming row-range kernel for the fused solver step (any bundle
+/// width): the SpMM accumulation of [`spmm_row_range_streaming`] followed
+/// by the in-register combine `c = c·β + α·w + γ·u` per row — the same
+/// floating-point sequence as SpMM, then `scale(β)`, then `axpy(α, W)`,
+/// then `axpy(γ, U)`, with the α/γ terms conditionally skipped exactly
+/// like the unfused callers skip zero-coefficient axpys.
+#[allow(clippy::too_many_arguments)]
+fn spmm_step_row_range_streaming(
+    a: &CsrMat,
+    w: &DMat,
+    u: &DMat,
+    c_rows: &mut [f64],
+    r0: usize,
+    r1: usize,
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+) {
+    let n = w.cols();
+    debug_assert_eq!(a.cols, w.rows());
+    debug_assert_eq!(c_rows.len(), (r1 - r0) * n);
+    c_rows.fill(0.0);
+    let wd = w.data();
+    let ud = u.data();
+    for i in r0..r1 {
+        let crow = &mut c_rows[(i - r0) * n..(i - r0 + 1) * n];
+        for_each_nonzero(a, i, |v, j| {
+            let wrow = &wd[j * n..(j + 1) * n];
+            for (cv, &wv) in crow.iter_mut().zip(wrow.iter()) {
+                *cv += v * wv;
+            }
+        });
+        let wrow = &wd[i * n..(i + 1) * n];
+        let urow = &ud[i * n..(i + 1) * n];
+        for t in 0..n {
+            let mut x = crow[t] * beta;
+            if alpha != 0.0 {
+                x += alpha * wrow[t];
+            }
+            if gamma != 0.0 {
+                x += gamma * urow[t];
+            }
+            crow[t] = x;
+        }
+    }
+}
+
+/// Register-blocked row-range kernel for the fused solver step, fixed
+/// bundle width `K` (the same monomorphized family as
+/// [`spmm_row_range_blocked`]): the whole step — SpMM accumulation *and*
+/// the α/β/γ combine — happens in the `[f64; K]` register array, so the
+/// bundle is read once and `C` written once per row, versus the three
+/// read-modify-write passes of the unfused SpMM + `scale` + `axpy`
+/// composition. Bitwise identical to that composition: per output element
+/// the reduction is the same [`for_each_nonzero`] sequence and the
+/// combine applies the identical operations in the identical order.
+#[allow(clippy::too_many_arguments)]
+fn spmm_step_row_range_blocked<const K: usize>(
+    a: &CsrMat,
+    w: &DMat,
+    u: &DMat,
+    c_rows: &mut [f64],
+    r0: usize,
+    r1: usize,
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+) {
+    debug_assert_eq!(w.cols(), K);
+    debug_assert_eq!(a.cols, w.rows());
+    debug_assert_eq!(c_rows.len(), (r1 - r0) * K);
+    let wd = w.data();
+    let ud = u.data();
+    for i in r0..r1 {
+        let mut acc = [0.0f64; K];
+        for_each_nonzero(a, i, |v, j| {
+            let wrow: &[f64; K] = wd[j * K..(j + 1) * K].try_into().unwrap();
+            for t in 0..K {
+                acc[t] += v * wrow[t];
+            }
+        });
+        let wrow: &[f64; K] = wd[i * K..(i + 1) * K].try_into().unwrap();
+        let urow: &[f64; K] = ud[i * K..(i + 1) * K].try_into().unwrap();
+        for t in 0..K {
+            let mut x = acc[t] * beta;
+            if alpha != 0.0 {
+                x += alpha * wrow[t];
+            }
+            if gamma != 0.0 {
+                x += gamma * urow[t];
+            }
+            acc[t] = x;
+        }
+        c_rows[(i - r0) * K..(i - r0 + 1) * K].copy_from_slice(&acc);
+    }
+}
+
+/// A row-range fused-step kernel (see [`spmm_step_into`]).
+type StepRowRangeKernel =
+    fn(&CsrMat, &DMat, &DMat, &mut [f64], usize, usize, f64, f64, f64);
+
+/// Fused-step kernel selection by bundle width — the same 1..=16 blocked /
+/// streaming-above split as [`kernel_for_width`].
+fn step_kernel_for_width(k: usize) -> StepRowRangeKernel {
+    macro_rules! blocked_widths {
+        ($($w:literal),*) => {
+            match k {
+                $($w => spmm_step_row_range_blocked::<$w>,)*
+                _ => spmm_step_row_range_streaming,
+            }
+        };
+    }
+    blocked_widths!(1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16)
+}
+
+/// Fused solver-step product: `C = α·W + β·(A·W) + γ·U` in **one pass**
+/// over the bundle, row-sharded across `threads` workers.
+///
+/// This is the shape of every polynomial-operator recurrence step the
+/// matrix-free solvers take:
+///
+/// * Horner (`SeriesForm::apply_bundle`): `R ← (A − shift·I)·R + c_i·V`
+///   is `α = −shift, β = 1, γ = c_i`;
+/// * NegPower (`SparsePolyOp`'s `(I − L/ℓ)·W`): `α = 1, β = −1/ℓ, γ = 0`;
+/// * Chebyshev three-term (`ChebSeries::apply_bundle`):
+///   `T_{j+1}V = 2b·T_jV + 2a·(A·T_jV) − T_{j−1}V` is
+///   `α = 2b, β = 2a, γ = −1`.
+///
+/// The unfused composition makes three full read-modify-write passes over
+/// the `n×k` output (SpMM, `scale`, `axpy`); the fused kernel makes one.
+/// **Bitwise identical** to that composition (with zero-valued `α`/`γ`
+/// terms skipped exactly as the unfused callers skip zero-coefficient
+/// axpys), to the serial path for every worker count, and across the
+/// blocked/streaming kernel split — pinned by
+/// `tests/basis_equivalence.rs` over k ∈ 1..=17 × 1/2/8 workers.
+///
+/// `A` must be square (the α·W term pairs output row `i` with bundle row
+/// `i`); `U` must have the output's shape. `γ = 0` skips `U` entirely, so
+/// callers without a third operand can pass `w` again.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_step_into(
+    a: &CsrMat,
+    w: &DMat,
+    u: &DMat,
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+    c: &mut DMat,
+    threads: usize,
+) {
+    assert!(a.is_square(), "spmm_step needs a square operator");
+    assert_eq!(a.cols, w.rows(), "spmm_step shape mismatch");
+    let (m, n) = (a.rows, w.cols());
+    assert_eq!((u.rows(), u.cols()), (m, n), "spmm_step U shape mismatch");
+    assert_eq!((c.rows(), c.cols()), (m, n), "spmm_step output shape mismatch");
+    let kernel = step_kernel_for_width(n);
+    let shards = row_shards(m, threads);
+    if shards.len() <= 1 {
+        kernel(a, w, u, c.data_mut(), 0, m, alpha, beta, gamma);
+        return;
+    }
+    let starts = shard_starts(&shards);
+    let elem_lens: Vec<usize> = shards.iter().map(|&len| len * n).collect();
+    parallel_shards(c.data_mut(), &elem_lens, |idx, chunk| {
+        let r0 = starts[idx];
+        kernel(a, w, u, chunk, r0, r0 + shards[idx], alpha, beta, gamma);
+    });
+}
+
+/// [`spmm_step_into`] into a fresh buffer (tests, one-shot callers).
+pub fn spmm_step(
+    a: &CsrMat,
+    w: &DMat,
+    u: &DMat,
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+    threads: usize,
+) -> DMat {
+    let mut c = DMat::zeros(a.rows, w.cols());
+    spmm_step_into(a, w, u, alpha, beta, gamma, &mut c, threads);
+    c
+}
+
 /// Row-range SpMV kernel (shared serial/sharded inner loop) — the width-1
 /// reduction through [`for_each_nonzero`], so SpMV shares the SpMM entry
 /// order and zero-skip semantics instead of duplicating the loop.
@@ -539,6 +730,77 @@ mod tests {
         let dense = matmul(&m.to_dense(), &b);
         assert!(bitwise_eq(&spmm(&m, &b, 1), &dense));
         assert_eq!(spmm(&m, &b, 4).row(0), &[0.0; 5]);
+    }
+
+    /// The unfused reference composition for the fused step kernel: SpMM,
+    /// then scale(β), then the conditionally-skipped axpys — exactly what
+    /// the solver hot loops did before fusion.
+    fn unfused_step(
+        a: &CsrMat,
+        w: &DMat,
+        u: &DMat,
+        alpha: f64,
+        beta: f64,
+        gamma: f64,
+        threads: usize,
+    ) -> DMat {
+        let mut c = spmm(a, w, threads);
+        c.scale(beta);
+        if alpha != 0.0 {
+            c.axpy(alpha, w);
+        }
+        if gamma != 0.0 {
+            c.axpy(gamma, u);
+        }
+        c
+    }
+
+    #[test]
+    fn fused_step_bitwise_matches_unfused_composition() {
+        // Every blocked width plus the first streaming-fallback width, a
+        // scalar grid that includes the solver hot-loop shapes (Horner,
+        // NegPower, Chebyshev) and the skip-triggering zeros.
+        let a = random_sym_csr(41, 23, 0.3);
+        let cases: &[(f64, f64, f64)] = &[
+            (-0.95, 1.0, 0.04),  // Horner: α = −shift, β = 1, γ = c_i
+            (1.0, -1.0 / 51.0, 0.0), // NegPower: γ = 0 skips U
+            (-1.3, 0.7, -1.0),   // Chebyshev: α = 2b, β = 2a, γ = −1
+            (0.0, 2.0, 0.0),     // both skips
+            (0.0, 1.0, 1.5),     // α skip only
+        ];
+        for k in 1..=17usize {
+            let w = random_bundle(k as u64 + 900, 23, k);
+            let u = random_bundle(k as u64 + 901, 23, k);
+            for &(alpha, beta, gamma) in cases {
+                let want = unfused_step(&a, &w, &u, alpha, beta, gamma, 1);
+                for &workers in &[1usize, 2, 8] {
+                    let got = spmm_step(&a, &w, &u, alpha, beta, gamma, workers);
+                    assert!(
+                        bitwise_eq(&got, &want),
+                        "fused step diverged: k={k}, workers={workers}, \
+                         (α,β,γ)=({alpha},{beta},{gamma})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_step_handles_empty_rows_and_structural_zeros() {
+        let m = CsrMat::from_triplets(
+            5,
+            5,
+            &[(0, 0, 0.0), (2, 1, 1.5), (2, 3, -2.0), (4, 4, 3.0)],
+        );
+        for k in [1usize, 8, 17] {
+            let w = random_bundle(k as u64 + 70, 5, k);
+            let u = random_bundle(k as u64 + 71, 5, k);
+            let want = unfused_step(&m, &w, &u, 0.5, -2.0, 1.25, 1);
+            for &workers in &[1usize, 4] {
+                let got = spmm_step(&m, &w, &u, 0.5, -2.0, 1.25, workers);
+                assert!(bitwise_eq(&got, &want), "k={k}, {workers} workers");
+            }
+        }
     }
 
     #[test]

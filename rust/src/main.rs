@@ -17,7 +17,7 @@
 use sped::cluster::{adjusted_rand_index, max_conductance, normalized_mutual_info};
 use sped::coordinator::experiments::{self, ExperimentOptions};
 use sped::pipeline::{Backend, Pipeline, PipelineConfig};
-use sped::transforms::{OpMode, TransformKind};
+use sped::transforms::{OpMode, PolyBasis, TransformKind};
 use sped::util::cli::ArgSpec;
 use sped::util::config::Config;
 
@@ -120,6 +120,14 @@ fn pipeline_spec(spec: ArgSpec) -> ArgSpec {
         .opt("stop-error", "1e-4", "early-stop subspace error")
         .opt("threads", "1", "worker threads for dense kernels (bitwise-identical output)")
         .opt("op", "dense", "dense (materialize p(L)) | sparse (matrix-free CSR operator)")
+        .opt_choice(
+            "basis",
+            "monomial",
+            &["monomial", "mono", "horner", "chebyshev", "cheb"],
+            "polynomial basis for series transforms: monomial = shifted Horner \
+             (bitwise-compatible historical path), chebyshev = domain-mapped three-term \
+             recurrence (stable at high degree; native backend, series transforms only)",
+        )
         .opt(
             "reorder",
             "none",
@@ -140,6 +148,10 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
     let transform = TransformKind::parse(&a.str("transform"))?;
     let mut build = sped::transforms::BuildOptions::default();
     build.prescale = a.flag("prescale") || cfg.bool("pipeline.prescale", false);
+    // Config file wins over the CLI value (which always has a default).
+    build.basis = PolyBasis::parse(
+        &cfg.str_opt("pipeline.basis").unwrap_or_else(|| a.str("basis")),
+    )?;
     let backend = match a.str("backend").as_str() {
         "native" => Backend::Native,
         "xla" => Backend::Xla { artifacts_dir: a.str("artifacts") },
@@ -163,6 +175,7 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
         do_cluster: true,
         threads: cfg.usize("pipeline.threads", a.usize("threads")).max(1),
         op_mode,
+        rcm_order: None, // filled by callers that loaded a persisted order
         reorder,
         ground_truth,
     })
@@ -193,7 +206,13 @@ fn auto_eta(graph: &sped::graph::Graph, pcfg: &mut PipelineConfig, verbose: bool
     }
 }
 
-fn make_graph(a: &sped::util::cli::Args) -> anyhow::Result<(sped::graph::Graph, Vec<usize>)> {
+/// Build or load the workload graph. The third element is a node order
+/// persisted alongside a loaded edge-list file (`# order:` header) — the
+/// RCM permutation a previous run saved, letting `--reorder rcm` skip the
+/// O(E log E) rebuild; `None` for generators.
+fn make_graph(
+    a: &sped::util::cli::Args,
+) -> anyhow::Result<(sped::graph::Graph, Vec<usize>, Option<Vec<usize>>)> {
     let kind = a.str("graph");
     let n = a.usize("n");
     let c = a.usize("clusters");
@@ -205,24 +224,29 @@ fn make_graph(a: &sped::util::cli::Args) -> anyhow::Result<(sped::graph::Graph, 
             max_short_circuit: 25,
             seed,
         });
-        Ok((gg.graph, gg.labels))
+        Ok((gg.graph, gg.labels, None))
     } else if kind == "sbm" {
         let gg = sped::graph::gen::sbm(&vec![n / c.max(1); c.max(1)], 0.8, 0.02, seed);
-        Ok((gg.graph, gg.labels))
+        Ok((gg.graph, gg.labels, None))
     } else if kind == "mdp" {
         let w = sped::mdp::GridWorld::three_rooms(sped::mdp::ThreeRoomSpec::default())?;
         let rooms = (0..w.num_states()).map(|s| w.room_of(s)).collect();
-        Ok((w.graph, rooms))
+        Ok((w.graph, rooms, None))
     } else {
-        Ok((sped::graph::io::load_edge_list(&kind)?, vec![]))
+        let (g, order) = sped::graph::io::load_edge_list_with_order(&kind)?;
+        Ok((g, vec![], order))
     }
 }
 
 fn cmd_cluster(mut args: Vec<String>) -> anyhow::Result<()> {
     let cfg = load_config(&mut args)?;
-    let spec = pipeline_spec(graph_spec("sped cluster"));
+    let spec = pipeline_spec(graph_spec("sped cluster")).opt_req(
+        "save-order",
+        "write the graph + its RCM node order to this edge-list path \
+         (later runs on that file skip the RCM rebuild)",
+    );
     let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
-    let (graph, labels) = make_graph(&a)?;
+    let (graph, labels, stored_order) = make_graph(&a)?;
     println!(
         "graph: {} nodes, {} edges, max degree {}",
         graph.num_nodes(),
@@ -232,10 +256,19 @@ fn cmd_cluster(mut args: Vec<String>) -> anyhow::Result<()> {
     let mut pcfg = build_pipeline_cfg(&a, &cfg)?;
     auto_eta(&graph, &mut pcfg, true);
     if pcfg.reorder == sped::graph::Reorder::Rcm {
-        // Bandwidth under the RCM order straight from the permutation —
-        // no need to rebuild the relabeled graph just for this line (the
+        // A persisted order (the `# order:` header of a loaded edge list)
+        // skips the O(E log E) RCM rebuild entirely.
+        let order = match stored_order {
+            Some(order) => {
+                println!("rcm reorder: using stored node order (rebuild skipped)");
+                order
+            }
+            None => graph.rcm_permutation(),
+        };
+        // Bandwidth under the order straight from the permutation — no
+        // need to rebuild the relabeled graph just for this line (the
         // pipeline builds its own copy internally).
-        let inv = sped::graph::invert_permutation(&graph.rcm_permutation());
+        let inv = sped::graph::invert_permutation(&order);
         let rcm_bw = graph
             .edges()
             .iter()
@@ -243,22 +276,30 @@ fn cmd_cluster(mut args: Vec<String>) -> anyhow::Result<()> {
             .max()
             .unwrap_or(0);
         println!("rcm reorder: bandwidth {} -> {}", graph.bandwidth(), rcm_bw);
+        if let Some(path) = a.get("save-order") {
+            sped::graph::io::save_edge_list_with_order(&graph, path, Some(&order))?;
+            println!("saved graph + node order to {path}");
+        }
+        pcfg.rcm_order = Some(order);
+    } else if let Some(path) = a.get("save-order") {
+        anyhow::bail!("--save-order {path} requires --reorder rcm");
     }
     let out = Pipeline::new(pcfg.clone()).run(&graph)?;
     match out.history.last() {
         Some(last) => println!(
-            "\ntransform {} | solver {} | op {} | steps {} | subspace err {:.3e} | streak {}/{}",
+            "\ntransform {} | solver {} | op {} | basis {} | steps {} | subspace err {:.3e} | streak {}/{}",
             pcfg.transform,
             pcfg.solver,
             pcfg.op_mode,
+            pcfg.build.basis,
             last.step,
             last.subspace_error,
             last.streak,
             pcfg.k
         ),
         None => println!(
-            "\ntransform {} | solver {} | op {} | ran {} steps (ground-truth metrics skipped)",
-            pcfg.transform, pcfg.solver, pcfg.op_mode, pcfg.steps
+            "\ntransform {} | solver {} | op {} | basis {} | ran {} steps (ground-truth metrics skipped)",
+            pcfg.transform, pcfg.solver, pcfg.op_mode, pcfg.build.basis, pcfg.steps
         ),
     }
     println!(
@@ -331,7 +372,7 @@ fn cmd_linkpred(mut args: Vec<String>) -> anyhow::Result<()> {
     let cfg = load_config(&mut args)?;
     let spec = pipeline_spec(graph_spec("sped linkpred")).opt("drop", "0.2", "edge drop probability");
     let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
-    let (graph, labels) = make_graph(&a)?;
+    let (graph, labels, _) = make_graph(&a)?;
     let dropped = sped::linkpred::drop_edges(&graph, a.f64("drop"), a.u64("seed") ^ 0xA1);
     let completed = sped::linkpred::complete_graph(&dropped);
     println!(
@@ -435,7 +476,7 @@ fn cmd_walk_bench(mut args: Vec<String>) -> anyhow::Result<()> {
         .opt("workers", "4", "walker threads")
         .opt("method", "importance", "rejection | importance");
     let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
-    let (graph, _) = make_graph(&a)?;
+    let (graph, _, _) = make_graph(&a)?;
     let method = sped::walks::SampleMethod::parse(&a.str("method"))?;
     let t0 = std::time::Instant::now();
     let pool = sped::coordinator::walkers::WalkerPool::spawn(
@@ -472,7 +513,7 @@ fn cmd_gaps(mut args: Vec<String>) -> anyhow::Result<()> {
     let _cfg = load_config(&mut args)?;
     let spec = graph_spec("sped gaps").opt("k", "4", "bottom-k gaps to report");
     let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
-    let (graph, _) = make_graph(&a)?;
+    let (graph, _, _) = make_graph(&a)?;
     let l = graph.laplacian();
     println!(
         "eigengap dilation report (max rho/g over bottom-{}):\n",

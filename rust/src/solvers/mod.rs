@@ -19,7 +19,7 @@ use crate::linalg::matmul::matmul;
 use crate::linalg::metrics::{eigenvector_streak, subspace_error, ConvergenceHistory};
 use crate::linalg::qr::mgs_orthonormalize;
 use crate::linalg::sparse::CsrMat;
-use crate::transforms::{SeriesForm, TransformKind};
+use crate::transforms::{PolyBasis, PolySeries, SeriesForm, TransformKind};
 
 pub mod stochastic;
 
@@ -81,11 +81,19 @@ impl MatVecOp for DenseOp {
 /// `O(nnz)` primitives. Exact (eigh-based) transforms are rejected: they
 /// are the dense oracles the series forms exist to avoid.
 ///
-/// Every SpMM dispatches through [`crate::linalg::sparse::spmm_into`], so
-/// the `k ≤ 16` bundle widths the solvers actually use run on the
-/// register-blocked kernel family (each CSR row's nonzeros swept once, all
-/// `k` columns accumulating in registers) rather than the streaming
-/// reference kernel.
+/// Every recurrence step is one fused
+/// [`crate::linalg::sparse::spmm_step_into`] pass, so the `k ≤ 16` bundle
+/// widths the solvers actually use run on the register-blocked kernel
+/// family (each CSR row's nonzeros swept once, all `k` columns plus the
+/// step's scale/axpy terms accumulating in registers) rather than the
+/// three-pass SpMM + `scale` + `axpy` composition.
+///
+/// The polynomial basis is a knob ([`crate::transforms::BuildOptions::basis`],
+/// CLI `--basis`): the default monomial basis is bitwise-identical to the
+/// historical path (Horner for the Taylor kinds, the repeated-multiply
+/// special case for `LimitNegExp`); the Chebyshev basis evaluates every
+/// polynomial kind through the domain-mapped three-term recurrence —
+/// numerically stable at ℓ ≈ 251 and with no underflow special-casing.
 ///
 /// Output is bitwise identical for every worker count (the
 /// [`crate::linalg::sparse`] determinism contract), so solver trajectories
@@ -100,16 +108,20 @@ pub struct SparsePolyOp {
     pub scale: f64,
     /// The transform this operator realizes.
     pub kind: TransformKind,
+    /// The polynomial basis `p(L)·V` is evaluated in.
+    pub basis: PolyBasis,
     pub threads: usize,
 }
 
 /// How `p(L)·V` is evaluated.
 enum SparsePolyForm {
-    /// Horner in `B = L − shift·I`: `deg(p)` SpMMs per apply.
-    Series(SeriesForm),
-    /// `−(I − L/ℓ)^ℓ·V` by `ℓ` repeated SpMMs (`LimitNegExp`; the monomial
-    /// `SeriesForm` equivalent would need the coefficient `ℓ^{−ℓ}`, which
-    /// underflows f64 at ℓ = 251).
+    /// A basis-generic polynomial: Horner (monomial) or the three-term
+    /// recurrence (Chebyshev), one fused step kernel pass per degree.
+    Poly(PolySeries),
+    /// `−(I − L/ℓ)^ℓ·V` by `ℓ` repeated fused passes — the monomial-basis
+    /// special case for `LimitNegExp`, whose shifted-power coefficient
+    /// `ℓ^{−ℓ}` underflows f64 at ℓ = 251. (The Chebyshev basis needs no
+    /// such case: `LimitNegExp` goes through [`SparsePolyForm::Poly`].)
     NegPower { ell: usize },
 }
 
@@ -131,19 +143,13 @@ impl SparsePolyOp {
         kind: TransformKind,
         opts: &crate::transforms::BuildOptions,
     ) -> anyhow::Result<SparsePolyOp> {
-        let form = match kind {
-            TransformKind::Identity => {
-                SparsePolyForm::Series(SeriesForm { shift: 0.0, coeffs: vec![0.0, 1.0] })
-            }
-            TransformKind::TaylorLog { .. } | TransformKind::TaylorNegExp { .. } => {
-                SparsePolyForm::Series(kind.series().expect("series kind"))
-            }
-            TransformKind::LimitNegExp { ell } => SparsePolyForm::NegPower { ell },
-            TransformKind::MatrixLog { .. } | TransformKind::NegExp => anyhow::bail!(
-                "exact transform {kind} needs a full eigendecomposition — \
-                 use OpMode::DenseMaterialized"
-            ),
-        };
+        if kind.is_exact() {
+            anyhow::bail!(
+                "exact transform {kind} needs a full eigendecomposition and has no \
+                 polynomial form in any basis (--basis) — use OpMode::DenseMaterialized \
+                 with --basis monomial"
+            );
+        }
         let threads = opts.threads.max(1);
         let lam_raw = crate::linalg::sparse::power_lambda_max_csr(&l, opts.power_iters, threads);
         let lam_est = lam_raw * opts.safety;
@@ -160,8 +166,32 @@ impl SparsePolyOp {
         } else {
             l.gershgorin_bound()
         };
+        let form = match opts.basis {
+            PolyBasis::Monomial => match kind {
+                TransformKind::Identity => SparsePolyForm::Poly(PolySeries::Monomial(
+                    SeriesForm { shift: 0.0, coeffs: vec![0.0, 1.0] },
+                )),
+                TransformKind::TaylorLog { .. } | TransformKind::TaylorNegExp { .. } => {
+                    SparsePolyForm::Poly(PolySeries::Monomial(
+                        kind.series().expect("series kind"),
+                    ))
+                }
+                TransformKind::LimitNegExp { ell } => SparsePolyForm::NegPower { ell },
+                TransformKind::MatrixLog { .. } | TransformKind::NegExp => unreachable!(),
+            },
+            PolyBasis::Chebyshev => {
+                // The shared safe-by-construction domain policy (see
+                // `transforms::cheb_domain`): λ_max estimate widened to
+                // the guaranteed Gershgorin bound, identical to the dense
+                // build so both paths fit the same coefficients.
+                let (lo, hi) = crate::transforms::cheb_domain(rho, l.gershgorin_bound());
+                SparsePolyForm::Poly(PolySeries::Chebyshev(
+                    kind.cheb_series(lo, hi).expect("polynomial kind"),
+                ))
+            }
+        };
         let lambda_star = kind.lambda_star(rho);
-        Ok(SparsePolyOp { l, form, lambda_star, scale, kind, threads })
+        Ok(SparsePolyOp { l, form, lambda_star, scale, kind, basis: opts.basis, threads })
     }
 
     /// Stored entries of the underlying CSR Laplacian.
@@ -176,17 +206,19 @@ impl MatVecOp for SparsePolyOp {
         let work = self.l.nnz().saturating_mul(v.cols());
         let threads = crate::linalg::par::effective_threads(work, self.threads);
         let p_v = match &self.form {
-            SparsePolyForm::Series(series) => series.apply_bundle(&self.l, v, threads),
+            SparsePolyForm::Poly(series) => series.apply_bundle(&self.l, v, threads),
             SparsePolyForm::NegPower { ell } => {
-                // W ← (I − L/ℓ)·W, ℓ times; p(L)·V = −W. Two preallocated
-                // bundles ping-pong so the ℓ SpMMs allocate nothing.
+                // W ← (I − L/ℓ)·W, ℓ times; p(L)·V = −W. Each step is one
+                // fused pass (W + inv·(L·W)) over two preallocated bundles
+                // — no per-iteration allocation, one bundle traversal
+                // instead of the three of SpMM + scale + axpy.
                 let inv = -1.0 / *ell as f64;
                 let mut w = v.clone();
                 let mut t = DMat::zeros(v.rows(), v.cols());
                 for _ in 0..*ell {
-                    crate::linalg::sparse::spmm_into(&self.l, &w, &mut t, threads);
-                    t.scale(inv);
-                    t.axpy(1.0, &w);
+                    crate::linalg::sparse::spmm_step_into(
+                        &self.l, &w, v, 1.0, inv, 0.0, &mut t, threads,
+                    );
                     std::mem::swap(&mut w, &mut t);
                 }
                 w.scale(-1.0);
@@ -203,7 +235,7 @@ impl MatVecOp for SparsePolyOp {
         self.l.rows()
     }
     fn label(&self) -> String {
-        format!("sparse[{},nnz={}]", self.l.rows(), self.l.nnz())
+        format!("sparse[{},nnz={},{}]", self.l.rows(), self.l.nnz(), self.basis)
     }
 }
 
@@ -561,11 +593,76 @@ mod tests {
     #[test]
     fn sparse_poly_op_rejects_exact_transforms() {
         let g = cliques(&CliqueSpec { n: 12, k: 2, max_short_circuit: 1, seed: 1 }).graph;
-        let opts = BuildOptions::default();
-        assert!(SparsePolyOp::from_graph(&g, TransformKind::NegExp, &opts).is_err());
-        assert!(
-            SparsePolyOp::from_graph(&g, TransformKind::MatrixLog { eps: 0.05 }, &opts).is_err()
-        );
+        for basis in [PolyBasis::Monomial, PolyBasis::Chebyshev] {
+            let opts = BuildOptions { basis, ..BuildOptions::default() };
+            for kind in [TransformKind::NegExp, TransformKind::MatrixLog { eps: 0.05 }] {
+                let err = SparsePolyOp::from_graph(&g, kind, &opts).unwrap_err();
+                assert!(
+                    format!("{err:#}").contains("--basis"),
+                    "{kind}/{basis}: error should mention the basis knob: {err:#}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chebyshev_op_matches_monomial_op_on_all_series_transforms() {
+        // The basis is an evaluation detail: both bases must realize the
+        // same operator to ≤1e-9 (different association of the same
+        // polynomial), for every polynomial kind — including LimitNegExp,
+        // where the monomial path runs the repeated-multiply special case
+        // and the Chebyshev path runs the ordinary recurrence.
+        let g = cliques(&CliqueSpec { n: 40, k: 4, max_short_circuit: 3, seed: 13 }).graph;
+        let v = random_init(40, 6, 21);
+        for kind in [
+            TransformKind::Identity,
+            TransformKind::TaylorNegExp { ell: 31 },
+            TransformKind::TaylorLog { ell: 61, eps: 0.05 },
+            TransformKind::LimitNegExp { ell: 251 },
+        ] {
+            let mk = |basis| {
+                let opts = BuildOptions { prescale: true, basis, ..BuildOptions::default() };
+                SparsePolyOp::from_graph(&g, kind, &opts).unwrap()
+            };
+            let mut mono = mk(PolyBasis::Monomial);
+            let mut cheb = mk(PolyBasis::Chebyshev);
+            assert_eq!(mono.lambda_star.to_bits(), cheb.lambda_star.to_bits(), "{kind}");
+            assert_eq!(cheb.basis, PolyBasis::Chebyshev);
+            assert!(cheb.label().contains("chebyshev"), "label {}", cheb.label());
+            let a = mono.apply(&v);
+            let b = cheb.apply(&v);
+            let err = (&a - &b).max_abs();
+            assert!(err < 1e-9, "{kind}: basis divergence {err}");
+        }
+    }
+
+    #[test]
+    fn chebyshev_op_deterministic_across_worker_counts() {
+        let g = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 7 }).graph;
+        let v = random_init(36, 4, 3);
+        for kind in [
+            TransformKind::TaylorNegExp { ell: 21 },
+            TransformKind::LimitNegExp { ell: 31 },
+        ] {
+            let mk = |threads| {
+                let opts = BuildOptions {
+                    threads,
+                    basis: PolyBasis::Chebyshev,
+                    ..BuildOptions::default()
+                };
+                SparsePolyOp::from_graph(&g, kind, &opts).unwrap()
+            };
+            let serial = mk(1).apply(&v);
+            for threads in [2usize, 8] {
+                let par = mk(threads).apply(&v);
+                let identical = serial
+                    .data()
+                    .iter()
+                    .zip(par.data().iter())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(identical, "{kind} chebyshev diverged at {threads} workers");
+            }
+        }
     }
 
     #[test]

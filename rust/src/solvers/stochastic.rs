@@ -12,6 +12,7 @@
 use super::MatVecOp;
 use crate::graph::Graph;
 use crate::linalg::DMat;
+use crate::transforms::{ChebSeries, PolyBasis};
 use crate::util::rng::Rng;
 use crate::walks::{SampleMethod, WalkEstimator};
 
@@ -61,16 +62,30 @@ impl MatVecOp for MinibatchLaplacianOp<'_> {
 
 /// Stochastic SPED oracle: `M̂V = λ*·V − p̂(L)·V` with `p̂` estimated from
 /// `walks_per_step` fresh random walks each application.
+///
+/// The walk estimator is **monomial-native**: sub-walk harvesting
+/// estimates matrix *powers* `Lⁱ·V`, so whatever basis the caller hands
+/// coefficients in ([`StochasticPolyOp::new_in_basis`]), they are
+/// converted to plain monomial form once at construction. The exact
+/// algebraic conversion is well-conditioned at the low degrees where walk
+/// variance is manageable — exactly the stochastic oracle's regime (the
+/// high-degree filters where the monomial basis breaks down are the
+/// deterministic `SparsePolyOp`'s territory, where the Chebyshev
+/// recurrence applies directly).
 pub struct StochasticPolyOp<'g> {
     estimator: WalkEstimator<'g>,
-    /// Monomial coefficients of `p` (`p(x) = Σ coeffs[i] xⁱ`).
+    /// Monomial coefficients of `p` (`p(x) = Σ coeffs[i] xⁱ`) — the form
+    /// the walk estimator consumes, post-conversion.
     pub coeffs: Vec<f64>,
+    /// The basis the caller supplied coefficients in (label/provenance).
+    pub basis: PolyBasis,
     pub lambda_star: f64,
     pub walks_per_step: usize,
     rng: Rng,
 }
 
 impl<'g> StochasticPolyOp<'g> {
+    /// Monomial-coefficient constructor (the historical interface).
     pub fn new(
         graph: &'g Graph,
         coeffs: Vec<f64>,
@@ -82,6 +97,46 @@ impl<'g> StochasticPolyOp<'g> {
         StochasticPolyOp {
             estimator: WalkEstimator::new(graph, method),
             coeffs,
+            basis: PolyBasis::Monomial,
+            lambda_star,
+            walks_per_step,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Construct with coefficients expressed in `basis`. Chebyshev-form
+    /// coefficients are interpreted on `domain = (lo, hi)` and converted
+    /// exactly to the monomial form the walk estimator consumes; the
+    /// domain is ignored for [`PolyBasis::Monomial`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_in_basis(
+        graph: &'g Graph,
+        basis: PolyBasis,
+        coeffs: Vec<f64>,
+        domain: (f64, f64),
+        lambda_star: f64,
+        walks_per_step: usize,
+        method: SampleMethod,
+        seed: u64,
+    ) -> Self {
+        let mono = match basis {
+            PolyBasis::Monomial => coeffs,
+            PolyBasis::Chebyshev => {
+                // Same hard guard as ChebSeries::fit: a degenerate domain
+                // would make the affine map (and thus every converted
+                // coefficient) inf/NaN with no error until the solve.
+                let (lo, hi) = domain;
+                assert!(
+                    lo.is_finite() && hi.is_finite() && hi > lo,
+                    "Chebyshev coefficients need a finite non-degenerate domain (got [{lo}, {hi}])"
+                );
+                ChebSeries { lo, hi, coeffs }.to_plain_monomial()
+            }
+        };
+        StochasticPolyOp {
+            estimator: WalkEstimator::new(graph, method),
+            coeffs: mono,
+            basis,
             lambda_star,
             walks_per_step,
             rng: Rng::new(seed),
@@ -104,9 +159,10 @@ impl MatVecOp for StochasticPolyOp<'_> {
     }
     fn label(&self) -> String {
         format!(
-            "stoch-poly[deg={},W={}]",
+            "stoch-poly[deg={},W={},{}]",
             self.coeffs.len().saturating_sub(1),
-            self.walks_per_step
+            self.walks_per_step,
+            self.basis
         )
     }
 }
@@ -162,6 +218,55 @@ mod tests {
         expect.axpy(-1.0, &matmul(&p, &v));
         let err = (&acc - &expect).max_abs() / expect.max_abs();
         assert!(err < 0.1, "rel err {err}");
+    }
+
+    #[test]
+    fn stochastic_poly_op_chebyshev_basis_matches_monomial() {
+        // The same quadratic handed over in Chebyshev form on [0, 4] must
+        // produce the identical estimator trajectory: the conversion to
+        // monomial coefficients is exact at low degree, and the RNG seeds
+        // match, so outputs agree to conversion rounding.
+        let g = small();
+        let mono = vec![0.5, 1.0, 0.25]; // p(x) = 0.5 + x + 0.25x²
+        let domain = (0.0, 4.0);
+        let cheb_coeffs = {
+            let sf = crate::transforms::SeriesForm { shift: 0.0, coeffs: mono.clone() };
+            crate::transforms::ChebSeries::from_series_form(&sf, domain.0, domain.1).coeffs
+        };
+        let v = crate::solvers::random_init(g.num_nodes(), 2, 4);
+        let mut a = StochasticPolyOp::new(&g, mono.clone(), 1.5, 500, SampleMethod::Importance, 9);
+        let mut b = StochasticPolyOp::new_in_basis(
+            &g,
+            PolyBasis::Chebyshev,
+            cheb_coeffs,
+            domain,
+            1.5,
+            500,
+            SampleMethod::Importance,
+            9,
+        );
+        assert_eq!(b.basis, PolyBasis::Chebyshev);
+        assert!(b.label().contains("chebyshev"), "label {}", b.label());
+        for (ca, cb) in a.coeffs.iter().zip(b.coeffs.iter()) {
+            assert!((ca - cb).abs() < 1e-12, "converted coeff {cb} vs {ca}");
+        }
+        let out_a = a.apply(&v);
+        let out_b = b.apply(&v);
+        // Same walks (same seed), near-identical coefficients.
+        let err = (&out_a - &out_b).max_abs() / out_a.max_abs().max(1e-12);
+        assert!(err < 1e-9, "basis-converted stochastic op diverged: {err}");
+        // Monomial-basis new_in_basis is the plain constructor.
+        let c = StochasticPolyOp::new_in_basis(
+            &g,
+            PolyBasis::Monomial,
+            mono.clone(),
+            (0.0, 1.0),
+            1.5,
+            500,
+            SampleMethod::Importance,
+            9,
+        );
+        assert_eq!(c.coeffs, mono);
     }
 
     #[test]

@@ -1,0 +1,660 @@
+//! Polynomial bases for the series transforms: monomial (shifted-Horner)
+//! vs Chebyshev (three-term recurrence).
+//!
+//! The paper's series transforms are polynomials in `L`; *which basis* the
+//! coefficients live in decides how `p(L)·V` is evaluated and how well it
+//! is conditioned:
+//!
+//! * **[`PolyBasis::Monomial`]** — `p(A) = Σ c_i (A − shift·I)^i`, applied
+//!   by Horner ([`SeriesForm`]). Exact and fast at low degree, but the
+//!   monomial basis is exponentially ill-conditioned as the degree grows:
+//!   at ℓ = 251 some Table-2 transforms need coefficients like `ℓ^{−ℓ}`
+//!   (underflows f64) or alternating terms with catastrophic cancellation.
+//! * **[`PolyBasis::Chebyshev`]** — `p(x) = Σ c_j T_j(y)` with the domain
+//!   `[lo, hi]` mapped to `y ∈ [−1, 1]` ([`ChebSeries`]). `|T_j(y)| ≤ 1`
+//!   on the domain, so coefficients are bounded by the function's size and
+//!   the three-term recurrence `T_{j+1}(A)V = 2Y·(T_j(A)V) − T_{j−1}(A)V`
+//!   is numerically stable at any degree — this is the basis production
+//!   spectral solvers (Chebyshev–Davidson, filtered LOBPCG) run their
+//!   polynomial filters in.
+//!
+//! Both bases evaluate at scalars, dense matrices, and matrix-free CSR
+//! bundles ([`PolySeries`] dispatches); the matrix-free Chebyshev path
+//! drives each recurrence step through the fused solver-step kernel
+//! [`crate::linalg::sparse::spmm_step_into`] — one pass over the bundle
+//! instead of the three (SpMM + scale + axpy) of the unfused composition.
+//!
+//! Coefficient conversions between the bases ([`monomial_to_chebyshev`] /
+//! [`chebyshev_to_monomial`]) are exact algebra (dyadic-rational basis
+//! matrices) and round-trip exactly at the low degrees where the monomial
+//! basis is usable at all; production Chebyshev coefficients come from
+//! [`ChebSeries::fit`] (interpolation at Chebyshev nodes — stable at any
+//! degree, and *exact* for polynomials of degree ≤ the fit degree, which
+//! every series transform is).
+
+use super::SeriesForm;
+use crate::linalg::dmat::DMat;
+use crate::linalg::sparse::{spmm_step_into, CsrMat};
+use anyhow::{bail, Result};
+
+/// Which polynomial basis a series' coefficients are expressed in
+/// (`--basis monomial|chebyshev`, `BuildOptions::basis`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PolyBasis {
+    /// Shifted-power coefficients evaluated by Horner ([`SeriesForm`]).
+    /// The historical default; bitwise-identical to the pre-basis-knob
+    /// evaluation path.
+    #[default]
+    Monomial,
+    /// Chebyshev coefficients on a `[lo, hi]` domain evaluated by the
+    /// three-term recurrence ([`ChebSeries`]). Stable at high degree.
+    Chebyshev,
+}
+
+impl PolyBasis {
+    /// Parse from a CLI/config name (`monomial` | `chebyshev`).
+    pub fn parse(s: &str) -> Result<PolyBasis> {
+        Ok(match s {
+            "monomial" | "mono" | "horner" => PolyBasis::Monomial,
+            "chebyshev" | "cheb" => PolyBasis::Chebyshev,
+            other => bail!("unknown polynomial basis {other:?} (expected monomial | chebyshev)"),
+        })
+    }
+
+    /// Canonical display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolyBasis::Monomial => "monomial",
+            PolyBasis::Chebyshev => "chebyshev",
+        }
+    }
+}
+
+impl std::fmt::Display for PolyBasis {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Chebyshev→monomial coefficient conversion **in the mapped variable**:
+/// given `c` with `p(y) = Σ_j c[j]·T_j(y)`, returns `m` with
+/// `p(y) = Σ_i m[i]·yⁱ`. Exact algebra via the `T_{j+1} = 2y·T_j − T_{j−1}`
+/// recurrence on coefficient vectors (the basis matrix is integer, so the
+/// conversion is exact in f64 whenever the products don't round — in
+/// particular for the low degrees where a monomial target is usable).
+pub fn chebyshev_to_monomial(cheb: &[f64]) -> Vec<f64> {
+    let n = cheb.len();
+    let mut out = vec![0.0; n];
+    if n == 0 {
+        return out;
+    }
+    let mut t_prev = vec![0.0; n]; // T_0 = 1
+    t_prev[0] = 1.0;
+    out[0] += cheb[0];
+    if n == 1 {
+        return out;
+    }
+    let mut t_cur = vec![0.0; n]; // T_1 = y
+    t_cur[1] = 1.0;
+    out[1] += cheb[1];
+    for &c in cheb.iter().skip(2) {
+        // T_next = 2y·T_cur − T_prev (coefficient shift-and-scale).
+        let mut t_next = vec![0.0; n];
+        for i in 0..n - 1 {
+            t_next[i + 1] = 2.0 * t_cur[i];
+        }
+        for (tn, &tp) in t_next.iter_mut().zip(t_prev.iter()) {
+            *tn -= tp;
+        }
+        if c != 0.0 {
+            for (o, &t) in out.iter_mut().zip(t_next.iter()) {
+                *o += c * t;
+            }
+        }
+        t_prev = t_cur;
+        t_cur = t_next;
+    }
+    out
+}
+
+/// Monomial→Chebyshev coefficient conversion **in the mapped variable**:
+/// the inverse of [`chebyshev_to_monomial`]. Uses
+/// `y·T_j = (T_{j+1} + T_{j−1})/2` (with `T_{−1} = T_1`) to build the
+/// Chebyshev expansion of each power `yⁱ`; all basis entries are dyadic
+/// rationals, so the conversion is exact under the same conditions.
+pub fn monomial_to_chebyshev(mono: &[f64]) -> Vec<f64> {
+    let n = mono.len();
+    let mut out = vec![0.0; n];
+    if n == 0 {
+        return out;
+    }
+    // Chebyshev coefficients of y⁰ = T_0.
+    let mut pw = vec![0.0; n];
+    pw[0] = 1.0;
+    for (i, &m) in mono.iter().enumerate() {
+        if m != 0.0 {
+            for (o, &p) in out.iter_mut().zip(pw.iter()) {
+                *o += m * p;
+            }
+        }
+        if i + 1 < n {
+            // pw ← Chebyshev coefficients of y^{i+1}.
+            let mut next = vec![0.0; n];
+            for (j, &a) in pw.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                if j == 0 {
+                    next[1] += a;
+                } else {
+                    if j + 1 < n {
+                        next[j + 1] += 0.5 * a;
+                    }
+                    next[j - 1] += 0.5 * a;
+                }
+            }
+            pw = next;
+        }
+    }
+    out
+}
+
+/// Affine substitution on monomial coefficients: given `p(y) = Σ p[i]·yⁱ`,
+/// returns the coefficients of `q(x) = p(a·x + b)` (Horner on coefficient
+/// vectors, `O(d²)`). Exact when the scale/shift products don't round.
+pub fn affine_compose(p: &[f64], a: f64, b: f64) -> Vec<f64> {
+    let n = p.len();
+    if n == 0 {
+        return vec![];
+    }
+    let mut q = vec![0.0; n];
+    q[0] = p[n - 1];
+    let mut len = 1usize;
+    for &c in p.iter().rev().skip(1) {
+        // q ← q·(a·x + b) + c, done high-to-low so q can grow in place.
+        for i in (0..len).rev() {
+            let v = q[i];
+            q[i + 1] += a * v;
+            q[i] = b * v;
+        }
+        q[0] += c;
+        len += 1;
+    }
+    q
+}
+
+/// The Chebyshev fit domain for a PSD spectrum, given the λ_max power-
+/// iteration estimate `rho` and a *guaranteed* upper bound `bound`
+/// (Gershgorin): `[0, max(rho, bound)]`. The guaranteed bound matters —
+/// any eigenvalue past the domain edge maps to `|y| > 1`, where `T_ℓ(y)`
+/// grows like `cosh(ℓ·acosh y)` and the recurrence diverges, while a
+/// wider domain is free for these transforms (the interpolant of a
+/// degree-ℓ polynomial is exact on any domain). A zero spectrum
+/// (edgeless graph) falls back to `[0, 1]`, where any domain evaluates
+/// `f(0)`. This is the single domain policy shared by the dense build
+/// (`build_solver_matrix`), the matrix-free operator (`SparsePolyOp`),
+/// and the `poly-basis` bench — they must agree or the dense and sparse
+/// Chebyshev paths would evaluate different coefficient sets.
+pub fn cheb_domain(rho: f64, bound: f64) -> (f64, f64) {
+    let hi = rho.max(bound);
+    (0.0, if hi > 0.0 { hi } else { 1.0 })
+}
+
+/// A polynomial in Chebyshev form on an explicit domain:
+/// `p(x) = Σ_j coeffs[j]·T_j(y)` with `y = (2x − (hi + lo)) / (hi − lo)`
+/// mapping `[lo, hi]` onto `[−1, 1]`.
+///
+/// For spectral filters the domain is `[0, λ̂_max]` of the (possibly
+/// pre-scaled) Laplacian — the existing power-iteration estimate, safety
+/// padded so the true spectrum stays inside the well-conditioned region.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChebSeries {
+    /// Domain lower edge (0 for PSD Laplacians).
+    pub lo: f64,
+    /// Domain upper edge (the λ_max estimate).
+    pub hi: f64,
+    /// Chebyshev coefficients `c_j` of `Σ_j c_j·T_j(y(x))`.
+    pub coeffs: Vec<f64>,
+}
+
+impl ChebSeries {
+    /// The affine domain map `y = a·x + b`. Hard-asserts the domain is
+    /// non-degenerate: the fields are public, and a hand-built series
+    /// with `hi ≤ lo` would otherwise yield silent inf/NaN evaluations
+    /// in release builds (the constructors validate the same condition).
+    #[inline]
+    fn affine(&self) -> (f64, f64) {
+        assert!(
+            self.hi > self.lo,
+            "degenerate Chebyshev domain [{}, {}]",
+            self.lo,
+            self.hi
+        );
+        let a = 2.0 / (self.hi - self.lo);
+        (a, -(self.hi + self.lo) / (self.hi - self.lo))
+    }
+
+    /// Fit a degree-`degree` Chebyshev expansion of `f` on `[lo, hi]` by
+    /// interpolation at the `degree + 1` Chebyshev nodes (discrete cosine
+    /// projection, `O(d²)`). For `f` a polynomial of degree ≤ `degree` —
+    /// every series transform — the interpolant *is* `f`, to rounding;
+    /// this is the numerically stable route to Chebyshev coefficients
+    /// (never through the ill-conditioned monomial basis).
+    pub fn fit(degree: usize, lo: f64, hi: f64, f: impl Fn(f64) -> f64) -> ChebSeries {
+        assert!(
+            lo.is_finite() && hi.is_finite() && hi > lo,
+            "ChebSeries::fit needs a finite non-degenerate domain (got [{lo}, {hi}])"
+        );
+        let n = degree + 1;
+        let center = 0.5 * (hi + lo);
+        let half = 0.5 * (hi - lo);
+        let fx: Vec<f64> = (0..n)
+            .map(|k| {
+                let theta = std::f64::consts::PI * (k as f64 + 0.5) / n as f64;
+                f(center + half * theta.cos())
+            })
+            .collect();
+        let mut coeffs = vec![0.0; n];
+        for (j, c) in coeffs.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for (k, &fv) in fx.iter().enumerate() {
+                s += fv
+                    * (std::f64::consts::PI * j as f64 * (k as f64 + 0.5) / n as f64).cos();
+            }
+            *c = s * if j == 0 { 1.0 } else { 2.0 } / n as f64;
+        }
+        ChebSeries { lo, hi, coeffs }
+    }
+
+    /// Exact algebraic basis change from the shifted-monomial form (for
+    /// the conversion/round-trip contracts; production fitting should use
+    /// [`Self::fit`] — this path inherits the monomial form's conditioning).
+    pub fn from_series_form(s: &SeriesForm, lo: f64, hi: f64) -> ChebSeries {
+        assert!(lo.is_finite() && hi.is_finite() && hi > lo, "degenerate Chebyshev domain");
+        let a = 2.0 / (hi - lo);
+        let center = 0.5 * (hi + lo);
+        // b_var = x − shift and y = a·(x − center) ⇒ b_var = y/a + (center − shift).
+        let in_y = affine_compose(&s.coeffs, 1.0 / a, center - s.shift);
+        ChebSeries { lo, hi, coeffs: monomial_to_chebyshev(&in_y) }
+    }
+
+    /// Exact algebraic basis change to the shifted-monomial form. Only
+    /// well-conditioned at low degree — the monomial basis itself is the
+    /// limitation, not the conversion.
+    pub fn to_series_form(&self) -> SeriesForm {
+        let (a, _) = self.affine();
+        let center = 0.5 * (self.hi + self.lo);
+        // y = a·(x − center) ⇒ p(x) = Σ m_j·aʲ·(x − center)ʲ.
+        let mono_y = chebyshev_to_monomial(&self.coeffs);
+        let coeffs = mono_y
+            .iter()
+            .enumerate()
+            .map(|(j, &m)| m * a.powi(j as i32))
+            .collect();
+        SeriesForm { shift: center, coeffs }
+    }
+
+    /// Plain (shift-free) monomial coefficients `q` with
+    /// `p(x) = Σ q[i]·xⁱ` — the form the walk estimator consumes
+    /// (`StochasticPolyOp`). Same low-degree conditioning caveat as
+    /// [`Self::to_series_form`].
+    pub fn to_plain_monomial(&self) -> Vec<f64> {
+        let (a, b) = self.affine();
+        affine_compose(&chebyshev_to_monomial(&self.coeffs), a, b)
+    }
+
+    /// Evaluate at a scalar (Clenshaw recurrence).
+    pub fn eval_scalar(&self, x: f64) -> f64 {
+        if self.coeffs.is_empty() {
+            return 0.0;
+        }
+        let (a, b) = self.affine();
+        let y = a * x + b;
+        let mut bk1 = 0.0;
+        let mut bk2 = 0.0;
+        for &c in self.coeffs.iter().skip(1).rev() {
+            let bk = 2.0 * y * bk1 - bk2 + c;
+            bk2 = bk1;
+            bk1 = bk;
+        }
+        self.coeffs[0] + y * bk1 - bk2
+    }
+
+    /// Evaluate at a dense matrix (serial).
+    pub fn eval_matrix(&self, m: &DMat) -> DMat {
+        self.eval_matrix_threads(m, 1)
+    }
+
+    /// Evaluate at a dense matrix via the forward three-term recurrence,
+    /// each multiply row-sharded across `threads` workers. Bitwise
+    /// identical for every worker count (`linalg::par` contract).
+    pub fn eval_matrix_threads(&self, m: &DMat, threads: usize) -> DMat {
+        assert!(m.is_square(), "ChebSeries::eval_matrix needs a square matrix");
+        let n = m.rows();
+        let mut out = DMat::zeros(n, n);
+        if self.coeffs.is_empty() {
+            return out;
+        }
+        let (a, b) = self.affine();
+        for i in 0..n {
+            out[(i, i)] = self.coeffs[0];
+        }
+        if self.coeffs.len() == 1 {
+            return out;
+        }
+        // Y = a·M + b·I, the domain-mapped operator.
+        let mut y = m.clone();
+        y.scale(a);
+        y.add_diag(b);
+        let threads = crate::linalg::par::effective_threads(
+            n.saturating_mul(n).saturating_mul(n),
+            threads,
+        );
+        let mut t_prev = DMat::eye(n);
+        let mut t_cur = y.clone();
+        out.axpy(self.coeffs[1], &t_cur);
+        for &c in self.coeffs.iter().skip(2) {
+            // T_next = 2·Y·T_cur − T_prev.
+            let mut t_next = crate::linalg::par::matmul_par(&y, &t_cur, threads);
+            t_next.scale(2.0);
+            t_next.axpy(-1.0, &t_prev);
+            if c != 0.0 {
+                out.axpy(c, &t_next);
+            }
+            t_prev = t_cur;
+            t_cur = t_next;
+        }
+        out
+    }
+
+    /// Matrix-free bundle apply `p(A)·V` for sparse `A` via the three-term
+    /// recurrence, each step one fused
+    /// [`crate::linalg::sparse::spmm_step_into`] pass:
+    /// `T_{j+1}V = 2a·(A·T_jV) + 2b·T_jV − T_{j−1}V`. `deg(p)` SpMM-sized
+    /// passes, three preallocated bundles, no `n×n` intermediate. Stable
+    /// at the ℓ ≈ 251 degrees where shifted-Horner loses digits. Output is
+    /// bitwise identical for every worker count.
+    pub fn apply_bundle(&self, l: &CsrMat, v: &DMat, threads: usize) -> DMat {
+        assert!(l.is_square(), "apply_bundle needs a square operator");
+        assert_eq!(l.cols(), v.rows(), "apply_bundle shape mismatch");
+        let (n, k) = (v.rows(), v.cols());
+        let mut out = DMat::zeros(n, k);
+        if self.coeffs.is_empty() {
+            return out;
+        }
+        let (a, b) = self.affine();
+        out.axpy(self.coeffs[0], v); // c_0·T_0·V = c_0·V
+        if self.coeffs.len() == 1 {
+            return out;
+        }
+        // T_1·V = Y·V = a·(A·V) + b·V — one fused pass.
+        let mut t_prev = v.clone();
+        let mut t_cur = DMat::zeros(n, k);
+        spmm_step_into(l, v, v, b, a, 0.0, &mut t_cur, threads);
+        out.axpy(self.coeffs[1], &t_cur);
+        let mut t_next = DMat::zeros(n, k);
+        for &c in self.coeffs.iter().skip(2) {
+            // T_{j+1}V = 2a·(A·T_jV) + 2b·T_jV − T_{j−1}V — one fused pass.
+            spmm_step_into(l, &t_cur, &t_prev, 2.0 * b, 2.0 * a, -1.0, &mut t_next, threads);
+            if c != 0.0 {
+                out.axpy(c, &t_next);
+            }
+            // Rotate: prev ← cur, cur ← next, next ← scratch (old prev).
+            std::mem::swap(&mut t_prev, &mut t_cur);
+            std::mem::swap(&mut t_cur, &mut t_next);
+        }
+        out
+    }
+
+    pub fn degree(&self) -> usize {
+        self.coeffs.len().saturating_sub(1)
+    }
+}
+
+/// A series transform's polynomial in either basis — the basis-generic
+/// object [`crate::solvers::SparsePolyOp`] evaluates through.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolySeries {
+    /// Shifted-monomial coefficients, Horner evaluation.
+    Monomial(SeriesForm),
+    /// Chebyshev coefficients on `[lo, hi]`, recurrence evaluation.
+    Chebyshev(ChebSeries),
+}
+
+impl PolySeries {
+    pub fn basis(&self) -> PolyBasis {
+        match self {
+            PolySeries::Monomial(_) => PolyBasis::Monomial,
+            PolySeries::Chebyshev(_) => PolyBasis::Chebyshev,
+        }
+    }
+
+    pub fn degree(&self) -> usize {
+        match self {
+            PolySeries::Monomial(s) => s.degree(),
+            PolySeries::Chebyshev(c) => c.degree(),
+        }
+    }
+
+    /// Evaluate at a scalar.
+    pub fn eval_scalar(&self, x: f64) -> f64 {
+        match self {
+            PolySeries::Monomial(s) => s.eval_scalar(x),
+            PolySeries::Chebyshev(c) => c.eval_scalar(x),
+        }
+    }
+
+    /// Evaluate at a dense matrix, row-sharded across `threads` workers.
+    pub fn eval_matrix_threads(&self, m: &DMat, threads: usize) -> DMat {
+        match self {
+            PolySeries::Monomial(s) => s.eval_matrix_threads(m, threads),
+            PolySeries::Chebyshev(c) => c.eval_matrix_threads(m, threads),
+        }
+    }
+
+    /// Matrix-free bundle apply `p(A)·V` (both bases run their recurrence
+    /// steps through the fused `spmm_step_into` kernel).
+    pub fn apply_bundle(&self, a: &CsrMat, v: &DMat, threads: usize) -> DMat {
+        match self {
+            PolySeries::Monomial(s) => s.apply_bundle(a, v, threads),
+            PolySeries::Chebyshev(c) => c.apply_bundle(a, v, threads),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn basis_parse_and_display() {
+        assert_eq!(PolyBasis::parse("monomial").unwrap(), PolyBasis::Monomial);
+        assert_eq!(PolyBasis::parse("horner").unwrap(), PolyBasis::Monomial);
+        assert_eq!(PolyBasis::parse("chebyshev").unwrap(), PolyBasis::Chebyshev);
+        assert_eq!(PolyBasis::parse("cheb").unwrap(), PolyBasis::Chebyshev);
+        assert!(PolyBasis::parse("legendre").is_err());
+        assert_eq!(PolyBasis::default(), PolyBasis::Monomial);
+        assert_eq!(PolyBasis::Chebyshev.to_string(), "chebyshev");
+    }
+
+    #[test]
+    fn cheb_domain_policy() {
+        // Estimate below the guaranteed bound → widen; above → keep.
+        assert_eq!(cheb_domain(1.0, 2.5), (0.0, 2.5));
+        assert_eq!(cheb_domain(3.0, 2.5), (0.0, 3.0));
+        // Zero spectrum (edgeless graph) → the [0, 1] fallback.
+        assert_eq!(cheb_domain(0.0, 0.0), (0.0, 1.0));
+    }
+
+    #[test]
+    fn conversion_reproduces_chebyshev_polynomials() {
+        // T_4(y) = 8y⁴ − 8y² + 1: the j-th unit Chebyshev vector must map
+        // to the textbook monomial coefficients, exactly.
+        let m = chebyshev_to_monomial(&[0.0, 0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(m, vec![1.0, 0.0, -8.0, 0.0, 8.0]);
+        // And back: y⁴ = (3·T_0 + 4·T_2 + T_4)/8.
+        let c = monomial_to_chebyshev(&[0.0, 0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(c, vec![0.375, 0.0, 0.5, 0.0, 0.125]);
+    }
+
+    #[test]
+    fn conversion_roundtrip_exact_low_degrees() {
+        // Dyadic coefficients: the round-trip is *exact* (bit-for-bit) for
+        // every degree 0..=8, both directions.
+        for d in 0..=8usize {
+            let mono: Vec<f64> = (0..=d).map(|i| ((i as f64) - 3.0) * 0.5).collect();
+            let back = chebyshev_to_monomial(&monomial_to_chebyshev(&mono));
+            assert_eq!(back.len(), mono.len());
+            for (a, b) in mono.iter().zip(back.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "degree {d} monomial round-trip");
+            }
+            let cheb: Vec<f64> = (0..=d).map(|i| 1.0 - (i as f64) * 0.25).collect();
+            let back = monomial_to_chebyshev(&chebyshev_to_monomial(&cheb));
+            for (a, b) in cheb.iter().zip(back.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "degree {d} chebyshev round-trip");
+            }
+        }
+    }
+
+    #[test]
+    fn affine_compose_is_substitution() {
+        // p(y) = 1 + 2y + 3y², y = 2x − 1 ⇒ q(x) = 2 − 8x + 12x².
+        let q = affine_compose(&[1.0, 2.0, 3.0], 2.0, -1.0);
+        assert_eq!(q, vec![2.0, -8.0, 12.0]);
+        assert!(affine_compose(&[], 2.0, 1.0).is_empty());
+        // Identity map round-trips exactly.
+        let p = vec![0.5, -1.25, 2.0, 0.75];
+        assert_eq!(affine_compose(&p, 1.0, 0.0), p);
+    }
+
+    #[test]
+    fn fit_reproduces_polynomials_and_clenshaw_matches() {
+        // Fitting a cubic at degree 3 recovers it exactly (to rounding),
+        // on an asymmetric domain.
+        let f = |x: f64| 2.0 - x + 0.5 * x * x * x;
+        let cheb = ChebSeries::fit(3, -0.5, 3.0, f);
+        for i in 0..=20 {
+            let x = -0.5 + 3.5 * i as f64 / 20.0;
+            assert!((cheb.eval_scalar(x) - f(x)).abs() < 1e-12, "x={x}");
+        }
+        // Round-trip through the monomial form agrees everywhere.
+        let sf = cheb.to_series_form();
+        let back = ChebSeries::from_series_form(&sf, -0.5, 3.0);
+        for (a, b) in cheb.coeffs.iter().zip(back.coeffs.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // Plain-monomial export evaluates identically.
+        let plain = cheb.to_plain_monomial();
+        let horner = |x: f64| plain.iter().rev().fold(0.0, |acc, &c| acc * x + c);
+        for i in 0..=10 {
+            let x = -0.5 + 3.5 * i as f64 / 10.0;
+            assert!((horner(x) - f(x)).abs() < 1e-11, "x={x}");
+        }
+    }
+
+    #[test]
+    fn fit_is_stable_at_degree_251() {
+        // The motivating case: −(1 − x/ℓ)^ℓ at ℓ = 251 has no usable
+        // monomial form (the leading coefficient ℓ^{−ℓ} underflows f64),
+        // but its Chebyshev fit reproduces the scalar map to near machine
+        // precision across the domain.
+        let ell = 251usize;
+        let f = |x: f64| crate::transforms::limit_negexp_scalar(x, ell);
+        let cheb = ChebSeries::fit(ell, 0.0, 1.0, f);
+        for i in 0..=50 {
+            let x = i as f64 / 50.0;
+            assert!((cheb.eval_scalar(x) - f(x)).abs() < 1e-12, "x={x}");
+        }
+        // Coefficients are bounded by the function size — no underflow or
+        // blowup anywhere in the representation.
+        assert!(cheb.coeffs.iter().all(|c| c.is_finite() && c.abs() <= 2.0));
+    }
+
+    #[test]
+    fn matrix_and_bundle_eval_agree_with_scalar_on_diagonals() {
+        // On a diagonal matrix every evaluation route must reproduce the
+        // scalar map entry-wise.
+        let xs = [0.0, 0.2, 0.55, 0.9, 1.0];
+        let f = |x: f64| -(-x).exp();
+        let cheb = ChebSeries::fit(16, 0.0, 1.0, f);
+        let d = DMat::diag(&xs);
+        let dense = cheb.eval_matrix(&d);
+        let trips: Vec<(usize, usize, f64)> =
+            xs.iter().enumerate().map(|(i, &x)| (i, i, x)).collect();
+        let csr = CsrMat::from_triplets(xs.len(), xs.len(), &trips);
+        let v = DMat::eye(xs.len());
+        let sparse = cheb.apply_bundle(&csr, &v, 1);
+        for (i, &x) in xs.iter().enumerate() {
+            assert!((dense[(i, i)] - cheb.eval_scalar(x)).abs() < 1e-12);
+            assert!((sparse[(i, i)] - cheb.eval_scalar(x)).abs() < 1e-12);
+            assert!((cheb.eval_scalar(x) - f(x)).abs() < 1e-10, "fit error at {x}");
+        }
+        // Dense recurrence is worker-invariant, bitwise.
+        let serial = cheb.eval_matrix_threads(&d, 1);
+        for threads in [2usize, 8] {
+            let par = cheb.eval_matrix_threads(&d, threads);
+            assert!(serial
+                .data()
+                .iter()
+                .zip(par.data().iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn bundle_apply_worker_invariant_and_degenerate_shapes() {
+        let mut rng = Rng::new(17);
+        let trips: Vec<(usize, usize, f64)> = {
+            let mut t = vec![];
+            for i in 0..20usize {
+                t.push((i, i, rng.normal().abs() + 0.2));
+                for j in (i + 1)..20 {
+                    if rng.uniform(0.0, 1.0) < 0.2 {
+                        let w = rng.normal() * 0.1;
+                        t.push((i, j, w));
+                        t.push((j, i, w));
+                    }
+                }
+            }
+            t
+        };
+        let a = CsrMat::from_triplets(20, 20, &trips);
+        let hi = a.gershgorin_bound().max(1.0);
+        let cheb = ChebSeries::fit(31, 0.0, hi, |x| x * x - 0.5 * x);
+        let v = DMat::from_fn(20, 5, |_, _| rng.normal());
+        let serial = cheb.apply_bundle(&a, &v, 1);
+        for threads in [2usize, 8] {
+            let par = cheb.apply_bundle(&a, &v, threads);
+            assert!(serial
+                .data()
+                .iter()
+                .zip(par.data().iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        // Empty and constant polynomials.
+        let empty = ChebSeries { lo: 0.0, hi: 1.0, coeffs: vec![] };
+        assert_eq!(empty.apply_bundle(&a, &v, 4).max_abs(), 0.0);
+        assert_eq!(empty.eval_scalar(0.3), 0.0);
+        let constant = ChebSeries { lo: 0.0, hi: 1.0, coeffs: vec![2.5] };
+        let cv = constant.apply_bundle(&a, &v, 4);
+        let mut want = v.clone();
+        want.scale(2.5);
+        assert_eq!((&cv - &want).max_abs(), 0.0);
+    }
+
+    #[test]
+    fn poly_series_dispatch() {
+        let sf = SeriesForm { shift: 0.0, coeffs: vec![1.0, 2.0] };
+        let cf = ChebSeries::fit(1, 0.0, 1.0, |x| 1.0 + 2.0 * x);
+        let pm = PolySeries::Monomial(sf);
+        let pc = PolySeries::Chebyshev(cf);
+        assert_eq!(pm.basis(), PolyBasis::Monomial);
+        assert_eq!(pc.basis(), PolyBasis::Chebyshev);
+        assert_eq!(pm.degree(), 1);
+        assert_eq!(pc.degree(), 1);
+        for x in [0.0, 0.25, 1.0] {
+            assert!((pm.eval_scalar(x) - pc.eval_scalar(x)).abs() < 1e-12);
+        }
+    }
+}

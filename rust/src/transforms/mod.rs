@@ -23,12 +23,33 @@
 //! For the `−e^{−x}` family `f < 0` everywhere, so `λ* = 0` works and
 //! `ρ(M) ≤ 1` (§4.2).
 //!
-//! Series transforms are evaluated as polynomials **in the shifted matrix**
-//! `B = L − sI` (not expanded to monomials — a degree-251 monomial expansion
-//! of the log series would need binomials ~1e74 and is numerically
-//! meaningless). The same (shift, coeffs) representation is consumed by the
-//! L1 Pallas kernel `poly_horner` and the AOT artifact, keeping the native
-//! and XLA paths bit-compatible in structure.
+//! ## Polynomial bases ([`PolyBasis`])
+//!
+//! Series transforms are polynomials in `L`; the basis their coefficients
+//! live in is a knob (`--basis monomial|chebyshev`,
+//! [`BuildOptions::basis`]), selected independently of [`OpMode`]:
+//!
+//! * **Monomial** (default) — polynomials **in the shifted matrix**
+//!   `B = L − sI` evaluated by Horner ([`SeriesForm`]; not expanded to
+//!   plain monomials — a degree-251 monomial expansion of the log series
+//!   would need binomials ~1e74 and is numerically meaningless). This
+//!   (shift, coeffs) representation is consumed by the L1 Pallas kernel
+//!   `poly_horner` and the AOT artifact, keeping the native and XLA paths
+//!   bit-compatible in structure, and it is bitwise-identical to the
+//!   pre-basis-knob evaluation. Its limit: the basis itself loses digits
+//!   as the degree grows, and `LimitNegExp` has *no* usable shifted-power
+//!   form (the coefficient `ℓ^{−ℓ}` underflows f64 at ℓ = 251), which
+//!   forces a repeated-multiply special case on the matrix-free path.
+//! * **Chebyshev** — coefficients of `Σ c_j T_j(y)` with the spectrum
+//!   domain `[0, λ̂_max]` mapped to `y ∈ [−1, 1]` ([`ChebSeries`]),
+//!   evaluated by the three-term recurrence
+//!   `T_{j+1}(L)V = 2·Y·(T_j V) − T_{j−1}V` with each step one fused
+//!   [`crate::linalg::sparse::spmm_step_into`] pass. `|T_j| ≤ 1` on the
+//!   domain, so the representation is stable at the ℓ ≈ 251 degrees the
+//!   paper's series use, and every polynomial kind — `LimitNegExp`
+//!   included — goes through the same principled path, no underflow
+//!   special-casing. Native-only (the XLA artifacts encode Horner) and
+//!   rejected for the exact (eigh-based) kinds, which are not polynomials.
 //!
 //! ## Dense vs matrix-free evaluation ([`OpMode`])
 //!
@@ -53,10 +74,17 @@
 //! Exact transforms ([`TransformKind::MatrixLog`], [`TransformKind::NegExp`])
 //! are eigendecomposition-based oracles and stay dense-only.
 
+pub mod basis;
+
+pub use basis::{
+    affine_compose, cheb_domain, chebyshev_to_monomial, monomial_to_chebyshev, ChebSeries,
+    PolyBasis, PolySeries,
+};
+
 use crate::linalg::dmat::DMat;
 use crate::linalg::funcs::{matpow, poly_horner, power_lambda_max, spectral_apply};
-use crate::linalg::sparse::{spmm_into, CsrMat};
-use anyhow::{bail, Result};
+use crate::linalg::sparse::{spmm_step_into, CsrMat};
+use anyhow::{anyhow, bail, Result};
 
 /// A spectral transform from Table 2 (or the identity baseline).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -160,10 +188,11 @@ impl SeriesForm {
     /// *columns* — `deg(p)` sparse multiplies (`R ← A·R − shift·R + c_i·V`),
     /// never an `n×n` intermediate. `O(deg(p)·nnz·k)` work, `O(n·k)` memory.
     ///
-    /// This is the solver-step kernel behind `OpMode::MatrixFree`
-    /// (`solvers::SparsePolyOp`); each SpMM dispatches to the
-    /// register-blocked kernel family for `k ≤ 16` bundles. Output is
-    /// bitwise identical for every worker count (the
+    /// This is the monomial-basis solver-step path behind
+    /// `OpMode::MatrixFree` (`solvers::SparsePolyOp`); each Horner step is
+    /// one fused [`spmm_step_into`] pass (register-blocked for `k ≤ 16`
+    /// bundles), bitwise identical to the historical
+    /// SpMM + `axpy` + `axpy` composition and for every worker count (the
     /// [`crate::linalg::sparse`] determinism contract).
     pub fn apply_bundle(&self, a: &CsrMat, v: &DMat, threads: usize) -> DMat {
         assert!(a.is_square(), "apply_bundle needs a square operator");
@@ -174,18 +203,12 @@ impl SeriesForm {
         let d = self.coeffs.len() - 1;
         let mut r = v.clone();
         r.scale(self.coeffs[d]);
-        // Ping-pong between two preallocated bundles: deg(p) SpMMs per
-        // apply with zero per-iteration allocations.
+        // Ping-pong between two preallocated bundles: deg(p) fused passes
+        // per apply with zero per-iteration allocations.
         let mut t = DMat::zeros(v.rows(), v.cols());
         for i in (0..d).rev() {
-            // R ← B·R + c_i·V with B = A − shift·I.
-            spmm_into(a, &r, &mut t, threads);
-            if self.shift != 0.0 {
-                t.axpy(-self.shift, &r);
-            }
-            if self.coeffs[i] != 0.0 {
-                t.axpy(self.coeffs[i], v);
-            }
+            // R ← B·R + c_i·V with B = A − shift·I, in one pass.
+            spmm_step_into(a, &r, v, -self.shift, 1.0, self.coeffs[i], &mut t, threads);
             std::mem::swap(&mut r, &mut t);
         }
         r
@@ -247,7 +270,12 @@ impl TransformKind {
     }
 
     /// True for transforms expressible as a polynomial apply — i.e. usable
-    /// under [`OpMode::MatrixFree`]. The exact (eigh-based) kinds are not.
+    /// under [`OpMode::MatrixFree`], in **either** polynomial basis
+    /// (`--basis monomial|chebyshev`; see [`Self::series`] /
+    /// [`Self::cheb_series`]). The exact (eigh-based) kinds are not
+    /// polynomials at all, so they support neither matrix-free evaluation
+    /// nor the Chebyshev basis — both are rejected with an error, never
+    /// silently fallen back from.
     pub fn supports_matrix_free(&self) -> bool {
         !self.is_exact()
     }
@@ -266,7 +294,12 @@ impl TransformKind {
         }
     }
 
-    /// The series representation, for the polynomial kinds.
+    /// The **monomial-basis** (shifted-power) series representation, for
+    /// the polynomial kinds that have a usable one. `LimitNegExp` does not
+    /// — its leading coefficient `ℓ^{−ℓ}` underflows f64 — so the monomial
+    /// path special-cases it as a repeated matrix power, while the
+    /// Chebyshev basis ([`Self::cheb_series`], `--basis chebyshev`)
+    /// represents it like any other polynomial.
     pub fn series(&self) -> Option<SeriesForm> {
         match *self {
             TransformKind::TaylorLog { ell, eps } => {
@@ -297,6 +330,23 @@ impl TransformKind {
             }
             _ => None,
         }
+    }
+
+    /// The **Chebyshev-basis** representation of the polynomial kinds on
+    /// the spectrum domain `[lo, hi]` (typically `[0, λ̂_max]` of the
+    /// transform input), fitted stably by interpolation of
+    /// [`Self::scalar_map`] at Chebyshev nodes — exact for these kinds,
+    /// whose scalar maps *are* polynomials of the fitted degree. `None`
+    /// for the exact (eigh-based) kinds, which are not polynomials.
+    pub fn cheb_series(&self, lo: f64, hi: f64) -> Option<ChebSeries> {
+        let degree = match *self {
+            TransformKind::Identity => 1,
+            TransformKind::TaylorLog { ell, .. }
+            | TransformKind::TaylorNegExp { ell }
+            | TransformKind::LimitNegExp { ell } => ell,
+            TransformKind::MatrixLog { .. } | TransformKind::NegExp => return None,
+        };
+        Some(ChebSeries::fit(degree, lo, hi, |x| self.scalar_map(x)))
     }
 
     /// Materialize `f(L)` natively.
@@ -404,11 +454,24 @@ pub struct BuildOptions {
     /// iteration). `1` = serial; any value produces bitwise-identical
     /// output (`linalg::par` determinism contract).
     pub threads: usize,
+    /// Polynomial basis the series transforms are evaluated in. **Default
+    /// [`PolyBasis::Monomial`]**, which is bitwise-identical to the
+    /// pre-basis-knob build; [`PolyBasis::Chebyshev`] switches every
+    /// polynomial kind to the domain-mapped three-term recurrence (stable
+    /// at high degree, no `LimitNegExp` special case) and is rejected for
+    /// the exact (eigh-based) kinds.
+    pub basis: PolyBasis,
 }
 
 impl Default for BuildOptions {
     fn default() -> Self {
-        BuildOptions { prescale: false, power_iters: 100, safety: 1.01, threads: 1 }
+        BuildOptions {
+            prescale: false,
+            power_iters: 100,
+            safety: 1.01,
+            threads: 1,
+            basis: PolyBasis::Monomial,
+        }
     }
 }
 
@@ -425,7 +488,6 @@ pub fn build_solver_matrix(l: &DMat, kind: TransformKind, opts: &BuildOptions) -
     let scale = if opts.prescale && lam_est > 0.0 { lam_est } else { 1.0 };
     let mut scaled = l.clone();
     scaled.scale(1.0 / scale);
-    let f_l = kind.build_threaded(&scaled, threads)?;
     // Spectral radius of the transform *input*: 1 after pre-scaling, else
     // the λ_max estimate (safety-padded; Gershgorin as a fallback bound).
     let rho = if opts.prescale {
@@ -434,6 +496,23 @@ pub fn build_solver_matrix(l: &DMat, kind: TransformKind, opts: &BuildOptions) -
         lam_est
     } else {
         crate::linalg::funcs::gershgorin_bound(&scaled)
+    };
+    let f_l = match opts.basis {
+        PolyBasis::Monomial => kind.build_threaded(&scaled, threads)?,
+        PolyBasis::Chebyshev => {
+            // The shared safe-by-construction domain policy (see
+            // [`cheb_domain`]): λ_max estimate widened to the guaranteed
+            // Gershgorin bound.
+            let (lo, hi) = cheb_domain(rho, crate::linalg::funcs::gershgorin_bound(&scaled));
+            let cheb = kind.cheb_series(lo, hi).ok_or_else(|| {
+                anyhow!(
+                    "exact transform {kind} is eigendecomposition-based and has no \
+                     polynomial form in any basis — use --basis monomial (series \
+                     transforms support both bases)"
+                )
+            })?;
+            cheb.eval_matrix_threads(&scaled, threads)
+        }
     };
     let lambda_star = kind.lambda_star(rho);
     // M = λ*I − f(L)
@@ -728,6 +807,69 @@ mod tests {
         let mut want = v.clone();
         want.scale(2.5);
         assert!((&cv - &want).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn chebyshev_build_matches_monomial_and_rejects_exact() {
+        // The dense build in the Chebyshev basis evaluates the same
+        // polynomial as the monomial build — different association, ≤1e-9
+        // agreement on a prescaled spectrum — including LimitNegExp, which
+        // the monomial path must special-case through matpow.
+        let l = test_laplacian();
+        let mono_opts = BuildOptions { prescale: true, ..BuildOptions::default() };
+        let cheb_opts = BuildOptions {
+            prescale: true,
+            basis: PolyBasis::Chebyshev,
+            ..BuildOptions::default()
+        };
+        for kind in [
+            TransformKind::Identity,
+            TransformKind::TaylorNegExp { ell: 31 },
+            TransformKind::TaylorLog { ell: 61, eps: 0.05 },
+            TransformKind::LimitNegExp { ell: 51 },
+        ] {
+            let mono = build_solver_matrix(&l, kind, &mono_opts).unwrap();
+            let cheb = build_solver_matrix(&l, kind, &cheb_opts).unwrap();
+            assert_eq!(mono.lambda_star.to_bits(), cheb.lambda_star.to_bits(), "{kind}");
+            let err = (&mono.m - &cheb.m).max_abs();
+            assert!(err < 1e-9, "{kind}: basis divergence {err}");
+        }
+        // Exact (eigh-based) kinds have no polynomial form: clear error,
+        // no silent fallback.
+        for kind in [TransformKind::NegExp, TransformKind::MatrixLog { eps: 0.05 }] {
+            let err = build_solver_matrix(&l, kind, &cheb_opts).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("--basis monomial"),
+                "{kind}: unhelpful error {err:#}"
+            );
+            assert!(build_solver_matrix(&l, kind, &mono_opts).is_ok());
+        }
+        // Default basis is monomial (the bitwise-compat path).
+        assert_eq!(BuildOptions::default().basis, PolyBasis::Monomial);
+    }
+
+    #[test]
+    fn cheb_series_matches_scalar_map_at_high_degree() {
+        // The acceptance degrees: ℓ ∈ {15, 251} on [0, 1], every series
+        // kind, ≤1e-9 against the truncated-series scalar map.
+        for ell in [15usize, 251] {
+            for kind in [
+                TransformKind::TaylorNegExp { ell },
+                TransformKind::TaylorLog { ell, eps: 0.05 },
+                TransformKind::LimitNegExp { ell },
+            ] {
+                let cheb = kind.cheb_series(0.0, 1.0).expect("polynomial kind");
+                assert_eq!(cheb.degree(), ell);
+                for i in 0..=40 {
+                    let x = i as f64 / 40.0;
+                    let err = (cheb.eval_scalar(x) - kind.scalar_map(x)).abs();
+                    assert!(err < 1e-9, "{kind} at x={x}: err {err}");
+                }
+            }
+        }
+        assert!(TransformKind::NegExp.cheb_series(0.0, 1.0).is_none());
+        assert!(TransformKind::MatrixLog { eps: 0.05 }.cheb_series(0.0, 1.0).is_none());
+        assert_eq!(TransformKind::Identity.cheb_series(0.0, 2.0).unwrap().degree(), 1);
     }
 
     #[test]

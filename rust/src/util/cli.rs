@@ -13,6 +13,9 @@ struct OptSpec {
     help: &'static str,
     takes_value: bool,
     default: Option<String>,
+    /// Closed value set ([`ArgSpec::opt_choice`]): values outside it are
+    /// rejected at parse time with the full list in the error.
+    choices: Option<&'static [&'static str]>,
 }
 
 /// A declarative argument parser for one (sub)command.
@@ -39,19 +42,47 @@ impl ArgSpec {
 
     /// Declare `--name <value>` with a default.
     pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
-        self.opts.push(OptSpec { name, help, takes_value: true, default: Some(default.into()) });
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.into()),
+            choices: None,
+        });
+        self
+    }
+
+    /// Declare `--name <value>` restricted to a closed value set: any
+    /// other value is rejected at parse time with the allowed list in the
+    /// error (instead of surfacing later from a domain parser), and the
+    /// help text lists the choices.
+    pub fn opt_choice(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        choices: &'static [&'static str],
+        help: &'static str,
+    ) -> Self {
+        debug_assert!(choices.contains(&default), "default not among choices");
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.into()),
+            choices: Some(choices),
+        });
         self
     }
 
     /// Declare `--name <value>` without a default (optional).
     pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
-        self.opts.push(OptSpec { name, help, takes_value: true, default: None });
+        self.opts.push(OptSpec { name, help, takes_value: true, default: None, choices: None });
         self
     }
 
     /// Declare a boolean `--name` flag.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
-        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None, choices: None });
         self
     }
 
@@ -85,7 +116,11 @@ impl ArgSpec {
                 .as_ref()
                 .map(|d| format!(" [default: {d}]"))
                 .unwrap_or_default();
-            let _ = writeln!(s, "  {left:<24} {}{default}", o.help);
+            let choices = o
+                .choices
+                .map(|c| format!(" (one of: {})", c.join(" | ")))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {left:<24} {}{choices}{default}", o.help);
         }
         s
     }
@@ -121,6 +156,14 @@ impl ArgSpec {
                             .next()
                             .ok_or_else(|| format!("option --{name} requires a value"))?,
                     };
+                    if let Some(choices) = spec.choices {
+                        if !choices.contains(&v.as_str()) {
+                            return Err(format!(
+                                "invalid value {v:?} for --{name} (expected one of: {})",
+                                choices.join(" | ")
+                            ));
+                        }
+                    }
                     out.values.insert(name, v);
                 } else {
                     if inline_val.is_some() {
@@ -188,6 +231,7 @@ mod tests {
         ArgSpec::new("test", "test command")
             .opt("n", "100", "node count")
             .opt("name", "foo", "a name")
+            .opt_choice("basis", "monomial", &["monomial", "chebyshev"], "poly basis")
             .opt_req("out", "output path")
             .flag("verbose", "chatty")
             .positional("input", "input file")
@@ -233,6 +277,23 @@ mod tests {
         assert!(h.contains("--n"));
         assert!(h.contains("--verbose"));
         assert!(h.contains("<input>"));
+    }
+
+    #[test]
+    fn choice_options_validate_and_document() {
+        // Defaults and valid values pass.
+        let a = spec().parse(toks("")).unwrap();
+        assert_eq!(a.str("basis"), "monomial");
+        let a = spec().parse(toks("--basis chebyshev")).unwrap();
+        assert_eq!(a.str("basis"), "chebyshev");
+        let a = spec().parse(toks("--basis=chebyshev")).unwrap();
+        assert_eq!(a.str("basis"), "chebyshev");
+        // Invalid values fail at parse time with the allowed list.
+        let err = spec().parse(toks("--basis legendre")).unwrap_err();
+        assert!(err.contains("monomial | chebyshev"), "unhelpful error: {err}");
+        // Help lists the choices.
+        let h = spec().parse(toks("--help")).unwrap_err();
+        assert!(h.contains("one of: monomial | chebyshev"), "{h}");
     }
 
     #[test]

@@ -118,6 +118,13 @@ impl Config {
             .unwrap_or(default)
             .to_string()
     }
+    /// String value without a default: `None` when the key is absent (or
+    /// not a string). Lets callers express "config file wins, else fall
+    /// back to the CLI flag" precedence explicitly instead of burying the
+    /// fallback inside a default argument.
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.get(key).and_then(|v| v.as_str()).map(|s| s.to_string())
+    }
     pub fn usize(&self, key: &str, default: usize) -> usize {
         self.get(key)
             .and_then(|v| v.as_i64())
@@ -223,6 +230,15 @@ ells = [11, 51, 151, 251]
         let c = Config::parse("x = 1 # trailing").unwrap();
         assert_eq!(c.usize("x", 0), 1);
         assert_eq!(c.usize("missing", 9), 9);
+    }
+
+    #[test]
+    fn str_opt_distinguishes_absent_keys() {
+        let c = Config::parse("[pipeline]\nbasis = \"chebyshev\"\nsteps = 100").unwrap();
+        assert_eq!(c.str_opt("pipeline.basis").as_deref(), Some("chebyshev"));
+        assert_eq!(c.str_opt("pipeline.missing"), None);
+        // Non-string values are not coerced.
+        assert_eq!(c.str_opt("pipeline.steps"), None);
     }
 
     #[test]

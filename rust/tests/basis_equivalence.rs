@@ -1,0 +1,297 @@
+//! Basis-equivalence harness (the contracts of the basis-generic
+//! polynomial subsystem, exhaustively):
+//!
+//! 1. monomial↔Chebyshev coefficient conversion round-trips **exactly**
+//!    for degrees 0..=8 (dyadic coefficients bit-for-bit, random
+//!    coefficients ≤1e-12);
+//! 2. `apply_bundle` in both bases agrees ≤1e-9 with the eigh-based
+//!    scalar spectrum map on every graph generator × both Laplacian
+//!    variants, at the acceptance degrees ℓ ∈ {15, 251};
+//! 3. the fused `spmm_step_into` kernel is **bitwise** equal to the
+//!    unfused SpMM + `scale` + `axpy` composition for every bundle width
+//!    k ∈ 1..=17 × 1/2/8 workers — and therefore the refactored
+//!    monomial-basis hot loops (Horner, NegPower) are bitwise-identical
+//!    to the pre-refactor three-pass implementations;
+//! 4. the Chebyshev pipeline is bitwise-deterministic across 1/2/8
+//!    workers end to end.
+
+use sped::graph::gen::{
+    barabasi_albert, barbell, cliques, erdos_renyi, grid2d, path, ring, ring_of_cliques, sbm,
+    CliqueSpec,
+};
+use sped::graph::Graph;
+use sped::linalg::matmul::matmul;
+use sped::linalg::sparse::{spmm_into, spmm_step, CsrMat};
+use sped::linalg::DMat;
+use sped::pipeline::{Pipeline, PipelineConfig};
+use sped::transforms::{
+    chebyshev_to_monomial, monomial_to_chebyshev, BuildOptions, OpMode, PolyBasis, SeriesForm,
+    TransformKind,
+};
+use sped::util::rng::Rng;
+
+/// Every generator in the crate, at a size small enough that the full
+/// kind × variant × degree sweep stays cheap.
+fn generator_zoo(n: usize, seed: u64) -> Vec<(&'static str, Graph)> {
+    vec![
+        (
+            "cliques",
+            cliques(&CliqueSpec { n, k: (n / 6).max(1), max_short_circuit: 3, seed }).graph,
+        ),
+        ("sbm", sbm(&[n / 2, n - n / 2], 0.8, 0.05, seed).graph),
+        ("erdos_renyi", erdos_renyi(n, 0.3, seed).graph),
+        ("grid2d", grid2d(n / 3 + 1, 3).graph),
+        ("path", path(n).graph),
+        ("ring", ring(n.max(3)).graph),
+        ("barbell", barbell(n / 2 + 2).graph),
+        ("ring_of_cliques", ring_of_cliques(3, n / 3 + 2, seed).graph),
+        ("barabasi_albert", barabasi_albert(n.max(5), 3, seed).graph),
+    ]
+}
+
+fn bitwise_eq(a: &DMat, b: &DMat) -> bool {
+    a.rows() == b.rows()
+        && a.cols() == b.cols()
+        && a.data().iter().zip(b.data().iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn coefficient_roundtrip_exact_for_degrees_0_to_8() {
+    // Dyadic coefficients: exact (bit-for-bit) both ways.
+    for d in 0..=8usize {
+        let mono: Vec<f64> = (0..=d).map(|i| (i as f64 - 2.0) * 0.25).collect();
+        let rt = chebyshev_to_monomial(&monomial_to_chebyshev(&mono));
+        for (a, b) in mono.iter().zip(rt.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "monomial round-trip, degree {d}");
+        }
+        let cheb: Vec<f64> = (0..=d).map(|i| 2.0 - i as f64 * 0.5).collect();
+        let rt = monomial_to_chebyshev(&chebyshev_to_monomial(&cheb));
+        for (a, b) in cheb.iter().zip(rt.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "chebyshev round-trip, degree {d}");
+        }
+    }
+    // Random coefficients: round-trip to conversion rounding.
+    let mut rng = Rng::new(3);
+    for d in 0..=8usize {
+        let mono: Vec<f64> = (0..=d).map(|_| rng.normal()).collect();
+        let rt = chebyshev_to_monomial(&monomial_to_chebyshev(&mono));
+        for (a, b) in mono.iter().zip(rt.iter()) {
+            assert!((a - b).abs() <= 1e-12 * a.abs().max(1.0), "degree {d}: {a} vs {b}");
+        }
+    }
+}
+
+/// The polynomial each transform applies, evaluated in the requested basis
+/// against the scaled CSR operator (spectrum in [0, 1]).
+fn apply_in_basis(
+    kind: TransformKind,
+    basis: PolyBasis,
+    l: &CsrMat,
+    v: &DMat,
+    threads: usize,
+) -> DMat {
+    match basis {
+        PolyBasis::Chebyshev => {
+            kind.cheb_series(0.0, 1.0).expect("polynomial kind").apply_bundle(l, v, threads)
+        }
+        PolyBasis::Monomial => match kind {
+            TransformKind::LimitNegExp { ell } => {
+                // The monomial path's repeated-multiply special case
+                // (SparsePolyOp::NegPower): W ← (I − L/ℓ)·W, ℓ times.
+                let inv = -1.0 / ell as f64;
+                let mut w = v.clone();
+                let mut t = DMat::zeros(v.rows(), v.cols());
+                for _ in 0..ell {
+                    sped::linalg::sparse::spmm_step_into(l, &w, v, 1.0, inv, 0.0, &mut t, threads);
+                    std::mem::swap(&mut w, &mut t);
+                }
+                w.scale(-1.0);
+                w
+            }
+            _ => kind.series().expect("series kind").apply_bundle(l, v, threads),
+        },
+    }
+}
+
+#[test]
+fn both_bases_match_scalar_map_on_every_generator_and_laplacian() {
+    // ≤1e-9 against the eigh-based spectrum map V·diag(f(λ))·Vᵀ·X, for
+    // every generator × both Laplacian variants × every series kind, at
+    // the acceptance degrees ℓ ∈ {15, 251}.
+    for (name, g) in generator_zoo(20, 5) {
+        let n = g.num_nodes();
+        let mut rng = Rng::new(n as u64 ^ 0xBA);
+        let x = DMat::from_fn(n, 4, |_, _| rng.normal());
+        for (variant, dense, sparse) in [
+            ("laplacian", g.laplacian(), g.laplacian_csr()),
+            ("normalized", g.normalized_laplacian(), g.normalized_laplacian_csr()),
+        ] {
+            // Scale the spectrum into [0, 1] (the prescaled regime where
+            // every series converges), identically on both representations.
+            let e_raw = sped::linalg::eigh(&dense).unwrap();
+            let lam = e_raw.lambda_max().max(1e-12) * 1.001;
+            let mut dense = dense;
+            dense.scale(1.0 / lam);
+            let mut sparse = sparse;
+            sparse.scale_values(1.0 / lam);
+            let e = sped::linalg::eigh(&dense).unwrap();
+            for ell in [15usize, 251] {
+                for kind in [
+                    TransformKind::TaylorNegExp { ell },
+                    TransformKind::TaylorLog { ell, eps: 0.05 },
+                    TransformKind::LimitNegExp { ell },
+                ] {
+                    // Ground truth: V·diag(f(λ))·(Vᵀ·X).
+                    let mut vt_x = matmul(&e.vectors.t(), &x);
+                    for (i, &lam_i) in e.values.iter().enumerate() {
+                        let f = kind.scalar_map(lam_i);
+                        for j in 0..vt_x.cols() {
+                            vt_x[(i, j)] *= f;
+                        }
+                    }
+                    let truth = matmul(&e.vectors, &vt_x);
+                    for basis in [PolyBasis::Monomial, PolyBasis::Chebyshev] {
+                        let got = apply_in_basis(kind, basis, &sparse, &x, 1);
+                        let err = (&got - &truth).max_abs();
+                        assert!(
+                            err < 1e-9,
+                            "{name}/{variant} {kind} {basis}: scalar-map divergence {err}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_step_kernel_bitwise_equals_unfused_composition_everywhere() {
+    // The satellite contract: spmm_step_into ≡ spmm + scale + axpy
+    // (conditional skips included) bit for bit, across every blocked
+    // width, the streaming fallback, and 1/2/8 workers, on a real
+    // Laplacian with structural-zero diagonals.
+    let g = cliques(&CliqueSpec { n: 29, k: 3, max_short_circuit: 2, seed: 9 }).graph;
+    let l = g.laplacian_csr();
+    let n = g.num_nodes();
+    let cases: &[(f64, f64, f64)] = &[
+        (-0.95, 1.0, 0.04),      // Horner step: α = −shift, β = 1, γ = cᵢ
+        (1.0, -1.0 / 251.0, 0.0), // NegPower step: γ = 0
+        (-1.3, 0.7, -1.0),       // Chebyshev step: α = 2b, β = 2a, γ = −1
+        (0.0, 1.0, 0.0),         // bare SpMM
+    ];
+    for k in 1..=17usize {
+        let mut rng = Rng::new(k as u64 + 1000);
+        let w = DMat::from_fn(n, k, |_, _| rng.normal());
+        let u = DMat::from_fn(n, k, |_, _| rng.normal());
+        for &(alpha, beta, gamma) in cases {
+            // Reference: the pre-refactor three-pass composition.
+            let mut want = DMat::zeros(n, k);
+            spmm_into(&l, &w, &mut want, 1);
+            want.scale(beta);
+            if alpha != 0.0 {
+                want.axpy(alpha, &w);
+            }
+            if gamma != 0.0 {
+                want.axpy(gamma, &u);
+            }
+            for workers in [1usize, 2, 8] {
+                let got = spmm_step(&l, &w, &u, alpha, beta, gamma, workers);
+                assert!(
+                    bitwise_eq(&got, &want),
+                    "k={k}, {workers} workers, (α,β,γ)=({alpha},{beta},{gamma})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn monomial_hot_loops_bitwise_match_pre_refactor_composition() {
+    // The refactored SeriesForm::apply_bundle (fused) must reproduce the
+    // historical unfused Horner loop bit for bit — the monomial
+    // bitwise-compat guarantee — across worker counts and widths.
+    let g = cliques(&CliqueSpec { n: 30, k: 3, max_short_circuit: 2, seed: 4 }).graph;
+    let mut l = g.laplacian_csr();
+    l.scale_values(0.1); // keep high powers tame
+    let series = TransformKind::TaylorNegExp { ell: 21 }.series().unwrap();
+    for k in [1usize, 4, 8, 16, 17] {
+        let mut rng = Rng::new(k as u64 + 77);
+        let v = DMat::from_fn(30, k, |_, _| rng.normal());
+        // Pre-refactor reference: SpMM, then conditional axpys.
+        let d = series.coeffs.len() - 1;
+        let mut r = v.clone();
+        r.scale(series.coeffs[d]);
+        let mut t = DMat::zeros(30, k);
+        for i in (0..d).rev() {
+            spmm_into(&l, &r, &mut t, 1);
+            if series.shift != 0.0 {
+                t.axpy(-series.shift, &r);
+            }
+            if series.coeffs[i] != 0.0 {
+                t.axpy(series.coeffs[i], &v);
+            }
+            std::mem::swap(&mut r, &mut t);
+        }
+        for workers in [1usize, 2, 8] {
+            let got = series.apply_bundle(&l, &v, workers);
+            assert!(bitwise_eq(&got, &r), "Horner fused/unfused k={k}, {workers} workers");
+        }
+    }
+}
+
+#[test]
+fn chebyshev_pipeline_bitwise_deterministic_across_workers() {
+    let gg = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 6 });
+    let mk = |threads| PipelineConfig {
+        k: 3,
+        transform: TransformKind::LimitNegExp { ell: 51 },
+        solver: "subspace".into(),
+        steps: 200,
+        eval_every: 20,
+        stop_error: 0.0,
+        op_mode: OpMode::MatrixFree,
+        ground_truth: false,
+        threads,
+        build: BuildOptions { basis: PolyBasis::Chebyshev, ..BuildOptions::default() },
+        ..Default::default()
+    };
+    let serial = Pipeline::new(mk(1)).run(&gg.graph).unwrap();
+    for threads in [2usize, 8] {
+        let par = Pipeline::new(mk(threads)).run(&gg.graph).unwrap();
+        assert!(
+            bitwise_eq(&serial.embedding, &par.embedding),
+            "chebyshev pipeline diverged at {threads} workers"
+        );
+        assert_eq!(serial.lambda_star.to_bits(), par.lambda_star.to_bits());
+    }
+}
+
+#[test]
+fn series_form_chebyshev_conversion_consistency() {
+    // SeriesForm → ChebSeries → SeriesForm preserves the polynomial: both
+    // scalar evaluations agree across the domain for every Table-2 series
+    // kind that has a monomial form, at a conversion-friendly degree.
+    for kind in [
+        TransformKind::TaylorNegExp { ell: 8 },
+        TransformKind::TaylorLog { ell: 8, eps: 0.05 },
+    ] {
+        let sf = kind.series().unwrap();
+        let cheb = sped::transforms::ChebSeries::from_series_form(&sf, 0.0, 1.0);
+        let back = cheb.to_series_form();
+        for i in 0..=32 {
+            let x = i as f64 / 32.0;
+            let a = sf.eval_scalar(x);
+            let b = cheb.eval_scalar(x);
+            let c = back.eval_scalar(x);
+            assert!((a - b).abs() < 1e-10, "{kind} fwd at x={x}: {a} vs {b}");
+            assert!((a - c).abs() < 1e-10, "{kind} round-trip at x={x}: {a} vs {c}");
+        }
+    }
+    // And an explicitly-shifted form round-trips too.
+    let sf = SeriesForm { shift: 0.3, coeffs: vec![1.0, -0.5, 0.25, 2.0] };
+    let cheb = sped::transforms::ChebSeries::from_series_form(&sf, -1.0, 2.0);
+    for i in 0..=30 {
+        let x = -1.0 + 3.0 * i as f64 / 30.0;
+        assert!((sf.eval_scalar(x) - cheb.eval_scalar(x)).abs() < 1e-11, "x={x}");
+    }
+}
