@@ -82,9 +82,17 @@ fn main() -> anyhow::Result<()> {
 
     // --- fully stochastic solve ---
     println!("\nOja driven purely by walk estimates (no dense matrix ever formed):");
-    let e = sped::linalg::eigh(&l)?;
+    let e = sped::linalg::eigh(&l)?; // metric oracle only — not on the solve path
     let v_star = e.bottom_k(2);
-    let lam_star = e.lambda_max() * 1.05;
+    // λ* from the CSR-routed estimate: the solve path itself never builds
+    // an n×n Laplacian, λ* included.
+    let lam_star = StochasticPolyOp::auto_lambda_star(
+        &g,
+        sped::transforms::TransformKind::Identity,
+        100,
+        1.05,
+        1,
+    );
     let mut op = StochasticPolyOp::new(
         &g,
         vec![0.0, 1.0],

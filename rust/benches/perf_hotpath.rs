@@ -20,6 +20,13 @@
 //!   SpMM + scale + axpy) vs fused (`spmm_step_into`) vs the
 //!   Chebyshev-basis three-term recurrence, with the max float divergence
 //!   between the bases — written to `BENCH_poly_basis.json`.
+//! * Adaptive degrees + Lanczos domains: the full-degree Chebyshev
+//!   operator on the historical power/Gershgorin domain vs `--degree auto`
+//!   truncation on the tight `--domain lanczos` interval — SpMM sweeps per
+//!   operator application, wall time, scalar-map error at the true
+//!   eigenvalues, and an end-to-end pipeline-convergence run — written to
+//!   `BENCH_adaptive_degree.json` (asserts the ≥2× sweep reduction at
+//!   ≤1e-6 map error).
 //! * XLA path (when artifacts exist): chunked solver steps, poly build,
 //!   matpow, matvec round-trip — including the PJRT call overhead.
 //!
@@ -415,6 +422,212 @@ fn poly_basis_group(suite: &mut BenchSuite, threads: usize) {
     suite.report(&format!("wrote {}", path.display()));
 }
 
+/// Adaptive-degree + Lanczos-domain group (the PR 5 acceptance
+/// measurement): on normalized-Laplacian clique workloads, compare the
+/// full-degree Chebyshev operator on the loose power/Gershgorin domain
+/// (today's `--basis chebyshev` default) against `--degree auto` truncation
+/// on the loose domain and on the tight `--domain lanczos` interval.
+/// Records SpMM sweeps per operator application (the quantity the tight
+/// domain + truncation shrink), apply wall time, and the scalar-map error
+/// at the true `eigh` eigenvalues (grid over the covered interval at sizes
+/// where the dense oracle is too expensive), then times an end-to-end
+/// matrix-free pipeline run fixed-vs-adaptive and checks the partitions
+/// match. Emits `BENCH_adaptive_degree.json` at the repo root, asserting
+/// the acceptance floor inline: ≥2× fewer sweeps at ≤1e-6 map error, with
+/// the explicit power/native knobs bitwise-identical to the knob-free
+/// defaults.
+fn adaptive_degree_group(suite: &mut BenchSuite, threads: usize) {
+    use sped::transforms::{Degree, DomainEstimate, PolyBasis};
+    let ns: &[usize] = if fast_mode() { &[512] } else { &[1024, 4096] };
+    let ells: &[usize] = &[15, 251];
+    let k = 8usize;
+    let step_reps = if fast_mode() { 2 } else { 5 };
+    let auto_degree = Degree::Auto { tol: 1e-9, max: usize::MAX };
+    let mut rows: Vec<Vec<(String, JsonVal)>> = Vec::new();
+    for &n in ns {
+        // Same 16-node-clique community workload as the other sparse
+        // groups, but on the *normalized* Laplacian — the acceptance
+        // configuration, where the spectrum ends well below the Gershgorin
+        // bound of 2 and the tight domain pays off.
+        let gg = cliques(&CliqueSpec { n, k: (n / 16).max(2), max_short_circuit: 2, seed: 42 });
+        let l = gg.graph.normalized_laplacian_csr();
+        let nnz = l.nnz();
+        let v = sped::solvers::random_init(n, k, 7);
+        // The dense eigh oracle is O(n³): exact eigenvalues up to n = 1024,
+        // a grid over the covered interval beyond.
+        let exact: Option<Vec<f64>> = if n <= 1024 {
+            Some(sped::linalg::eigh(&gg.graph.normalized_laplacian()).unwrap().values)
+        } else {
+            None
+        };
+        for &ell in ells {
+            let kind = TransformKind::LimitNegExp { ell };
+            let mk = |domain, degree| {
+                let opts = BuildOptions {
+                    basis: PolyBasis::Chebyshev,
+                    domain,
+                    degree,
+                    threads,
+                    ..BuildOptions::default()
+                };
+                SparsePolyOp::from_csr(l.clone(), kind, &opts).unwrap()
+            };
+            let mut fixed_power = mk(DomainEstimate::Power, Degree::Native);
+            let mut auto_power = mk(DomainEstimate::Power, auto_degree);
+            let mut auto_lanczos = mk(DomainEstimate::Lanczos, auto_degree);
+            // Bitwise default guard: the explicit power/native knobs are
+            // the knob-free defaults, exactly.
+            let mut default_op = SparsePolyOp::from_csr(
+                l.clone(),
+                kind,
+                &BuildOptions {
+                    basis: PolyBasis::Chebyshev,
+                    threads,
+                    ..BuildOptions::default()
+                },
+            )
+            .unwrap();
+            assert!(
+                bitwise_eq(&fixed_power.apply(&v), &default_op.apply(&v)),
+                "explicit --domain power --degree native diverged from defaults at n={n}, ell={ell}"
+            );
+            let (sw_fixed, sw_ap, sw_al) =
+                (fixed_power.sweeps(), auto_power.sweeps(), auto_lanczos.sweeps());
+            let reduction = sw_fixed as f64 / sw_al.max(1) as f64;
+            // Map error at the true eigenvalues (or a grid over the covered
+            // interval): the dilation the solver actually sees.
+            let (alo, ahi) = auto_lanczos.fit_domain().unwrap();
+            let xs: Vec<f64> = match &exact {
+                Some(values) => values.clone(),
+                None => (0..=400).map(|i| alo + (ahi - alo) * i as f64 / 400.0).collect(),
+            };
+            let map_err = |op: &SparsePolyOp| {
+                xs.iter()
+                    .map(|&x| (op.poly_eval(x) - kind.scalar_map(x)).abs())
+                    .fold(0.0f64, f64::max)
+            };
+            let (err_fixed, err_ap, err_al) =
+                (map_err(&fixed_power), map_err(&auto_power), map_err(&auto_lanczos));
+            let (t_fixed, _) = best_of(step_reps, || fixed_power.apply(&v));
+            let (t_ap, _) = best_of(step_reps, || auto_power.apply(&v));
+            let (t_al, _) = best_of(step_reps, || auto_lanczos.apply(&v));
+            // The acceptance floor, enforced where the numbers are made.
+            // ℓ = 15 barely has a sub-tolerance tail to cut (the kept
+            // degree is set by the map's smoothness, not by ℓ), so the
+            // ≥2× floor binds at the paper-scale series degrees.
+            if ell >= 51 {
+                assert!(
+                    reduction >= 2.0,
+                    "sweep reduction {reduction:.2}x below the 2x floor at n={n}, ell={ell} \
+                     ({sw_fixed} -> {sw_al} sweeps)"
+                );
+            }
+            assert!(
+                err_al <= 1e-6,
+                "adaptive map error {err_al:.2e} above 1e-6 at n={n}, ell={ell}"
+            );
+            let (plo, phi) = fixed_power.fit_domain().unwrap();
+            suite.report(&format!(
+                "adaptive-degree n={n} ell={ell} k={k} nnz={nnz} ({threads}w): sweeps {sw_fixed} | auto/power {sw_ap} | auto/lanczos {sw_al} ({reduction:.1}x); apply {} | {} | {} ({:.2}x); domain [{plo:.3},{phi:.3}] -> [{alo:.3},{ahi:.3}]; map err {err_al:.1e}",
+                human_time(t_fixed),
+                human_time(t_ap),
+                human_time(t_al),
+                t_fixed / t_al.max(1e-12),
+            ));
+            rows.push(vec![
+                ("kind".into(), JsonVal::Str("operator".into())),
+                ("transform".into(), JsonVal::Str(format!("limit_negexp:{ell}"))),
+                ("workload".into(), JsonVal::Str("cliques16-normalized".into())),
+                ("n".into(), JsonVal::Int(n as u64)),
+                ("ell".into(), JsonVal::Int(ell as u64)),
+                ("k".into(), JsonVal::Int(k as u64)),
+                ("nnz".into(), JsonVal::Int(nnz as u64)),
+                ("threads".into(), JsonVal::Int(threads as u64)),
+                ("sweeps_fixed_power".into(), JsonVal::Int(sw_fixed as u64)),
+                ("sweeps_auto_power".into(), JsonVal::Int(sw_ap as u64)),
+                ("sweeps_auto_lanczos".into(), JsonVal::Int(sw_al as u64)),
+                ("sweep_reduction".into(), JsonVal::Num(reduction)),
+                ("domain_power_hi".into(), JsonVal::Num(phi)),
+                ("domain_lanczos_lo".into(), JsonVal::Num(alo)),
+                ("domain_lanczos_hi".into(), JsonVal::Num(ahi)),
+                ("apply_fixed_s".into(), JsonVal::Num(t_fixed)),
+                ("apply_auto_power_s".into(), JsonVal::Num(t_ap)),
+                ("apply_auto_lanczos_s".into(), JsonVal::Num(t_al)),
+                ("apply_speedup".into(), JsonVal::Num(t_fixed / t_al.max(1e-12))),
+                ("map_err_fixed".into(), JsonVal::Num(err_fixed)),
+                ("map_err_auto_power".into(), JsonVal::Num(err_ap)),
+                ("map_err_auto_lanczos".into(), JsonVal::Num(err_al)),
+                ("exact_spectrum".into(), JsonVal::Int(u64::from(exact.is_some()))),
+                ("fast_mode".into(), JsonVal::Int(u64::from(fast_mode()))),
+            ]);
+        }
+    }
+    // End-to-end pipeline convergence: the same solve, fixed vs adaptive —
+    // wall-time speedup with the identical resulting partition.
+    {
+        use sped::pipeline::{Pipeline, PipelineConfig};
+        use sped::transforms::OpMode;
+        let n = if fast_mode() { 512 } else { 1024 };
+        let steps = if fast_mode() { 20 } else { 40 };
+        // 8 communities matching the solve's k = 8: the recovered partition
+        // is well-separated, so fixed-vs-adaptive equality is a clean
+        // correctness check rather than a tie-break lottery.
+        let gg = cliques(&CliqueSpec { n, k: 8, max_short_circuit: 2, seed: 42 });
+        let mk = |domain, degree| PipelineConfig {
+            k: 8,
+            transform: TransformKind::LimitNegExp { ell: 251 },
+            solver: "subspace".into(),
+            eta: 0.5,
+            steps,
+            eval_every: steps,
+            stop_error: 0.0,
+            op_mode: OpMode::MatrixFree,
+            ground_truth: false,
+            threads,
+            build: BuildOptions {
+                basis: PolyBasis::Chebyshev,
+                domain,
+                degree,
+                ..BuildOptions::default()
+            },
+            ..Default::default()
+        };
+        let (t_fixed, out_fixed) = timed(|| {
+            Pipeline::new(mk(DomainEstimate::Power, Degree::Native)).run(&gg.graph).unwrap()
+        });
+        let (t_auto, out_auto) = timed(|| {
+            Pipeline::new(mk(DomainEstimate::Lanczos, auto_degree)).run(&gg.graph).unwrap()
+        });
+        assert_eq!(
+            out_fixed.clustering.as_ref().unwrap().assignments,
+            out_auto.clustering.as_ref().unwrap().assignments,
+            "adaptive pipeline changed the partition"
+        );
+        suite.report(&format!(
+            "adaptive-degree pipeline n={n} steps={steps} ({threads}w): fixed {} | adaptive {} | {:.2}x, identical partition",
+            human_time(t_fixed),
+            human_time(t_auto),
+            t_fixed / t_auto.max(1e-12),
+        ));
+        rows.push(vec![
+            ("kind".into(), JsonVal::Str("pipeline".into())),
+            ("n".into(), JsonVal::Int(n as u64)),
+            ("steps".into(), JsonVal::Int(steps as u64)),
+            ("threads".into(), JsonVal::Int(threads as u64)),
+            ("pipeline_fixed_s".into(), JsonVal::Num(t_fixed)),
+            ("pipeline_adaptive_s".into(), JsonVal::Num(t_auto)),
+            ("pipeline_speedup".into(), JsonVal::Num(t_fixed / t_auto.max(1e-12))),
+            ("partition_identical".into(), JsonVal::Int(1)),
+            ("fast_mode".into(), JsonVal::Int(u64::from(fast_mode()))),
+        ]);
+    }
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_adaptive_degree.json");
+    suite.write_json(&path, &rows).expect("write BENCH_adaptive_degree.json");
+    suite.report(&format!("wrote {}", path.display()));
+}
+
 fn main() {
     let mut suite = BenchSuite::new("perf_hotpath");
     let threads = threads_param();
@@ -569,6 +782,13 @@ fn main() {
     // runs unconditionally like spmm-blocked (CI filter: "poly-basis").
     if suite.selected("poly-basis horner vs chebyshev recurrence") {
         poly_basis_group(&mut suite, threads);
+    }
+
+    // ---- adaptive degrees + Lanczos domains ----
+    // CSR operators throughout; the only dense work is the n ≤ 1024 eigh
+    // oracle for the map-error check (CI filter: "adaptive-degree").
+    if suite.selected("adaptive-degree lanczos domains + truncation") {
+        adaptive_degree_group(&mut suite, threads);
     }
 
     // ---- L3: clustering + walks ----

@@ -16,7 +16,9 @@ use crate::linalg::eigh;
 use crate::linalg::metrics::ConvergenceHistory;
 use crate::runtime::{pad_matrix, pad_rows, Runtime, XlaChunkRunner};
 use crate::solvers::{solver_by_name, DenseOp, MatVecOp, RunConfig, SparsePolyOp};
-use crate::transforms::{build_solver_matrix, BuildOptions, OpMode, PolyBasis, TransformKind};
+use crate::transforms::{
+    build_solver_matrix, BuildOptions, DomainEstimate, OpMode, PolyBasis, TransformKind,
+};
 use anyhow::{bail, Context, Result};
 use std::time::Instant;
 
@@ -206,6 +208,22 @@ impl Pipeline {
                     bail!(
                         "--basis chebyshev requires the native backend (the XLA \
                          poly_horner/matpow artifacts are monomial-basis)"
+                    );
+                }
+                if cfg.build.domain != DomainEstimate::Power {
+                    // The XLA build hand-rolls the historical power-domain
+                    // flow; the tight-domain policies are native-only.
+                    bail!(
+                        "--domain {} requires the native backend (the XLA build \
+                         uses the power-iteration domain)",
+                        cfg.build.domain
+                    );
+                }
+                if !cfg.build.degree.is_native() {
+                    bail!(
+                        "--degree {} requires the native backend with --basis \
+                         chebyshev (the XLA artifacts evaluate the native degree)",
+                        cfg.build.degree
                     );
                 }
                 if !cfg.ground_truth {

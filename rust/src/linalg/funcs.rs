@@ -103,6 +103,35 @@ pub fn gershgorin_bound(a: &DMat) -> f64 {
         .fold(0.0, f64::max)
 }
 
+/// Guaranteed two-sided Gershgorin eigenvalue interval of a symmetric
+/// matrix: every eigenvalue lies in `[min_i (a_ii − r_i), max_i (a_ii +
+/// r_i)]` with `r_i = Σ_{j≠i} |a_ij|`. For a graph Laplacian the lower
+/// edge is exactly 0 (each diagonal equals its off-diagonal row sum) — the
+/// guaranteed interval the Lanczos domain estimate is clipped to. Sparse
+/// counterpart: [`crate::linalg::sparse::CsrMat::gershgorin_interval`]
+/// (bitwise-identical on the densified matrix).
+pub fn gershgorin_interval(a: &DMat) -> (f64, f64) {
+    assert!(a.is_square(), "gershgorin_interval needs a square matrix");
+    let n = a.rows();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for i in 0..n {
+        let row = a.row(i);
+        let mut radius = 0.0;
+        for (j, &x) in row.iter().enumerate() {
+            if j != i {
+                radius += x.abs();
+            }
+        }
+        lo = lo.min(row[i] - radius);
+        hi = hi.max(row[i] + radius);
+    }
+    (lo, hi)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

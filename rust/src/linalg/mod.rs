@@ -16,6 +16,10 @@
 //!   powers.
 //! * [`metrics`] — the paper's §5.2 evaluation metrics: normalized subspace
 //!   error and longest eigenvector streak.
+//! * [`lanczos`] — m-step symmetric Lanczos tridiagonalization (full
+//!   reorthogonalization, deterministic start) on dense and CSR matrices:
+//!   tight two-sided Ritz bounds `[λ̂_min, λ̂_max]` with residual
+//!   diagnostics, behind the `--domain lanczos` Chebyshev-domain policy.
 //! * [`par`] — row-sharded parallel execution of the dense hot paths
 //!   (matmul, Horner polynomial apply, matpow, power iteration), bitwise
 //!   identical to the serial kernels for every worker count.
@@ -26,6 +30,7 @@
 pub mod dmat;
 pub mod eigh;
 pub mod funcs;
+pub mod lanczos;
 pub mod matmul;
 pub mod metrics;
 pub mod par;

@@ -166,6 +166,18 @@ pub fn matpow_par(a: &DMat, p: u64, threads: usize) -> DMat {
     acc.unwrap()
 }
 
+/// The deterministic unit start vector shared by the power iteration and
+/// the Lanczos tridiagonalization ([`super::lanczos`]): index-salted away
+/// from any single eigenvector, identical for the dense and sparse
+/// estimators so their bounds can never drift apart.
+pub(crate) fn deterministic_start(n: usize) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..n)
+        .map(|i| 1.0 + 0.01 * ((i * 2654435761 % 97) as f64 / 97.0))
+        .collect();
+    super::dmat::normalize(&mut v);
+    v
+}
+
 /// The one power-iteration recurrence, parameterized by the matrix–vector
 /// product. The dense ([`power_lambda_max_par`]) and sparse
 /// (`sparse::power_lambda_max_csr`) λ_max estimates both dispatch here, so
@@ -180,11 +192,7 @@ pub(crate) fn power_iteration_with(
     if n == 0 {
         return 0.0;
     }
-    // Deterministic start vector salted away from any single eigenvector.
-    let mut v: Vec<f64> = (0..n)
-        .map(|i| 1.0 + 0.01 * ((i * 2654435761 % 97) as f64 / 97.0))
-        .collect();
-    super::dmat::normalize(&mut v);
+    let mut v = deterministic_start(n);
     let mut lambda = 0.0;
     for _ in 0..iters {
         let mut w = matvec(&v);

@@ -189,6 +189,37 @@ impl CsrMat {
             .fold(0.0, f64::max)
     }
 
+    /// Guaranteed two-sided Gershgorin eigenvalue interval
+    /// `[min_i (a_ii − r_i), max_i (a_ii + r_i)]`, `r_i = Σ_{j≠i} |a_ij|`
+    /// (a missing structural diagonal counts as 0). Bitwise identical to
+    /// [`crate::linalg::funcs::gershgorin_interval`] on the densified
+    /// matrix: the off-diagonal radius accumulates the stored entries in
+    /// the same ascending-column order, and the dense path's extra zero
+    /// entries contribute exact `+0.0` terms.
+    pub fn gershgorin_interval(&self) -> (f64, f64) {
+        assert!(self.is_square(), "gershgorin_interval needs a square matrix");
+        if self.rows == 0 {
+            return (0.0, 0.0);
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let mut diag = 0.0;
+            let mut radius = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c as usize == i {
+                    diag = v;
+                } else {
+                    radius += v.abs();
+                }
+            }
+            lo = lo.min(diag - radius);
+            hi = hi.max(diag + radius);
+        }
+        (lo, hi)
+    }
+
     /// Fraction of stored entries relative to a dense matrix.
     pub fn density(&self) -> f64 {
         if self.rows == 0 || self.cols == 0 {

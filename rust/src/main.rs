@@ -128,6 +128,29 @@ fn pipeline_spec(spec: ArgSpec) -> ArgSpec {
              (bitwise-compatible historical path), chebyshev = domain-mapped three-term \
              recurrence (stable at high degree; native backend, series transforms only)",
         )
+        .opt_choice(
+            "domain",
+            "power",
+            &["power", "lanczos", "ritz", "gershgorin", "gersh"],
+            "spectral-interval estimate for the Chebyshev fit domain and lambda*: \
+             power = lambda_max power iteration widened to Gershgorin (historical), \
+             lanczos = tight two-sided Ritz bounds with residual-scaled padding, \
+             gershgorin = the guaranteed interval alone",
+        )
+        .opt(
+            "degree",
+            "native",
+            "native | auto[:max] | <N> — Chebyshev filter degree: native = the transform's \
+             own ell, auto = truncate the coefficient tail below --cheb-tol (fewer SpMM \
+             sweeps per solver step; auto:max additionally caps the kept degree), \
+             N = fit at exactly degree N (requires --basis chebyshev)",
+        )
+        .opt(
+            "cheb-tol",
+            "1e-9",
+            "relative coefficient tolerance for --degree auto (each dropped coefficient \
+             is one SpMM sweep saved; on-domain error is bounded by the dropped tail)",
+        )
         .opt(
             "reorder",
             "none",
@@ -151,6 +174,13 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
     // Config file wins over the CLI value (which always has a default).
     build.basis = PolyBasis::parse(
         &cfg.str_opt("pipeline.basis").unwrap_or_else(|| a.str("basis")),
+    )?;
+    build.domain = sped::transforms::DomainEstimate::parse(
+        &cfg.str_opt("pipeline.domain").unwrap_or_else(|| a.str("domain")),
+    )?;
+    build.degree = sped::transforms::Degree::parse(
+        &cfg.str_opt("pipeline.degree").unwrap_or_else(|| a.str("degree")),
+        cfg.f64("pipeline.cheb_tol", a.f64("cheb-tol")),
     )?;
     let backend = match a.str("backend").as_str() {
         "native" => Backend::Native,
@@ -181,25 +211,45 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
     })
 }
 
-/// Auto learning rate: η = 0.5/ρ(M), ρ(M) = λ* − f(0) analytically.
-/// Under `--op sparse` the λ_max estimate runs on the CSR Laplacian so the
-/// matrix-free path stays free of n×n allocations even here. (Like the
-/// dense arm, this estimate is recomputed once more inside the operator
-/// build — an O(nnz) redundancy kept for the simpler Pipeline interface.)
+/// Auto learning rate: η = 0.5/ρ(M), ρ(M) = λ* − f(0) analytically, with
+/// ρ(L) from the **same** [`sped::transforms::DomainEstimate`] policy the
+/// operator build uses (`--domain`), so η is tuned for the λ* the solver
+/// actually iterates with. Under `--op sparse` everything runs on the CSR
+/// Laplacian so the matrix-free path stays free of n×n allocations even
+/// here. (Like the dense arm, this estimate is recomputed once more inside
+/// the operator build — an O(nnz) redundancy kept for the simpler Pipeline
+/// interface.)
 fn auto_eta(graph: &sped::graph::Graph, pcfg: &mut PipelineConfig, verbose: bool) {
     if pcfg.eta > 0.0 {
         return;
     }
     let threads = pcfg.threads.max(1);
-    let lam = match pcfg.op_mode {
+    let domain = pcfg.build.domain;
+    // Only the Power arm reads the hint — skip the 100-matvec power
+    // estimate otherwise (the same `need_power` guard the operator
+    // builders apply).
+    let need_power = domain == sped::transforms::DomainEstimate::Power;
+    let rho = match pcfg.op_mode {
         OpMode::MatrixFree => {
-            sped::linalg::sparse::power_lambda_max_csr(&graph.laplacian_csr(), 100, threads)
+            let lc = graph.laplacian_csr();
+            let hint = if need_power {
+                sped::linalg::sparse::power_lambda_max_csr(&lc, 100, threads) * 1.01
+            } else {
+                0.0
+            };
+            domain.estimate_csr(&lc, hint, threads).map(|e| e.rho).unwrap_or(hint)
         }
         OpMode::DenseMaterialized => {
-            sped::linalg::par::power_lambda_max_par(&graph.laplacian(), 100, threads)
+            let ld = graph.laplacian();
+            let hint = if need_power {
+                sped::linalg::par::power_lambda_max_par(&ld, 100, threads) * 1.01
+            } else {
+                0.0
+            };
+            domain.estimate_dense(&ld, hint, threads).map(|e| e.rho).unwrap_or(hint)
         }
-    } * 1.01;
-    let rho_m = (pcfg.transform.lambda_star(lam) - pcfg.transform.scalar_map(0.0)).abs();
+    };
+    let rho_m = (pcfg.transform.lambda_star(rho) - pcfg.transform.scalar_map(0.0)).abs();
     pcfg.eta = 0.5 / rho_m.max(1e-9);
     if verbose {
         println!("auto eta = {:.4} (rho(M) ~ {rho_m:.3})", pcfg.eta);
@@ -287,19 +337,27 @@ fn cmd_cluster(mut args: Vec<String>) -> anyhow::Result<()> {
     let out = Pipeline::new(pcfg.clone()).run(&graph)?;
     match out.history.last() {
         Some(last) => println!(
-            "\ntransform {} | solver {} | op {} | basis {} | steps {} | subspace err {:.3e} | streak {}/{}",
+            "\ntransform {} | solver {} | op {} | basis {} | domain {} | degree {} | steps {} | subspace err {:.3e} | streak {}/{}",
             pcfg.transform,
             pcfg.solver,
             pcfg.op_mode,
             pcfg.build.basis,
+            pcfg.build.domain,
+            pcfg.build.degree,
             last.step,
             last.subspace_error,
             last.streak,
             pcfg.k
         ),
         None => println!(
-            "\ntransform {} | solver {} | op {} | basis {} | ran {} steps (ground-truth metrics skipped)",
-            pcfg.transform, pcfg.solver, pcfg.op_mode, pcfg.build.basis, pcfg.steps
+            "\ntransform {} | solver {} | op {} | basis {} | domain {} | degree {} | ran {} steps (ground-truth metrics skipped)",
+            pcfg.transform,
+            pcfg.solver,
+            pcfg.op_mode,
+            pcfg.build.basis,
+            pcfg.build.domain,
+            pcfg.build.degree,
+            pcfg.steps
         ),
     }
     println!(

@@ -94,6 +94,13 @@ impl MatVecOp for DenseOp {
 /// special case for `LimitNegExp`); the Chebyshev basis evaluates every
 /// polynomial kind through the domain-mapped three-term recurrence —
 /// numerically stable at ℓ ≈ 251 and with no underflow special-casing.
+/// The recurrence's fit interval and kept degree are further knobs
+/// ([`crate::transforms::DomainEstimate`] / [`crate::transforms::Degree`],
+/// CLI `--domain` / `--degree`): `--domain lanczos --degree auto` fits on
+/// a tight two-sided Ritz interval and truncates the coefficient tail, so
+/// one [`MatVecOp::apply`] takes [`Self::sweeps`] ≪ ℓ fused passes for the
+/// same dilation (validated against the scalar map via
+/// [`Self::poly_eval`]).
 ///
 /// Output is bitwise identical for every worker count (the
 /// [`crate::linalg::sparse`] determinism contract), so solver trajectories
@@ -150,22 +157,29 @@ impl SparsePolyOp {
                  with --basis monomial"
             );
         }
+        opts.degree.validate_basis(opts.basis)?;
         let threads = opts.threads.max(1);
-        let lam_raw = crate::linalg::sparse::power_lambda_max_csr(&l, opts.power_iters, threads);
-        let lam_est = lam_raw * opts.safety;
+        // Skip the 100-matvec power estimate when nothing consumes it —
+        // see the matching guard in `build_solver_matrix`.
+        let need_power =
+            opts.prescale || opts.domain == crate::transforms::DomainEstimate::Power;
+        let lam_est = if need_power {
+            crate::linalg::sparse::power_lambda_max_csr(&l, opts.power_iters, threads)
+                * opts.safety
+        } else {
+            0.0
+        };
         let scale = if opts.prescale && lam_est > 0.0 { lam_est } else { 1.0 };
         let mut l = l;
         if scale != 1.0 {
             l.scale_values(1.0 / scale);
         }
-        // Spectral radius of the transform input — mirrors build_solver_matrix.
-        let rho = if opts.prescale {
-            1.0
-        } else if lam_est > 0.0 {
-            lam_est
-        } else {
-            l.gershgorin_bound()
-        };
+        // Spectral-radius hint for the transform input — handed to the one
+        // shared `DomainEstimate` policy (identical to the dense
+        // `build_solver_matrix` flow, so both paths see the same ρ and fit
+        // the same Chebyshev coefficients on the same interval).
+        let rho_hint = if opts.prescale { 1.0 } else { lam_est };
+        let est = opts.domain.estimate_csr(&l, rho_hint, threads)?;
         let form = match opts.basis {
             PolyBasis::Monomial => match kind {
                 TransformKind::Identity => SparsePolyForm::Poly(PolySeries::Monomial(
@@ -180,23 +194,60 @@ impl SparsePolyOp {
                 TransformKind::MatrixLog { .. } | TransformKind::NegExp => unreachable!(),
             },
             PolyBasis::Chebyshev => {
-                // The shared safe-by-construction domain policy (see
-                // `transforms::cheb_domain`): λ_max estimate widened to
-                // the guaranteed Gershgorin bound, identical to the dense
-                // build so both paths fit the same coefficients.
-                let (lo, hi) = crate::transforms::cheb_domain(rho, l.gershgorin_bound());
-                SparsePolyForm::Poly(PolySeries::Chebyshev(
-                    kind.cheb_series(lo, hi).expect("polynomial kind"),
-                ))
+                let native = kind.series_degree().expect("polynomial kind");
+                let fit = opts.degree.checked_fit_degree(native)?;
+                let cheb = kind.cheb_series_deg(fit, est.lo, est.hi).expect("polynomial kind");
+                SparsePolyForm::Poly(PolySeries::Chebyshev(opts.degree.shape(cheb)))
             }
         };
-        let lambda_star = kind.lambda_star(rho);
+        let lambda_star = kind.lambda_star(est.rho);
         Ok(SparsePolyOp { l, form, lambda_star, scale, kind, basis: opts.basis, threads })
     }
 
     /// Stored entries of the underlying CSR Laplacian.
     pub fn nnz(&self) -> usize {
         self.l.nnz()
+    }
+
+    /// SpMM sweeps one operator application takes — the polynomial's
+    /// evaluated degree (the repeated-multiply count for the monomial
+    /// `LimitNegExp` special case). This is the quantity the
+    /// `--domain lanczos --degree auto` combination shrinks: the
+    /// `adaptive-degree` bench group's headline metric.
+    pub fn sweeps(&self) -> usize {
+        match &self.form {
+            SparsePolyForm::Poly(p) => p.degree(),
+            SparsePolyForm::NegPower { ell } => *ell,
+        }
+    }
+
+    /// The scalar spectrum map this operator applies to an eigenvalue `x`
+    /// of the **original** (un-scaled) Laplacian: `p(x / scale)`, post
+    /// domain-fit and degree-shaping — mirroring how [`MatVecOp::apply`]
+    /// evaluates `p` on the pre-scaled matrix. Validation compares it
+    /// against `kind.scalar_map(x / scale)` at the true eigenvalues
+    /// (without the internal division, a pre-scaled operator would be
+    /// probed far outside its Chebyshev fit interval, where `T_j` grows
+    /// exponentially and the comparison is meaningless).
+    pub fn poly_eval(&self, x: f64) -> f64 {
+        let y = x / self.scale;
+        match &self.form {
+            SparsePolyForm::Poly(p) => p.eval_scalar(y),
+            SparsePolyForm::NegPower { ell } => {
+                crate::transforms::limit_negexp_scalar(y, *ell)
+            }
+        }
+    }
+
+    /// The Chebyshev fit interval the operator's series lives on, in
+    /// **pre-scaled** coordinates — the spectrum of `L / scale`, the matrix
+    /// the polynomial is evaluated in (`None` for the monomial forms,
+    /// which have no domain).
+    pub fn fit_domain(&self) -> Option<(f64, f64)> {
+        match &self.form {
+            SparsePolyForm::Poly(PolySeries::Chebyshev(c)) => Some((c.lo, c.hi)),
+            _ => None,
+        }
     }
 }
 
@@ -663,6 +714,70 @@ mod tests {
                 assert!(identical, "{kind} chebyshev diverged at {threads} workers");
             }
         }
+    }
+
+    #[test]
+    fn adaptive_degree_op_matches_full_operator_with_fewer_sweeps() {
+        use crate::transforms::{Degree, DomainEstimate};
+        // The headline knob combination: tight Lanczos domain + tail
+        // truncation realizes (nearly) the same matrix-free operator in a
+        // fraction of the SpMM sweeps.
+        let g = cliques(&CliqueSpec { n: 48, k: 3, max_short_circuit: 2, seed: 13 }).graph;
+        let v = random_init(48, 6, 21);
+        let kind = TransformKind::LimitNegExp { ell: 251 };
+        let mk = |domain, degree| {
+            let opts = BuildOptions {
+                basis: PolyBasis::Chebyshev,
+                domain,
+                degree,
+                ..BuildOptions::default()
+            };
+            SparsePolyOp::from_graph(&g, kind, &opts).unwrap()
+        };
+        let mut full = mk(DomainEstimate::Power, Degree::Native);
+        let mut auto = mk(
+            DomainEstimate::Lanczos,
+            Degree::Auto { tol: 1e-9, max: usize::MAX },
+        );
+        assert_eq!(full.sweeps(), 251);
+        assert!(
+            auto.sweeps() * 2 <= full.sweeps(),
+            "no ≥2× sweep reduction: {} vs {}",
+            auto.sweeps(),
+            full.sweeps()
+        );
+        // Tight domain is genuinely tighter than the Gershgorin-widened one.
+        let (_, full_hi) = full.fit_domain().unwrap();
+        let (auto_lo, auto_hi) = auto.fit_domain().unwrap();
+        assert!(auto_hi - auto_lo < full_hi, "domain not tightened");
+        // Same λ* (exactly 0 for the negexp family), near-identical action.
+        assert_eq!(full.lambda_star, 0.0);
+        assert_eq!(auto.lambda_star, 0.0);
+        let a = full.apply(&v);
+        let b = auto.apply(&v);
+        let err = (&a - &b).max_abs();
+        assert!(err < 1e-6, "adaptive operator divergence {err}");
+        // The evaluated scalar map tracks the transform's map on the true
+        // spectrum — the ≤1e-6 acceptance bound.
+        let e = eigh(&g.laplacian()).unwrap();
+        for &lam in &e.values {
+            let err = (auto.poly_eval(lam) - kind.scalar_map(lam)).abs();
+            assert!(err < 1e-6, "map error {err} at λ={lam}");
+        }
+        // Monomial forms have no fit domain; degree reshaping is rejected.
+        let mono = SparsePolyOp::from_graph(&g, kind, &BuildOptions::default()).unwrap();
+        assert!(mono.fit_domain().is_none());
+        assert_eq!(mono.sweeps(), 251);
+        let err = SparsePolyOp::from_graph(
+            &g,
+            kind,
+            &BuildOptions {
+                degree: Degree::Auto { tol: 1e-9, max: usize::MAX },
+                ..BuildOptions::default()
+            },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--basis chebyshev"), "{err:#}");
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use super::MatVecOp;
 use crate::graph::Graph;
 use crate::linalg::DMat;
-use crate::transforms::{ChebSeries, PolyBasis};
+use crate::transforms::{ChebSeries, PolyBasis, TransformKind};
 use crate::util::rng::Rng;
 use crate::walks::{SampleMethod, WalkEstimator};
 
@@ -85,6 +85,29 @@ pub struct StochasticPolyOp<'g> {
 }
 
 impl<'g> StochasticPolyOp<'g> {
+    /// Dense-free reversal shift for the stochastic oracle: λ* of eq 8 for
+    /// `kind` with ρ(L) estimated by **CSR** power iteration
+    /// (`O(power_iters·nnz)`, bitwise worker-invariant) — never an `n×n`
+    /// Laplacian. This is the stochastic path's counterpart of the
+    /// deterministic builders' [`crate::transforms::DomainEstimate`]
+    /// policy: the whole point of the walk oracle is that nothing dense is
+    /// ever formed, so its λ* must not be the one place that materializes
+    /// `graph.laplacian()` just to run the dense `power_lambda_max`.
+    pub fn auto_lambda_star(
+        graph: &Graph,
+        kind: TransformKind,
+        power_iters: usize,
+        safety: f64,
+        threads: usize,
+    ) -> f64 {
+        let rho = crate::linalg::sparse::power_lambda_max_csr(
+            &graph.laplacian_csr(),
+            power_iters,
+            threads.max(1),
+        ) * safety;
+        kind.lambda_star(rho)
+    }
+
     /// Monomial-coefficient constructor (the historical interface).
     pub fn new(
         graph: &'g Graph,
@@ -267,6 +290,39 @@ mod tests {
             9,
         );
         assert_eq!(c.coeffs, mono);
+    }
+
+    #[test]
+    fn auto_lambda_star_is_dense_free_and_matches_dense_estimate() {
+        let g = small();
+        // Same recurrence as the dense power iteration (shared
+        // power_iteration_with core) — the estimates agree to rounding.
+        let dense_rho = 1.05 * crate::linalg::funcs::power_lambda_max(&g.laplacian(), 100);
+        let kind = TransformKind::Identity;
+        let lam = StochasticPolyOp::auto_lambda_star(&g, kind, 100, 1.05, 1);
+        assert!(
+            (lam - kind.lambda_star(dense_rho)).abs() <= 1e-9 * dense_rho.max(1.0),
+            "csr-routed λ* {lam} vs dense {}",
+            kind.lambda_star(dense_rho)
+        );
+        // Worker-invariant, bitwise (the CSR power-iteration contract).
+        for threads in [2usize, 8] {
+            assert_eq!(
+                StochasticPolyOp::auto_lambda_star(&g, kind, 100, 1.05, threads).to_bits(),
+                lam.to_bits()
+            );
+        }
+        // −e^{−x} family reverses with λ* ≡ 0 — no estimate needed at all.
+        assert_eq!(
+            StochasticPolyOp::auto_lambda_star(
+                &g,
+                TransformKind::LimitNegExp { ell: 51 },
+                100,
+                1.05,
+                1
+            ),
+            0.0
+        );
     }
 
     #[test]

@@ -409,6 +409,34 @@ impl ChebSeries {
     pub fn degree(&self) -> usize {
         self.coeffs.len().saturating_sub(1)
     }
+
+    /// Adaptive-degree truncation: drop every trailing coefficient whose
+    /// magnitude is below `tol` relative to the largest coefficient. Each
+    /// dropped coefficient is one SpMM sweep the matrix-free apply never
+    /// takes, and because `|T_j(y)| ≤ 1` on the domain the on-domain error
+    /// introduced is bounded by the dropped tail mass `Σ |c_j|` — this is
+    /// the textbook near-minimax compression of a Chebyshev expansion, and
+    /// the engine behind `Degree::Auto` (`--degree auto`).
+    ///
+    /// The payoff scales with the fit domain: coefficients decay at a rate
+    /// set by the domain half-width (the reason the tight
+    /// `--domain lanczos` interval and adaptive truncation compound).
+    /// Interior coefficients are never touched (dropping those is not
+    /// error-bounded); at least the constant term is always kept.
+    pub fn truncated(&self, tol: f64) -> ChebSeries {
+        assert!(tol >= 0.0, "truncation tolerance must be non-negative");
+        let cmax = self.coeffs.iter().fold(0.0f64, |m, c| m.max(c.abs()));
+        if self.coeffs.is_empty() || cmax == 0.0 {
+            return self.clone();
+        }
+        let cut = tol * cmax;
+        let keep = self
+            .coeffs
+            .iter()
+            .rposition(|c| c.abs() > cut)
+            .map_or(1, |i| i + 1);
+        ChebSeries { lo: self.lo, hi: self.hi, coeffs: self.coeffs[..keep].to_vec() }
+    }
 }
 
 /// A series transform's polynomial in either basis — the basis-generic
@@ -641,6 +669,38 @@ mod tests {
         let mut want = v.clone();
         want.scale(2.5);
         assert_eq!((&cv - &want).max_abs(), 0.0);
+    }
+
+    #[test]
+    fn truncation_is_error_bounded_and_tail_only() {
+        // e^{-x} on [0, 1]: fast-decaying tail, truncation keeps accuracy.
+        let f = |x: f64| (-x).exp();
+        let cheb = ChebSeries::fit(40, 0.0, 1.0, f);
+        let t = cheb.truncated(1e-10);
+        assert!(t.degree() < cheb.degree(), "tail should truncate");
+        assert_eq!((t.lo, t.hi), (cheb.lo, cheb.hi));
+        // Error bounded by the dropped tail mass.
+        let tail: f64 = cheb.coeffs[t.coeffs.len()..].iter().map(|c| c.abs()).sum();
+        for i in 0..=50 {
+            let x = i as f64 / 50.0;
+            let err = (t.eval_scalar(x) - cheb.eval_scalar(x)).abs();
+            assert!(err <= tail + 1e-15, "x={x}: err {err} vs tail {tail}");
+        }
+        // Kept coefficients are untouched (prefix, bit for bit).
+        for (a, b) in t.coeffs.iter().zip(cheb.coeffs.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // tol = 0 drops only exact-zero trailing coefficients.
+        let padded = ChebSeries { lo: 0.0, hi: 1.0, coeffs: vec![1.0, 0.5, 0.0, 0.0] };
+        assert_eq!(padded.truncated(0.0).coeffs, vec![1.0, 0.5]);
+        // Degenerate inputs survive.
+        let zero = ChebSeries { lo: 0.0, hi: 1.0, coeffs: vec![0.0, 0.0] };
+        assert_eq!(zero.truncated(1e-9).coeffs.len(), 2);
+        let empty = ChebSeries { lo: 0.0, hi: 1.0, coeffs: vec![] };
+        assert!(empty.truncated(1e-9).coeffs.is_empty());
+        // Everything below tolerance keeps at least the constant term.
+        let tiny = ChebSeries { lo: 0.0, hi: 1.0, coeffs: vec![1.0, 1e-12, 1e-13] };
+        assert_eq!(tiny.truncated(1e-6).coeffs, vec![1.0]);
     }
 
     #[test]

@@ -1,0 +1,514 @@
+//! Spectral-domain and filter-degree policy for the series transforms —
+//! the one place the "what interval do we fit on, and how many SpMM sweeps
+//! do we spend" decisions live.
+//!
+//! Before this module existed, `build_solver_matrix` (dense) and
+//! `SparsePolyOp::from_csr` (matrix-free) each hand-rolled the same
+//! ρ-vs-Gershgorin fallback around [`cheb_domain`]; both now dispatch
+//! through [`DomainEstimate`], so the dense and sparse Chebyshev paths fit
+//! the *same* coefficient set by construction.
+//!
+//! ## Domain policies ([`DomainEstimate`], CLI `--domain`)
+//!
+//! * **[`DomainEstimate::Power`]** (default) — the historical policy,
+//!   bitwise-identical to the pre-knob builds: the power-iteration λ_max
+//!   estimate (safety-padded) as ρ, widened to the guaranteed Gershgorin
+//!   radius for the Chebyshev domain `[0, max(ρ, Gershgorin)]`. Safe by
+//!   construction (the domain always covers a PSD spectrum) but **loose**:
+//!   Gershgorin overshoots λ_max by ~2× on typical community graphs, and
+//!   the lower edge is pinned at 0.
+//! * **[`DomainEstimate::Lanczos`]** — tight two-sided Ritz bounds from an
+//!   m-step Lanczos run ([`crate::linalg::lanczos`]), padded by a margin
+//!   **scaled with the Ritz residual** (a slowly-converging, near-degenerate
+//!   spectrum widens the padding instead of silently under-covering — the
+//!   convergence check the bare 100-iteration power estimate never had) and
+//!   clipped to the guaranteed two-sided Gershgorin interval. The tight
+//!   interval is what makes adaptive truncation bite: Chebyshev coefficient
+//!   tails decay at a rate set by the domain half-width.
+//! * **[`DomainEstimate::Gershgorin`]** — the guaranteed two-sided interval
+//!   alone, no iteration at all. The conservative fallback (what the other
+//!   two degrade toward), useful when even `O(m·nnz)` estimation is
+//!   unwanted.
+//!
+//! ## Degree policies ([`Degree`], CLI `--degree` / `--cheb-tol`)
+//!
+//! * **[`Degree::Native`]** (default) — honor the transform's own series
+//!   degree ℓ exactly (the paper's protocol; bitwise-identical historical
+//!   behavior).
+//! * **[`Degree::Fixed`]`(d)`** — fit the Chebyshev interpolant of the
+//!   transform's scalar map at exactly degree `d` (`d < ℓ` is a principled
+//!   near-minimax compression of the filter; `d ≥ ℓ` is exact).
+//! * **[`Degree::Auto`]`{ tol, max }`** — fit at the native degree, then
+//!   drop the trailing coefficients below `tol` relative to the largest
+//!   ([`ChebSeries::truncated`]) and cap at `max`: every dropped
+//!   coefficient is one SpMM sweep the operator application never takes,
+//!   at an on-domain error bounded by the dropped tail mass.
+//!
+//! Both non-default degree policies reshape the evaluated polynomial, so
+//! they require `--basis chebyshev` (in the monomial basis the shifted
+//! Horner coefficients are not ordered by magnitude — truncation there is
+//! meaningless) and are rejected with a clear error otherwise.
+
+use crate::linalg::dmat::DMat;
+use crate::linalg::lanczos;
+use crate::linalg::sparse::CsrMat;
+use anyhow::{bail, Result};
+
+use super::basis::{cheb_domain, ChebSeries, PolyBasis};
+
+/// How the spectral interval (and with it ρ for the eq-8 reversal shift
+/// λ*) of the transform input is estimated. See the module docs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DomainEstimate {
+    /// Power-iteration λ_max widened to the Gershgorin radius — the
+    /// bitwise-compatible historical policy.
+    #[default]
+    Power,
+    /// Two-sided Lanczos Ritz bounds, residual-scaled padding, clipped to
+    /// the guaranteed Gershgorin interval.
+    Lanczos,
+    /// The guaranteed two-sided Gershgorin interval, no iteration.
+    Gershgorin,
+}
+
+/// Padding multiplier on the Lanczos residual bound: each extreme Ritz
+/// value is guaranteed an eigenvalue within one residual, so a few
+/// residuals of margin cover the estimate error with room to spare.
+const LANCZOS_RESIDUAL_PAD: f64 = 3.0;
+
+/// Minimum padding as a fraction of the estimated interval width — the
+/// two-sided counterpart of the 1% `safety` idiom the power estimate uses.
+const LANCZOS_MIN_PAD_FRAC: f64 = 0.01;
+
+impl DomainEstimate {
+    /// Parse from a CLI/config name (`power` | `lanczos` | `gershgorin`).
+    pub fn parse(s: &str) -> Result<DomainEstimate> {
+        Ok(match s {
+            "power" => DomainEstimate::Power,
+            "lanczos" | "ritz" => DomainEstimate::Lanczos,
+            "gershgorin" | "gersh" => DomainEstimate::Gershgorin,
+            other => {
+                bail!("unknown domain estimate {other:?} (expected power | lanczos | gershgorin)")
+            }
+        })
+    }
+
+    /// Canonical display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DomainEstimate::Power => "power",
+            DomainEstimate::Lanczos => "lanczos",
+            DomainEstimate::Gershgorin => "gershgorin",
+        }
+    }
+
+    /// Estimate on a dense symmetric matrix (the `build_solver_matrix`
+    /// path). `rho_hint > 0` is the caller's trusted λ_max-style estimate
+    /// of the input — the safety-padded power estimate, or exactly 1.0
+    /// after pre-scaling — consumed verbatim by [`DomainEstimate::Power`]
+    /// for bitwise compatibility.
+    pub fn estimate_dense(
+        &self,
+        l: &DMat,
+        rho_hint: f64,
+        threads: usize,
+    ) -> Result<SpectrumEstimate> {
+        // The radius is eager (the Power arm's widening consumes it, and
+        // it is one sweep next to the caller's 100-iteration power
+        // estimate); the two-sided interval is computed only by the arms
+        // that use it.
+        let radius = crate::linalg::funcs::gershgorin_bound(l);
+        self.estimate_with(
+            rho_hint,
+            || crate::linalg::funcs::gershgorin_interval(l),
+            radius,
+            || lanczos::lanczos_bounds(l, lanczos::DEFAULT_STEPS, threads),
+        )
+    }
+
+    /// Estimate on a CSR matrix (the `SparsePolyOp` path) — `O(nnz)`-only,
+    /// nothing dense. Bitwise identical to [`Self::estimate_dense`] on the
+    /// densified matrix.
+    pub fn estimate_csr(
+        &self,
+        l: &CsrMat,
+        rho_hint: f64,
+        threads: usize,
+    ) -> Result<SpectrumEstimate> {
+        let radius = l.gershgorin_bound();
+        self.estimate_with(
+            rho_hint,
+            || l.gershgorin_interval(),
+            radius,
+            || lanczos::lanczos_bounds_csr(l, lanczos::DEFAULT_STEPS, threads),
+        )
+    }
+
+    /// The one policy body both wrappers dispatch (dense/CSR differ only in
+    /// how the Gershgorin terms and the Lanczos run are computed).
+    fn estimate_with(
+        &self,
+        rho_hint: f64,
+        gersh_interval: impl FnOnce() -> (f64, f64),
+        gersh_radius: f64,
+        run_lanczos: impl FnOnce() -> Result<lanczos::LanczosBounds>,
+    ) -> Result<SpectrumEstimate> {
+        Ok(match self {
+            DomainEstimate::Power => {
+                // The historical policy, value-for-value: ρ is the caller's
+                // estimate when positive (else the guaranteed radius), and
+                // the domain is ρ widened to the radius.
+                let rho = if rho_hint > 0.0 { rho_hint } else { gersh_radius };
+                let (lo, hi) = cheb_domain(rho, gersh_radius);
+                SpectrumEstimate { rho, lo, hi, residual: 0.0 }
+            }
+            DomainEstimate::Gershgorin => {
+                let (g_lo, g_hi) = gersh_interval();
+                let (lo, hi) = safe_interval(g_lo, g_hi, gersh_radius);
+                SpectrumEstimate { rho: hi, lo, hi, residual: 0.0 }
+            }
+            DomainEstimate::Lanczos => {
+                let gersh = gersh_interval();
+                let b = run_lanczos()?;
+                let width = b.hi - b.lo;
+                // Residual-scaled safety padding — the under-coverage fix:
+                // an unconverged run (large residual) widens the domain
+                // instead of silently trusting a bad estimate.
+                let pad = (b.residual * LANCZOS_RESIDUAL_PAD).max(width * LANCZOS_MIN_PAD_FRAC);
+                // Clip to the *guaranteed* interval: padding can never push
+                // the domain past bounds no eigenvalue can cross.
+                let (lo, hi) = safe_interval(
+                    (b.lo - pad).max(gersh.0),
+                    (b.hi + pad).min(gersh.1),
+                    gersh_radius,
+                );
+                SpectrumEstimate { rho: hi, lo, hi, residual: b.residual }
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for DomainEstimate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Degenerate-interval guard shared by the two-sided policies: a zero or
+/// inverted interval (edgeless graph, zero matrix) falls back to the same
+/// `[0, max(radius, 1)]` shape as [`cheb_domain`], on which any fit simply
+/// evaluates `f` near 0.
+fn safe_interval(lo: f64, hi: f64, radius: f64) -> (f64, f64) {
+    if hi > lo {
+        (lo, hi)
+    } else {
+        (0.0, if radius > 0.0 { radius } else { 1.0 })
+    }
+}
+
+/// What a [`DomainEstimate`] produced: the Chebyshev fit domain, the ρ
+/// upper estimate feeding the eq-8 reversal shift λ*, and the estimator's
+/// convergence diagnostic.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpectrumEstimate {
+    /// Upper estimate of the input's spectral radius (feeds
+    /// `TransformKind::lambda_star`).
+    pub rho: f64,
+    /// Chebyshev fit domain, lower edge.
+    pub lo: f64,
+    /// Chebyshev fit domain, upper edge.
+    pub hi: f64,
+    /// Estimator residual diagnostic: the Lanczos Ritz residual bound the
+    /// padding was scaled by; `0` for the guaranteed-cover policies
+    /// (Power's Gershgorin-widened domain, Gershgorin itself).
+    pub residual: f64,
+}
+
+impl SpectrumEstimate {
+    /// Interval width — the quantity the adaptive-degree payoff scales
+    /// with (Chebyshev tails decay at a rate set by the half-width).
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+}
+
+/// How many Chebyshev terms — i.e. SpMM sweeps per operator application —
+/// the fitted filter keeps. See the module docs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum Degree {
+    /// The transform's own series degree ℓ (historical behavior).
+    #[default]
+    Native,
+    /// Fit the interpolant at exactly this degree.
+    Fixed(usize),
+    /// Fit at the native degree, then truncate the coefficient tail below
+    /// `tol` (relative to the largest coefficient) and cap at `max`.
+    Auto {
+        /// Relative coefficient tolerance (`--cheb-tol`).
+        tol: f64,
+        /// Hard cap on the kept degree (`usize::MAX` = uncapped).
+        max: usize,
+    },
+}
+
+impl Degree {
+    /// Parse from a CLI/config value: `native` | `auto` | `auto:<max>` | a
+    /// literal degree. `tol` seeds [`Degree::Auto`]'s tolerance (the
+    /// `--cheb-tol` flag); `auto:<max>` additionally caps the kept degree
+    /// ("truncate by tolerance, but never spend more than `max` sweeps").
+    pub fn parse(s: &str, tol: f64) -> Result<Degree> {
+        if s == "native" || s == "full" {
+            return Ok(Degree::Native);
+        }
+        if s == "auto" || s == "adaptive" || s.starts_with("auto:") {
+            if !(tol > 0.0 && tol < 1.0) {
+                bail!("--degree auto needs 0 < --cheb-tol < 1 (got {tol})");
+            }
+            let max = match s.strip_prefix("auto:") {
+                None => usize::MAX,
+                Some(m) => match m.parse::<usize>() {
+                    Ok(0) | Err(_) => {
+                        bail!("bad degree cap in {s:?} (expected auto:<max> with max ≥ 1)")
+                    }
+                    Ok(d) => d,
+                },
+            };
+            return Ok(Degree::Auto { tol, max });
+        }
+        match s.parse::<usize>() {
+            Ok(0) => bail!(
+                "--degree 0 would build a constant filter (M a multiple of I, \
+                 every vector an eigenvector) — use native | auto | N ≥ 1"
+            ),
+            Ok(d) => Ok(Degree::Fixed(d)),
+            Err(_) => bail!("unknown degree {s:?} (expected native | auto[:max] | <N>)"),
+        }
+    }
+
+    /// Canonical display name — always a string [`Self::parse`] accepts
+    /// back (the CLI summary line prints it, and users copy it into config
+    /// files), so `Fixed(d)` is the bare degree and `Auto` is `auto` (its
+    /// tolerance travels separately as `--cheb-tol` / `pipeline.cheb_tol`).
+    pub fn name(&self) -> String {
+        match *self {
+            Degree::Native => "native".into(),
+            Degree::Fixed(d) => d.to_string(),
+            Degree::Auto { max: usize::MAX, .. } => "auto".into(),
+            Degree::Auto { max, .. } => format!("auto:{max}"),
+        }
+    }
+
+    /// The degree the Chebyshev interpolant is *fitted* at, given the
+    /// transform's native degree. [`Degree::Auto`] fits at the native
+    /// degree (truncation happens afterwards on the fitted coefficients —
+    /// dropping a converged tail, not aliasing the fit).
+    pub fn fit_degree(&self, native: usize) -> usize {
+        match *self {
+            Degree::Native | Degree::Auto { .. } => native,
+            Degree::Fixed(d) => d,
+        }
+    }
+
+    /// Reject non-native policies outside the Chebyshev basis — the one
+    /// place this rule lives; both operator builders call it before doing
+    /// any work.
+    pub fn validate_basis(&self, basis: PolyBasis) -> Result<()> {
+        if !self.is_native() && basis != PolyBasis::Chebyshev {
+            bail!(
+                "--degree {} reshapes the evaluated polynomial, which is only \
+                 error-bounded in the Chebyshev basis — combine it with --basis chebyshev",
+                self
+            );
+        }
+        Ok(())
+    }
+
+    /// [`Self::fit_degree`] with the degree-0 guard — the one place the
+    /// constant-filter rule lives.
+    pub fn checked_fit_degree(&self, native: usize) -> Result<usize> {
+        let fit = self.fit_degree(native);
+        if fit == 0 {
+            bail!(
+                "degree 0 builds a constant filter (M a multiple of I, every \
+                 vector an eigenvector) — use a degree ≥ 1"
+            );
+        }
+        Ok(fit)
+    }
+
+    /// Post-fit shaping: [`Degree::Auto`] drops the sub-tolerance tail and
+    /// applies the cap; the other policies pass the series through. The
+    /// shaped series always keeps degree ≥ 1 (when the fit has one): a
+    /// degree-0 filter would make `M = λ*I − c₀I` a multiple of the
+    /// identity — every vector an eigenvector, a silently-garbage solve —
+    /// so a coarse tolerance or cap floors at the linear term instead.
+    pub fn shape(&self, cheb: ChebSeries) -> ChebSeries {
+        match *self {
+            Degree::Native | Degree::Fixed(_) => cheb,
+            Degree::Auto { tol, max } => {
+                let floor = cheb.coeffs.len().min(2);
+                let mut t = cheb.truncated(tol);
+                if t.degree() > max {
+                    t.coeffs.truncate((max + 1).max(floor));
+                }
+                if t.coeffs.len() < floor {
+                    t.coeffs = cheb.coeffs[..floor].to_vec();
+                }
+                t
+            }
+        }
+    }
+
+    /// True for the policies that reshape the evaluated polynomial —
+    /// meaningful only in the Chebyshev basis, rejected elsewhere.
+    pub fn is_native(&self) -> bool {
+        matches!(self, Degree::Native)
+    }
+}
+
+impl std::fmt::Display for Degree {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{cliques, CliqueSpec};
+
+    #[test]
+    fn parse_and_display() {
+        assert_eq!(DomainEstimate::parse("power").unwrap(), DomainEstimate::Power);
+        assert_eq!(DomainEstimate::parse("lanczos").unwrap(), DomainEstimate::Lanczos);
+        assert_eq!(DomainEstimate::parse("gershgorin").unwrap(), DomainEstimate::Gershgorin);
+        assert!(DomainEstimate::parse("magic").is_err());
+        assert_eq!(DomainEstimate::default(), DomainEstimate::Power);
+        assert_eq!(DomainEstimate::Lanczos.to_string(), "lanczos");
+
+        assert_eq!(Degree::parse("native", 1e-9).unwrap(), Degree::Native);
+        assert_eq!(
+            Degree::parse("auto", 1e-9).unwrap(),
+            Degree::Auto { tol: 1e-9, max: usize::MAX }
+        );
+        assert_eq!(Degree::parse("31", 1e-9).unwrap(), Degree::Fixed(31));
+        assert_eq!(
+            Degree::parse("auto:64", 1e-9).unwrap(),
+            Degree::Auto { tol: 1e-9, max: 64 }
+        );
+        assert!(Degree::parse("auto", 0.0).is_err(), "auto needs a usable tol");
+        assert!(Degree::parse("auto:0", 1e-9).is_err(), "zero cap rejected");
+        assert!(Degree::parse("auto:lots", 1e-9).is_err());
+        assert!(Degree::parse("sideways", 1e-9).is_err());
+        // Degree 0 is a constant filter — rejected at parse time with the
+        // reason in the error, never a silently-garbage solve.
+        let err = Degree::parse("0", 1e-9).unwrap_err();
+        assert!(format!("{err:#}").contains("constant filter"), "{err:#}");
+        assert_eq!(Degree::default(), Degree::Native);
+        assert!(Degree::Fixed(7).to_string().contains('7'));
+        assert!(!Degree::Fixed(7).is_native());
+        // Display round-trips through parse: the summary line the CLI
+        // prints is valid as a config/CLI value.
+        for d in [
+            Degree::Native,
+            Degree::Fixed(31),
+            Degree::Auto { tol: 1e-9, max: usize::MAX },
+            Degree::Auto { tol: 1e-9, max: 64 },
+        ] {
+            assert_eq!(Degree::parse(&d.to_string(), 1e-9).unwrap(), d);
+        }
+        for d in [DomainEstimate::Power, DomainEstimate::Lanczos, DomainEstimate::Gershgorin] {
+            assert_eq!(DomainEstimate::parse(d.name()).unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn power_policy_reproduces_the_historical_fallback_bitwise() {
+        // The exact value flow `build_solver_matrix`/`SparsePolyOp` used to
+        // hand-roll: ρ_hint when positive else the Gershgorin radius, and
+        // cheb_domain(ρ, radius) for the fit interval.
+        let g = cliques(&CliqueSpec { n: 30, k: 3, max_short_circuit: 2, seed: 5 }).graph;
+        let lc = g.laplacian_csr();
+        let radius = lc.gershgorin_bound();
+        for rho_hint in [7.5f64, 0.0, -1.0] {
+            let est = DomainEstimate::Power.estimate_csr(&lc, rho_hint, 1).unwrap();
+            let rho_old = if rho_hint > 0.0 { rho_hint } else { radius };
+            let (lo_old, hi_old) = cheb_domain(rho_old, radius);
+            assert_eq!(est.rho.to_bits(), rho_old.to_bits());
+            assert_eq!(est.lo.to_bits(), lo_old.to_bits());
+            assert_eq!(est.hi.to_bits(), hi_old.to_bits());
+            assert_eq!(est.residual, 0.0);
+        }
+        // Dense and CSR agree bitwise.
+        let ed = DomainEstimate::Power.estimate_dense(&g.laplacian(), 7.5, 1).unwrap();
+        let ec = DomainEstimate::Power.estimate_csr(&lc, 7.5, 1).unwrap();
+        assert_eq!(ed.hi.to_bits(), ec.hi.to_bits());
+    }
+
+    #[test]
+    fn lanczos_policy_is_tight_covering_and_clipped() {
+        let g = cliques(&CliqueSpec { n: 64, k: 4, max_short_circuit: 2, seed: 9 }).graph;
+        let lc = g.laplacian_csr();
+        let e = crate::linalg::eigh(&g.laplacian()).unwrap();
+        let est = DomainEstimate::Lanczos.estimate_csr(&lc, 0.0, 1).unwrap();
+        let (glo, ghi) = lc.gershgorin_interval();
+        // Covers the true spectrum (the padded-bracket contract)…
+        assert!(est.lo <= e.values[0] + 1e-9, "lo {} vs λ_min {}", est.lo, e.values[0]);
+        assert!(est.hi >= e.lambda_max() - 1e-9, "hi {} vs λ_max {}", est.hi, e.lambda_max());
+        // …within the guaranteed interval…
+        assert!(est.lo >= glo - 1e-12 && est.hi <= ghi + 1e-12);
+        // …and meaningfully tighter than the one-sided Gershgorin domain.
+        let loose = DomainEstimate::Power.estimate_csr(&lc, 0.0, 1).unwrap();
+        assert!(
+            est.width() < 0.8 * loose.width(),
+            "lanczos width {} vs power width {}",
+            est.width(),
+            loose.width()
+        );
+        assert_eq!(est.rho, est.hi);
+    }
+
+    #[test]
+    fn degenerate_spectra_fall_back_safely() {
+        // Edgeless graph: zero Laplacian, zero Gershgorin — every policy
+        // lands on the same [0, 1] fallback domain as cheb_domain.
+        let zero = crate::linalg::sparse::CsrMat::from_triplets(
+            4,
+            4,
+            &[(0, 0, 0.0), (1, 1, 0.0), (2, 2, 0.0), (3, 3, 0.0)],
+        );
+        for policy in [DomainEstimate::Power, DomainEstimate::Lanczos, DomainEstimate::Gershgorin] {
+            let est = policy.estimate_csr(&zero, 0.0, 2).unwrap();
+            assert_eq!((est.lo, est.hi), (0.0, 1.0), "{policy}");
+        }
+    }
+
+    #[test]
+    fn auto_degree_shapes_and_caps() {
+        let f = |x: f64| (-x).exp();
+        let cheb = ChebSeries::fit(60, 0.0, 1.0, f);
+        let auto = Degree::Auto { tol: 1e-9, max: usize::MAX };
+        let shaped = auto.shape(cheb.clone());
+        assert!(shaped.degree() < 60, "e^{{-x}} tail should truncate well below 60");
+        for i in 0..=40 {
+            let x = i as f64 / 40.0;
+            assert!((shaped.eval_scalar(x) - f(x)).abs() < 1e-7, "x={x}");
+        }
+        let capped = Degree::Auto { tol: 1e-9, max: 4 }.shape(cheb.clone());
+        assert_eq!(capped.degree(), 4);
+        // The degree-≥1 floor: a coarse tolerance (or a zero cap) keeps the
+        // linear term instead of collapsing to a constant filter, and the
+        // kept prefix is the fitted one, bit for bit.
+        let floored = Degree::Auto { tol: 0.9, max: usize::MAX }.shape(cheb.clone());
+        assert_eq!(floored.degree(), 1);
+        for (a, b) in floored.coeffs.iter().zip(cheb.coeffs.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(Degree::Auto { tol: 1e-9, max: 0 }.shape(cheb.clone()).degree(), 1);
+        // Native / Fixed pass the fitted series through untouched.
+        assert_eq!(Degree::Native.shape(cheb.clone()), cheb);
+        assert_eq!(Degree::Fixed(60).fit_degree(251), 60);
+        assert_eq!(Degree::Native.fit_degree(251), 251);
+        assert_eq!(auto.fit_degree(251), 251);
+    }
+}

@@ -51,6 +51,19 @@
 //!   special-casing. Native-only (the XLA artifacts encode Horner) and
 //!   rejected for the exact (eigh-based) kinds, which are not polynomials.
 //!
+//! ## Spectral domains & adaptive degrees ([`DomainEstimate`], [`Degree`])
+//!
+//! The Chebyshev fit interval and the number of kept filter terms are
+//! policies ([`domain`] module; `--domain power|lanczos|gershgorin`,
+//! `--degree native|auto|N`, `--cheb-tol`), shared verbatim by the dense
+//! build and the matrix-free operator. The defaults (`power` + `native`)
+//! are bitwise-identical to the historical behavior; `--domain lanczos`
+//! fits on a tight two-sided Ritz interval
+//! ([`crate::linalg::lanczos`]) and `--degree auto` truncates the
+//! coefficient tail below a tolerance ([`ChebSeries::truncated`]) — the
+//! combination that evaluates the same dilation in a fraction of the SpMM
+//! sweeps (each kept coefficient is one sweep per operator application).
+//!
 //! ## Dense vs matrix-free evaluation ([`OpMode`])
 //!
 //! A series transform can reach the solver two ways:
@@ -75,11 +88,13 @@
 //! are eigendecomposition-based oracles and stay dense-only.
 
 pub mod basis;
+pub mod domain;
 
 pub use basis::{
     affine_compose, cheb_domain, chebyshev_to_monomial, monomial_to_chebyshev, ChebSeries,
     PolyBasis, PolySeries,
 };
+pub use domain::{Degree, DomainEstimate, SpectrumEstimate};
 
 use crate::linalg::dmat::DMat;
 use crate::linalg::funcs::{matpow, poly_horner, power_lambda_max, spectral_apply};
@@ -332,20 +347,35 @@ impl TransformKind {
         }
     }
 
+    /// The native polynomial degree of this transform's series — the ℓ the
+    /// paper's protocol evaluates (1 for the identity). `None` for the
+    /// exact (eigh-based) kinds, which are not polynomials.
+    pub fn series_degree(&self) -> Option<usize> {
+        match *self {
+            TransformKind::Identity => Some(1),
+            TransformKind::TaylorLog { ell, .. }
+            | TransformKind::TaylorNegExp { ell }
+            | TransformKind::LimitNegExp { ell } => Some(ell),
+            TransformKind::MatrixLog { .. } | TransformKind::NegExp => None,
+        }
+    }
+
     /// The **Chebyshev-basis** representation of the polynomial kinds on
-    /// the spectrum domain `[lo, hi]` (typically `[0, λ̂_max]` of the
-    /// transform input), fitted stably by interpolation of
-    /// [`Self::scalar_map`] at Chebyshev nodes — exact for these kinds,
+    /// the spectrum domain `[lo, hi]` (typically the [`DomainEstimate`]'s
+    /// interval over the transform input), fitted stably by interpolation
+    /// of [`Self::scalar_map`] at Chebyshev nodes — exact for these kinds,
     /// whose scalar maps *are* polynomials of the fitted degree. `None`
     /// for the exact (eigh-based) kinds, which are not polynomials.
     pub fn cheb_series(&self, lo: f64, hi: f64) -> Option<ChebSeries> {
-        let degree = match *self {
-            TransformKind::Identity => 1,
-            TransformKind::TaylorLog { ell, .. }
-            | TransformKind::TaylorNegExp { ell }
-            | TransformKind::LimitNegExp { ell } => ell,
-            TransformKind::MatrixLog { .. } | TransformKind::NegExp => return None,
-        };
+        self.cheb_series_deg(self.series_degree()?, lo, hi)
+    }
+
+    /// [`Self::cheb_series`] at an explicit fit degree (the [`Degree`]
+    /// knob): `degree ≥` native is exact; `degree <` native is the
+    /// near-minimax interpolant compression of the filter — the same
+    /// dilation shape evaluated in fewer SpMM sweeps.
+    pub fn cheb_series_deg(&self, degree: usize, lo: f64, hi: f64) -> Option<ChebSeries> {
+        self.series_degree()?;
         Some(ChebSeries::fit(degree, lo, hi, |x| self.scalar_map(x)))
     }
 
@@ -461,6 +491,17 @@ pub struct BuildOptions {
     /// at high degree, no `LimitNegExp` special case) and is rejected for
     /// the exact (eigh-based) kinds.
     pub basis: PolyBasis,
+    /// How the spectral interval (Chebyshev fit domain + the ρ feeding
+    /// λ*) is estimated (`--domain power|lanczos|gershgorin`). **Default
+    /// [`DomainEstimate::Power`]**, bitwise-identical to the pre-knob
+    /// builds; [`DomainEstimate::Lanczos`] fits on a tight two-sided Ritz
+    /// interval — the knob that makes [`Self::degree`] truncation bite.
+    pub domain: DomainEstimate,
+    /// Chebyshev filter degree policy (`--degree native|auto|N`,
+    /// `--cheb-tol`). **Default [`Degree::Native`]** (the transform's own
+    /// ℓ, bitwise-identical); the other policies reshape the evaluated
+    /// polynomial and require [`PolyBasis::Chebyshev`].
+    pub degree: Degree,
 }
 
 impl Default for BuildOptions {
@@ -471,6 +512,8 @@ impl Default for BuildOptions {
             safety: 1.01,
             threads: 1,
             basis: PolyBasis::Monomial,
+            domain: DomainEstimate::Power,
+            degree: Degree::Native,
         }
     }
 }
@@ -479,42 +522,48 @@ impl Default for BuildOptions {
 /// (optionally) pre-scale → `f(·)` → reverse (eq 8).
 pub fn build_solver_matrix(l: &DMat, kind: TransformKind, opts: &BuildOptions) -> Result<SolverMatrix> {
     let threads = opts.threads.max(1);
-    let lam_raw = if threads > 1 {
-        crate::linalg::par::power_lambda_max_par(l, opts.power_iters, threads)
+    opts.degree.validate_basis(opts.basis)?;
+    // The power estimate feeds the pre-scale factor and the Power domain's
+    // ρ; when neither consumes it (un-prescaled Lanczos/Gershgorin domains,
+    // which derive ρ from their own interval) the 100-matvec iteration is
+    // skipped entirely.
+    let need_power = opts.prescale || opts.domain == DomainEstimate::Power;
+    let lam_est = if need_power {
+        let lam_raw = if threads > 1 {
+            crate::linalg::par::power_lambda_max_par(l, opts.power_iters, threads)
+        } else {
+            power_lambda_max(l, opts.power_iters)
+        };
+        lam_raw * opts.safety
     } else {
-        power_lambda_max(l, opts.power_iters)
+        0.0
     };
-    let lam_est = lam_raw * opts.safety;
     let scale = if opts.prescale && lam_est > 0.0 { lam_est } else { 1.0 };
     let mut scaled = l.clone();
     scaled.scale(1.0 / scale);
-    // Spectral radius of the transform *input*: 1 after pre-scaling, else
-    // the λ_max estimate (safety-padded; Gershgorin as a fallback bound).
-    let rho = if opts.prescale {
-        1.0
-    } else if lam_est > 0.0 {
-        lam_est
-    } else {
-        crate::linalg::funcs::gershgorin_bound(&scaled)
-    };
+    // Spectral radius hint for the transform *input*: 1 after pre-scaling,
+    // else the λ_max estimate (safety-padded). The shared [`DomainEstimate`]
+    // policy turns it into ρ plus the Chebyshev fit interval — exactly one
+    // place decides the ρ-vs-Gershgorin fallback for both the dense and the
+    // matrix-free builds.
+    let rho_hint = if opts.prescale { 1.0 } else { lam_est };
+    let est = opts.domain.estimate_dense(&scaled, rho_hint, threads)?;
     let f_l = match opts.basis {
         PolyBasis::Monomial => kind.build_threaded(&scaled, threads)?,
         PolyBasis::Chebyshev => {
-            // The shared safe-by-construction domain policy (see
-            // [`cheb_domain`]): λ_max estimate widened to the guaranteed
-            // Gershgorin bound.
-            let (lo, hi) = cheb_domain(rho, crate::linalg::funcs::gershgorin_bound(&scaled));
-            let cheb = kind.cheb_series(lo, hi).ok_or_else(|| {
+            let native = kind.series_degree().ok_or_else(|| {
                 anyhow!(
                     "exact transform {kind} is eigendecomposition-based and has no \
                      polynomial form in any basis — use --basis monomial (series \
                      transforms support both bases)"
                 )
             })?;
-            cheb.eval_matrix_threads(&scaled, threads)
+            let fit = opts.degree.checked_fit_degree(native)?;
+            let cheb = kind.cheb_series_deg(fit, est.lo, est.hi).expect("polynomial kind");
+            opts.degree.shape(cheb).eval_matrix_threads(&scaled, threads)
         }
     };
-    let lambda_star = kind.lambda_star(rho);
+    let lambda_star = kind.lambda_star(est.rho);
     // M = λ*I − f(L)
     let mut m = f_l;
     m.scale(-1.0);
@@ -870,6 +919,105 @@ mod tests {
         assert!(TransformKind::NegExp.cheb_series(0.0, 1.0).is_none());
         assert!(TransformKind::MatrixLog { eps: 0.05 }.cheb_series(0.0, 1.0).is_none());
         assert_eq!(TransformKind::Identity.cheb_series(0.0, 2.0).unwrap().degree(), 1);
+    }
+
+    #[test]
+    fn lanczos_domain_build_matches_power_domain_at_full_degree() {
+        // A full-degree interpolant is exact on any covering domain, so the
+        // tight Lanczos interval must realize the same operator as the
+        // loose power/Gershgorin one — different fit domains, same
+        // polynomial. λ* is exactly 0 for the −e^{−x} family either way.
+        let l = test_laplacian();
+        let mk = |domain| BuildOptions {
+            prescale: true,
+            basis: PolyBasis::Chebyshev,
+            domain,
+            ..BuildOptions::default()
+        };
+        for kind in [
+            TransformKind::TaylorNegExp { ell: 31 },
+            TransformKind::LimitNegExp { ell: 51 },
+        ] {
+            let power = build_solver_matrix(&l, kind, &mk(DomainEstimate::Power)).unwrap();
+            let lanczos = build_solver_matrix(&l, kind, &mk(DomainEstimate::Lanczos)).unwrap();
+            let gersh = build_solver_matrix(&l, kind, &mk(DomainEstimate::Gershgorin)).unwrap();
+            assert_eq!(power.lambda_star, 0.0, "{kind}");
+            assert_eq!(lanczos.lambda_star, 0.0, "{kind}");
+            let err = (&power.m - &lanczos.m).max_abs();
+            assert!(err < 1e-9, "{kind}: power-vs-lanczos domain divergence {err}");
+            let err = (&power.m - &gersh.m).max_abs();
+            assert!(err < 1e-9, "{kind}: power-vs-gershgorin domain divergence {err}");
+        }
+    }
+
+    #[test]
+    fn degree_knob_shrinks_the_filter_and_rejects_monomial() {
+        let l = test_laplacian();
+        let kind = TransformKind::LimitNegExp { ell: 251 };
+        // Reshaping degrees need the Chebyshev basis — clear error, no
+        // silent fallback (matching the basis/exact-transform idiom).
+        let bad = BuildOptions {
+            degree: Degree::Auto { tol: 1e-9, max: usize::MAX },
+            ..BuildOptions::default()
+        };
+        let err = build_solver_matrix(&l, kind, &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("--basis chebyshev"), "{err:#}");
+        // A degree-0 filter (M a multiple of I) is rejected on both
+        // operator paths, not silently built.
+        let zero = BuildOptions {
+            basis: PolyBasis::Chebyshev,
+            degree: Degree::Fixed(0),
+            ..BuildOptions::default()
+        };
+        let err = build_solver_matrix(&l, kind, &zero).unwrap_err();
+        assert!(format!("{err:#}").contains("constant filter"), "{err:#}");
+        let g = cliques(&CliqueSpec { n: 16, k: 2, max_short_circuit: 1, seed: 3 }).graph;
+        let err = crate::solvers::SparsePolyOp::from_graph(&g, kind, &zero).unwrap_err();
+        assert!(format!("{err:#}").contains("constant filter"), "{err:#}");
+        // Auto degree on the tight domain realizes (nearly) the same
+        // operator as the full-degree build.
+        let full = build_solver_matrix(
+            &l,
+            kind,
+            &BuildOptions { basis: PolyBasis::Chebyshev, ..BuildOptions::default() },
+        )
+        .unwrap();
+        let auto = build_solver_matrix(
+            &l,
+            kind,
+            &BuildOptions {
+                basis: PolyBasis::Chebyshev,
+                domain: DomainEstimate::Lanczos,
+                degree: Degree::Auto { tol: 1e-9, max: usize::MAX },
+                ..BuildOptions::default()
+            },
+        )
+        .unwrap();
+        let err = (&full.m - &auto.m).max_abs();
+        assert!(err < 1e-6, "adaptive-degree operator divergence {err}");
+        // Fixed(d) with d ≥ native is exact as well.
+        let fixed = build_solver_matrix(
+            &l,
+            TransformKind::TaylorNegExp { ell: 31 },
+            &BuildOptions {
+                prescale: true,
+                basis: PolyBasis::Chebyshev,
+                degree: Degree::Fixed(40),
+                ..BuildOptions::default()
+            },
+        )
+        .unwrap();
+        let full31 = build_solver_matrix(
+            &l,
+            TransformKind::TaylorNegExp { ell: 31 },
+            &BuildOptions {
+                prescale: true,
+                basis: PolyBasis::Chebyshev,
+                ..BuildOptions::default()
+            },
+        )
+        .unwrap();
+        assert!((&fixed.m - &full31.m).max_abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Lanczos spectral-bound + adaptive-degree acceptance harness:
+//!
+//! 1. the `--domain lanczos` estimate **covers** the true `eigh` extremes
+//!    (padded Ritz bounds clipped to the guaranteed Gershgorin interval)
+//!    for every graph generator × both Laplacian variants, with the dense
+//!    and CSR estimators **bitwise** equal and worker-invariant;
+//! 2. `--degree auto` truncation reproduces the transforms' scalar maps to
+//!    ≤ 1e-6 at the acceptance degrees ℓ ∈ {15, 251}, cutting the kept
+//!    degree for the fast-decaying kinds;
+//! 3. the `--domain power --degree native` defaults replicate the
+//!    pre-refactor hand-rolled domain policy bit for bit;
+//! 4. the pipeline opt-in (`--domain lanczos --degree auto`) recovers the
+//!    identical partition with far fewer SpMM sweeps, and the non-native
+//!    knobs are rejected on the XLA backend with clear errors.
+
+use sped::graph::gen::{
+    barabasi_albert, barbell, cliques, erdos_renyi, grid2d, path, ring, ring_of_cliques, sbm,
+    CliqueSpec,
+};
+use sped::graph::Graph;
+use sped::linalg::sparse::power_lambda_max_csr;
+use sped::linalg::DMat;
+use sped::pipeline::{Backend, Pipeline, PipelineConfig};
+use sped::solvers::SparsePolyOp;
+use sped::transforms::{
+    cheb_domain, BuildOptions, Degree, DomainEstimate, OpMode, PolyBasis, TransformKind,
+};
+
+/// Every generator in the crate, at a size small enough that the full
+/// variant × worker sweep (with an `eigh` oracle each) stays cheap.
+fn generator_zoo(n: usize, seed: u64) -> Vec<(&'static str, Graph)> {
+    vec![
+        (
+            "cliques",
+            cliques(&CliqueSpec { n, k: (n / 6).max(1), max_short_circuit: 3, seed }).graph,
+        ),
+        ("sbm", sbm(&[n / 2, n - n / 2], 0.8, 0.05, seed).graph),
+        ("erdos_renyi", erdos_renyi(n, 0.3, seed).graph),
+        ("grid2d", grid2d(n / 3 + 1, 3).graph),
+        ("path", path(n).graph),
+        ("ring", ring(n.max(3)).graph),
+        ("barbell", barbell(n / 2 + 2).graph),
+        ("ring_of_cliques", ring_of_cliques(3, n / 3 + 2, seed).graph),
+        ("barabasi_albert", barabasi_albert(n.max(5), 3, seed).graph),
+    ]
+}
+
+#[test]
+fn lanczos_estimate_covers_eigh_extremes_everywhere_bitwise_dense_vs_csr() {
+    for (name, g) in generator_zoo(22, 3) {
+        for (variant, ld, lc) in [
+            ("laplacian", g.laplacian(), g.laplacian_csr()),
+            ("normalized", g.normalized_laplacian(), g.normalized_laplacian_csr()),
+        ] {
+            let e = sped::linalg::eigh(&ld).unwrap();
+            let lam_min = e.values[0];
+            let lam_max = e.lambda_max();
+            let est = DomainEstimate::Lanczos.estimate_csr(&lc, 0.0, 1).unwrap();
+            // Padded bounds bracket the true extremes…
+            assert!(
+                est.lo <= lam_min + 1e-8,
+                "{name}/{variant}: lo {} above λ_min {lam_min}",
+                est.lo
+            );
+            assert!(
+                est.hi >= lam_max - 1e-8,
+                "{name}/{variant}: hi {} below λ_max {lam_max}",
+                est.hi
+            );
+            // …inside the guaranteed Gershgorin interval…
+            let (glo, ghi) = lc.gershgorin_interval();
+            assert!(est.lo >= glo - 1e-12 && est.hi <= ghi + 1e-12, "{name}/{variant}");
+            // …and never looser than the historical one-sided domain.
+            let loose = DomainEstimate::Power.estimate_csr(&lc, 0.0, 1).unwrap();
+            assert!(
+                est.hi <= loose.hi + 1e-12,
+                "{name}/{variant}: lanczos hi {} above power hi {}",
+                est.hi,
+                loose.hi
+            );
+            // Dense ≡ CSR, bitwise, and worker-count invariant.
+            let dense = DomainEstimate::Lanczos.estimate_dense(&ld, 0.0, 1).unwrap();
+            assert_eq!(dense.lo.to_bits(), est.lo.to_bits(), "{name}/{variant}");
+            assert_eq!(dense.hi.to_bits(), est.hi.to_bits(), "{name}/{variant}");
+            assert_eq!(dense.residual.to_bits(), est.residual.to_bits(), "{name}/{variant}");
+            for workers in [2usize, 8] {
+                let pc = DomainEstimate::Lanczos.estimate_csr(&lc, 0.0, workers).unwrap();
+                let pd = DomainEstimate::Lanczos.estimate_dense(&ld, 0.0, workers).unwrap();
+                assert_eq!(pc.lo.to_bits(), est.lo.to_bits(), "{name}/{variant}@{workers}w");
+                assert_eq!(pc.hi.to_bits(), est.hi.to_bits(), "{name}/{variant}@{workers}w");
+                assert_eq!(pd.lo.to_bits(), est.lo.to_bits(), "{name}/{variant}@{workers}w");
+                assert_eq!(pd.hi.to_bits(), est.hi.to_bits(), "{name}/{variant}@{workers}w");
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_degree_series_match_scalar_map_at_acceptance_degrees() {
+    // Normalized-Laplacian domain from the Lanczos policy — the tight
+    // interval the ≥2× sweep reduction is measured on.
+    let g = cliques(&CliqueSpec { n: 64, k: 4, max_short_circuit: 2, seed: 9 }).graph;
+    let lc = g.normalized_laplacian_csr();
+    let est = DomainEstimate::Lanczos.estimate_csr(&lc, 0.0, 1).unwrap();
+    let e = sped::linalg::eigh(&g.normalized_laplacian()).unwrap();
+    for ell in [15usize, 251] {
+        for kind in [
+            TransformKind::TaylorNegExp { ell },
+            TransformKind::TaylorLog { ell, eps: 0.05 },
+            TransformKind::LimitNegExp { ell },
+        ] {
+            let full = kind.cheb_series(est.lo, est.hi).expect("polynomial kind");
+            let auto = Degree::Auto { tol: 1e-9, max: usize::MAX }.shape(full.clone());
+            assert!(auto.degree() <= ell, "{kind}");
+            // On-domain grid plus the true eigenvalues: ≤ 1e-6 everywhere.
+            let mut xs: Vec<f64> = (0..=80)
+                .map(|i| est.lo + (est.hi - est.lo) * i as f64 / 80.0)
+                .collect();
+            xs.extend_from_slice(&e.values);
+            for &x in &xs {
+                let err = (auto.eval_scalar(x) - kind.scalar_map(x)).abs();
+                assert!(err < 1e-6, "{kind} at x={x}: err {err}");
+            }
+            // The −e^{−x} family's tail decays fast on the tight interval:
+            // at ℓ = 251 the truncation must cut ≥ 2× (the acceptance
+            // floor — in practice it is ~10×).
+            if ell == 251 && !matches!(kind, TransformKind::TaylorLog { .. }) {
+                assert!(
+                    auto.degree() * 2 <= ell,
+                    "{kind}: kept degree {} not ≥2× below {ell}",
+                    auto.degree()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn default_power_domain_replicates_the_historical_policy_bitwise() {
+    // The pre-refactor hand-rolled flow, replayed: λ_max power estimate
+    // (safety-padded), ρ-vs-Gershgorin fallback, cheb_domain widening.
+    let g = cliques(&CliqueSpec { n: 40, k: 4, max_short_circuit: 3, seed: 13 }).graph;
+    let lc = g.laplacian_csr();
+    let kind = TransformKind::LimitNegExp { ell: 51 };
+    let lam_est = power_lambda_max_csr(&lc, 100, 1) * 1.01;
+    let gersh = lc.gershgorin_bound();
+    let rho_old = if lam_est > 0.0 { lam_est } else { gersh };
+    let (lo_old, hi_old) = cheb_domain(rho_old, gersh);
+    let opts = BuildOptions { basis: PolyBasis::Chebyshev, ..BuildOptions::default() };
+    let op = SparsePolyOp::from_csr(lc.clone(), kind, &opts).unwrap();
+    let (lo, hi) = op.fit_domain().expect("chebyshev op has a domain");
+    assert_eq!(lo.to_bits(), lo_old.to_bits());
+    assert_eq!(hi.to_bits(), hi_old.to_bits());
+    assert_eq!(op.lambda_star.to_bits(), kind.lambda_star(rho_old).to_bits());
+    assert_eq!(op.sweeps(), 51, "native degree honored");
+    // And the defaults really are Power + Native.
+    assert_eq!(BuildOptions::default().domain, DomainEstimate::Power);
+    assert_eq!(BuildOptions::default().degree, Degree::Native);
+    // The dense build agrees on λ* for the same policy (the shared-policy
+    // contract across the dense and matrix-free paths).
+    let sm = sped::transforms::build_solver_matrix(
+        &g.laplacian(),
+        kind,
+        &BuildOptions { basis: PolyBasis::Chebyshev, ..BuildOptions::default() },
+    )
+    .unwrap();
+    assert!((sm.lambda_star - op.lambda_star).abs() < 1e-12);
+}
+
+#[test]
+fn pipeline_opt_in_recovers_identical_partition_with_fewer_sweeps() {
+    let gg = cliques(&CliqueSpec { n: 48, k: 3, max_short_circuit: 2, seed: 11 });
+    let mk = |domain, degree| PipelineConfig {
+        k: 3,
+        transform: TransformKind::LimitNegExp { ell: 251 },
+        solver: "subspace".into(),
+        steps: 300,
+        eval_every: 20,
+        stop_error: 0.0,
+        op_mode: OpMode::MatrixFree,
+        ground_truth: false,
+        build: BuildOptions {
+            basis: PolyBasis::Chebyshev,
+            domain,
+            degree,
+            ..BuildOptions::default()
+        },
+        ..Default::default()
+    };
+    let full = Pipeline::new(mk(DomainEstimate::Power, Degree::Native))
+        .run(&gg.graph)
+        .unwrap();
+    let auto = Pipeline::new(mk(
+        DomainEstimate::Lanczos,
+        Degree::Auto { tol: 1e-9, max: usize::MAX },
+    ))
+    .run(&gg.graph)
+    .unwrap();
+    assert_eq!(full.lambda_star, 0.0);
+    assert_eq!(auto.lambda_star, 0.0);
+    let err = sped::linalg::metrics::subspace_error(&full.embedding, &auto.embedding);
+    assert!(err < 1e-6, "adaptive pipeline subspace err {err}");
+    assert_eq!(
+        full.clustering.as_ref().unwrap().assignments,
+        auto.clustering.as_ref().unwrap().assignments,
+        "partitions differ across domain/degree policies"
+    );
+    // The sweep reduction the pipeline just ran with, measured directly.
+    let op_opts = |domain, degree| BuildOptions {
+        basis: PolyBasis::Chebyshev,
+        domain,
+        degree,
+        ..BuildOptions::default()
+    };
+    let full_op = SparsePolyOp::from_graph(
+        &gg.graph,
+        TransformKind::LimitNegExp { ell: 251 },
+        &op_opts(DomainEstimate::Power, Degree::Native),
+    )
+    .unwrap();
+    let auto_op = SparsePolyOp::from_graph(
+        &gg.graph,
+        TransformKind::LimitNegExp { ell: 251 },
+        &op_opts(DomainEstimate::Lanczos, Degree::Auto { tol: 1e-9, max: usize::MAX }),
+    )
+    .unwrap();
+    assert!(
+        auto_op.sweeps() * 2 <= full_op.sweeps(),
+        "no ≥2× sweep reduction: {} vs {}",
+        auto_op.sweeps(),
+        full_op.sweeps()
+    );
+}
+
+#[test]
+fn non_native_knobs_rejected_on_xla_backend_and_monomial_basis() {
+    let gg = cliques(&CliqueSpec { n: 12, k: 2, max_short_circuit: 1, seed: 2 });
+    let xla = |build| PipelineConfig {
+        k: 2,
+        build,
+        backend: Backend::Xla { artifacts_dir: "artifacts".into() },
+        ..Default::default()
+    };
+    let err = Pipeline::new(xla(BuildOptions {
+        domain: DomainEstimate::Lanczos,
+        ..BuildOptions::default()
+    }))
+    .run(&gg.graph)
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("native backend"), "{err:#}");
+    let err = Pipeline::new(xla(BuildOptions {
+        degree: Degree::Fixed(31),
+        ..BuildOptions::default()
+    }))
+    .run(&gg.graph)
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("native backend"), "{err:#}");
+    // Degree reshaping without the Chebyshev basis: clear error on both
+    // operator paths.
+    for op_mode in [OpMode::DenseMaterialized, OpMode::MatrixFree] {
+        let cfg = PipelineConfig {
+            k: 2,
+            op_mode,
+            ground_truth: op_mode == OpMode::DenseMaterialized,
+            build: BuildOptions {
+                degree: Degree::Auto { tol: 1e-9, max: usize::MAX },
+                ..BuildOptions::default()
+            },
+            ..Default::default()
+        };
+        let err = Pipeline::new(cfg).run(&gg.graph).unwrap_err();
+        assert!(format!("{err:#}").contains("--basis chebyshev"), "{op_mode:?}: {err:#}");
+    }
+}
+
+#[test]
+fn lanczos_bounds_are_deterministic_across_worker_counts_on_big_sparse() {
+    // A larger CSR-only instance (no dense mirror): the estimate is
+    // worker-invariant and the resulting adaptive operator is bitwise
+    // deterministic end to end.
+    let g = barabasi_albert(600, 4, 17).graph;
+    let lc = g.laplacian_csr();
+    let serial = DomainEstimate::Lanczos.estimate_csr(&lc, 0.0, 1).unwrap();
+    for workers in [2usize, 8] {
+        let par = DomainEstimate::Lanczos.estimate_csr(&lc, 0.0, workers).unwrap();
+        assert_eq!(par.lo.to_bits(), serial.lo.to_bits());
+        assert_eq!(par.hi.to_bits(), serial.hi.to_bits());
+    }
+    let v = sped::solvers::random_init(600, 4, 7);
+    let mk = |threads| {
+        let opts = BuildOptions {
+            basis: PolyBasis::Chebyshev,
+            domain: DomainEstimate::Lanczos,
+            degree: Degree::Auto { tol: 1e-9, max: usize::MAX },
+            threads,
+            ..BuildOptions::default()
+        };
+        SparsePolyOp::from_csr(lc.clone(), TransformKind::LimitNegExp { ell: 251 }, &opts).unwrap()
+    };
+    let reference = mk(1).apply_ref(&v);
+    for threads in [2usize, 8] {
+        let par = mk(threads).apply_ref(&v);
+        assert!(
+            reference
+                .data()
+                .iter()
+                .zip(par.data().iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "adaptive operator diverged at {threads} workers"
+        );
+    }
+}
+
+/// `MatVecOp::apply` needs `&mut self`; tiny adapter for one-shot use on a
+/// temporary.
+trait ApplyRef {
+    fn apply_ref(self, v: &DMat) -> DMat;
+}
+
+impl ApplyRef for SparsePolyOp {
+    fn apply_ref(mut self, v: &DMat) -> DMat {
+        use sped::solvers::MatVecOp;
+        self.apply(v)
+    }
+}
