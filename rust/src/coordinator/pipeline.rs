@@ -39,7 +39,8 @@ pub struct PipelineConfig {
     /// Number of bottom eigenvectors / clusters.
     pub k: usize,
     pub transform: TransformKind,
-    /// `oja`, `mu-eg`, or `subspace`.
+    /// `oja`, `mu-eg`, `subspace`/`direct` (step-driven), or `ritz` (block
+    /// Rayleigh–Ritz; see [`crate::solvers::ritz`]).
     pub solver: String,
     pub eta: f64,
     pub steps: usize,
@@ -48,6 +49,15 @@ pub struct PipelineConfig {
     pub streak_eps: f64,
     /// Early-stop subspace error (0 = run all steps).
     pub stop_error: f64,
+    /// `--solver ritz` only: relative residual tolerance (converged once
+    /// max wanted residual ≤ tol · ρ̂(M)).
+    pub ritz_tol: f64,
+    /// `--solver ritz` only: outer-iteration cap (each outer iteration is
+    /// one operator bundle apply).
+    pub ritz_max_iters: usize,
+    /// `--solver ritz` only: block width (0 = auto: k + 2 guard vectors,
+    /// clamped to n).
+    pub block_size: usize,
     pub build: BuildOptions,
     pub backend: Backend,
     pub seed: u64,
@@ -102,6 +112,9 @@ impl Default for PipelineConfig {
             eval_every: 50,
             streak_eps: 1e-2,
             stop_error: 1e-4,
+            ritz_tol: 1e-8,
+            ritz_max_iters: 500,
+            block_size: 0,
             build: BuildOptions::default(),
             backend: Backend::Native,
             seed: 0,
@@ -135,6 +148,32 @@ pub struct PipelineOutput {
     pub timings: StageTimings,
     /// The reversal shift used (eq 8).
     pub lambda_star: f64,
+    /// Solver-internal diagnostics of a `--solver ritz` run (`None` for
+    /// the step-driven solvers).
+    pub ritz: Option<RitzSummary>,
+}
+
+/// What a `--solver ritz` run reports about itself: residual-based
+/// convergence (self-measured — available even with `ground_truth` off)
+/// and the SpMM-sweep accounting the dilated-vs-undilated comparison is
+/// stated in.
+#[derive(Clone, Debug)]
+pub struct RitzSummary {
+    /// Outer iterations executed (= operator bundle applies).
+    pub iterations: usize,
+    /// Whether `ritz_tol` was met before `ritz_max_iters`.
+    pub converged: bool,
+    /// SpMM sweeps one bundle apply costs (polynomial degree for the
+    /// matrix-free operator, 1 for dense).
+    pub sweeps_per_apply: usize,
+    /// `iterations · sweeps_per_apply`.
+    pub total_sweeps: usize,
+    /// Per-outer-iteration max residual over the k wanted Ritz pairs.
+    pub residual_history: Vec<f64>,
+    /// Final per-pair residual norms `‖M·x_i − θ_i·x_i‖`.
+    pub residuals: Vec<f64>,
+    /// Ritz values of `M` for the embedding columns (descending).
+    pub values: Vec<f64>,
 }
 
 /// The pipeline orchestrator.
@@ -290,31 +329,75 @@ impl Pipeline {
         timings.transform_build = t0.elapsed().as_secs_f64();
 
         let t0 = Instant::now();
-        let mut solver = solver_by_name(&cfg.solver, cfg.eta)?;
-        let (mut history, embedding) = match &ground {
-            Some((v_star, values)) => {
-                let run_cfg = RunConfig {
-                    steps: cfg.steps,
-                    eval_every: cfg.eval_every,
-                    streak_eps: cfg.streak_eps,
-                    stop_error: cfg.stop_error,
-                    seed: cfg.seed,
-                    // Degeneracy-aware streak: symmetric workloads (3-room
-                    // MDP) have exactly tied eigenvalues.
-                    group_values: Some(values.clone()),
-                };
-                crate::solvers::run_convergence_full(solver.as_mut(), op.as_mut(), v_star, &run_cfg)
-            }
-            None => {
-                let v = crate::solvers::run_steps(
-                    solver.as_mut(),
-                    op.as_mut(),
-                    cfg.k,
-                    cfg.steps,
-                    cfg.seed,
+        let (mut history, embedding, ritz) = if cfg.solver == "ritz" {
+            // Block Rayleigh–Ritz owns its own convergence measurement
+            // (residual norms, no oracle needed), so it bypasses the
+            // step-driven run loop entirely.
+            let rcfg = crate::solvers::ritz::RitzConfig {
+                k: cfg.k,
+                block: cfg.block_size,
+                tol: cfg.ritz_tol,
+                max_iters: cfg.ritz_max_iters,
+            };
+            let res = crate::solvers::ritz::ritz_solve(op.as_mut(), &rcfg)?;
+            let mut history = ConvergenceHistory::new("");
+            if let Some((v_star, values)) = &ground {
+                // With the oracle available, record one endpoint datapoint
+                // in the usual metric (subspace error + grouped streak) so
+                // downstream reporting/CSV stays uniform.
+                let err = crate::linalg::metrics::subspace_error(v_star, &res.embedding);
+                let streak = crate::linalg::metrics::eigenvector_streak_grouped(
+                    v_star,
+                    values,
+                    &res.embedding,
+                    cfg.streak_eps,
+                    1e-9,
                 );
-                (ConvergenceHistory::new(""), v)
+                history.push(res.iterations, err, streak);
             }
+            let summary = RitzSummary {
+                iterations: res.iterations,
+                converged: res.converged,
+                sweeps_per_apply: res.sweeps_per_apply,
+                total_sweeps: res.total_sweeps,
+                residual_history: res.history.iter().map(|p| p.max_residual).collect(),
+                residuals: res.residuals,
+                values: res.values,
+            };
+            (history, res.embedding, Some(summary))
+        } else {
+            let mut solver = solver_by_name(&cfg.solver, cfg.eta)?;
+            let (history, embedding) = match &ground {
+                Some((v_star, values)) => {
+                    let run_cfg = RunConfig {
+                        steps: cfg.steps,
+                        eval_every: cfg.eval_every,
+                        streak_eps: cfg.streak_eps,
+                        stop_error: cfg.stop_error,
+                        seed: cfg.seed,
+                        // Degeneracy-aware streak: symmetric workloads
+                        // (3-room MDP) have exactly tied eigenvalues.
+                        group_values: Some(values.clone()),
+                    };
+                    crate::solvers::run_convergence_full(
+                        solver.as_mut(),
+                        op.as_mut(),
+                        v_star,
+                        &run_cfg,
+                    )
+                }
+                None => {
+                    let v = crate::solvers::run_steps(
+                        solver.as_mut(),
+                        op.as_mut(),
+                        cfg.k,
+                        cfg.steps,
+                        cfg.seed,
+                    );
+                    (ConvergenceHistory::new(""), v)
+                }
+            };
+            (history, embedding, None)
         };
         history.label = format!("{}:{}", cfg.solver, cfg.transform.name());
         timings.solve = t0.elapsed().as_secs_f64();
@@ -327,7 +410,7 @@ impl Pipeline {
         };
         timings.cluster = t0.elapsed().as_secs_f64();
 
-        Ok(PipelineOutput { history, embedding, clustering, timings, lambda_star })
+        Ok(PipelineOutput { history, embedding, clustering, timings, lambda_star, ritz })
     }
 
     fn run_xla(
@@ -438,7 +521,7 @@ impl Pipeline {
         let lambda_star = cfg.transform.lambda_star(
             crate::linalg::funcs::power_lambda_max(l, cfg.build.power_iters) * cfg.build.safety,
         );
-        Ok(PipelineOutput { history, embedding, clustering, timings, lambda_star })
+        Ok(PipelineOutput { history, embedding, clustering, timings, lambda_star, ritz: None })
     }
 
     /// Build `M = λ*I − f(L)` using XLA artifacts where the transform is a
@@ -585,6 +668,48 @@ mod tests {
         let err = crate::linalg::metrics::subspace_error(&dense.embedding, &sparse.embedding);
         assert!(err < 1e-6, "dense vs matrix-free subspace err {err}");
         // And identical hard clusters.
+        assert_eq!(
+            dense.clustering.as_ref().unwrap().assignments,
+            sparse.clustering.as_ref().unwrap().assignments
+        );
+    }
+
+    #[test]
+    fn ritz_solver_pipeline_dense_free_run_matches_dense_path() {
+        // The acceptance flow: `--solver ritz --op sparse --no-ground-truth`
+        // must produce the same partition as the dense-materialized run,
+        // while reporting residual-based diagnostics with no oracle at all.
+        let gg = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 9 });
+        let mk = |op_mode, ground_truth| PipelineConfig {
+            k: 3,
+            transform: TransformKind::LimitNegExp { ell: 51 },
+            solver: "ritz".into(),
+            ritz_tol: 1e-10,
+            ritz_max_iters: 300,
+            op_mode,
+            ground_truth,
+            ..Default::default()
+        };
+        let dense = Pipeline::new(mk(OpMode::DenseMaterialized, true)).run(&gg.graph).unwrap();
+        let sparse = Pipeline::new(mk(OpMode::MatrixFree, false)).run(&gg.graph).unwrap();
+        // Dense-free: no oracle timing, no history — but the solver's own
+        // residual diagnostics are fully populated.
+        assert_eq!(sparse.timings.ground_truth, 0.0);
+        assert!(sparse.history.points.is_empty());
+        let rz = sparse.ritz.as_ref().unwrap();
+        assert!(rz.converged, "ritz did not converge in {} iters", rz.iterations);
+        assert_eq!(rz.residual_history.len(), rz.iterations);
+        assert!(rz.sweeps_per_apply > 1, "matrix-free apply should cost degree sweeps");
+        assert_eq!(rz.total_sweeps, rz.iterations * rz.sweeps_per_apply);
+        assert_eq!(rz.residuals.len(), 3);
+        assert_eq!(rz.values.len(), 3);
+        // Dense run records one oracle endpoint, and it is converged.
+        let last = dense.history.last().unwrap();
+        assert!(last.subspace_error < 1e-8, "oracle err {}", last.subspace_error);
+        assert_eq!(dense.ritz.as_ref().unwrap().sweeps_per_apply, 1);
+        // Same subspace and identical hard clusters across the two paths.
+        let err = crate::linalg::metrics::subspace_error(&dense.embedding, &sparse.embedding);
+        assert!(err < 1e-6, "dense vs matrix-free ritz subspace err {err}");
         assert_eq!(
             dense.clustering.as_ref().unwrap().assignments,
             sparse.clustering.as_ref().unwrap().assignments

@@ -1,16 +1,81 @@
 //! Orthonormalization: modified Gram–Schmidt (the re-orthogonalization step
 //! inside Oja's algorithm) and a thin-QR built on it.
+//!
+//! Both entry points detect Gram–Schmidt *breakdown* — a column whose norm
+//! collapses under projection because it was (numerically) linearly
+//! dependent on its predecessors — and rescue it with a deterministic
+//! replacement direction. Without the rescue, a duplicated or zero column
+//! silently yields a zero (or cancellation-noise) Q column, which poisons
+//! every consumer downstream: `subspace_error` runs `qr_thin` on its
+//! inputs, and the Ritz solver's filtered basis `orth(M·V)` is routinely
+//! rank-deficient when the polynomial filter annihilates guard directions.
 
 use super::dmat::{dot, norm, normalize, vec_axpy, DMat};
 
+/// Breakdown threshold, *relative* to the column's pre-projection norm: a
+/// post-projection norm at or below `BREAKDOWN_REL · ‖a_j‖` means the
+/// surviving direction is cancellation noise (≥ ten digits lost), not
+/// signal. A relative test is scale-invariant — the absolute `1e-12`
+/// cutoff this replaces missed duplicates at large column scales and
+/// falsely rescued tiny-but-independent columns.
+const BREAKDOWN_REL: f64 = 1e-10;
+
+/// Deterministic replacement for a broken-down column: SplitMix64-hashed
+/// candidates salted by the column index and attempt number, orthogonalized
+/// twice against the already-fixed columns `prev`; a canonical-basis sweep
+/// as fallback; the zero vector only when `prev` already spans ℝⁿ (no
+/// orthogonal direction exists). A pure function of `(prev, n)` — bitwise
+/// reproducible, so the crate's worker-invariance contracts survive a
+/// rescue.
+fn rescue_column(prev: &[Vec<f64>], n: usize) -> Vec<f64> {
+    let j = prev.len() as u64;
+    let orthogonalize = |mut cand: Vec<f64>| -> Option<Vec<f64>> {
+        for _pass in 0..2 {
+            for q in prev {
+                let r = dot(q, &cand);
+                vec_axpy(&mut cand, -r, q);
+            }
+        }
+        if normalize(&mut cand) > 1e-6 {
+            Some(cand)
+        } else {
+            None
+        }
+    };
+    for attempt in 0..4u64 {
+        let cand: Vec<f64> = (0..n)
+            .map(|i| {
+                let mut s = (i as u64).wrapping_mul(0xA24B_AED4_963E_E407)
+                    ^ (j + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ attempt.wrapping_mul(0xD1B5_4A32_D192_ED03);
+                let h = crate::util::rng::splitmix64(&mut s);
+                (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) - 0.5
+            })
+            .collect();
+        if let Some(fixed) = orthogonalize(cand) {
+            return fixed;
+        }
+    }
+    for basis in 0..n {
+        let mut cand = vec![0.0; n];
+        cand[basis] = 1.0;
+        if let Some(fixed) = orthogonalize(cand) {
+            return fixed;
+        }
+    }
+    vec![0.0; n]
+}
+
 /// Orthonormalize the columns of `v` in place via modified Gram–Schmidt
 /// with one re-orthogonalization pass (MGS2 — numerically sufficient for
-/// the k ≤ 32 panels used here). Columns that become numerically zero are
-/// replaced with fresh unit basis vectors orthogonal to the rest.
+/// the k ≤ 32 panels used here). Columns that break down (norm collapsing
+/// relative to their pre-projection scale) are replaced with deterministic
+/// rescue directions orthogonal to the rest.
 pub fn mgs_orthonormalize(v: &mut DMat) {
     let (n, k) = (v.rows(), v.cols());
     let mut cols: Vec<Vec<f64>> = (0..k).map(|j| v.col(j)).collect();
     for j in 0..k {
+        let orig = norm(&cols[j]);
         // Two passes of projection-removal against previous columns.
         for _pass in 0..2 {
             for i in 0..j {
@@ -19,21 +84,9 @@ pub fn mgs_orthonormalize(v: &mut DMat) {
                 vec_axpy(&mut tail[0], -r, &head[i]);
             }
         }
-        if normalize(&mut cols[j]) < 1e-12 {
-            // Degenerate column: substitute a canonical basis vector made
-            // orthogonal to the already-fixed columns.
-            for basis in 0..n {
-                let mut cand = vec![0.0; n];
-                cand[basis] = 1.0;
-                for i in 0..j {
-                    let r = dot(&cols[i], &cand);
-                    vec_axpy(&mut cand, -r, &cols[i]);
-                }
-                if normalize(&mut cand) > 0.5 {
-                    cols[j] = cand;
-                    break;
-                }
-            }
+        if normalize(&mut cols[j]) <= BREAKDOWN_REL * orig {
+            let fixed = rescue_column(&cols[..j], n);
+            cols[j] = fixed;
         }
     }
     for (j, c) in cols.iter().enumerate() {
@@ -42,13 +95,16 @@ pub fn mgs_orthonormalize(v: &mut DMat) {
 }
 
 /// Thin QR: returns `(Q, R)` with `Q` n×k orthonormal and `R` k×k upper
-/// triangular such that `A = Q R` (MGS; assumes full column rank for exact
-/// reconstruction, still returns a valid orthonormal Q otherwise).
+/// triangular such that `A = Q R`. On rank-deficient input, broken-down
+/// columns get `R[j][j] = 0` (their true coefficient) and a deterministic
+/// rescue direction in `Q` — so `Q` stays orthonormal *and* `Q·R`
+/// reconstructs `A` to round-off either way.
 pub fn qr_thin(a: &DMat) -> (DMat, DMat) {
     let (n, k) = (a.rows(), a.cols());
     let mut q_cols: Vec<Vec<f64>> = (0..k).map(|j| a.col(j)).collect();
     let mut r = DMat::zeros(k, k);
     for j in 0..k {
+        let orig = norm(&q_cols[j]);
         for i in 0..j {
             let (head, tail) = q_cols.split_at_mut(j);
             let rij = dot(&head[i], &tail[0]);
@@ -56,7 +112,17 @@ pub fn qr_thin(a: &DMat) -> (DMat, DMat) {
             vec_axpy(&mut tail[0], -rij, &head[i]);
         }
         let nrm = normalize(&mut q_cols[j]);
-        r[(j, j)] = nrm;
+        if nrm <= BREAKDOWN_REL * orig {
+            // Breakdown: whatever direction survived the projection is
+            // cancellation noise, orthogonalized only once (MGS1) — not a
+            // trustworthy basis vector. Record the honest coefficient and
+            // substitute a rescue direction.
+            r[(j, j)] = 0.0;
+            let fixed = rescue_column(&q_cols[..j], n);
+            q_cols[j] = fixed;
+        } else {
+            r[(j, j)] = nrm;
+        }
     }
     let mut q = DMat::zeros(n, k);
     for (j, c) in q_cols.iter().enumerate() {
@@ -115,6 +181,83 @@ mod tests {
                 assert_eq!(r[(i, j)], 0.0);
             }
         }
+    }
+
+    #[test]
+    fn qr_thin_rescues_duplicated_and_zero_columns() {
+        // Column 1 duplicates column 0 and column 2 is all-zero — before
+        // the breakdown rescue, Q kept a cancellation-noise column (MGS1
+        // orthogonality only, ~1e-8) and a zero column respectively.
+        let a = DMat::from_fn(12, 4, |i, j| match j {
+            0 => ((i + 1) as f64).sin(),
+            1 => ((i + 1) as f64).sin(),
+            2 => 0.0,
+            _ => {
+                if i % 3 == 0 {
+                    1.0
+                } else {
+                    -0.25
+                }
+            }
+        });
+        let (q, r) = qr_thin(&a);
+        let g = matmul(&q.t(), &q);
+        assert!((&g - &DMat::eye(4)).max_abs() < 1e-10, "Q not orthonormal");
+        // Broken-down columns carry an exact zero diagonal in R, and the
+        // factorization still reconstructs A.
+        assert_eq!(r[(1, 1)], 0.0);
+        assert_eq!(r[(2, 2)], 0.0);
+        let qr = matmul(&q, &r);
+        assert!((&qr - &a).max_abs() < 1e-9);
+        // The rescue is a pure function: bitwise identical on a second run.
+        let (q2, _) = qr_thin(&a);
+        assert!(q
+            .data()
+            .iter()
+            .zip(q2.data().iter())
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn mgs_rescue_is_relative_to_column_scale() {
+        // A duplicate at scale 1e8 cancels down to ~1e-8 — far above the
+        // old absolute 1e-12 cutoff, so the breakdown went undetected. The
+        // relative test rescues it; tiny-but-independent columns (scale
+        // 1e-30) must conversely NOT be rescued away.
+        let mut v = DMat::from_fn(16, 3, |i, j| {
+            let base = 1e8 * (((i * i + 3) as f64).sqrt() + 1.0);
+            match j {
+                0 => base,
+                1 => base,
+                _ => (i as f64).cos(),
+            }
+        });
+        mgs_orthonormalize(&mut v);
+        let g = matmul(&v.t(), &v);
+        assert!((&g - &DMat::eye(3)).max_abs() < 1e-10);
+
+        let mut tiny = DMat::from_fn(8, 2, |i, j| {
+            1e-30 * if j == 0 { (i + 1) as f64 } else { ((i * i) % 5) as f64 }
+        });
+        let want_dir = {
+            let mut c = tiny.col(0);
+            normalize(&mut c);
+            c
+        };
+        mgs_orthonormalize(&mut tiny);
+        let g2 = matmul(&tiny.t(), &tiny);
+        assert!((&g2 - &DMat::eye(2)).max_abs() < 1e-10);
+        // Column 0's direction survived (no spurious rescue).
+        let align = dot(&tiny.col(0), &want_dir).abs();
+        assert!(align > 1.0 - 1e-10, "independent tiny column was clobbered: {align}");
+    }
+
+    #[test]
+    fn mgs_rescues_all_zero_block_to_full_orthonormal_basis() {
+        let mut v = DMat::zeros(9, 4);
+        mgs_orthonormalize(&mut v);
+        let g = matmul(&v.t(), &v);
+        assert!((&g - &DMat::eye(4)).max_abs() < 1e-10);
     }
 
     #[test]

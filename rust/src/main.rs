@@ -113,11 +113,28 @@ fn pipeline_spec(spec: ArgSpec) -> ArgSpec {
             "limit_negexp:251",
             "identity | log[:eps] | negexp | taylor_negexp[:ell] | taylor_log[:ell[:eps]] | limit_negexp[:ell]",
         )
-        .opt("solver", "oja", "oja | mu-eg | subspace")
-        .opt("eta", "0", "learning rate (0 = auto 0.5/rho(M))")
+        .opt(
+            "solver",
+            "oja",
+            "oja | mu-eg | subspace | direct | ritz (block Rayleigh-Ritz on the dilated \
+             operator; converges on its own residuals, no oracle needed)",
+        )
+        .opt("eta", "0", "learning rate (0 = auto 0.5/rho(M); unused by --solver ritz)")
         .opt("steps", "10000", "max solver steps")
         .opt("eval-every", "50", "metric cadence")
         .opt("stop-error", "1e-4", "early-stop subspace error")
+        .opt(
+            "ritz-tol",
+            "1e-8",
+            "--solver ritz: relative residual tolerance (converged once the max wanted \
+             residual <= tol * rho(M))",
+        )
+        .opt("ritz-max-iters", "500", "--solver ritz: outer-iteration cap (1 apply each)")
+        .opt(
+            "block-size",
+            "0",
+            "--solver ritz: subspace block width (0 = auto: k + 2 guard vectors)",
+        )
         .opt("threads", "1", "worker threads for dense kernels (bitwise-identical output)")
         .opt("op", "dense", "dense (materialize p(L)) | sparse (matrix-free CSR operator)")
         .opt_choice(
@@ -199,6 +216,9 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
         eval_every: a.usize("eval-every"),
         streak_eps: 1e-2,
         stop_error: a.f64("stop-error"),
+        ritz_tol: cfg.f64("pipeline.ritz_tol", a.f64("ritz-tol")),
+        ritz_max_iters: cfg.usize("pipeline.ritz_max_iters", a.usize("ritz-max-iters")),
+        block_size: cfg.usize("pipeline.block_size", a.usize("block-size")),
         build,
         backend,
         seed: a.u64("seed"),
@@ -220,7 +240,9 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
 /// the operator build — an O(nnz) redundancy kept for the simpler Pipeline
 /// interface.)
 fn auto_eta(graph: &sped::graph::Graph, pcfg: &mut PipelineConfig, verbose: bool) {
-    if pcfg.eta > 0.0 {
+    // The Ritz solver has no learning rate — skip the O(nnz) spectral
+    // estimate (its operator build performs its own).
+    if pcfg.eta > 0.0 || pcfg.solver == "ritz" {
         return;
     }
     let threads = pcfg.threads.max(1);
@@ -367,6 +389,27 @@ fn cmd_cluster(mut args: Vec<String>) -> anyhow::Result<()> {
         out.timings.solve,
         out.timings.cluster
     );
+    if let Some(rz) = &out.ritz {
+        println!(
+            "ritz: {} outer iterations ({}), {} SpMM sweeps/apply, {} total sweeps",
+            rz.iterations,
+            if rz.converged { "converged" } else { "hit --ritz-max-iters" },
+            rz.sweeps_per_apply,
+            rz.total_sweeps
+        );
+        // Strided residual trace (≤ ~12 lines), always including the last.
+        let stride = (rz.residual_history.len() / 10).max(1);
+        for (i, r) in rz.residual_history.iter().enumerate() {
+            if i % stride == 0 || i + 1 == rz.residual_history.len() {
+                println!(
+                    "  iter {:>4}  max residual {:.3e}  sweeps {}",
+                    i + 1,
+                    r,
+                    (i + 1) * rz.sweeps_per_apply
+                );
+            }
+        }
+    }
     if let Some(cl) = &out.clustering {
         println!("k-means inertia {:.4} ({} iters)", cl.inertia, cl.iterations);
         println!("max conductance phi = {:.4}", max_conductance(&graph, &cl.assignments));

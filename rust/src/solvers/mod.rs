@@ -21,6 +21,7 @@ use crate::linalg::qr::mgs_orthonormalize;
 use crate::linalg::sparse::CsrMat;
 use crate::transforms::{PolyBasis, PolySeries, SeriesForm, TransformKind};
 
+pub mod ritz;
 pub mod stochastic;
 
 /// A "multiply by M" oracle: the only access solvers have to the matrix.
@@ -32,6 +33,13 @@ pub trait MatVecOp {
     /// Human label for logs/CSV.
     fn label(&self) -> String {
         "op".into()
+    }
+    /// How many SpMM (or dense-product) sweeps one [`Self::apply`] costs —
+    /// the cost unit the Ritz solver's per-iteration accounting reports.
+    /// One for plain operators; the matrix-free polynomial operator
+    /// overrides this with its evaluated degree.
+    fn sweeps_per_apply(&self) -> usize {
+        1
     }
 }
 
@@ -288,6 +296,9 @@ impl MatVecOp for SparsePolyOp {
     fn label(&self) -> String {
         format!("sparse[{},nnz={},{}]", self.l.rows(), self.l.nnz(), self.basis)
     }
+    fn sweeps_per_apply(&self) -> usize {
+        self.sweeps()
+    }
 }
 
 /// A top-k eigensolver iterating on a [`MatVecOp`].
@@ -376,12 +387,20 @@ impl EigenSolver for SubspaceIteration {
     }
 }
 
-/// Construct a solver by name (`oja`, `mu-eg`/`eg`, `subspace`).
+/// Construct a step-driven solver by name (`oja`, `mu-eg`/`eg`,
+/// `subspace`/`direct`). The block Rayleigh–Ritz solver is *not* a
+/// [`EigenSolver`] — its outer iteration owns convergence measurement — and
+/// is dispatched by the pipeline ([`crate::coordinator::pipeline`]) before
+/// this table is consulted.
 pub fn solver_by_name(name: &str, eta: f64) -> anyhow::Result<Box<dyn EigenSolver>> {
     Ok(match name {
         "oja" => Box::new(Oja { eta }),
         "mu-eg" | "eg" | "mu_eg" => Box::new(MuEigenGame { eta }),
-        "subspace" | "power" => Box::new(SubspaceIteration),
+        "subspace" | "power" | "direct" => Box::new(SubspaceIteration),
+        "ritz" => anyhow::bail!(
+            "the ritz solver is block-structured: drive it through the pipeline \
+             (--solver ritz) or solvers::ritz::ritz_solve, not the step interface"
+        ),
         other => anyhow::bail!("unknown solver {other:?}"),
     })
 }

@@ -19,7 +19,10 @@
 //!
 //! plus [`TransformKind::Identity`] as the baseline. After transforming, the
 //! spectrum is *reversed* (eq 8): `M = λ*I − f(L)` turns the bottom-k
-//! eigenvectors of `L` into the top-k of `M`, so any top-k solver applies.
+//! eigenvectors of `L` into the top-k of `M`, so any top-k solver applies —
+//! the per-vector stochastic updates (Oja, µ-EigenGame) as well as the block
+//! Rayleigh–Ritz subspace solver (`--solver ritz`, [`crate::solvers::ritz`]),
+//! whose outer-iteration count contracts with the dilated gap ratio.
 //! For the `−e^{−x}` family `f < 0` everywhere, so `λ* = 0` works and
 //! `ρ(M) ≤ 1` (§4.2).
 //!

@@ -221,6 +221,67 @@ fn property_table2_transforms_are_monotone_spectrum_maps() {
 }
 
 #[test]
+fn property_ritz_residuals_decay_and_honestly_bound_eigenpair_error() {
+    // Two invariants of the block Rayleigh–Ritz solver:
+    //
+    // (a) the per-iteration max residual is (numerically) non-increasing —
+    //     filtered subspace iteration contracts the unwanted components
+    //     every sweep, so a residual rise beyond rounding jitter means the
+    //     solver is lying about its own convergence;
+    // (b) the returned residuals honestly bound the eigenvalue error: for
+    //     symmetric M and a unit Ritz pair (θ, x), some exact eigenvalue
+    //     of M lies within ‖Mx − θx‖ of θ (Weyl) — checked against the
+    //     full `eigh` spectrum of the materialized operator.
+    use sped::solvers::ritz::{ritz_solve, RitzConfig};
+    check(106, 8, &SizeGen { lo: 12, hi: 30 }, |&n| {
+        let gg = cliques(&CliqueSpec { n, k: 2, max_short_circuit: 2, seed: n as u64 + 13 });
+        let l = gg.graph.laplacian();
+        let kind = TransformKind::LimitNegExp { ell: 31 };
+        let sm = sped::transforms::build_solver_matrix(
+            &l,
+            kind,
+            &sped::transforms::BuildOptions::default(),
+        )
+        .map_err(|e| e.to_string())?;
+        let e_m = eigh(&sm.m).map_err(|e| e.to_string())?;
+        let scale = e_m.values.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1e-300);
+        let mut op = sped::solvers::DenseOp::new(sm.m.clone());
+        let cfg = RitzConfig { k: 2, tol: 1e-10, max_iters: 500, ..Default::default() };
+        let res = ritz_solve(&mut op, &cfg).map_err(|e| e.to_string())?;
+        if !res.converged {
+            return Err(format!("n={n}: not converged in {} iters", res.iterations));
+        }
+        // (a) monotone decay, with a small multiplicative slack plus a
+        //     rounding floor for the final near-machine-precision steps.
+        for w in res.history.windows(2) {
+            let (prev, next) = (w[0].max_residual, w[1].max_residual);
+            if next > prev * 1.25 + 1e-12 * scale {
+                return Err(format!(
+                    "n={n}: residual rose {prev:.3e} -> {next:.3e} at iter {}",
+                    w[1].iter
+                ));
+            }
+        }
+        // (b) Weyl honesty against the exact spectrum of M.
+        for i in 0..2 {
+            let theta = res.values[i];
+            let r = res.residuals[i];
+            let dist = e_m
+                .values
+                .iter()
+                .map(|&lam| (lam - theta).abs())
+                .fold(f64::INFINITY, f64::min);
+            if dist > r + 1e-9 * (1.0 + scale) {
+                return Err(format!(
+                    "n={n}: θ_{i}={theta} sits {dist:.3e} from spec(M) but reported residual {r:.3e}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn property_transform_ordering_survives_reversal() {
     // After eq 8's reversal M = λ*I − f(L), the *top*-k eigenvectors of M
     // must be the bottom-k of L — order reversed, subspace intact.
