@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
     ] {
         let eta = {
             let l = gg.graph.laplacian();
-            let lam = sped::linalg::funcs::power_lambda_max(&l, 100) * 1.01;
+            let lam = sped::linalg::funcs::power_lambda_max(&l, 100).unwrap() * 1.01;
             0.5 / (transform.lambda_star(lam) - transform.scalar_map(0.0)).abs()
         };
         let cfg = PipelineConfig {

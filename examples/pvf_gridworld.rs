@@ -82,6 +82,6 @@ fn main() -> anyhow::Result<()> {
 
 fn auto_eta(g: &sped::graph::Graph, t: TransformKind) -> f64 {
     let l = g.laplacian();
-    let lam = sped::linalg::funcs::power_lambda_max(&l, 100) * 1.01;
+    let lam = sped::linalg::funcs::power_lambda_max(&l, 100).unwrap() * 1.01;
     0.5 / (t.lambda_star(lam) - t.scalar_map(0.0)).abs().max(1e-9)
 }

@@ -92,7 +92,7 @@ fn main() -> anyhow::Result<()> {
         100,
         1.05,
         1,
-    );
+    )?;
     let mut op = StochasticPolyOp::new(
         &g,
         vec![0.0, 1.0],

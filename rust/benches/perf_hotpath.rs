@@ -340,7 +340,7 @@ fn poly_basis_group(suite: &mut BenchSuite, threads: usize) {
         // divergence is an accuracy signal, not overflow noise.
         let gg = cliques(&CliqueSpec { n, k: (n / 16).max(2), max_short_circuit: 2, seed: 42 });
         let mut l = gg.graph.laplacian_csr();
-        let lam = sped::linalg::sparse::power_lambda_max_csr(&l, 100, threads) * 1.01;
+        let lam = sped::linalg::sparse::power_lambda_max_csr(&l, 100, threads).unwrap() * 1.01;
         l.scale_values(1.0 / lam);
         let nnz = l.nnz();
         let v = sped::solvers::random_init(n, k, 7);
@@ -695,7 +695,7 @@ fn ritz_solver_group(suite: &mut BenchSuite, threads: usize) {
     let mut rows: Vec<Vec<(String, JsonVal)>> = Vec::new();
     for &n in ns {
         let g = community_expander(n, communities, chords, 42);
-        let rcfg = RitzConfig { k: communities, block: 0, tol, max_iters: 2000 };
+        let rcfg = RitzConfig { k: communities, block: 0, tol, max_iters: 2000, ..RitzConfig::default() };
         let opts = BuildOptions { threads, ..BuildOptions::default() };
         let solve = |kind: TransformKind| {
             let mut op = SparsePolyOp::from_graph(&g, kind, &opts).unwrap();
@@ -775,6 +775,128 @@ fn ritz_solver_group(suite: &mut BenchSuite, threads: usize) {
         .join("..")
         .join("BENCH_ritz_solver.json");
     suite.write_json(&path, &rows).expect("write BENCH_ritz_solver.json");
+    suite.report(&format!("wrote {}", path.display()));
+}
+
+/// Streaming warm-vs-cold group (the PR 7 acceptance measurement): on the
+/// community-expander workload, run a streaming session through several
+/// delta batches, warm-starting each publish from the previous embedding,
+/// and against every publish run the identical pipeline cold on the same
+/// patched graph. Asserts inline that the warm solve converges in strictly
+/// fewer outer iterations (the quantity warm-starting exists to shrink)
+/// and emits `BENCH_stream_stability.json` with the per-batch warm/cold
+/// iteration and SpMM-sweep accounting.
+fn stream_stability_group(suite: &mut BenchSuite, threads: usize) {
+    use sped::coordinator::stream::{StreamConfig, StreamSession};
+    use sped::graph::delta::EdgeDelta;
+    use sped::pipeline::{Pipeline, PipelineConfig, SolvePath};
+    use sped::transforms::OpMode;
+    let n = if fast_mode() { 512 } else { 4096 };
+    let communities = 8usize;
+    let ell = 51usize;
+    let batches = if fast_mode() { 2 } else { 5 };
+    let g = community_expander(n, communities, 4, 42);
+    let pcfg = PipelineConfig {
+        k: communities,
+        transform: TransformKind::LimitNegExp { ell },
+        solver: "ritz".into(),
+        ritz_tol: 1e-8,
+        ritz_max_iters: 2000,
+        op_mode: OpMode::MatrixFree,
+        ground_truth: false,
+        threads,
+        ..Default::default()
+    };
+    let mut session = StreamSession::new(
+        g.clone(),
+        StreamConfig { pipeline: pcfg.clone(), warm_volume_frac: 0.25 },
+    );
+    let (t_base, base) = timed(|| session.publish().unwrap());
+    assert_eq!(base.path, SolvePath::Cold);
+    suite.report(&format!(
+        "stream-stability n={n} k={communities} ell={ell} ({threads}w): baseline cold {} iters / {} sweeps / {}",
+        base.iterations,
+        base.sweeps,
+        human_time(t_base),
+    ));
+    let mut rng = Rng::new(0x57AB);
+    let mut rows: Vec<Vec<(String, JsonVal)>> = Vec::new();
+    for batch_idx in 0..batches {
+        // Bounded churn: mild weight jitter on a handful of edges plus a
+        // few fresh in-community chords — enough to move the spectrum,
+        // far below the warm/cold degradation threshold.
+        let mut batch: Vec<EdgeDelta> = Vec::new();
+        let edges = session.graph().edges();
+        for _ in 0..16 {
+            let e = &edges[rng.below(edges.len())];
+            batch.push(EdgeDelta::Reweight {
+                u: e.u as usize,
+                v: e.v as usize,
+                w: e.w * rng.uniform(0.8, 1.2),
+            });
+        }
+        let m = n / communities;
+        for _ in 0..4 {
+            let comm = rng.below(communities);
+            let (u, v) = loop {
+                let a = comm * m + rng.below(m);
+                let b = comm * m + rng.below(m);
+                if a != b {
+                    break (a, b);
+                }
+            };
+            batch.push(EdgeDelta::Add { u, v, w: 1.0 });
+        }
+        session.apply_batch(&batch).unwrap();
+        let (t_warm, warm) = timed(|| session.publish().unwrap());
+        let (t_cold, cold) = timed(|| Pipeline::new(pcfg.clone()).run(session.graph()).unwrap());
+        let cz = cold.ritz.as_ref().expect("cold ritz summary");
+        // The acceptance floor, enforced where the numbers are made.
+        assert_eq!(warm.path, SolvePath::Warm, "batch {batch_idx} did not run warm");
+        assert!(warm.converged, "warm solve unconverged at batch {batch_idx}");
+        assert!(cz.converged, "cold solve unconverged at batch {batch_idx}");
+        assert!(
+            warm.iterations < cz.iterations,
+            "warm-start did not reduce outer iterations at batch {batch_idx}: {} vs {}",
+            warm.iterations,
+            cz.iterations
+        );
+        suite.report(&format!(
+            "stream-stability batch {batch_idx}: warm {} iters / {} sweeps / {} | cold {} iters / {} sweeps / {} | {:.1}x fewer iters",
+            warm.iterations,
+            warm.sweeps,
+            human_time(t_warm),
+            cz.iterations,
+            cz.total_sweeps,
+            human_time(t_cold),
+            cz.iterations as f64 / warm.iterations.max(1) as f64,
+        ));
+        rows.push(vec![
+            ("workload".into(), JsonVal::Str("community-expander".into())),
+            ("n".into(), JsonVal::Int(n as u64)),
+            ("k".into(), JsonVal::Int(communities as u64)),
+            ("ell".into(), JsonVal::Int(ell as u64)),
+            ("threads".into(), JsonVal::Int(threads as u64)),
+            ("batch".into(), JsonVal::Int(batch_idx as u64)),
+            ("deltas".into(), JsonVal::Int(batch.len() as u64)),
+            ("iters_baseline_cold".into(), JsonVal::Int(base.iterations as u64)),
+            ("iters_warm".into(), JsonVal::Int(warm.iterations as u64)),
+            ("iters_cold".into(), JsonVal::Int(cz.iterations as u64)),
+            ("sweeps_warm".into(), JsonVal::Int(warm.sweeps as u64)),
+            ("sweeps_cold".into(), JsonVal::Int(cz.total_sweeps as u64)),
+            ("time_warm_s".into(), JsonVal::Num(t_warm)),
+            ("time_cold_s".into(), JsonVal::Num(t_cold)),
+            (
+                "iter_reduction".into(),
+                JsonVal::Num(cz.iterations as f64 / warm.iterations.max(1) as f64),
+            ),
+            ("fast_mode".into(), JsonVal::Int(u64::from(fast_mode()))),
+        ]);
+    }
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_stream_stability.json");
+    suite.write_json(&path, &rows).expect("write BENCH_stream_stability.json");
     suite.report(&format!("wrote {}", path.display()));
 }
 
@@ -947,6 +1069,13 @@ fn main() {
     // unconditionally outside fast mode (CI filter: "ritz-solver").
     if suite.selected("ritz-solver dilated vs undilated convergence") {
         ritz_solver_group(&mut suite, threads);
+    }
+
+    // ---- stream-stability: warm-started vs cold re-solves per delta batch ----
+    // Matrix-free ritz solves only (no dense builds), so it runs
+    // unconditionally like ritz-solver (CI filter: "stream-stability").
+    if suite.selected("stream-stability warm vs cold re-solves") {
+        stream_stability_group(&mut suite, threads);
     }
 
     // ---- L3: clustering + walks ----

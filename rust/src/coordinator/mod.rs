@@ -4,4 +4,5 @@
 
 pub mod experiments;
 pub mod pipeline;
+pub mod stream;
 pub mod walkers;

@@ -91,6 +91,15 @@ pub struct PipelineConfig {
     /// λ_max start vector is index-salted, so its trailing bits can move
     /// under relabeling).
     pub reorder: Reorder,
+    /// `--solver ritz` only: seed the block from a previous embedding
+    /// (`n×k`, **input node order** — under [`Reorder::Rcm`] the pipeline
+    /// permutes the rows into solve order itself). The warm columns are
+    /// re-orthonormalized before use; if the warm-started solve fails
+    /// (structured [`crate::solvers::ritz::SolveFailure`], an unusable warm
+    /// block, or running out of iterations unconverged), the pipeline
+    /// **degrades to a cold solve automatically** and reports it via
+    /// [`RitzSummary::path`]. Ignored by the step-driven solvers.
+    pub warm_start: Option<DMat>,
     /// Compute the exact bottom-k eigenvectors (an `O(n³)` dense `eigh`)
     /// as the metric oracle. **Default true** to preserve the historical
     /// output; set false when only cluster assignments are wanted — for
@@ -123,6 +132,7 @@ impl Default for PipelineConfig {
             op_mode: OpMode::DenseMaterialized,
             rcm_order: None,
             reorder: Reorder::None,
+            warm_start: None,
             ground_truth: true,
         }
     }
@@ -153,6 +163,30 @@ pub struct PipelineOutput {
     pub ritz: Option<RitzSummary>,
 }
 
+/// Which solve actually produced a `--solver ritz` embedding — the honest
+/// record streaming callers pin their warm-vs-cold accounting on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolvePath {
+    /// No warm start was offered; the block was seeded deterministically.
+    Cold,
+    /// The warm-started solve converged and its result was kept.
+    Warm,
+    /// A warm start was offered but the warm solve failed (structured
+    /// solver failure, unusable warm block, or unconverged at the
+    /// iteration cap) — the pipeline fell back to a cold solve.
+    WarmDegraded,
+}
+
+impl std::fmt::Display for SolvePath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SolvePath::Cold => "cold",
+            SolvePath::Warm => "warm",
+            SolvePath::WarmDegraded => "warm-degraded",
+        })
+    }
+}
+
 /// What a `--solver ritz` run reports about itself: residual-based
 /// convergence (self-measured — available even with `ground_truth` off)
 /// and the SpMM-sweep accounting the dilated-vs-undilated comparison is
@@ -174,6 +208,8 @@ pub struct RitzSummary {
     pub residuals: Vec<f64>,
     /// Ritz values of `M` for the embedding columns (descending).
     pub values: Vec<f64>,
+    /// Which solve produced the embedding (cold / warm / warm-degraded).
+    pub path: SolvePath,
 }
 
 /// The pipeline orchestrator.
@@ -209,7 +245,24 @@ impl Pipeline {
                     None => graph.rcm_permutation(),
                 };
                 let permuted = graph.permute(&order)?;
-                let mut out = self.run_ordered(&permuted)?;
+                // A warm embedding arrives in input node order; the solve
+                // runs on the relabeled graph, so gather its rows into
+                // solve order (`permuted[new] = warm[order[new]]`). A warm
+                // block of the wrong height cannot be permuted — pass it
+                // through untouched and let the solver-side validation
+                // reject it into the cold fallback.
+                let mut out = match &cfg.warm_start {
+                    Some(warm) if warm.rows() == n => {
+                        let mut pw = DMat::zeros(n, warm.cols());
+                        for (new, &old) in order.iter().enumerate() {
+                            pw.row_mut(new).copy_from_slice(warm.row(old));
+                        }
+                        let mut sub = self.cfg.clone();
+                        sub.warm_start = Some(pw);
+                        Pipeline::new(sub).run_ordered(&permuted)?
+                    }
+                    _ => self.run_ordered(&permuted)?,
+                };
                 // Permuted row `new` holds node `order[new]`: scatter the
                 // embedding rows and hard labels back to input node order.
                 let k = out.embedding.cols();
@@ -338,8 +391,30 @@ impl Pipeline {
                 block: cfg.block_size,
                 tol: cfg.ritz_tol,
                 max_iters: cfg.ritz_max_iters,
+                ..Default::default()
             };
-            let res = crate::solvers::ritz::ritz_solve(op.as_mut(), &rcfg)?;
+            // Graceful degradation: a warm start is an optimization, never
+            // a correctness dependency. If the warm-started solve errors
+            // (non-finite blowup, stagnation, unusable warm block) or runs
+            // out of iterations unconverged, rerun cold and say so — a
+            // genuine operator defect will fail the cold solve too and
+            // surface as the error it is.
+            let (res, path) = match &cfg.warm_start {
+                Some(warm) => {
+                    let wcfg = crate::solvers::ritz::RitzConfig {
+                        warm_start: Some(warm.clone()),
+                        ..rcfg.clone()
+                    };
+                    match crate::solvers::ritz::ritz_solve(op.as_mut(), &wcfg) {
+                        Ok(res) if res.converged => (res, SolvePath::Warm),
+                        _ => (
+                            crate::solvers::ritz::ritz_solve(op.as_mut(), &rcfg)?,
+                            SolvePath::WarmDegraded,
+                        ),
+                    }
+                }
+                None => (crate::solvers::ritz::ritz_solve(op.as_mut(), &rcfg)?, SolvePath::Cold),
+            };
             let mut history = ConvergenceHistory::new("");
             if let Some((v_star, values)) = &ground {
                 // With the oracle available, record one endpoint datapoint
@@ -363,6 +438,7 @@ impl Pipeline {
                 residual_history: res.history.iter().map(|p| p.max_residual).collect(),
                 residuals: res.residuals,
                 values: res.values,
+                path,
             };
             (history, res.embedding, Some(summary))
         } else {
@@ -519,7 +595,7 @@ impl Pipeline {
         };
         timings.cluster = t0.elapsed().as_secs_f64();
         let lambda_star = cfg.transform.lambda_star(
-            crate::linalg::funcs::power_lambda_max(l, cfg.build.power_iters) * cfg.build.safety,
+            crate::linalg::funcs::power_lambda_max(l, cfg.build.power_iters)? * cfg.build.safety,
         );
         Ok(PipelineOutput { history, embedding, clustering, timings, lambda_star, ritz: None })
     }
@@ -531,7 +607,7 @@ impl Pipeline {
         let cfg = &self.cfg;
         let n = l.rows();
         let lam_est =
-            crate::linalg::funcs::power_lambda_max(l, cfg.build.power_iters) * cfg.build.safety;
+            crate::linalg::funcs::power_lambda_max(l, cfg.build.power_iters)? * cfg.build.safety;
         let rho = if lam_est > 0.0 { lam_est } else { 1.0 };
         let lambda_star = cfg.transform.lambda_star(rho);
         let f_l = match cfg.transform {
@@ -713,6 +789,72 @@ mod tests {
         assert_eq!(
             dense.clustering.as_ref().unwrap().assignments,
             sparse.clustering.as_ref().unwrap().assignments
+        );
+    }
+
+    #[test]
+    fn warm_started_ritz_reuses_embedding_and_degrades_gracefully() {
+        let gg = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 9 });
+        let mk = |warm_start| PipelineConfig {
+            k: 3,
+            transform: TransformKind::LimitNegExp { ell: 51 },
+            solver: "ritz".into(),
+            ritz_tol: 1e-10,
+            ritz_max_iters: 300,
+            op_mode: OpMode::MatrixFree,
+            ground_truth: false,
+            warm_start,
+            ..Default::default()
+        };
+        let cold = Pipeline::new(mk(None)).run(&gg.graph).unwrap();
+        assert_eq!(cold.ritz.as_ref().unwrap().path, SolvePath::Cold);
+        // Seeding from the converged embedding must keep the partition and
+        // converge in strictly fewer outer iterations.
+        let warm = Pipeline::new(mk(Some(cold.embedding.clone()))).run(&gg.graph).unwrap();
+        let (wz, cz) = (warm.ritz.as_ref().unwrap(), cold.ritz.as_ref().unwrap());
+        assert_eq!(wz.path, SolvePath::Warm);
+        assert!(wz.converged);
+        assert!(
+            wz.iterations < cz.iterations,
+            "warm {} vs cold {} iterations",
+            wz.iterations,
+            cz.iterations
+        );
+        assert_eq!(
+            warm.clustering.as_ref().unwrap().assignments,
+            cold.clustering.as_ref().unwrap().assignments
+        );
+        // An unusable warm block (wrong height: stale embedding from a graph
+        // that has since grown) must silently fall back to the cold solve —
+        // same answer, honest path report.
+        let degraded = Pipeline::new(mk(Some(DMat::zeros(5, 3)))).run(&gg.graph).unwrap();
+        let dz = degraded.ritz.as_ref().unwrap();
+        assert_eq!(dz.path, SolvePath::WarmDegraded);
+        assert!(dz.converged);
+        assert_eq!(
+            degraded.clustering.as_ref().unwrap().assignments,
+            cold.clustering.as_ref().unwrap().assignments
+        );
+        // Under RCM reorder the warm rows (input node order) are permuted
+        // into solve order — the warm path must still engage and agree.
+        let rcm_cfg = PipelineConfig {
+            reorder: crate::graph::Reorder::Rcm,
+            ..mk(Some(cold.embedding.clone()))
+        };
+        let rcm = Pipeline::new(rcm_cfg).run(&gg.graph).unwrap();
+        assert_eq!(rcm.ritz.as_ref().unwrap().path, SolvePath::Warm);
+        let canon = |a: &[usize]| {
+            let mut map = std::collections::HashMap::new();
+            a.iter()
+                .map(|&c| {
+                    let next = map.len();
+                    *map.entry(c).or_insert(next)
+                })
+                .collect::<Vec<usize>>()
+        };
+        assert_eq!(
+            canon(&rcm.clustering.as_ref().unwrap().assignments),
+            canon(&cold.clustering.as_ref().unwrap().assignments)
         );
     }
 

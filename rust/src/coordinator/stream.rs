@@ -1,0 +1,416 @@
+//! Streaming session driver: ingest batched edge deltas, keep the
+//! embedding and clustering fresh with warm-started Ritz solves, and
+//! degrade to cold solves when the accumulated churn makes the previous
+//! subspace a bad seed.
+//!
+//! The session owns the mutable [`Graph`] plus every piece of derived
+//! state the pipeline would otherwise recompute from scratch each publish:
+//!
+//! * the previous embedding (the warm-start seed),
+//! * the previous hard assignments (the drift baseline),
+//! * a cached RCM order (valid until a delta changes topology),
+//! * a cached spectral-domain estimate (valid until any Laplacian entry
+//!   moves; re-estimated `O(nnz)` from the patched CSR, never dense).
+//!
+//! Invalidation is driven by the exact [`DeltaOutcome`] flags
+//! [`Graph::apply_deltas`] reports, so a reweight-only batch keeps the
+//! node order and a bitwise no-op batch keeps everything.
+
+use crate::cluster::adjusted_rand_index;
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig, SolvePath};
+use crate::graph::delta::{DeltaOutcome, EdgeDelta};
+use crate::graph::{Graph, Reorder};
+use crate::linalg::dmat::DMat;
+use crate::transforms::SpectrumEstimate;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Streaming-session configuration: the per-publish pipeline plus the
+/// warm/cold degradation policy.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// The pipeline each publish runs. `warm_start` and `rcm_order` are
+    /// managed by the session (anything set here is overwritten).
+    pub pipeline: PipelineConfig,
+    /// Degradation threshold: when the edge volume touched since the last
+    /// publish exceeds this fraction of the current edge count, the warm
+    /// seed is presumed stale and the publish runs cold up front (rather
+    /// than paying for a doomed warm attempt). `0` forces every publish
+    /// cold; warm starts also require `pipeline.solver == "ritz"`.
+    pub warm_volume_frac: f64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig { pipeline: PipelineConfig::default(), warm_volume_frac: 0.25 }
+    }
+}
+
+/// What one [`StreamSession::publish`] produced.
+#[derive(Clone, Debug)]
+pub struct PublishReport {
+    /// Which solve produced the embedding (cold / warm / warm-degraded).
+    /// Step-driven solvers always report [`SolvePath::Cold`].
+    pub path: SolvePath,
+    /// Outer iterations of a `ritz` solve (0 for step-driven solvers).
+    pub iterations: usize,
+    /// Total SpMM sweeps of a `ritz` solve (0 for step-driven solvers) —
+    /// the honest cost unit warm-vs-cold comparisons are stated in.
+    pub sweeps: usize,
+    /// Whether the solver self-reported convergence (`true` for
+    /// step-driven solvers, which run a fixed step budget).
+    pub converged: bool,
+    /// Hard cluster assignments (empty when `do_cluster` is off).
+    pub assignments: Vec<usize>,
+    /// ARI of the new assignments against the previous publish — the
+    /// drift metric. `None` on the first publish, when clustering is off,
+    /// or when the node count changed (ARI is undefined across different
+    /// node sets).
+    pub ari_vs_previous: Option<f64>,
+    /// Delta volume accumulated since the last publish, as the fraction
+    /// of the current edge count the degradation policy compared against.
+    pub volume_frac: f64,
+    /// The reversal shift the solve used.
+    pub lambda_star: f64,
+}
+
+/// A long-lived streaming session over one mutable graph.
+pub struct StreamSession {
+    graph: Graph,
+    cfg: StreamConfig,
+    prev_embedding: Option<DMat>,
+    prev_assignments: Option<Vec<usize>>,
+    /// RCM order for the *current* topology (recomputed lazily after a
+    /// topology-changing batch). Doubles as the `# order:` header source
+    /// on save — never written stale (see [`StreamSession::save`]).
+    cached_order: Option<Vec<usize>>,
+    /// Spectral-domain estimate for the current weights, invalidated by
+    /// any batch that moves a Laplacian entry.
+    cached_domain: Option<SpectrumEstimate>,
+    /// Edge volume accumulated since the last publish.
+    delta_volume: usize,
+    publishes: usize,
+}
+
+impl StreamSession {
+    pub fn new(graph: Graph, cfg: StreamConfig) -> StreamSession {
+        StreamSession {
+            graph,
+            cfg,
+            prev_embedding: None,
+            prev_assignments: None,
+            cached_order: None,
+            cached_domain: None,
+            delta_volume: 0,
+            publishes: 0,
+        }
+    }
+
+    /// Start from a graph loaded with a persisted `# order:` header
+    /// ([`crate::graph::io::load_edge_list_with_order`]): the stored order
+    /// seeds the cache and is reused until the first topology change.
+    pub fn with_order(graph: Graph, order: Option<Vec<usize>>, cfg: StreamConfig) -> StreamSession {
+        let mut s = StreamSession::new(graph, cfg);
+        s.cached_order = order;
+        s
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Embedding of the last publish, if any (input node order).
+    pub fn embedding(&self) -> Option<&DMat> {
+        self.prev_embedding.as_ref()
+    }
+
+    pub fn publishes(&self) -> usize {
+        self.publishes
+    }
+
+    /// Apply one transactional delta batch and invalidate exactly the
+    /// derived state the outcome flags say broke. A failed batch (the
+    /// `Err` side of [`Graph::apply_deltas`]) leaves the graph *and* every
+    /// cache untouched — faults degrade to a rejected batch, never a
+    /// poisoned session.
+    pub fn apply_batch(&mut self, deltas: &[EdgeDelta]) -> Result<DeltaOutcome> {
+        let outcome = self.graph.apply_deltas(deltas)?;
+        self.delta_volume += outcome.volume();
+        if outcome.topology_changed {
+            // The node order is a topology artifact; a stale one must
+            // neither drive a solve nor be written back to disk.
+            self.cached_order = None;
+        }
+        if outcome.topology_changed || outcome.weights_changed {
+            self.cached_domain = None;
+        }
+        Ok(outcome)
+    }
+
+    /// The spectral-domain estimate for the current matrix, re-estimated
+    /// `O(nnz)` from the patched CSR only when a batch actually moved a
+    /// Laplacian entry since the last call.
+    pub fn domain(&mut self) -> Result<SpectrumEstimate> {
+        if let Some(d) = self.cached_domain {
+            return Ok(d);
+        }
+        let lc = self.graph.laplacian_csr();
+        let threads = self.cfg.pipeline.threads.max(1);
+        let est = self
+            .cfg
+            .pipeline
+            .build
+            .domain
+            .estimate_csr(&lc, 0.0, threads)
+            .context("re-estimating spectral domain after deltas")?;
+        self.cached_domain = Some(est);
+        Ok(est)
+    }
+
+    /// Run the pipeline on the current graph and refresh the published
+    /// state. Warm-starts from the previous embedding when the solver is
+    /// `ritz` and the accumulated churn is under
+    /// [`StreamConfig::warm_volume_frac`]; the pipeline itself degrades a
+    /// failing warm solve to cold, and the report says which path ran.
+    pub fn publish(&mut self) -> Result<PublishReport> {
+        let volume_frac = self.delta_volume as f64 / self.graph.num_edges().max(1) as f64;
+        let mut pcfg = self.cfg.pipeline.clone();
+        let force_cold = self.cfg.pipeline.solver != "ritz"
+            || self.prev_embedding.is_none()
+            || volume_frac > self.cfg.warm_volume_frac;
+        pcfg.warm_start = if force_cold { None } else { self.prev_embedding.clone() };
+        if pcfg.reorder == Reorder::Rcm {
+            // One RCM rebuild per topology change, not per publish.
+            let order = match self.cached_order.take() {
+                Some(o) => o,
+                None => self.graph.rcm_permutation(),
+            };
+            pcfg.rcm_order = Some(order.clone());
+            self.cached_order = Some(order);
+        } else {
+            pcfg.rcm_order = None;
+        }
+        let out = Pipeline::new(pcfg).run(&self.graph)?;
+
+        let (path, iterations, sweeps, converged) = match &out.ritz {
+            Some(rz) => (rz.path, rz.iterations, rz.total_sweeps, rz.converged),
+            None => (SolvePath::Cold, 0, 0, true),
+        };
+        let assignments =
+            out.clustering.as_ref().map(|c| c.assignments.clone()).unwrap_or_default();
+        let ari_vs_previous = match &self.prev_assignments {
+            Some(prev) if !assignments.is_empty() && prev.len() == assignments.len() => {
+                Some(adjusted_rand_index(prev, &assignments))
+            }
+            _ => None,
+        };
+        self.prev_embedding = Some(out.embedding.clone());
+        if !assignments.is_empty() {
+            self.prev_assignments = Some(assignments.clone());
+        }
+        self.delta_volume = 0;
+        self.publishes += 1;
+        Ok(PublishReport {
+            path,
+            iterations,
+            sweeps,
+            converged,
+            assignments,
+            ari_vs_previous,
+            volume_frac,
+            lambda_star: out.lambda_star,
+        })
+    }
+
+    /// Persist the current graph. The `# order:` header is written only
+    /// when the cached order is still valid for the current topology —
+    /// after a topology-changing batch the session either recomputed it
+    /// (on an RCM publish) or dropped it, so a stale order is never
+    /// saved for a mutated graph.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        crate::graph::io::save_edge_list_with_order(
+            &self.graph,
+            path,
+            self.cached_order.as_deref(),
+        )
+    }
+}
+
+/// Parse a stream event file into delta batches: one delta per line in
+/// the [`EdgeDelta::parse`] grammar, blank lines and `#` comments
+/// skipped, a `---` line closes the current batch. Errors carry the
+/// 1-based line number.
+pub fn parse_event_batches(text: &str) -> Result<Vec<Vec<EdgeDelta>>> {
+    let mut batches: Vec<Vec<EdgeDelta>> = Vec::new();
+    let mut current: Vec<EdgeDelta> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "---" {
+            if current.is_empty() {
+                bail!("line {}: empty delta batch before `---`", lineno + 1);
+            }
+            batches.push(std::mem::take(&mut current));
+            continue;
+        }
+        let d = EdgeDelta::parse(line).with_context(|| format!("line {}", lineno + 1))?;
+        current.push(d);
+    }
+    if !current.is_empty() {
+        batches.push(current);
+    }
+    Ok(batches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{cliques, CliqueSpec};
+    use crate::transforms::{OpMode, TransformKind};
+
+    fn ritz_stream_cfg() -> StreamConfig {
+        StreamConfig {
+            pipeline: PipelineConfig {
+                k: 3,
+                transform: TransformKind::LimitNegExp { ell: 51 },
+                solver: "ritz".into(),
+                ritz_tol: 1e-8,
+                ritz_max_iters: 400,
+                op_mode: OpMode::MatrixFree,
+                ground_truth: false,
+                ..Default::default()
+            },
+            warm_volume_frac: 0.25,
+        }
+    }
+
+    #[test]
+    fn warm_publish_after_small_batch_and_cold_after_large() {
+        let gg = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 9 });
+        let mut s = StreamSession::new(gg.graph.clone(), ritz_stream_cfg());
+        let first = s.publish().unwrap();
+        assert_eq!(first.path, SolvePath::Cold);
+        assert!(first.ari_vs_previous.is_none());
+        // A single reweight is well under the volume threshold → warm.
+        let (u, v, w) = {
+            let e = &gg.graph.edges()[0];
+            (e.u as usize, e.v as usize, e.w)
+        };
+        s.apply_batch(&[EdgeDelta::Reweight { u, v, w: w * 1.5 }]).unwrap();
+        let second = s.publish().unwrap();
+        assert_eq!(second.path, SolvePath::Warm);
+        assert!(second.converged);
+        assert!(second.iterations < first.iterations, "warm should finish faster");
+        assert!(
+            second.ari_vs_previous.unwrap() > 0.99,
+            "tiny reweight must not move clusters: ARI {:?}",
+            second.ari_vs_previous
+        );
+        // A churn burst past the threshold forces the next publish cold.
+        let mut big: Vec<EdgeDelta> = Vec::new();
+        for e in gg.graph.edges().iter().take(gg.graph.num_edges() / 2) {
+            big.push(EdgeDelta::Reweight { u: e.u as usize, v: e.v as usize, w: e.w * 0.9 });
+        }
+        s.apply_batch(&big).unwrap();
+        let third = s.publish().unwrap();
+        assert_eq!(third.path, SolvePath::Cold);
+        assert!(third.volume_frac > 0.25);
+    }
+
+    #[test]
+    fn node_growth_degrades_warm_start_instead_of_failing() {
+        let gg = cliques(&CliqueSpec { n: 24, k: 2, max_short_circuit: 1, seed: 3 });
+        let mut cfg = ritz_stream_cfg();
+        cfg.pipeline.k = 2;
+        cfg.warm_volume_frac = 10.0; // force the warm attempt even after growth
+        let mut s = StreamSession::new(gg.graph, cfg);
+        s.publish().unwrap();
+        // Grow the graph: the cached embedding is now the wrong height, so
+        // the warm attempt must fall back to cold, not error.
+        s.apply_batch(&[
+            EdgeDelta::AddNodes { count: 2 },
+            EdgeDelta::Add { u: 0, v: 24, w: 1.0 },
+            EdgeDelta::Add { u: 24, v: 25, w: 1.0 },
+        ])
+        .unwrap();
+        let rep = s.publish().unwrap();
+        assert_eq!(rep.path, SolvePath::WarmDegraded);
+        assert!(rep.converged);
+        assert_eq!(rep.assignments.len(), 26);
+        assert!(rep.ari_vs_previous.is_none(), "ARI undefined across node counts");
+    }
+
+    #[test]
+    fn rejected_batch_leaves_session_usable_and_caches_valid() {
+        let gg = cliques(&CliqueSpec { n: 24, k: 2, max_short_circuit: 1, seed: 3 });
+        let mut cfg = ritz_stream_cfg();
+        cfg.pipeline.k = 2;
+        let mut s = StreamSession::new(gg.graph, cfg);
+        s.publish().unwrap();
+        let d0 = s.domain().unwrap();
+        let before = s.graph().laplacian_csr();
+        // NaN weight and out-of-range id: both rejected transactionally.
+        assert!(s.apply_batch(&[EdgeDelta::Add { u: 0, v: 1, w: f64::NAN }]).is_err());
+        assert!(s.apply_batch(&[EdgeDelta::Remove { u: 0, v: 999 }]).is_err());
+        let after = s.graph().laplacian_csr();
+        assert_eq!(before.values().len(), after.values().len());
+        assert!(before
+            .values()
+            .iter()
+            .zip(after.values().iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        // Domain cache survived (nothing changed) and the next publish is
+        // warm — the session was not poisoned.
+        let d1 = s.domain().unwrap();
+        assert_eq!(d0.rho.to_bits(), d1.rho.to_bits());
+        let rep = s.publish().unwrap();
+        assert_eq!(rep.path, SolvePath::Warm);
+    }
+
+    #[test]
+    fn save_drops_order_after_topology_change_and_keeps_it_otherwise() {
+        let gg = cliques(&CliqueSpec { n: 24, k: 2, max_short_circuit: 1, seed: 3 });
+        let order = gg.graph.rcm_permutation();
+        let dir = std::env::temp_dir().join("sped_stream_save_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        let mut cfg = ritz_stream_cfg();
+        cfg.pipeline.k = 2;
+        let mut s = StreamSession::with_order(gg.graph.clone(), Some(order), cfg);
+        // Reweight-only batch: topology unchanged, order still valid.
+        let (u0, v0, w0) = {
+            let e = &gg.graph.edges()[0];
+            (e.u as usize, e.v as usize, e.w)
+        };
+        s.apply_batch(&[EdgeDelta::Reweight { u: u0, v: v0, w: w0 * 2.0 }]).unwrap();
+        s.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("# order:"), "valid order should persist");
+        // Topology-changing batch (removing a known edge): the stale order
+        // must not be written.
+        s.apply_batch(&[EdgeDelta::Remove { u: u0, v: v0 }]).unwrap();
+        s.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.contains("# order:"), "stale order must be dropped on save");
+        // Round-trip sanity: the saved graph reloads to the mutated one.
+        let (loaded, loaded_order) = crate::graph::io::load_edge_list_with_order(&path).unwrap();
+        assert!(loaded_order.is_none());
+        assert_eq!(loaded.num_edges(), s.graph().num_edges());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn event_batches_parse_with_line_numbered_errors() {
+        let text = "# warm-up\nadd 0 5 1.0\nreweight 1 2 0.5\n---\nremove 3 4\n";
+        let batches = parse_event_batches(text).unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].len(), 2);
+        assert_eq!(batches[1].len(), 1);
+        let err = parse_event_batches("add 0 1 1.0\n---\n---\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 3"), "{err:#}");
+        let err = parse_event_batches("add 0 1\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"), "{err:#}");
+    }
+}

@@ -1,0 +1,471 @@
+//! Streaming edge deltas: batched in-place mutation of a [`Graph`].
+//!
+//! Production graphs mutate constantly; rebuilding from scratch on every
+//! edge event forces a cold solve each time. [`Graph::apply_deltas`] takes
+//! a batch of [`EdgeDelta`] events, validates the whole batch up front
+//! (transactional: a bad delta leaves the graph untouched), and patches
+//! the canonical edge list + CSR adjacency in place. The patched state is
+//! bitwise-identical to a from-scratch [`Graph::from_edges`] rebuild on
+//! the final edge set — asserted in debug builds — so both CSR Laplacians
+//! ([`Graph::laplacian_csr`] / [`Graph::normalized_laplacian_csr`])
+//! inherit the dense-parity contract unchanged.
+//!
+//! The returned [`DeltaOutcome`] tells callers exactly which derived
+//! state their batch invalidated: an RCM order depends only on topology
+//! (`topology_changed`), cached spectral domain bounds on any Laplacian
+//! entry (`weights_changed`). Reweight-only batches keep the CSR row
+//! structure (`offsets`) valid and skip the degree/prefix-sum rebuild.
+
+use super::{Edge, Graph};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// One edge event in a streaming batch. Endpoints are undirected and
+/// canonicalized internally (`u < v`); weights must be finite.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EdgeDelta {
+    /// Add `w` to the weight of `(u, v)`, creating the edge (with weight
+    /// `w`) if absent — the duplicate-merge semantics of
+    /// [`Graph::from_edges`].
+    Add { u: usize, v: usize, w: f64 },
+    /// Remove `(u, v)` entirely. Removing an absent edge is an error.
+    Remove { u: usize, v: usize },
+    /// Set the weight of existing edge `(u, v)` to `w`. Reweighting an
+    /// absent edge is an error.
+    Reweight { u: usize, v: usize, w: f64 },
+    /// Grow the node set by `count` fresh isolated nodes
+    /// (`n .. n + count`). Takes effect immediately: later deltas in the
+    /// same batch may reference the new ids.
+    AddNodes { count: usize },
+}
+
+impl EdgeDelta {
+    /// Parse one event-file line: `add u v w` | `remove u v` |
+    /// `reweight u v w` | `addnodes k`. Weight syntax is permissive
+    /// (`nan` parses); semantic validation happens in
+    /// [`Graph::apply_deltas`] so fault injection exercises the batch
+    /// validator, not the tokenizer.
+    pub fn parse(line: &str) -> Result<EdgeDelta> {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let usize_at = |i: usize| -> Result<usize> {
+            toks.get(i)
+                .ok_or_else(|| anyhow::anyhow!("delta {line:?}: missing field {i}"))?
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("delta {line:?}: bad integer field {i}"))
+        };
+        let f64_at = |i: usize| -> Result<f64> {
+            toks.get(i)
+                .ok_or_else(|| anyhow::anyhow!("delta {line:?}: missing field {i}"))?
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("delta {line:?}: bad weight field {i}"))
+        };
+        let want = |n: usize| -> Result<()> {
+            if toks.len() != n {
+                bail!("delta {line:?}: expected {n} fields, got {}", toks.len());
+            }
+            Ok(())
+        };
+        match toks.first().copied() {
+            Some("add") => {
+                want(4)?;
+                Ok(EdgeDelta::Add { u: usize_at(1)?, v: usize_at(2)?, w: f64_at(3)? })
+            }
+            Some("remove") => {
+                want(3)?;
+                Ok(EdgeDelta::Remove { u: usize_at(1)?, v: usize_at(2)? })
+            }
+            Some("reweight") => {
+                want(4)?;
+                Ok(EdgeDelta::Reweight { u: usize_at(1)?, v: usize_at(2)?, w: f64_at(3)? })
+            }
+            Some("addnodes") => {
+                want(2)?;
+                Ok(EdgeDelta::AddNodes { count: usize_at(1)? })
+            }
+            Some(other) => bail!(
+                "delta {line:?}: unknown op {other:?} (expected add | remove | reweight | addnodes)"
+            ),
+            None => bail!("empty delta line"),
+        }
+    }
+}
+
+/// What a delta batch actually changed — the invalidation contract for
+/// derived state.
+///
+/// * `topology_changed` — the adjacency *structure* changed (edge set or
+///   node count). Invalidates anything keyed on structure alone: RCM
+///   orders, CSR row offsets, bandwidth.
+/// * `weights_changed` — some Laplacian entry changed (implies weight
+///   edits or topology edits). Invalidates spectral state: cached domain
+///   bounds, embeddings. A reweight to the bitwise-identical value counts
+///   as no change.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeltaOutcome {
+    /// Structural edges created.
+    pub edges_added: usize,
+    /// Structural edges deleted.
+    pub edges_removed: usize,
+    /// Surviving edges whose weight changed (bitwise).
+    pub edges_reweighted: usize,
+    /// Fresh isolated nodes appended.
+    pub nodes_added: usize,
+    /// Adjacency structure changed (RCM order / offsets now invalid).
+    pub topology_changed: bool,
+    /// Some Laplacian entry changed (spectral bounds now invalid).
+    pub weights_changed: bool,
+}
+
+impl DeltaOutcome {
+    /// Total structural + weight edits — the "delta volume" the streaming
+    /// session accumulates to decide warm-start vs cold-solve fallback.
+    pub fn volume(&self) -> usize {
+        self.edges_added + self.edges_removed + self.edges_reweighted
+    }
+}
+
+impl Graph {
+    /// Weight of canonical edge `(u, v)` (`u < v`), if present. Binary
+    /// search over the sorted, duplicate-free canonical edge list.
+    fn edge_weight_canonical(&self, u: u32, v: u32) -> Option<f64> {
+        self.edges
+            .binary_search_by(|e| (e.u, e.v).cmp(&(u, v)))
+            .ok()
+            .map(|i| self.edges[i].w)
+    }
+
+    /// Apply a batch of edge deltas in place.
+    ///
+    /// The whole batch is validated and resolved before any mutation, so
+    /// on `Err` the graph is untouched (a NaN weight or bad node id in
+    /// the middle of a batch never leaves half-applied state). On `Ok`
+    /// the edge list, degrees, and CSR adjacency are patched in place —
+    /// bitwise-identical to `Graph::from_edges(n', final_edges)` (checked
+    /// by a debug assertion) — and the returned [`DeltaOutcome`] reports
+    /// which derived-state validity conditions actually broke.
+    ///
+    /// Cost: `O(D log E)` resolution + `O(E + n)` merge/refill, where `D`
+    /// is the batch size. Reweight-only batches keep the row structure
+    /// and skip the degree-count/prefix-sum rebuild.
+    pub fn apply_deltas(&mut self, deltas: &[EdgeDelta]) -> Result<DeltaOutcome> {
+        // Phase 1: resolve the batch into a final pending value per
+        // touched edge key (None = removed), validating as we go.
+        let mut pending: BTreeMap<(u32, u32), Option<f64>> = BTreeMap::new();
+        let mut new_n = self.n;
+        let mut nodes_added = 0usize;
+        let canon = |i: usize, u: usize, v: usize, n: usize| -> Result<(u32, u32)> {
+            if u == v {
+                bail!("delta #{i}: self-loop at node {u}");
+            }
+            if u >= n || v >= n {
+                bail!("delta #{i}: edge ({u},{v}) out of range for n = {n}");
+            }
+            Ok(if u < v { (u as u32, v as u32) } else { (v as u32, u as u32) })
+        };
+        for (i, d) in deltas.iter().enumerate() {
+            match *d {
+                EdgeDelta::AddNodes { count } => {
+                    new_n += count;
+                    nodes_added += count;
+                }
+                EdgeDelta::Add { u, v, w } => {
+                    if !w.is_finite() {
+                        bail!("delta #{i}: non-finite weight {w} for edge ({u},{v})");
+                    }
+                    let key = canon(i, u, v, new_n)?;
+                    let cur = match pending.get(&key) {
+                        Some(&p) => p,
+                        None => self.edge_weight_canonical(key.0, key.1),
+                    };
+                    pending.insert(key, Some(cur.map_or(w, |c| c + w)));
+                }
+                EdgeDelta::Remove { u, v } => {
+                    let key = canon(i, u, v, new_n)?;
+                    let exists = match pending.get(&key) {
+                        Some(p) => p.is_some(),
+                        None => self.edge_weight_canonical(key.0, key.1).is_some(),
+                    };
+                    if !exists {
+                        bail!("delta #{i}: remove of absent edge ({u},{v})");
+                    }
+                    pending.insert(key, None);
+                }
+                EdgeDelta::Reweight { u, v, w } => {
+                    if !w.is_finite() {
+                        bail!("delta #{i}: non-finite weight {w} for edge ({u},{v})");
+                    }
+                    let key = canon(i, u, v, new_n)?;
+                    let exists = match pending.get(&key) {
+                        Some(p) => p.is_some(),
+                        None => self.edge_weight_canonical(key.0, key.1).is_some(),
+                    };
+                    if !exists {
+                        bail!("delta #{i}: reweight of absent edge ({u},{v})");
+                    }
+                    pending.insert(key, Some(w));
+                }
+            }
+        }
+
+        // Phase 2: merge the sorted pending edits into the sorted
+        // canonical edge list (both ascending by (u, v)) and tally what
+        // actually changed.
+        let pend: Vec<((u32, u32), Option<f64>)> = pending.into_iter().collect();
+        let mut outcome = DeltaOutcome { nodes_added, ..Default::default() };
+        let mut merged: Vec<Edge> = Vec::with_capacity(self.edges.len() + pend.len());
+        let mut pi = 0usize;
+        let mut push_new = |p: &((u32, u32), Option<f64>), out: &mut DeltaOutcome,
+                            merged: &mut Vec<Edge>| {
+            // A key absent from the graph whose final state is "removed"
+            // (added then removed within one batch) is a no-op.
+            if let Some(w) = p.1 {
+                merged.push(Edge { u: p.0 .0, v: p.0 .1, w });
+                out.edges_added += 1;
+            }
+        };
+        for e in &self.edges {
+            let key = (e.u, e.v);
+            while pi < pend.len() && pend[pi].0 < key {
+                push_new(&pend[pi], &mut outcome, &mut merged);
+                pi += 1;
+            }
+            if pi < pend.len() && pend[pi].0 == key {
+                match pend[pi].1 {
+                    Some(w) => {
+                        if w.to_bits() != e.w.to_bits() {
+                            outcome.edges_reweighted += 1;
+                        }
+                        merged.push(Edge { u: e.u, v: e.v, w });
+                    }
+                    None => outcome.edges_removed += 1,
+                }
+                pi += 1;
+            } else {
+                merged.push(*e);
+            }
+        }
+        while pi < pend.len() {
+            push_new(&pend[pi], &mut outcome, &mut merged);
+            pi += 1;
+        }
+        outcome.topology_changed =
+            outcome.edges_added > 0 || outcome.edges_removed > 0 || nodes_added > 0;
+        outcome.weights_changed = outcome.topology_changed || outcome.edges_reweighted > 0;
+
+        // Phase 3: commit. The CSR refill replays the exact operation
+        // sequence of `from_edges` (integer offsets, weights copied
+        // verbatim — no arithmetic on stored values), so bitwise identity
+        // with a from-scratch rebuild is structural, not approximate.
+        self.n = new_n;
+        self.edges = merged;
+        if outcome.topology_changed {
+            let mut degree_count = vec![0usize; self.n];
+            for e in &self.edges {
+                degree_count[e.u as usize] += 1;
+                degree_count[e.v as usize] += 1;
+            }
+            self.offsets.clear();
+            self.offsets.reserve(self.n + 1);
+            self.offsets.push(0);
+            for i in 0..self.n {
+                self.offsets.push(self.offsets[i] + degree_count[i]);
+            }
+        }
+        if outcome.weights_changed {
+            let mut cursor = self.offsets.clone();
+            self.neighbors.clear();
+            self.neighbors.resize(self.offsets[self.n], (0u32, 0.0f64));
+            for e in &self.edges {
+                self.neighbors[cursor[e.u as usize]] = (e.v, e.w);
+                cursor[e.u as usize] += 1;
+                self.neighbors[cursor[e.v as usize]] = (e.u, e.w);
+                cursor[e.v as usize] += 1;
+            }
+        }
+        #[cfg(debug_assertions)]
+        self.debug_assert_matches_rebuild();
+        Ok(outcome)
+    }
+
+    /// Debug-build check of the tentpole invariant: the patched graph is
+    /// bitwise-identical — edges, CSR adjacency, and both CSR Laplacians —
+    /// to a from-scratch rebuild on the final edge set.
+    #[cfg(debug_assertions)]
+    fn debug_assert_matches_rebuild(&self) {
+        let raw: Vec<(usize, usize, f64)> = self
+            .edges
+            .iter()
+            .map(|e| (e.u as usize, e.v as usize, e.w))
+            .collect();
+        let rebuilt = Graph::from_edges(self.n, &raw).expect("patched edge list must rebuild");
+        debug_assert_eq!(self.offsets, rebuilt.offsets, "delta patch broke CSR offsets");
+        debug_assert!(
+            self.neighbors.len() == rebuilt.neighbors.len()
+                && self
+                    .neighbors
+                    .iter()
+                    .zip(rebuilt.neighbors.iter())
+                    .all(|(a, b)| a.0 == b.0 && a.1.to_bits() == b.1.to_bits()),
+            "delta patch broke CSR neighbors"
+        );
+        for (ours, theirs) in [
+            (self.laplacian_csr(), rebuilt.laplacian_csr()),
+            (self.normalized_laplacian_csr(), rebuilt.normalized_laplacian_csr()),
+        ] {
+            debug_assert!(
+                ours.values().len() == theirs.values().len()
+                    && ours
+                        .values()
+                        .iter()
+                        .zip(theirs.values().iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "delta patch broke CSR Laplacian bitwise parity"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn square() -> Graph {
+        Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 0.5), (0, 3, 1.0)]).unwrap()
+    }
+
+    #[test]
+    fn add_remove_reweight_roundtrip() {
+        let mut g = square();
+        let out = g
+            .apply_deltas(&[
+                EdgeDelta::Add { u: 0, v: 2, w: 3.0 },
+                EdgeDelta::Remove { u: 2, v: 3 },
+                EdgeDelta::Reweight { u: 0, v: 1, w: 4.0 },
+            ])
+            .unwrap();
+        assert_eq!(out.edges_added, 1);
+        assert_eq!(out.edges_removed, 1);
+        assert_eq!(out.edges_reweighted, 1);
+        assert!(out.topology_changed && out.weights_changed);
+        assert_eq!(out.volume(), 3);
+        let expect = Graph::from_edges(4, &[(0, 1, 4.0), (0, 2, 3.0), (1, 2, 2.0)]).unwrap();
+        assert_eq!(g.edges(), expect.edges());
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn add_merges_weight_like_from_edges_duplicates() {
+        let mut g = square();
+        g.apply_deltas(&[EdgeDelta::Add { u: 1, v: 0, w: 0.5 }]).unwrap();
+        assert_eq!(g.edges()[0].w, 1.5);
+        // Within-batch sequencing: create, bump, then remove → no-op edge.
+        let out = g
+            .apply_deltas(&[
+                EdgeDelta::Add { u: 1, v: 3, w: 1.0 },
+                EdgeDelta::Add { u: 3, v: 1, w: 1.0 },
+                EdgeDelta::Remove { u: 1, v: 3 },
+            ])
+            .unwrap();
+        assert_eq!((out.edges_added, out.edges_removed), (0, 0));
+        assert!(!out.topology_changed);
+    }
+
+    #[test]
+    fn reweight_only_batch_keeps_structure_flags() {
+        let mut g = square();
+        let before = g.edges().to_vec();
+        let out = g.apply_deltas(&[EdgeDelta::Reweight { u: 1, v: 2, w: 7.0 }]).unwrap();
+        assert!(!out.topology_changed);
+        assert!(out.weights_changed);
+        assert_eq!(g.edges()[1].w, 7.0);
+        // Bitwise-identical reweight is reported as no change at all.
+        let out2 = g.apply_deltas(&[EdgeDelta::Reweight { u: 1, v: 2, w: 7.0 }]).unwrap();
+        assert!(!out2.weights_changed && out2.volume() == 0);
+        assert_ne!(before[1].w, g.edges()[1].w);
+    }
+
+    #[test]
+    fn addnodes_grows_and_new_ids_usable_in_same_batch() {
+        let mut g = square();
+        let out = g
+            .apply_deltas(&[
+                EdgeDelta::AddNodes { count: 2 },
+                EdgeDelta::Add { u: 3, v: 5, w: 1.0 },
+            ])
+            .unwrap();
+        assert_eq!(g.num_nodes(), 6);
+        assert_eq!(out.nodes_added, 2);
+        assert!(out.topology_changed);
+        // Node 4 is isolated: structural diagonal zero in the Laplacian.
+        let (cols, vals) = g.laplacian_csr().row(4);
+        assert_eq!((cols, vals), (&[4u32][..], &[0.0][..]));
+    }
+
+    #[test]
+    fn bad_deltas_are_rejected_transactionally() {
+        let mut g = square();
+        let snapshot = g.edges().to_vec();
+        for (deltas, needle) in [
+            (vec![EdgeDelta::Add { u: 0, v: 0, w: 1.0 }], "self-loop"),
+            (vec![EdgeDelta::Add { u: 0, v: 9, w: 1.0 }], "out of range"),
+            (vec![EdgeDelta::Add { u: 0, v: 2, w: f64::NAN }], "non-finite"),
+            (vec![EdgeDelta::Reweight { u: 0, v: 1, w: f64::INFINITY }], "non-finite"),
+            (vec![EdgeDelta::Remove { u: 0, v: 2 }], "absent"),
+            (vec![EdgeDelta::Reweight { u: 1, v: 3, w: 2.0 }], "absent"),
+            (
+                // Valid first delta, bad second: nothing may stick.
+                vec![
+                    EdgeDelta::Add { u: 0, v: 2, w: 1.0 },
+                    EdgeDelta::Add { u: 1, v: 3, w: f64::NAN },
+                ],
+                "non-finite",
+            ),
+        ] {
+            let err = g.apply_deltas(&deltas).unwrap_err().to_string();
+            assert!(err.contains(needle), "{err:?} missing {needle:?}");
+            assert!(err.contains("delta #"), "{err:?} missing delta index");
+            assert_eq!(g.edges(), snapshot.as_slice(), "failed batch mutated the graph");
+        }
+    }
+
+    #[test]
+    fn removal_down_to_isolated_vertices() {
+        let mut g = square();
+        g.apply_deltas(&[
+            EdgeDelta::Remove { u: 0, v: 1 },
+            EdgeDelta::Remove { u: 1, v: 2 },
+            EdgeDelta::Remove { u: 2, v: 3 },
+            EdgeDelta::Remove { u: 0, v: 3 },
+        ])
+        .unwrap();
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.num_components(), 4);
+        for v in 0..4 {
+            assert_eq!(g.degree(v), 0);
+        }
+        // Laplacians of the edgeless graph: all-zero structural diagonal.
+        assert!(g.laplacian_csr().values().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn parse_event_lines() {
+        assert_eq!(
+            EdgeDelta::parse("add 0 3 1.5").unwrap(),
+            EdgeDelta::Add { u: 0, v: 3, w: 1.5 }
+        );
+        assert_eq!(EdgeDelta::parse("remove 2 1").unwrap(), EdgeDelta::Remove { u: 2, v: 1 });
+        assert_eq!(
+            EdgeDelta::parse("reweight 0 1 0.25").unwrap(),
+            EdgeDelta::Reweight { u: 0, v: 1, w: 0.25 }
+        );
+        assert_eq!(EdgeDelta::parse("addnodes 8").unwrap(), EdgeDelta::AddNodes { count: 8 });
+        // NaN parses at the tokenizer; apply_deltas is the validator.
+        match EdgeDelta::parse("add 0 1 nan").unwrap() {
+            EdgeDelta::Add { w, .. } => assert!(w.is_nan()),
+            other => panic!("unexpected {other:?}"),
+        }
+        for bad in ["", "frob 1 2", "add 0 1", "remove 1", "add 0 1 2 3", "addnodes x"] {
+            assert!(EdgeDelta::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+}

@@ -18,8 +18,10 @@ use std::path::Path;
 /// (the `# order:` header) when one is present.
 pub fn parse_edge_list_with_order(text: &str) -> Result<(Graph, Option<Vec<usize>>)> {
     let mut edges: Vec<(usize, usize, f64)> = Vec::new();
+    let mut edge_lines: Vec<usize> = Vec::new();
     let mut declared_n: Option<usize> = None;
     let mut order: Option<Vec<usize>> = None;
+    let mut order_line = 0usize;
     let mut max_id = 0usize;
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.trim();
@@ -42,6 +44,7 @@ pub fn parse_edge_list_with_order(text: &str) -> Result<(Graph, Option<Vec<usize
                     })
                     .collect();
                 order = Some(parsed?);
+                order_line = lineno + 1;
             }
             continue;
         }
@@ -65,21 +68,47 @@ pub fn parse_edge_list_with_order(text: &str) -> Result<(Graph, Option<Vec<usize
         if parts.next().is_some() {
             bail!("line {}: trailing tokens", lineno + 1);
         }
+        // Validate each edge where it is written, not deep inside
+        // `from_edges` where the line number is gone: a NaN or negative
+        // weight, or a self-loop, names the offending line.
+        if !w.is_finite() {
+            bail!("line {}: non-finite weight {w}", lineno + 1);
+        }
+        if w < 0.0 {
+            bail!("line {}: negative weight {w}", lineno + 1);
+        }
+        if u == v {
+            bail!("line {}: self-loop at node {u}", lineno + 1);
+        }
         max_id = max_id.max(u).max(v);
         edges.push((u, v, w));
+        edge_lines.push(lineno + 1);
     }
     let n = declared_n.unwrap_or(if edges.is_empty() { 0 } else { max_id + 1 });
+    // Out-of-range endpoints only exist relative to a declared node
+    // count; report them with the line they came from.
+    for (&(u, v, _), &ln) in edges.iter().zip(&edge_lines) {
+        if u >= n || v >= n {
+            bail!("line {ln}: edge ({u},{v}) out of range for n = {n}");
+        }
+    }
     let g = Graph::from_edges(n, &edges)?;
     if let Some(ord) = &order {
         // Validate eagerly so a corrupt header fails at load, not deep in
-        // the pipeline: must be a permutation of 0..n.
+        // the pipeline: must be a permutation of 0..n. A length mismatch
+        // is the stale-order signature (order saved for a different edge
+        // set), so say so.
         if ord.len() != n {
-            bail!("# order: header has {} ids for n = {n} nodes", ord.len());
+            bail!(
+                "line {order_line}: # order: header has {} ids for n = {n} nodes \
+                 (stale order from a mutated graph?)",
+                ord.len()
+            );
         }
         let mut seen = vec![false; n];
         for &v in ord {
             if v >= n || seen[v] {
-                bail!("# order: header is not a permutation of 0..{n}");
+                bail!("line {order_line}: # order: header is not a permutation of 0..{n}");
             }
             seen[v] = true;
         }
@@ -119,8 +148,19 @@ pub fn save_edge_list_with_order<P: AsRef<Path>>(
         }
     }
     if let Some(ord) = order {
+        // Refuse to persist an order that cannot belong to this graph —
+        // the cheap half of the stale-order guard (callers that mutate a
+        // graph after computing an order must refresh or drop it; see
+        // `coordinator::stream::StreamSession::save`).
         if ord.len() != g.num_nodes() {
             bail!("order has {} ids for n = {} nodes", ord.len(), g.num_nodes());
+        }
+        let mut seen = vec![false; g.num_nodes()];
+        for &v in ord {
+            if v >= g.num_nodes() || seen[v] {
+                bail!("order is not a permutation of 0..{}", g.num_nodes());
+            }
+            seen[v] = true;
         }
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
@@ -167,6 +207,22 @@ mod tests {
         assert!(parse_edge_list("0\n").is_err());
         assert!(parse_edge_list("a b\n").is_err());
         assert!(parse_edge_list("0 1 2 3\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_edges_with_line_numbers() {
+        for (text, needle) in [
+            ("0 1\n1 2 nan\n", "line 2: non-finite weight"),
+            ("0 1 inf\n", "line 1: non-finite weight"),
+            ("0 1\n\n# pad\n2 3 -0.5\n", "line 4: negative weight"),
+            ("0 1\n2 2\n", "line 2: self-loop"),
+            ("# nodes: 3\n0 1\n1 5\n", "line 3: edge (1,5) out of range for n = 3"),
+        ] {
+            let err = format!("{:#}", parse_edge_list(text).unwrap_err());
+            assert!(err.contains(needle), "{err:?} missing {needle:?}");
+        }
+        // Zero weights stay legal (duplicate-merge semantics rely on them).
+        assert_eq!(parse_edge_list("0 1 0.0\n").unwrap().num_edges(), 1);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Graph substrate: undirected weighted graphs in CSR form, the incidence
 //! representation of §2, Laplacians, and workload generators.
 
+pub mod delta;
 pub mod gen;
 pub mod incidence;
 pub mod io;

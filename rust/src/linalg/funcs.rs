@@ -90,7 +90,8 @@ pub fn taylor_log_coeffs(ell: usize, eps: f64) -> Vec<f64> {
 /// Returns an estimate within `tol` relative error for well-separated tops,
 /// and is always an underestimate ≤ λ_max; callers multiply by a safety
 /// factor. Single-worker case of [`super::par::power_lambda_max_par`].
-pub fn power_lambda_max(a: &DMat, iters: usize) -> f64 {
+/// Errors on non-finite iterates instead of propagating poison into λ*.
+pub fn power_lambda_max(a: &DMat, iters: usize) -> Result<f64> {
     super::par::power_lambda_max_par(a, iters, 1)
 }
 
@@ -262,7 +263,7 @@ mod tests {
         let x = DMat::from_fn(30, 20, |_, _| rng.normal());
         let g = crate::linalg::matmul::gram(&x);
         let exact = eigh(&g).unwrap().lambda_max();
-        let approx = power_lambda_max(&g, 200);
+        let approx = power_lambda_max(&g, 200).unwrap();
         assert!((approx - exact).abs() < 1e-6 * exact);
         assert!(approx <= exact + 1e-9);
     }

@@ -46,7 +46,7 @@ use super::dmat::{dot, normalize, vec_axpy, DMat};
 use super::eigh::eigh;
 use super::par::{deterministic_start, gemv_par};
 use super::sparse::{spmv, CsrMat};
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Default Lanczos step count for the domain policy: enough for the
 /// extreme Ritz values of the graph spectra SPED meets to converge to well
@@ -110,6 +110,13 @@ pub fn lanczos_bounds_with(
     for j in 0..m {
         let mut w = matvec(&basis[j]);
         let alpha = dot(&w, &basis[j]);
+        // A poisoned matrix (NaN/Inf entries, e.g. a normalized Laplacian
+        // built from a graph with a NaN weight) surfaces here first. Bail
+        // naming the step instead of handing eigh a NaN tridiagonal and
+        // silently corrupting the Chebyshev domain downstream.
+        if !alpha.is_finite() {
+            bail!("lanczos: non-finite diagonal coefficient α = {alpha} at step {} of {m}", j + 1);
+        }
         alphas.push(alpha);
         coeff_scale = coeff_scale.max(alpha.abs());
         vec_axpy(&mut w, -alpha, &basis[j]);
@@ -124,6 +131,12 @@ pub fn lanczos_bounds_with(
             }
         }
         let beta = normalize(&mut w);
+        if !beta.is_finite() {
+            bail!(
+                "lanczos: non-finite off-diagonal coefficient β = {beta} at step {} of {m}",
+                j + 1
+            );
+        }
         if j + 1 == m || beta <= 1e-12 * coeff_scale {
             // Requested depth reached, or breakdown: the Krylov space is
             // (numerically) invariant, so the Ritz values are exact to the
@@ -243,6 +256,32 @@ mod tests {
         let b = lanczos_bounds(&one, 8, 1).unwrap();
         assert!((b.lo - 2.5).abs() < 1e-12);
         assert!((b.hi - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_matvec_is_named_not_propagated() {
+        // A poisoned operator must produce a contextual error naming the
+        // offending step, never a LanczosBounds full of NaN.
+        let err = lanczos_bounds_with(8, 16, |v| vec![f64::NAN; v.len()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("non-finite"), "{err:?}");
+        assert!(err.contains("step 1"), "{err:?}");
+        // Poison arriving after clean steps still names its step: a
+        // diagonal matvec (no premature breakdown) that turns NaN on the
+        // third application.
+        let cell = std::cell::Cell::new(0usize);
+        let err2 = lanczos_bounds_with(8, 16, |v| {
+            cell.set(cell.get() + 1);
+            v.iter()
+                .enumerate()
+                .map(|(i, &x)| if cell.get() >= 3 { f64::NAN } else { (i as f64 + 1.0) * x })
+                .collect()
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err2.contains("non-finite"), "{err2:?}");
+        assert!(err2.contains("step 3"), "{err2:?}");
     }
 
     #[test]

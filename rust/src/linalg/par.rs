@@ -23,6 +23,7 @@
 use super::dmat::DMat;
 use super::matmul::{gemv_row_range, matmul_row_range};
 use crate::util::pool::parallel_shards;
+use anyhow::{bail, Result};
 
 /// Below this many multiply-adds a row-sharded dispatch runs serial: the
 /// scoped spawn/join overhead of a per-call shard rivals the FLOPs. Shared
@@ -188,27 +189,44 @@ pub(crate) fn power_iteration_with(
     n: usize,
     iters: usize,
     matvec: impl Fn(&[f64]) -> Vec<f64>,
-) -> f64 {
+) -> Result<f64> {
     if n == 0 {
-        return 0.0;
+        return Ok(0.0);
     }
     let mut v = deterministic_start(n);
     let mut lambda = 0.0;
-    for _ in 0..iters {
+    for it in 0..iters {
         let mut w = matvec(&v);
         lambda = super::dmat::dot(&v, &w);
-        if super::dmat::normalize(&mut w) == 0.0 {
-            return 0.0;
+        // A NaN/Inf Rayleigh quotient means the matrix (or an upstream
+        // build) is poisoned; every later iterate would be too. Name the
+        // iteration instead of letting the poison reach λ*/domain scaling.
+        if !lambda.is_finite() {
+            bail!(
+                "power iteration: non-finite Rayleigh quotient {lambda} at iteration {} of {iters}",
+                it + 1
+            );
+        }
+        let nrm = super::dmat::normalize(&mut w);
+        if !nrm.is_finite() {
+            bail!(
+                "power iteration: non-finite iterate norm {nrm} at iteration {} of {iters}",
+                it + 1
+            );
+        }
+        if nrm == 0.0 {
+            return Ok(0.0);
         }
         v = w;
     }
-    lambda.max(0.0)
+    Ok(lambda.max(0.0))
 }
 
 /// Largest-eigenvalue estimate by power iteration with the matrix–vector
 /// product row-sharded. Bitwise identical to
-/// [`super::funcs::power_lambda_max`].
-pub fn power_lambda_max_par(a: &DMat, iters: usize, threads: usize) -> f64 {
+/// [`super::funcs::power_lambda_max`]. Errors on non-finite iterates (see
+/// [`power_iteration_with`]).
+pub fn power_lambda_max_par(a: &DMat, iters: usize, threads: usize) -> Result<f64> {
     power_iteration_with(a.rows(), iters, |v| gemv_par(a, v, threads))
 }
 
@@ -309,8 +327,8 @@ mod tests {
                 .iter()
                 .zip(par.iter())
                 .all(|(a, b)| a.to_bits() == b.to_bits()));
-            let lam_s = power_lambda_max(&g, 60);
-            let lam_p = power_lambda_max_par(&g, 60, workers);
+            let lam_s = power_lambda_max(&g, 60).unwrap();
+            let lam_p = power_lambda_max_par(&g, 60, workers).unwrap();
             assert_eq!(lam_s.to_bits(), lam_p.to_bits(), "{workers} workers");
         }
     }

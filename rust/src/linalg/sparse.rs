@@ -597,8 +597,9 @@ pub fn spmv(a: &CsrMat, x: &[f64], threads: usize) -> Vec<f64> {
 /// iteration — the shared recurrence of
 /// [`super::par::power_lambda_max_par`] (one implementation, dispatched by
 /// matvec), with the matrix–vector product in `O(nnz)` instead of `O(n²)`.
-/// Bitwise identical across worker counts.
-pub fn power_lambda_max_csr(a: &CsrMat, iters: usize, threads: usize) -> f64 {
+/// Bitwise identical across worker counts. Errors on non-finite iterates
+/// instead of propagating poison into λ*.
+pub fn power_lambda_max_csr(a: &CsrMat, iters: usize, threads: usize) -> anyhow::Result<f64> {
     assert!(a.is_square());
     super::par::power_iteration_with(a.rows, iters, |v| spmv(a, v, threads))
 }
@@ -863,8 +864,8 @@ mod tests {
         .graph;
         let lc = g.laplacian_csr();
         let ld = g.laplacian();
-        let sparse = power_lambda_max_csr(&lc, 100, 1);
-        let dense = crate::linalg::funcs::power_lambda_max(&ld, 100);
+        let sparse = power_lambda_max_csr(&lc, 100, 1).unwrap();
+        let dense = crate::linalg::funcs::power_lambda_max(&ld, 100).unwrap();
         assert!(
             (sparse - dense).abs() <= 1e-9 * dense.max(1.0),
             "sparse {sparse} vs dense {dense}"
@@ -872,7 +873,7 @@ mod tests {
         // And across worker counts, bitwise.
         for &workers in &[2usize, 8] {
             assert_eq!(
-                power_lambda_max_csr(&lc, 100, workers).to_bits(),
+                power_lambda_max_csr(&lc, 100, workers).unwrap().to_bits(),
                 sparse.to_bits()
             );
         }
@@ -882,7 +883,7 @@ mod tests {
     fn empty_and_degenerate_shapes() {
         let m = CsrMat::from_triplets(0, 0, &[]);
         assert_eq!(m.nnz(), 0);
-        assert_eq!(power_lambda_max_csr(&m, 10, 4), 0.0);
+        assert_eq!(power_lambda_max_csr(&m, 10, 4).unwrap(), 0.0);
         let one = CsrMat::from_triplets(1, 1, &[(0, 0, 3.0)]);
         let b = DMat::from_vec(1, 2, vec![2.0, -1.0]);
         let c = spmm(&one, &b, 4);

@@ -30,6 +30,7 @@ fn main() {
     let cmd = args.remove(0);
     let result = match cmd.as_str() {
         "cluster" => cmd_cluster(args),
+        "stream" => cmd_stream(args),
         "pvf" => cmd_pvf(args),
         "linkpred" => cmd_linkpred(args),
         "experiment" => cmd_experiment(args),
@@ -60,6 +61,7 @@ fn print_usage() {
          \n\
          SUBCOMMANDS:\n\
          \x20 cluster     spectral clustering through the SPED pipeline\n\
+         \x20 stream      streaming edge deltas with warm-started re-solves\n\
          \x20 pvf         proto-value functions of the 3-room MDP (Fig 1-3)\n\
          \x20 linkpred    probabilistic-graph clustering (Fig 5 / App A.1)\n\
          \x20 experiment  regenerate paper figures (--figure fig2|fig3|fig4|fig5|fig6|walks|all)\n\
@@ -255,7 +257,10 @@ fn auto_eta(graph: &sped::graph::Graph, pcfg: &mut PipelineConfig, verbose: bool
         OpMode::MatrixFree => {
             let lc = graph.laplacian_csr();
             let hint = if need_power {
-                sped::linalg::sparse::power_lambda_max_csr(&lc, 100, threads) * 1.01
+                // Eta is a heuristic: a failed estimate degrades to the
+                // domain fallback instead of aborting the run here.
+                sped::linalg::sparse::power_lambda_max_csr(&lc, 100, threads)
+                    .map_or(0.0, |x| x * 1.01)
             } else {
                 0.0
             };
@@ -264,7 +269,8 @@ fn auto_eta(graph: &sped::graph::Graph, pcfg: &mut PipelineConfig, verbose: bool
         OpMode::DenseMaterialized => {
             let ld = graph.laplacian();
             let hint = if need_power {
-                sped::linalg::par::power_lambda_max_par(&ld, 100, threads) * 1.01
+                sped::linalg::par::power_lambda_max_par(&ld, 100, threads)
+                    .map_or(0.0, |x| x * 1.01)
             } else {
                 0.0
             };
@@ -425,6 +431,100 @@ fn cmd_cluster(mut args: Vec<String>) -> anyhow::Result<()> {
             *sizes.entry(c).or_insert(0usize) += 1;
         }
         println!("cluster sizes: {sizes:?}");
+    }
+    Ok(())
+}
+
+fn cmd_stream(mut args: Vec<String>) -> anyhow::Result<()> {
+    use sped::coordinator::stream::{parse_event_batches, StreamConfig, StreamSession};
+    let cfg = load_config(&mut args)?;
+    let spec = pipeline_spec(graph_spec("sped stream"))
+        .opt_req(
+            "events",
+            "event file: one delta per line (add U V W | remove U V | reweight U V W | \
+             addnodes K), a `---` line closes a batch",
+        )
+        .opt("publish-every", "1", "republish embedding + clusters every N batches")
+        .opt(
+            "warm-frac",
+            "0.25",
+            "delta volume (fraction of current edge count) above which a publish runs \
+             cold instead of warm-starting from the previous embedding (--solver ritz)",
+        )
+        .opt_req(
+            "save-graph",
+            "write the final mutated graph to this edge-list path (the `# order:` header \
+             is kept only while still valid for the mutated topology)",
+        );
+    let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
+    let events_path = a
+        .get("events")
+        .ok_or_else(|| anyhow::anyhow!("--events <file> is required"))?;
+    let text = std::fs::read_to_string(&events_path)
+        .map_err(|e| anyhow::anyhow!("reading {events_path}: {e}"))?;
+    let batches = parse_event_batches(&text)?;
+    let publish_every = a.usize("publish-every").max(1);
+    let (graph, labels, stored_order) = make_graph(&a)?;
+    println!(
+        "graph: {} nodes, {} edges | {} delta batches from {events_path}",
+        graph.num_nodes(),
+        graph.num_edges(),
+        batches.len()
+    );
+    let mut pcfg = build_pipeline_cfg(&a, &cfg)?;
+    auto_eta(&graph, &mut pcfg, true);
+    let mut session = StreamSession::with_order(
+        graph,
+        stored_order,
+        StreamConfig { pipeline: pcfg, warm_volume_frac: a.f64("warm-frac") },
+    );
+    let publish = |session: &mut StreamSession, tag: &str| -> anyhow::Result<()> {
+        let rep = session.publish()?;
+        let drift = rep.ari_vs_previous.map_or(String::from("-"), |x| format!("{x:.4}"));
+        let truth = if !labels.is_empty() && labels.len() == rep.assignments.len() {
+            format!(" | ARI vs labels {:.4}", adjusted_rand_index(&rep.assignments, &labels))
+        } else {
+            String::new()
+        };
+        println!(
+            "publish {tag}: path {} | {} iters ({}) | drift ARI {drift}{truth}",
+            rep.path,
+            rep.iterations,
+            if rep.converged { "converged" } else { "unconverged" },
+        );
+        Ok(())
+    };
+    publish(&mut session, "baseline")?;
+    let mut pending = 0usize;
+    for (i, batch) in batches.iter().enumerate() {
+        match session.apply_batch(batch) {
+            Ok(outcome) => {
+                println!(
+                    "batch {}: +{} -{} ~{} edges, +{} nodes{}",
+                    i + 1,
+                    outcome.edges_added,
+                    outcome.edges_removed,
+                    outcome.edges_reweighted,
+                    outcome.nodes_added,
+                    if outcome.topology_changed { " (topology changed)" } else { "" }
+                );
+                pending += 1;
+            }
+            // Graceful degradation: a bad batch is rejected transactionally
+            // (the graph and every cache are untouched); the stream goes on.
+            Err(e) => println!("batch {} rejected: {e:#}", i + 1),
+        }
+        if pending > 0 && (i + 1) % publish_every == 0 {
+            publish(&mut session, &format!("after batch {}", i + 1))?;
+            pending = 0;
+        }
+    }
+    if pending > 0 {
+        publish(&mut session, "final")?;
+    }
+    if let Some(path) = a.get("save-graph") {
+        session.save(&path)?;
+        println!("saved mutated graph to {path}");
     }
     Ok(())
 }

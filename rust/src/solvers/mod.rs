@@ -172,7 +172,7 @@ impl SparsePolyOp {
         let need_power =
             opts.prescale || opts.domain == crate::transforms::DomainEstimate::Power;
         let lam_est = if need_power {
-            crate::linalg::sparse::power_lambda_max_csr(&l, opts.power_iters, threads)
+            crate::linalg::sparse::power_lambda_max_csr(&l, opts.power_iters, threads)?
                 * opts.safety
         } else {
             0.0

@@ -52,13 +52,93 @@ pub struct RitzConfig {
     pub tol: f64,
     /// Outer-iteration cap (each cap unit is one bundle apply).
     pub max_iters: usize,
+    /// Seed the starting block from a previous solve's Ritz vectors
+    /// instead of the hash-seeded [`deterministic_block`] (see
+    /// [`RitzConfig::warm_start`]). `None` = cold start.
+    pub warm_start: Option<DMat>,
+    /// Bail with [`SolveFailure::Stagnation`] after this many consecutive
+    /// outer iterations with no strict residual improvement (`0`
+    /// disables). Strict comparison means a slowly-but-genuinely
+    /// converging run never trips it; only a frozen iteration — an
+    /// operator whose image stopped depending on the basis — does.
+    pub stagnation_window: usize,
 }
 
 impl Default for RitzConfig {
     fn default() -> Self {
-        RitzConfig { k: 4, block: 0, tol: 1e-8, max_iters: 500 }
+        RitzConfig {
+            k: 4,
+            block: 0,
+            tol: 1e-8,
+            max_iters: 500,
+            warm_start: None,
+            stagnation_window: 100,
+        }
     }
 }
+
+impl RitzConfig {
+    /// Builder: warm-start from a previous solve's embedding (`n×k`
+    /// Ritz vectors, any column count ≥ 1). The columns are copied into
+    /// the leading block positions, guard columns are refilled from the
+    /// deterministic hash stream, and the whole block is re-orthonormalized
+    /// through [`mgs_orthonormalize`] — whose deterministic rescue path
+    /// absorbs rank-deficient or duplicate warm columns. Iteration and
+    /// sweep accounting is identical to a cold solve, so a warm-vs-cold
+    /// comparison of [`RitzResult::iterations`] is honest.
+    pub fn warm_start(mut self, prev: DMat) -> RitzConfig {
+        self.warm_start = Some(prev);
+        self
+    }
+}
+
+/// Structured failure from [`ritz_solve`]: the solver detected that
+/// continuing to `max_iters` cannot help (poisoned arithmetic or a frozen
+/// iteration) and bailed early. Callers that can degrade — e.g. the
+/// pipeline's warm-start fall-back — downcast with
+/// `err.downcast_ref::<SolveFailure>()` and rerun cold.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SolveFailureKind {
+    /// A Ritz value, residual, or projected Rayleigh-quotient entry went
+    /// NaN/Inf — the operator output is poisoned.
+    NonFinite,
+    /// No strict residual improvement for `stagnation_window` consecutive
+    /// outer iterations.
+    Stagnation,
+}
+
+/// See [`SolveFailureKind`]. Carries honest partial accounting: how many
+/// outer iterations and SpMM sweeps were spent before bailing, so
+/// fall-back paths can report the true total cost.
+#[derive(Clone, Debug)]
+pub struct SolveFailure {
+    pub kind: SolveFailureKind,
+    /// Outer iteration (1-based) at which the failure was detected.
+    pub iteration: usize,
+    /// Last observed `max_{i≤k}` residual (may be NaN for `NonFinite`).
+    pub max_residual: f64,
+    /// SpMM sweeps spent before bailing.
+    pub sweeps: usize,
+}
+
+impl std::fmt::Display for SolveFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            SolveFailureKind::NonFinite => write!(
+                f,
+                "ritz: non-finite Ritz state at outer iteration {} (residual {}, {} sweeps spent)",
+                self.iteration, self.max_residual, self.sweeps
+            ),
+            SolveFailureKind::Stagnation => write!(
+                f,
+                "ritz: stagnated at outer iteration {} (residual {} frozen, {} sweeps spent)",
+                self.iteration, self.max_residual, self.sweeps
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SolveFailure {}
 
 /// One recorded outer iteration of [`ritz_solve`].
 #[derive(Clone, Debug)]
@@ -103,19 +183,40 @@ pub struct RitzResult {
 /// columns are SplitMix64 index hashes, orthonormalized against it.
 pub fn deterministic_block(n: usize, b: usize) -> DMat {
     let c0 = crate::linalg::par::deterministic_start(n);
-    let mut v = DMat::from_fn(n, b, |i, j| {
-        if j == 0 {
-            c0[i]
-        } else {
-            let mut s = (i as u64)
-                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                ^ (j as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
-            let h = crate::util::rng::splitmix64(&mut s);
-            (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) - 0.5
-        }
-    });
+    let mut v = DMat::from_fn(n, b, |i, j| if j == 0 { c0[i] } else { hash_entry(i, j) });
     mgs_orthonormalize(&mut v);
     v
+}
+
+/// The SplitMix64 guard-column entry shared by [`deterministic_block`] and
+/// the warm-start block, so warm guard columns come from the same
+/// deterministic stream as cold ones.
+fn hash_entry(i: usize, j: usize) -> f64 {
+    let mut s = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (j as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+    let h = crate::util::rng::splitmix64(&mut s);
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) - 0.5
+}
+
+/// Starting block for a warm-started solve: previous Ritz vectors in the
+/// leading columns, deterministic hash guards in the rest, MGS2-cleaned
+/// (the rescue path inside [`mgs_orthonormalize`] replaces any
+/// rank-deficient warm column deterministically).
+fn warm_block(prev: &DMat, n: usize, b: usize) -> Result<DMat> {
+    if prev.rows() != n {
+        bail!("ritz: warm-start block has {} rows for n = {n}", prev.rows());
+    }
+    if prev.cols() == 0 {
+        bail!("ritz: warm-start block has no columns");
+    }
+    if prev.data().iter().any(|x| !x.is_finite()) {
+        bail!("ritz: warm-start block contains non-finite entries");
+    }
+    let pc = prev.cols().min(b);
+    let mut v =
+        DMat::from_fn(n, b, |i, j| if j < pc { prev[(i, j)] } else { hash_entry(i, j) });
+    mgs_orthonormalize(&mut v);
+    Ok(v)
 }
 
 /// Extract the top-k eigenpairs of `op` (= bottom-k of `L` when `op` is the
@@ -154,13 +255,18 @@ pub fn ritz_solve(op: &mut dyn MatVecOp, cfg: &RitzConfig) -> Result<RitzResult>
         bail!("ritz: tol must be > 0");
     }
     let sweeps_per_apply = op.sweeps_per_apply();
-    let mut v = deterministic_block(n, b);
+    let mut v = match &cfg.warm_start {
+        Some(prev) => warm_block(prev, n, b)?,
+        None => deterministic_block(n, b),
+    };
     let mut history: Vec<RitzIter> = Vec::new();
     let mut embedding = DMat::zeros(n, k);
     let mut values = vec![0.0; k];
     let mut residuals = vec![f64::INFINITY; k];
     let mut iterations = 0;
     let mut converged = false;
+    let mut best_res = f64::INFINITY;
+    let mut stagnant = 0usize;
     for it in 1..=cfg.max_iters {
         iterations = it;
         let w = op.apply(&v);
@@ -168,6 +274,18 @@ pub fn ritz_solve(op: &mut dyn MatVecOp, cfg: &RitzConfig) -> Result<RitzResult>
         // exactly-symmetric input regardless of fp round-off in the product.
         let mut h = matmul(&v.t(), &w);
         h.symmetrize();
+        // Poisoned operator output shows up here first (b×b, so the scan
+        // is free relative to the bundle product): bail with a structured
+        // failure instead of feeding NaN to eigh and looping to the cap.
+        if h.data().iter().any(|x| !x.is_finite()) {
+            return Err(SolveFailure {
+                kind: SolveFailureKind::NonFinite,
+                iteration: it,
+                max_residual: history.last().map_or(f64::NAN, |p| p.max_residual),
+                sweeps: it * sweeps_per_apply,
+            }
+            .into());
+        }
         let e = eigh(&h)?;
         // Wanted pairs: top-k of M (eigh orders ascending). X = V·Y and
         // M·X = W·Y — the residual needs no further operator application.
@@ -187,6 +305,18 @@ pub fn ritz_solve(op: &mut dyn MatVecOp, cfg: &RitzConfig) -> Result<RitzResult>
             residuals[c] = norm(&r_mat.col(c));
         }
         let max_res = residuals.iter().fold(0.0f64, |m, &r| m.max(r));
+        // Residuals are norms of real vectors, so NaN here means the
+        // arithmetic itself is poisoned (NaN compares false, so the fold
+        // above can silently drop it — scan explicitly).
+        if residuals.iter().any(|r| !r.is_finite()) || values.iter().any(|t| !t.is_finite()) {
+            return Err(SolveFailure {
+                kind: SolveFailureKind::NonFinite,
+                iteration: it,
+                max_residual: max_res,
+                sweeps: it * sweeps_per_apply,
+            }
+            .into());
+        }
         history.push(RitzIter {
             iter: it,
             max_residual: max_res,
@@ -200,6 +330,21 @@ pub fn ritz_solve(op: &mut dyn MatVecOp, cfg: &RitzConfig) -> Result<RitzResult>
         if max_res <= cfg.tol * scale {
             converged = true;
             break;
+        }
+        if max_res < best_res {
+            best_res = max_res;
+            stagnant = 0;
+        } else {
+            stagnant += 1;
+            if cfg.stagnation_window > 0 && stagnant >= cfg.stagnation_window {
+                return Err(SolveFailure {
+                    kind: SolveFailureKind::Stagnation,
+                    iteration: it,
+                    max_residual: max_res,
+                    sweeps: it * sweeps_per_apply,
+                }
+                .into());
+            }
         }
         if it < cfg.max_iters {
             // Filtered subspace-iteration step: the next basis is the
@@ -229,7 +374,7 @@ mod tests {
     use super::*;
     use crate::graph::gen::{cliques, CliqueSpec};
     use crate::linalg::metrics::subspace_error;
-    use crate::solvers::{DenseOp, SparsePolyOp};
+    use crate::solvers::{DenseOp, MatVecOp, SparsePolyOp};
     use crate::transforms::{build_solver_matrix, BuildOptions, TransformKind};
 
     #[test]
@@ -318,6 +463,110 @@ mod tests {
         ] {
             assert!(ritz_solve(&mut mk(), &bad).is_err(), "{bad:?} accepted");
         }
+    }
+
+    #[test]
+    fn warm_start_converges_faster_and_stays_deterministic() {
+        let g = cliques(&CliqueSpec { n: 24, k: 3, max_short_circuit: 1, seed: 5 }).graph;
+        let mk = || {
+            SparsePolyOp::from_graph(
+                &g,
+                TransformKind::LimitNegExp { ell: 51 },
+                &BuildOptions::default(),
+            )
+            .unwrap()
+        };
+        let cold_cfg = RitzConfig { k: 3, tol: 1e-10, max_iters: 300, ..Default::default() };
+        let cold = ritz_solve(&mut mk(), &cold_cfg).unwrap();
+        assert!(cold.converged && cold.iterations > 1);
+        // Warm-starting from the converged embedding must beat the cold
+        // iteration count under identical accounting.
+        let warm_cfg = cold_cfg.clone().warm_start(cold.embedding.clone());
+        let warm = ritz_solve(&mut mk(), &warm_cfg).unwrap();
+        assert!(warm.converged);
+        assert!(
+            warm.iterations < cold.iterations,
+            "warm {} !< cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        assert_eq!(warm.total_sweeps, warm.iterations * warm.sweeps_per_apply);
+        // Warm solves are as reproducible as cold ones: bitwise.
+        let warm2 = ritz_solve(&mut mk(), &warm_cfg).unwrap();
+        assert!(warm
+            .embedding
+            .data()
+            .iter()
+            .zip(warm2.embedding.data().iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        // Degenerate warm blocks are rejected up front...
+        assert!(ritz_solve(&mut mk(), &cold_cfg.clone().warm_start(DMat::zeros(5, 3))).is_err());
+        assert!(ritz_solve(&mut mk(), &cold_cfg.clone().warm_start(DMat::zeros(24, 0))).is_err());
+        let mut poisoned = DMat::zeros(24, 3);
+        poisoned[(0, 0)] = f64::NAN;
+        assert!(ritz_solve(&mut mk(), &cold_cfg.clone().warm_start(poisoned)).is_err());
+        // ...but rank-deficient (duplicate-column) warm blocks ride the
+        // MGS rescue path and still converge.
+        let dup = DMat::from_fn(24, 3, |i, _| cold.embedding[(i, 0)]);
+        let rescued = ritz_solve(&mut mk(), &cold_cfg.clone().warm_start(dup)).unwrap();
+        assert!(rescued.converged);
+    }
+
+    struct PoisonOp {
+        n: usize,
+    }
+    impl crate::solvers::MatVecOp for PoisonOp {
+        fn apply(&mut self, v: &DMat) -> DMat {
+            DMat::from_fn(v.rows(), v.cols(), |_, _| f64::NAN)
+        }
+        fn dim(&self) -> usize {
+            self.n
+        }
+    }
+
+    struct FrozenOp {
+        c: DMat,
+    }
+    impl crate::solvers::MatVecOp for FrozenOp {
+        fn apply(&mut self, _v: &DMat) -> DMat {
+            self.c.clone()
+        }
+        fn dim(&self) -> usize {
+            self.c.rows()
+        }
+    }
+
+    #[test]
+    fn nan_operator_fails_fast_with_structured_failure() {
+        let mut op = PoisonOp { n: 16 };
+        let cfg = RitzConfig { k: 3, max_iters: 500, ..Default::default() };
+        let err = ritz_solve(&mut op, &cfg).unwrap_err();
+        let f = err.downcast_ref::<SolveFailure>().expect("SolveFailure");
+        assert_eq!(f.kind, SolveFailureKind::NonFinite);
+        // Fails on the first poisoned iteration, not after looping to the cap.
+        assert_eq!(f.iteration, 1);
+        assert_eq!(f.sweeps, f.iteration * op.sweeps_per_apply());
+    }
+
+    #[test]
+    fn frozen_iteration_trips_stagnation_detector() {
+        // An operator whose image ignores the basis: every iteration from
+        // the second onward is bitwise identical, so the residual freezes.
+        let c = DMat::from_fn(12, 4, |i, j| super::hash_entry(i, j + 1));
+        let mut op = FrozenOp { c };
+        let cfg = RitzConfig {
+            k: 2,
+            block: 4,
+            tol: 1e-12,
+            max_iters: 200,
+            stagnation_window: 5,
+            ..Default::default()
+        };
+        let err = ritz_solve(&mut op, &cfg).unwrap_err();
+        let f = err.downcast_ref::<SolveFailure>().expect("SolveFailure");
+        assert_eq!(f.kind, SolveFailureKind::Stagnation);
+        assert!(f.iteration < 20, "stagnation not detected early: {}", f.iteration);
+        assert!(f.max_residual.is_finite() && f.max_residual > 0.0);
     }
 
     #[test]

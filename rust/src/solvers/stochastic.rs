@@ -99,13 +99,13 @@ impl<'g> StochasticPolyOp<'g> {
         power_iters: usize,
         safety: f64,
         threads: usize,
-    ) -> f64 {
+    ) -> anyhow::Result<f64> {
         let rho = crate::linalg::sparse::power_lambda_max_csr(
             &graph.laplacian_csr(),
             power_iters,
             threads.max(1),
-        ) * safety;
-        kind.lambda_star(rho)
+        )? * safety;
+        Ok(kind.lambda_star(rho))
     }
 
     /// Monomial-coefficient constructor (the historical interface).
@@ -206,7 +206,7 @@ mod tests {
     fn minibatch_op_unbiased() {
         let g = small();
         let l = g.laplacian();
-        let lam_star = 1.1 * crate::linalg::funcs::power_lambda_max(&l, 100);
+        let lam_star = 1.1 * crate::linalg::funcs::power_lambda_max(&l, 100).unwrap();
         let v = crate::solvers::random_init(g.num_nodes(), 3, 7);
         // Average many applications ≈ (λ*I − L)V.
         let mut op = MinibatchLaplacianOp::new(&g, lam_star, 8, 3);
@@ -297,9 +297,9 @@ mod tests {
         let g = small();
         // Same recurrence as the dense power iteration (shared
         // power_iteration_with core) — the estimates agree to rounding.
-        let dense_rho = 1.05 * crate::linalg::funcs::power_lambda_max(&g.laplacian(), 100);
+        let dense_rho = 1.05 * crate::linalg::funcs::power_lambda_max(&g.laplacian(), 100).unwrap();
         let kind = TransformKind::Identity;
-        let lam = StochasticPolyOp::auto_lambda_star(&g, kind, 100, 1.05, 1);
+        let lam = StochasticPolyOp::auto_lambda_star(&g, kind, 100, 1.05, 1).unwrap();
         assert!(
             (lam - kind.lambda_star(dense_rho)).abs() <= 1e-9 * dense_rho.max(1.0),
             "csr-routed λ* {lam} vs dense {}",
@@ -308,7 +308,9 @@ mod tests {
         // Worker-invariant, bitwise (the CSR power-iteration contract).
         for threads in [2usize, 8] {
             assert_eq!(
-                StochasticPolyOp::auto_lambda_star(&g, kind, 100, 1.05, threads).to_bits(),
+                StochasticPolyOp::auto_lambda_star(&g, kind, 100, 1.05, threads)
+                    .unwrap()
+                    .to_bits(),
                 lam.to_bits()
             );
         }
@@ -320,7 +322,8 @@ mod tests {
                 100,
                 1.05,
                 1
-            ),
+            )
+            .unwrap(),
             0.0
         );
     }

@@ -533,9 +533,9 @@ pub fn build_solver_matrix(l: &DMat, kind: TransformKind, opts: &BuildOptions) -
     let need_power = opts.prescale || opts.domain == DomainEstimate::Power;
     let lam_est = if need_power {
         let lam_raw = if threads > 1 {
-            crate::linalg::par::power_lambda_max_par(l, opts.power_iters, threads)
+            crate::linalg::par::power_lambda_max_par(l, opts.power_iters, threads)?
         } else {
-            power_lambda_max(l, opts.power_iters)
+            power_lambda_max(l, opts.power_iters)?
         };
         lam_raw * opts.safety
     } else {
@@ -825,7 +825,7 @@ mod tests {
         // agreement to ~machine precision on a prescaled spectrum.
         let g = cliques(&CliqueSpec { n: 32, k: 4, max_short_circuit: 3, seed: 1 }).graph;
         let mut l = g.laplacian();
-        let lam = crate::linalg::funcs::power_lambda_max(&l, 100) * 1.01;
+        let lam = crate::linalg::funcs::power_lambda_max(&l, 100).unwrap() * 1.01;
         l.scale(1.0 / lam);
         let mut lc = g.laplacian_csr();
         lc.scale_values(1.0 / lam);

@@ -142,7 +142,7 @@ fn default_power_domain_replicates_the_historical_policy_bitwise() {
     let g = cliques(&CliqueSpec { n: 40, k: 4, max_short_circuit: 3, seed: 13 }).graph;
     let lc = g.laplacian_csr();
     let kind = TransformKind::LimitNegExp { ell: 51 };
-    let lam_est = power_lambda_max_csr(&lc, 100, 1) * 1.01;
+    let lam_est = power_lambda_max_csr(&lc, 100, 1).unwrap() * 1.01;
     let gersh = lc.gershgorin_bound();
     let rho_old = if lam_est > 0.0 { lam_est } else { gersh };
     let (lo_old, hi_old) = cheb_domain(rho_old, gersh);

@@ -278,7 +278,7 @@ fn walker_fleet_feeds_transform_build() {
     p.axpy(-0.05, &l2);
     p.symmetrize();
     // M = λ*I − p(L̂)
-    let lam = sped::linalg::funcs::power_lambda_max(&p, 100) * 1.05;
+    let lam = sped::linalg::funcs::power_lambda_max(&p, 100).unwrap() * 1.05;
     let mut m = p;
     m.scale(-1.0);
     m.add_diag(lam);

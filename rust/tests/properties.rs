@@ -137,7 +137,7 @@ fn property_minibatch_estimator_unbiased_with_tolerance_shrinking_in_batch() {
     use sped::solvers::MatVecOp;
     let gg = cliques(&CliqueSpec { n: 18, k: 2, max_short_circuit: 1, seed: 2 });
     let l = gg.graph.laplacian();
-    let lam_star = 1.1 * sped::linalg::funcs::power_lambda_max(&l, 100);
+    let lam_star = 1.1 * sped::linalg::funcs::power_lambda_max(&l, 100).unwrap();
     let v = sped::solvers::random_init(18, 3, 7);
     let mut expect = v.clone();
     expect.scale(lam_star);
