@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
         gg.graph.num_edges()
     );
 
-    let dropped = drop_edges(&gg.graph, 0.2, 7);
+    let dropped = drop_edges(&gg.graph, 0.2, 7)?;
     println!("dropped {} edges (p = 0.2)", dropped.removed.len());
 
     // Show the link predictor at work.
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         dropped.removed.len()
     );
 
-    let completed = complete_graph(&dropped);
+    let completed = complete_graph(&dropped)?;
     println!(
         "completed graph: {} edges ({} surviving + {} predicted, weighted)",
         completed.num_edges(),

@@ -900,6 +900,155 @@ fn stream_stability_group(suite: &mut BenchSuite, threads: usize) {
     suite.report(&format!("wrote {}", path.display()));
 }
 
+/// Serve-mode group (the PR 8 acceptance measurement): prime a
+/// [`ServeSession`] with one Ritz solve on the community-expander
+/// workload, then push the same deterministic query slab through it at
+/// batch sizes 1 / 64 / 4096 (shrunk under `SPED_BENCH_FAST=1`). Records
+/// throughput (qps) and p50/p99 per-call latency for every batch size,
+/// checks the answers are bitwise identical regardless of how the slab is
+/// split, and asserts inline that the largest batch sustains ≥5× the
+/// unbatched throughput — batching amortizes the per-call `O(E)`
+/// cache-key hash (plus call overhead) that batch-size-1 serving pays per
+/// query. Emits `BENCH_serve.json` at the repo root for CI trend tracking.
+fn serve_group(suite: &mut BenchSuite, threads: usize) {
+    use sped::coordinator::serve::{Answer, Query, ServeConfig, ServeSession};
+    use sped::pipeline::PipelineConfig;
+    use sped::transforms::OpMode;
+    let n = if fast_mode() { 512 } else { 4096 };
+    let communities = 8usize;
+    let total = if fast_mode() { 512 } else { 4096 };
+    let sizes: [usize; 3] = if fast_mode() { [1, 32, 512] } else { [1, 64, 4096] };
+    let g = community_expander(n, communities, 4, 42);
+    let nnz_edges = g.num_edges();
+    let pcfg = PipelineConfig {
+        k: communities,
+        transform: TransformKind::LimitNegExp { ell: 51 },
+        solver: "ritz".into(),
+        ritz_tol: 1e-8,
+        ritz_max_iters: 2000,
+        op_mode: OpMode::MatrixFree,
+        ground_truth: false,
+        threads,
+        ..Default::default()
+    };
+    let mut session =
+        ServeSession::new(g, ServeConfig { pipeline: pcfg, warm_volume_frac: 0.25 });
+
+    // Deterministic query slab cycling through all three kinds.
+    let mut rng = Rng::new(0x5E21E);
+    let queries: Vec<Query> = (0..total)
+        .map(|i| match i % 3 {
+            0 => loop {
+                let (u, v) = (rng.below(n), rng.below(n));
+                if u != v {
+                    break Query::LinkPred { u, v };
+                }
+            },
+            1 => Query::NearestCluster { u: rng.below(n) },
+            _ => Query::TopK { u: rng.below(n), k: communities },
+        })
+        .collect();
+
+    // Prime the cache: the one solve every measurement below reads from.
+    let (t_solve, _) = timed(|| session.answer_batch(&queries[..1]).unwrap());
+    assert_eq!(session.solves(), 1);
+    suite.report(&format!(
+        "serve n={n} k={communities} edges={nnz_edges} ({threads}w): primed cache in {} (1 ritz solve)",
+        human_time(t_solve),
+    ));
+
+    let flat = |a: &Answer| -> Vec<u64> {
+        match a {
+            Answer::Score(s) => vec![s.to_bits()],
+            Answer::Cluster { cluster, distance } => vec![*cluster as u64, distance.to_bits()],
+            Answer::Neighbors(nb) => nb.iter().flat_map(|&(v, s)| [v as u64, s.to_bits()]).collect(),
+        }
+    };
+    let percentile = |sorted: &[f64], p: f64| -> f64 {
+        sorted[((sorted.len() as f64 - 1.0) * p).round() as usize]
+    };
+
+    let mut rows: Vec<Vec<(String, JsonVal)>> = Vec::new();
+    let mut reference: Option<Vec<Vec<u64>>> = None;
+    let mut qps_unbatched = 0.0f64;
+    let mut qps_batched = 0.0f64;
+    for &bs in &sizes {
+        let mut lat: Vec<f64> = Vec::with_capacity(total / bs + 1);
+        let mut answers: Vec<Answer> = Vec::with_capacity(total);
+        let t0 = std::time::Instant::now();
+        for chunk in queries.chunks(bs) {
+            let t = std::time::Instant::now();
+            answers.extend(session.answer_batch(chunk).unwrap());
+            lat.push(t.elapsed().as_secs_f64());
+        }
+        let total_s = t0.elapsed().as_secs_f64();
+        let qps = total as f64 / total_s.max(1e-12);
+        lat.sort_by(f64::total_cmp);
+        let (p50, p99) = (percentile(&lat, 0.50), percentile(&lat, 0.99));
+        // Every batch size is pure cache hits over the same slab, so the
+        // answers must be bitwise identical however the slab is split.
+        assert_eq!(session.solves(), 1, "read path must never re-solve");
+        let bits: Vec<Vec<u64>> = answers.iter().map(flat).collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(r) => assert_eq!(r, &bits, "batch size {bs} changed an answer (bitwise)"),
+        }
+        if bs == 1 {
+            qps_unbatched = qps;
+        }
+        qps_batched = qps; // last (largest) size wins
+        suite.report(&format!(
+            "serve batch={bs}: {} queries in {} | {:.0} q/s | call p50 {} p99 {}",
+            total,
+            human_time(total_s),
+            qps,
+            human_time(p50),
+            human_time(p99),
+        ));
+        rows.push(vec![
+            ("workload".into(), JsonVal::Str("community-expander".into())),
+            ("n".into(), JsonVal::Int(n as u64)),
+            ("k".into(), JsonVal::Int(communities as u64)),
+            ("edges".into(), JsonVal::Int(nnz_edges as u64)),
+            ("threads".into(), JsonVal::Int(threads as u64)),
+            ("batch".into(), JsonVal::Int(bs as u64)),
+            ("queries".into(), JsonVal::Int(total as u64)),
+            ("qps".into(), JsonVal::Num(qps)),
+            ("p50_s".into(), JsonVal::Num(p50)),
+            ("p99_s".into(), JsonVal::Num(p99)),
+            ("fast_mode".into(), JsonVal::Int(u64::from(fast_mode()))),
+        ]);
+    }
+
+    // The acceptance floor, enforced where the numbers are made: batching
+    // must buy at least 5× throughput over one-query-per-call serving.
+    let batch_speedup = qps_batched / qps_unbatched.max(1e-12);
+    assert!(
+        batch_speedup >= 5.0,
+        "batched serving must be >=5x unbatched throughput, got {batch_speedup:.2}x \
+         ({qps_batched:.0} vs {qps_unbatched:.0} q/s)"
+    );
+    suite.report(&format!(
+        "serve batch={}: {batch_speedup:.1}x the unbatched throughput (floor 5x)",
+        sizes[sizes.len() - 1],
+    ));
+    rows.push(vec![
+        ("workload".into(), JsonVal::Str("summary".into())),
+        ("n".into(), JsonVal::Int(n as u64)),
+        ("threads".into(), JsonVal::Int(threads as u64)),
+        ("solve_s".into(), JsonVal::Num(t_solve)),
+        ("qps_unbatched".into(), JsonVal::Num(qps_unbatched)),
+        ("qps_batched".into(), JsonVal::Num(qps_batched)),
+        ("batch_speedup".into(), JsonVal::Num(batch_speedup)),
+        ("fast_mode".into(), JsonVal::Int(u64::from(fast_mode()))),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_serve.json");
+    suite.write_json(&path, &rows).expect("write BENCH_serve.json");
+    suite.report(&format!("wrote {}", path.display()));
+}
+
 fn main() {
     let mut suite = BenchSuite::new("perf_hotpath");
     let threads = threads_param();
@@ -1076,6 +1225,13 @@ fn main() {
     // unconditionally like ritz-solver (CI filter: "stream-stability").
     if suite.selected("stream-stability warm vs cold re-solves") {
         stream_stability_group(&mut suite, threads);
+    }
+
+    // ---- serve: batched queries over the cached embedding ----
+    // One matrix-free ritz solve to prime the cache, then pure read-path
+    // kernels — cheap, so it runs unconditionally (CI filter: "serve").
+    if suite.selected("serve batched query throughput") {
+        serve_group(&mut suite, threads);
     }
 
     // ---- L3: clustering + walks ----

@@ -126,7 +126,17 @@ pub fn row_normalize(v: &DMat) -> DMat {
 /// Adjusted Rand Index between two labelings (1 = identical partitions,
 /// ~0 = random agreement).
 pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
-    assert_eq!(a.len(), b.len());
+    // ARI is undefined across different node sets — a silent zip would
+    // truncate to the shorter slice and report a misleading score.
+    // Streaming callers compare the common prefix explicitly instead
+    // (see `coordinator::stream::StreamSession::publish`).
+    assert_eq!(
+        a.len(),
+        b.len(),
+        "adjusted_rand_index: label slices differ in length ({} vs {})",
+        a.len(),
+        b.len()
+    );
     let n = a.len();
     if n == 0 {
         return 1.0;
@@ -154,7 +164,14 @@ pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
 
 /// Normalized Mutual Information (arithmetic normalization).
 pub fn normalized_mutual_info(a: &[usize], b: &[usize]) -> f64 {
-    assert_eq!(a.len(), b.len());
+    // Same contract as `adjusted_rand_index`: no silent truncation.
+    assert_eq!(
+        a.len(),
+        b.len(),
+        "normalized_mutual_info: label slices differ in length ({} vs {})",
+        a.len(),
+        b.len()
+    );
     let n = a.len();
     if n == 0 {
         return 1.0;
@@ -200,6 +217,29 @@ pub fn max_conductance(g: &Graph, labels: &[usize]) -> f64 {
         }
     }
     worst
+}
+
+/// Nearest centroid of one point: `(cluster, squared distance)` by strict
+/// `<` scan — the lowest-index centroid wins exact ties, so the lookup is
+/// deterministic. `point` must live in the same space as the centroids
+/// (for [`cluster_embedding`] results that is the row-normalized space).
+pub fn nearest_centroid(centroids: &DMat, point: &[f64]) -> (usize, f64) {
+    assert!(centroids.rows() >= 1, "need at least one centroid");
+    assert_eq!(
+        centroids.cols(),
+        point.len(),
+        "nearest_centroid: point dimension {} vs centroid dimension {}",
+        point.len(),
+        centroids.cols()
+    );
+    let mut best = (0usize, sqdist(point, centroids.row(0)));
+    for c in 1..centroids.rows() {
+        let d = sqdist(point, centroids.row(c));
+        if d < best.1 {
+            best = (c, d);
+        }
+    }
+    (best.0, best.1)
 }
 
 /// End-to-end hard clustering from a spectral embedding: row-normalize,
@@ -310,6 +350,33 @@ mod tests {
         // Zero rows untouched.
         let z = row_normalize(&DMat::zeros(2, 2));
         assert_eq!(z.max_abs(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "differ in length")]
+    fn ari_rejects_length_mismatch() {
+        adjusted_rand_index(&[0, 1], &[0, 1, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "differ in length")]
+    fn nmi_rejects_length_mismatch() {
+        normalized_mutual_info(&[0, 1, 1], &[0, 1]);
+    }
+
+    #[test]
+    fn nearest_centroid_agrees_with_kmeans() {
+        let mut rng = Rng::new(6);
+        let pts = DMat::from_fn(40, 3, |i, _| if i < 20 { 0.0 } else { 8.0 } + rng.normal());
+        let r = kmeans(&pts, 2, 50, 9);
+        for i in 0..pts.rows() {
+            let (c, d2) = nearest_centroid(&r.centroids, pts.row(i));
+            assert_eq!(c, r.assignments[i], "point {i}");
+            assert!(d2 >= 0.0);
+        }
+        // Exact tie: equidistant point resolves to the lower centroid id.
+        let cents = DMat::from_fn(2, 1, |i, _| if i == 0 { -1.0 } else { 1.0 });
+        assert_eq!(nearest_centroid(&cents, &[0.0]).0, 0);
     }
 
     #[test]

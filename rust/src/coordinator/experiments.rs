@@ -229,8 +229,8 @@ pub fn fig4_cliques(opts: &ExperimentOptions) -> Result<Vec<ConvergenceHistory>>
 pub fn fig5_linkpred(opts: &ExperimentOptions) -> Result<Vec<ConvergenceHistory>> {
     let (n, c) = if opts.fast { (96, 3) } else { (240, 3) };
     let gg = cliques(&CliqueSpec { n, k: c, max_short_circuit: 10, seed: opts.seed });
-    let dropped = crate::linkpred::drop_edges(&gg.graph, 0.2, opts.seed ^ 0xA1);
-    let completed = crate::linkpred::complete_graph(&dropped);
+    let dropped = crate::linkpred::drop_edges(&gg.graph, 0.2, opts.seed ^ 0xA1)?;
+    let completed = crate::linkpred::complete_graph(&dropped)?;
     let l = completed.laplacian();
     let (steps, every) = if opts.fast { (1_500, 50) } else { (20_000, 100) };
     let mut curves = run_grid(

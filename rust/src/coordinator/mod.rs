@@ -4,5 +4,6 @@
 
 pub mod experiments;
 pub mod pipeline;
+pub mod serve;
 pub mod stream;
 pub mod walkers;

@@ -1,0 +1,573 @@
+//! Long-lived embedding service: solve rarely, serve constantly.
+//!
+//! The north-star workload reads embeddings far more often than it solves
+//! for them. A [`ServeSession`] owns a mutable [`Graph`] plus one cached
+//! embedding keyed by **(graph content hash, transform/solver config
+//! fingerprint)** and answers batched queries against it:
+//!
+//! * `linkpred U V` — link-prediction score for a candidate pair, the
+//!   embedding-space analogue of the `linkpred/` common-neighbors score
+//!   (cosine of the row-normalized embedding rows);
+//! * `cluster U` — nearest-cluster lookup against the k-means centroids;
+//! * `topk U K` — the K most similar nodes by embedding cosine.
+//!
+//! One batch evaluates many queries in a single pass over the cached
+//! [`DMat`]: the batch is validated up front, the cache key is checked
+//! **once** (an `O(E)` content hash — the cost batching amortizes), and the
+//! answer slots are row-sharded across workers via the same
+//! `linalg::par` partition the dense kernels use. Each shard answers its
+//! queries with the unchanged serial kernel, so a batch's answers are
+//! **bitwise identical for every worker count** — the repo-wide
+//! determinism contract.
+//!
+//! Delta ingestion reuses the `sped stream` event grammar
+//! ([`crate::coordinator::stream::parse_event_batches`]) and invalidates
+//! exactly per the [`DeltaOutcome`] flags: a weights-only batch keeps the
+//! cached RCM order (topology artifact) and drops only the embedding; a
+//! topology batch drops both. The re-solve is **lazy** — it runs on the
+//! next query after invalidation, warm-started from the previous
+//! embedding under the same churn policy [`StreamSession`] uses.
+//!
+//! [`StreamSession`]: crate::coordinator::stream::StreamSession
+
+use crate::cluster::{nearest_centroid, row_normalize};
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig, SolvePath};
+use crate::graph::delta::{DeltaOutcome, EdgeDelta};
+use crate::graph::{Graph, Reorder};
+use crate::linalg::dmat::DMat;
+use crate::linalg::par::{row_shards, shard_starts};
+use crate::linkpred::embedding_score;
+use crate::util::pool::parallel_shards;
+use anyhow::{bail, Context, Result};
+
+/// Serve-session configuration: the pipeline a (re-)solve runs plus the
+/// warm/cold degradation policy — the same knobs as
+/// [`crate::coordinator::stream::StreamConfig`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// The pipeline each lazy re-solve runs. `warm_start`, `rcm_order`,
+    /// and `do_cluster` are managed by the session (anything set here is
+    /// overwritten; clustering is always on — nearest-cluster queries
+    /// need the centroids).
+    pub pipeline: PipelineConfig,
+    /// Churn fraction above which a re-solve runs cold instead of
+    /// warm-starting from the previous embedding (`--solver ritz` only).
+    pub warm_volume_frac: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { pipeline: PipelineConfig::default(), warm_volume_frac: 0.25 }
+    }
+}
+
+/// One query against the cached embedding. Text grammar (one per line in
+/// a query file, `---` closes a batch): `linkpred U V`, `cluster U`,
+/// `topk U K`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Query {
+    /// Link-prediction score for the candidate pair `(u, v)`.
+    LinkPred { u: usize, v: usize },
+    /// Nearest k-means cluster of node `u`.
+    NearestCluster { u: usize },
+    /// The `k` nodes most similar to `u` (self excluded).
+    TopK { u: usize, k: usize },
+}
+
+impl Query {
+    /// Parse one query line. Errors name the token that failed.
+    pub fn parse(line: &str) -> Result<Query> {
+        let mut it = line.split_whitespace();
+        let kind = it.next().context("empty query")?;
+        let mut num = |name: &str| -> Result<usize> {
+            let tok = it.next().with_context(|| format!("{kind}: missing {name}"))?;
+            tok.parse::<usize>()
+                .with_context(|| format!("{kind}: bad {name} {tok:?}"))
+        };
+        let q = match kind {
+            "linkpred" => Query::LinkPred { u: num("u")?, v: num("v")? },
+            "cluster" => Query::NearestCluster { u: num("u")? },
+            "topk" => Query::TopK { u: num("u")?, k: num("k")? },
+            other => bail!("unknown query kind {other:?} (linkpred | cluster | topk)"),
+        };
+        if let Some(extra) = it.next() {
+            bail!("{kind}: unexpected trailing token {extra:?}");
+        }
+        Ok(q)
+    }
+
+    /// Bounds-check against a graph of `n` nodes. `idx` is the position
+    /// in the batch, for the error message — a bad batch must surface a
+    /// query-numbered error, never a panic.
+    fn validate(&self, idx: usize, n: usize) -> Result<()> {
+        let check = |node: usize| -> Result<()> {
+            if node >= n {
+                bail!("query {idx}: node {node} out of range (n={n})");
+            }
+            Ok(())
+        };
+        match *self {
+            Query::LinkPred { u, v } => {
+                check(u)?;
+                check(v)?;
+                if u == v {
+                    bail!("query {idx}: linkpred needs two distinct nodes, got {u} twice");
+                }
+            }
+            Query::NearestCluster { u } => check(u)?,
+            Query::TopK { u, k } => {
+                check(u)?;
+                if k == 0 {
+                    bail!("query {idx}: topk needs k >= 1");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Answer to one [`Query`], in batch order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Answer {
+    /// `linkpred`: cosine similarity of the row-normalized embedding rows
+    /// (in `[-1, 1]`; zero rows score 0).
+    Score(f64),
+    /// `cluster`: the nearest centroid and the Euclidean distance to it.
+    Cluster { cluster: usize, distance: f64 },
+    /// `topk`: `(node, score)` descending by score, ties broken by
+    /// ascending node id (a total order — deterministic).
+    Neighbors(Vec<(usize, f64)>),
+}
+
+/// Parse a query file into batches: one query per line, blank lines and
+/// `#` comments skipped, a `---` line closes the current batch. Errors
+/// carry the 1-based line number (the same framing
+/// [`crate::coordinator::stream::parse_event_batches`] uses for deltas).
+pub fn parse_query_batches(text: &str) -> Result<Vec<Vec<Query>>> {
+    let mut batches: Vec<Vec<Query>> = Vec::new();
+    let mut current: Vec<Query> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "---" {
+            if current.is_empty() {
+                bail!("line {}: empty query batch before `---`", lineno + 1);
+            }
+            batches.push(std::mem::take(&mut current));
+            continue;
+        }
+        let q = Query::parse(line).with_context(|| format!("line {}", lineno + 1))?;
+        current.push(q);
+    }
+    if !current.is_empty() {
+        batches.push(current);
+    }
+    Ok(batches)
+}
+
+/// FNV-1a content hash of a graph: node count plus every canonical edge
+/// `(u, v, w)` with the weight hashed bitwise. Two graphs hash equal iff
+/// their canonical edge lists are bitwise identical — the graph half of
+/// the embedding cache key.
+pub fn graph_content_hash(g: &Graph) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |h: &mut u64, x: u64| {
+        for byte in x.to_le_bytes() {
+            *h ^= byte as u64;
+            *h = h.wrapping_mul(PRIME);
+        }
+    };
+    mix(&mut h, g.num_nodes() as u64);
+    for e in g.edges() {
+        mix(&mut h, e.u as u64);
+        mix(&mut h, e.v as u64);
+        mix(&mut h, e.w.to_bits());
+    }
+    h
+}
+
+/// The transform/solver half of the cache key: every config knob that can
+/// change the solved embedding. Threads are deliberately excluded — the
+/// determinism contract makes the embedding worker-count-invariant.
+pub fn config_fingerprint(p: &PipelineConfig) -> String {
+    format!(
+        "{}|{}|k={}|{}|basis={}|domain={}|degree={}|prescale={}|seed={}|reorder={}",
+        p.transform,
+        p.solver,
+        p.k,
+        p.op_mode,
+        p.build.basis,
+        p.build.domain,
+        p.build.degree,
+        p.build.prescale,
+        p.seed,
+        match p.reorder {
+            Reorder::Rcm => "rcm",
+            Reorder::None => "none",
+        },
+    )
+}
+
+/// The cached derived state one solve produces — everything a query batch
+/// reads, so a batch touches no solver code at all on a cache hit.
+struct CachedEmbedding {
+    /// [`graph_content_hash`] of the graph this embedding was solved on.
+    graph_hash: u64,
+    /// The raw `n×k` embedding (input node order).
+    embedding: DMat,
+    /// Row-normalized embedding — the similarity space every query kind
+    /// scores in (centroids live here too; see [`crate::cluster`]).
+    norm_rows: DMat,
+    /// Hard cluster assignments.
+    assignments: Vec<usize>,
+    /// k-means centroids in the row-normalized space.
+    centroids: DMat,
+    /// Which solve produced this embedding (cold / warm / warm-degraded).
+    path: SolvePath,
+}
+
+/// A long-lived serving session over one mutable graph: the cached
+/// embedding answers query batches; delta batches invalidate it exactly
+/// per the [`DeltaOutcome`] flags; the next query after invalidation
+/// re-solves lazily (warm-started when the churn allows).
+pub struct ServeSession {
+    graph: Graph,
+    cfg: ServeConfig,
+    fingerprint: String,
+    cache: Option<CachedEmbedding>,
+    /// Warm-start seed: survives cache invalidation (a stale embedding is
+    /// a bad *answer* but a good *seed* under the churn threshold).
+    prev_embedding: Option<DMat>,
+    /// RCM order for the current topology — kept across weights-only
+    /// deltas, dropped on topology changes (same policy as
+    /// [`crate::coordinator::stream::StreamSession`]).
+    cached_order: Option<Vec<usize>>,
+    /// Edge volume accumulated since the last solve.
+    delta_volume: usize,
+    solves: usize,
+}
+
+impl ServeSession {
+    pub fn new(graph: Graph, cfg: ServeConfig) -> ServeSession {
+        let fingerprint = config_fingerprint(&cfg.pipeline);
+        ServeSession {
+            graph,
+            cfg,
+            fingerprint,
+            cache: None,
+            prev_embedding: None,
+            cached_order: None,
+            delta_volume: 0,
+            solves: 0,
+        }
+    }
+
+    /// Start from a graph loaded with a persisted `# order:` header: the
+    /// stored order seeds the cache and is reused until the first
+    /// topology change.
+    pub fn with_order(graph: Graph, order: Option<Vec<usize>>, cfg: ServeConfig) -> ServeSession {
+        let mut s = ServeSession::new(graph, cfg);
+        s.cached_order = order;
+        s
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Solves run so far (lazy — one per cache miss, not per batch).
+    pub fn solves(&self) -> usize {
+        self.solves
+    }
+
+    /// The config half of the cache key.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Whether the next query batch will be answered from cache.
+    pub fn cache_valid(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// The cached RCM order, if still valid for the current topology.
+    pub fn cached_order(&self) -> Option<&[usize]> {
+        self.cached_order.as_deref()
+    }
+
+    /// Embedding backing the cache (input node order), if valid.
+    pub fn embedding(&self) -> Option<&DMat> {
+        self.cache.as_ref().map(|c| &c.embedding)
+    }
+
+    /// Which path the most recent solve took, if any solve ran.
+    pub fn last_solve_path(&self) -> Option<SolvePath> {
+        self.cache.as_ref().map(|c| c.path)
+    }
+
+    /// Apply one transactional delta batch and invalidate exactly what
+    /// the outcome flags say broke: topology → order + embedding,
+    /// weights-only → embedding (the order is a topology artifact). A
+    /// rejected batch leaves the graph and every cache untouched.
+    pub fn apply_batch(&mut self, deltas: &[EdgeDelta]) -> Result<DeltaOutcome> {
+        let outcome = self.graph.apply_deltas(deltas)?;
+        self.delta_volume += outcome.volume();
+        if outcome.topology_changed {
+            self.cached_order = None;
+        }
+        if outcome.topology_changed || outcome.weights_changed {
+            self.cache = None;
+        }
+        Ok(outcome)
+    }
+
+    /// Answer a query batch against the cached embedding, re-solving
+    /// first iff the cache is invalid (lazy re-solve). The batch is
+    /// validated up front — a bad query errors with its batch index and
+    /// leaves the session untouched; it never panics. Answers are in
+    /// batch order and **bitwise identical for every
+    /// `pipeline.threads`** value: the answer slots are row-sharded and
+    /// each shard runs the same serial per-query kernel.
+    pub fn answer_batch(&mut self, queries: &[Query]) -> Result<Vec<Answer>> {
+        let n = self.graph.num_nodes();
+        for (idx, q) in queries.iter().enumerate() {
+            q.validate(idx, n)?;
+        }
+        self.ensure_embedding()?;
+        let cache = self.cache.as_ref().expect("ensure_embedding filled the cache");
+        let threads = self.cfg.pipeline.threads.max(1);
+        let mut answers = vec![Answer::Score(0.0); queries.len()];
+        let shards = row_shards(queries.len(), threads);
+        if shards.len() <= 1 {
+            for (slot, q) in answers.iter_mut().zip(queries.iter()) {
+                *slot = answer_one(cache, q);
+            }
+        } else {
+            let starts = shard_starts(&shards);
+            parallel_shards(&mut answers, &shards, |idx, chunk| {
+                let q0 = starts[idx];
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    *slot = answer_one(cache, &queries[q0 + j]);
+                }
+            });
+        }
+        Ok(answers)
+    }
+
+    /// Make the cache valid for the current graph: a hit is one
+    /// `O(E)` content-hash check (the per-batch cost batching amortizes);
+    /// a miss runs the pipeline, warm-started from the previous
+    /// embedding under the same churn policy
+    /// [`crate::coordinator::stream::StreamSession::publish`] applies —
+    /// including the always-cold rule for zero-edge graphs.
+    fn ensure_embedding(&mut self) -> Result<()> {
+        let hash = graph_content_hash(&self.graph);
+        if self.cache.as_ref().map(|c| c.graph_hash) == Some(hash) {
+            return Ok(());
+        }
+        let volume_frac = self.delta_volume as f64 / self.graph.num_edges().max(1) as f64;
+        let mut pcfg = self.cfg.pipeline.clone();
+        // Nearest-cluster queries need the centroids unconditionally.
+        pcfg.do_cluster = true;
+        let force_cold = self.cfg.pipeline.solver != "ritz"
+            || self.prev_embedding.is_none()
+            || self.graph.num_edges() == 0
+            || volume_frac > self.cfg.warm_volume_frac;
+        pcfg.warm_start = if force_cold { None } else { self.prev_embedding.clone() };
+        if pcfg.reorder == Reorder::Rcm {
+            // One RCM rebuild per topology change, not per solve.
+            let order = match self.cached_order.take() {
+                Some(o) => o,
+                None => self.graph.rcm_permutation(),
+            };
+            pcfg.rcm_order = Some(order.clone());
+            self.cached_order = Some(order);
+        } else {
+            pcfg.rcm_order = None;
+        }
+        let out = Pipeline::new(pcfg).run(&self.graph).context("serve re-solve")?;
+        let path = out.ritz.as_ref().map(|rz| rz.path).unwrap_or(SolvePath::Cold);
+        let clustering = out
+            .clustering
+            .context("serve re-solve produced no clustering (do_cluster forced on)")?;
+        let norm_rows = row_normalize(&out.embedding);
+        self.prev_embedding = Some(out.embedding.clone());
+        self.delta_volume = 0;
+        self.solves += 1;
+        self.cache = Some(CachedEmbedding {
+            graph_hash: hash,
+            embedding: out.embedding,
+            norm_rows,
+            assignments: clustering.assignments,
+            centroids: clustering.centroids,
+            path,
+        });
+        Ok(())
+    }
+}
+
+/// The serial per-query kernel every shard runs — answers depend only on
+/// the cached state and the query, never on the partition.
+fn answer_one(cache: &CachedEmbedding, q: &Query) -> Answer {
+    match *q {
+        Query::LinkPred { u, v } => Answer::Score(embedding_score(&cache.norm_rows, u, v)),
+        Query::NearestCluster { u } => {
+            let (cluster, d2) = nearest_centroid(&cache.centroids, cache.norm_rows.row(u));
+            debug_assert_eq!(
+                cluster, cache.assignments[u],
+                "nearest centroid must agree with the solved assignment"
+            );
+            Answer::Cluster { cluster, distance: d2.sqrt() }
+        }
+        Query::TopK { u, k } => {
+            let n = cache.norm_rows.rows();
+            let mut scored: Vec<(usize, f64)> = Vec::with_capacity(n.saturating_sub(1));
+            for v in 0..n {
+                if v != u {
+                    scored.push((v, embedding_score(&cache.norm_rows, u, v)));
+                }
+            }
+            // Total order: score descending, node id ascending on ties.
+            scored.sort_by(|a, b| {
+                b.1.partial_cmp(&a.1)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.0.cmp(&b.0))
+            });
+            scored.truncate(k);
+            Answer::Neighbors(scored)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{cliques, CliqueSpec};
+    use crate::transforms::{OpMode, TransformKind};
+
+    fn ritz_serve_cfg(k: usize) -> ServeConfig {
+        ServeConfig {
+            pipeline: PipelineConfig {
+                k,
+                transform: TransformKind::LimitNegExp { ell: 51 },
+                solver: "ritz".into(),
+                ritz_tol: 1e-8,
+                ritz_max_iters: 400,
+                op_mode: OpMode::MatrixFree,
+                ground_truth: false,
+                ..Default::default()
+            },
+            warm_volume_frac: 0.25,
+        }
+    }
+
+    #[test]
+    fn query_grammar_parses_and_rejects() {
+        assert_eq!(Query::parse("linkpred 3 7").unwrap(), Query::LinkPred { u: 3, v: 7 });
+        assert_eq!(Query::parse("cluster 5").unwrap(), Query::NearestCluster { u: 5 });
+        assert_eq!(Query::parse("topk 2 10").unwrap(), Query::TopK { u: 2, k: 10 });
+        assert!(Query::parse("linkpred 3").is_err());
+        assert!(Query::parse("cluster x").is_err());
+        assert!(Query::parse("topk 1 2 3").is_err());
+        assert!(Query::parse("nonsense 1 2").is_err());
+        let batches =
+            parse_query_batches("# warm-up\nlinkpred 0 1\ncluster 2\n---\ntopk 0 3\n").unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].len(), 2);
+        let err = parse_query_batches("cluster 0\n---\n---\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 3"), "{err:#}");
+        let err = parse_query_batches("linkpred 0\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"), "{err:#}");
+    }
+
+    #[test]
+    fn content_hash_tracks_bitwise_edge_changes() {
+        let gg = cliques(&CliqueSpec { n: 24, k: 2, max_short_circuit: 1, seed: 3 });
+        let h0 = graph_content_hash(&gg.graph);
+        assert_eq!(h0, graph_content_hash(&gg.graph.clone()), "hash is content-only");
+        let mut g = gg.graph.clone();
+        let (u, v, w) = {
+            let e = &g.edges()[0];
+            (e.u as usize, e.v as usize, e.w)
+        };
+        g.apply_deltas(&[EdgeDelta::Reweight { u, v, w: w * 2.0 }]).unwrap();
+        assert_ne!(h0, graph_content_hash(&g), "reweight must move the hash");
+        // A bitwise round-trip restores the original hash.
+        g.apply_deltas(&[EdgeDelta::Reweight { u, v, w }]).unwrap();
+        assert_eq!(h0, graph_content_hash(&g));
+    }
+
+    #[test]
+    fn bad_batches_error_without_solving_or_panicking() {
+        let gg = cliques(&CliqueSpec { n: 24, k: 2, max_short_circuit: 1, seed: 3 });
+        let mut s = ServeSession::new(gg.graph, ritz_serve_cfg(2));
+        let err = s.answer_batch(&[Query::NearestCluster { u: 99 }]).unwrap_err();
+        assert!(format!("{err:#}").contains("query 0"), "{err:#}");
+        let err = s
+            .answer_batch(&[Query::NearestCluster { u: 0 }, Query::LinkPred { u: 5, v: 5 }])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("query 1"), "{err:#}");
+        let err = s.answer_batch(&[Query::TopK { u: 0, k: 0 }]).unwrap_err();
+        assert!(format!("{err:#}").contains("k >= 1"), "{err:#}");
+        // Validation runs before the solve: nothing was computed yet.
+        assert_eq!(s.solves(), 0);
+        assert!(!s.cache_valid());
+    }
+
+    #[test]
+    fn lazy_solve_once_then_cache_hits() {
+        let gg = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 9 });
+        let mut s = ServeSession::new(gg.graph.clone(), ritz_serve_cfg(3));
+        assert!(!s.cache_valid());
+        let a1 = s.answer_batch(&[Query::LinkPred { u: 0, v: 1 }]).unwrap();
+        assert_eq!(s.solves(), 1);
+        assert_eq!(s.last_solve_path(), Some(SolvePath::Cold));
+        // Same-clique pair scores near 1, cross-clique near orthogonal.
+        let same = match a1[0] {
+            Answer::Score(x) => x,
+            ref other => panic!("expected score, got {other:?}"),
+        };
+        assert!(same > 0.9, "same-clique cosine {same}");
+        // Every further batch is a cache hit: no extra solves.
+        let a2 = s
+            .answer_batch(&[
+                Query::LinkPred { u: 0, v: 1 },
+                Query::NearestCluster { u: 0 },
+                Query::TopK { u: 0, k: 5 },
+            ])
+            .unwrap();
+        assert_eq!(s.solves(), 1);
+        assert_eq!(a1[0], a2[0], "cache hit must repeat the exact answer");
+        match &a2[2] {
+            Answer::Neighbors(nb) => {
+                assert_eq!(nb.len(), 5);
+                for w in nb.windows(2) {
+                    assert!(
+                        w[0].1 > w[1].1 || (w[0].1 == w[1].1 && w[0].0 < w[1].0),
+                        "top-k must be strictly ordered: {nb:?}"
+                    );
+                }
+            }
+            other => panic!("expected neighbors, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fingerprint_covers_solver_config() {
+        let a = ritz_serve_cfg(3);
+        let mut b = ritz_serve_cfg(3);
+        b.pipeline.k = 4;
+        assert_ne!(config_fingerprint(&a.pipeline), config_fingerprint(&b.pipeline));
+        let mut c = ritz_serve_cfg(3);
+        c.pipeline.transform = TransformKind::LimitNegExp { ell: 101 };
+        assert_ne!(config_fingerprint(&a.pipeline), config_fingerprint(&c.pipeline));
+        // Threads are excluded: the embedding is worker-count-invariant.
+        let mut d = ritz_serve_cfg(3);
+        d.pipeline.threads = 8;
+        assert_eq!(config_fingerprint(&a.pipeline), config_fingerprint(&d.pipeline));
+    }
+}

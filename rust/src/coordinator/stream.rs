@@ -65,8 +65,16 @@ pub struct PublishReport {
     /// ARI of the new assignments against the previous publish — the
     /// drift metric. `None` on the first publish, when clustering is off,
     /// or when the node count changed (ARI is undefined across different
-    /// node sets).
+    /// node sets) — [`PublishReport::ari_reason`] says which.
     pub ari_vs_previous: Option<f64>,
+    /// When the graph *grew* since the last publish (`AddNodes` deltas),
+    /// the drift ARI over the common prefix of pre-existing nodes — a
+    /// well-defined comparison on the node set both publishes share. The
+    /// full-vector metric stays `None`: comparing a grown assignment
+    /// vector against the shorter previous one is meaningless.
+    pub ari_prefix_vs_previous: Option<f64>,
+    /// Why `ari_vs_previous` is `None`, when it is.
+    pub ari_reason: Option<&'static str>,
     /// Delta volume accumulated since the last publish, as the fraction
     /// of the current edge count the degradation policy compared against.
     pub volume_frac: f64,
@@ -177,6 +185,10 @@ impl StreamSession {
         let mut pcfg = self.cfg.pipeline.clone();
         let force_cold = self.cfg.pipeline.solver != "ritz"
             || self.prev_embedding.is_none()
+            // A zero-edge graph (a batch cut every community) has no
+            // meaningful churn denominator, and any previous subspace is
+            // worthless as a seed for the null Laplacian: always cold.
+            || self.graph.num_edges() == 0
             || volume_frac > self.cfg.warm_volume_frac;
         pcfg.warm_start = if force_cold { None } else { self.prev_embedding.clone() };
         if pcfg.reorder == Reorder::Rcm {
@@ -198,11 +210,22 @@ impl StreamSession {
         };
         let assignments =
             out.clustering.as_ref().map(|c| c.assignments.clone()).unwrap_or_default();
-        let ari_vs_previous = match &self.prev_assignments {
-            Some(prev) if !assignments.is_empty() && prev.len() == assignments.len() => {
-                Some(adjusted_rand_index(prev, &assignments))
+        // Drift accounting: the metrics assert on length mismatch, so the
+        // comparison is routed by node-count relation up front. After node
+        // growth the common prefix (pre-existing nodes) is still a valid
+        // comparison; the full-vector ARI stays None with a reason.
+        let (ari_vs_previous, ari_prefix_vs_previous, ari_reason) = match &self.prev_assignments {
+            None => (None, None, Some("no previous publish to compare against")),
+            Some(_) if assignments.is_empty() => (None, None, Some("clustering is off")),
+            Some(prev) if prev.len() == assignments.len() => {
+                (Some(adjusted_rand_index(prev, &assignments)), None, None)
             }
-            _ => None,
+            Some(prev) if prev.len() < assignments.len() => (
+                None,
+                Some(adjusted_rand_index(prev, &assignments[..prev.len()])),
+                Some("node count grew since the last publish (prefix ARI reported)"),
+            ),
+            Some(_) => (None, None, Some("node count shrank since the last publish")),
         };
         self.prev_embedding = Some(out.embedding.clone());
         if !assignments.is_empty() {
@@ -217,6 +240,8 @@ impl StreamSession {
             converged,
             assignments,
             ari_vs_previous,
+            ari_prefix_vs_previous,
+            ari_reason,
             volume_frac,
             lambda_star: out.lambda_star,
         })
@@ -340,6 +365,11 @@ mod tests {
         assert!(rep.converged);
         assert_eq!(rep.assignments.len(), 26);
         assert!(rep.ari_vs_previous.is_none(), "ARI undefined across node counts");
+        assert!(
+            rep.ari_prefix_vs_previous.is_some(),
+            "growth must still report the prefix drift"
+        );
+        assert!(rep.ari_reason.unwrap().contains("grew"), "{:?}", rep.ari_reason);
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //! Spectral clustering then runs on the weighted Laplacian `XᵀWX`.
 
 use crate::graph::Graph;
+use crate::linalg::DMat;
 use crate::util::rng::Rng;
+use anyhow::{Context, Result};
 
 /// Result of the drop step.
 #[derive(Clone, Debug)]
@@ -19,8 +21,11 @@ pub struct DroppedGraph {
     pub removed: Vec<(usize, usize)>,
 }
 
-/// Remove each edge independently with probability `p`.
-pub fn drop_edges(g: &Graph, p: f64, seed: u64) -> DroppedGraph {
+/// Remove each edge independently with probability `p`. Errors (instead
+/// of panicking) if the surviving edge set cannot form a graph — which a
+/// well-formed input never produces, but the contract matters to callers
+/// feeding untrusted edge lists through here.
+pub fn drop_edges(g: &Graph, p: f64, seed: u64) -> Result<DroppedGraph> {
     let mut rng = Rng::new(seed);
     let mut kept: Vec<(usize, usize, f64)> = Vec::new();
     let mut removed = Vec::new();
@@ -31,7 +36,9 @@ pub fn drop_edges(g: &Graph, p: f64, seed: u64) -> DroppedGraph {
             kept.push((e.u as usize, e.v as usize, e.w));
         }
     }
-    DroppedGraph { graph: Graph::from_edges(g.num_nodes(), &kept).unwrap(), removed }
+    let graph = Graph::from_edges(g.num_nodes(), &kept)
+        .context("drop_edges: rebuilding the surviving-edge graph")?;
+    Ok(DroppedGraph { graph, removed })
 }
 
 /// Common-neighbors score for a node pair: `|N(u) ∩ N(v)|` (weighted
@@ -82,7 +89,7 @@ pub fn normalize_scores(scores: &[f64]) -> Vec<f64> {
 /// with predictions filled in on the *candidate* pairs (here: the actually
 /// removed pairs, matching the paper's protocol of predicting the missing
 /// edges).
-pub fn complete_graph(dropped: &DroppedGraph) -> Graph {
+pub fn complete_graph(dropped: &DroppedGraph) -> Result<Graph> {
     let g = &dropped.graph;
     let scores = normalize_scores(&score_pairs(g, &dropped.removed));
     let mut edges: Vec<(usize, usize, f64)> = g
@@ -95,7 +102,25 @@ pub fn complete_graph(dropped: &DroppedGraph) -> Graph {
             edges.push((u, v, s));
         }
     }
-    Graph::from_edges(g.num_nodes(), &edges).unwrap()
+    // A pathological candidate set (self-pair, out-of-range node,
+    // duplicate of a surviving edge) surfaces as the `from_edges` error
+    // naming the offending pair — never a panic.
+    Graph::from_edges(g.num_nodes(), &edges)
+        .context("complete_graph: adding predicted edges to the surviving graph")
+}
+
+/// Embedding-space link-prediction score: the dot product of two rows of
+/// a **row-normalized** embedding (cosine similarity; zero rows score 0).
+/// This is the serving-path analogue of [`common_neighbors_score`] — the
+/// cached embedding stands in for the raw adjacency structure, so a score
+/// depends only on the two rows, never on the rest of the query batch.
+pub fn embedding_score(norm_rows: &DMat, u: usize, v: usize) -> f64 {
+    let (a, b) = (norm_rows.row(u), norm_rows.row(v));
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
 }
 
 #[cfg(test)]
@@ -108,13 +133,13 @@ mod tests {
     #[test]
     fn drop_edges_rate() {
         let g = cliques(&CliqueSpec { n: 60, k: 2, max_short_circuit: 5, seed: 1 }).graph;
-        let d = drop_edges(&g, 0.2, 7);
+        let d = drop_edges(&g, 0.2, 7).unwrap();
         let frac = d.removed.len() as f64 / g.num_edges() as f64;
         assert!((frac - 0.2).abs() < 0.08, "drop rate {frac}");
         assert_eq!(d.graph.num_edges() + d.removed.len(), g.num_edges());
         // p=0 and p=1 extremes
-        assert_eq!(drop_edges(&g, 0.0, 1).removed.len(), 0);
-        assert_eq!(drop_edges(&g, 1.0, 1).graph.num_edges(), 0);
+        assert_eq!(drop_edges(&g, 0.0, 1).unwrap().removed.len(), 0);
+        assert_eq!(drop_edges(&g, 1.0, 1).unwrap().graph.num_edges(), 0);
     }
 
     #[test]
@@ -128,7 +153,7 @@ mod tests {
     #[test]
     fn intra_clique_pairs_score_higher() {
         let gg = cliques(&CliqueSpec { n: 40, k: 2, max_short_circuit: 2, seed: 3 });
-        let d = drop_edges(&gg.graph, 0.2, 5);
+        let d = drop_edges(&gg.graph, 0.2, 5).unwrap();
         // Removed intra-clique pairs should have high CN; a random
         // inter-clique non-edge should score low.
         let scores = score_pairs(&d.graph, &d.removed);
@@ -151,8 +176,8 @@ mod tests {
         // with common neighbors, cluster the weighted graph — ground truth
         // recovered.
         let gg = cliques(&CliqueSpec { n: 45, k: 3, max_short_circuit: 2, seed: 11 });
-        let d = drop_edges(&gg.graph, 0.2, 13);
-        let completed = complete_graph(&d);
+        let d = drop_edges(&gg.graph, 0.2, 13).unwrap();
+        let completed = complete_graph(&d).unwrap();
         assert!(completed.num_edges() > d.graph.num_edges(), "predictions added");
         // Weighted Laplacian still PSD with zero row sums.
         let l = completed.laplacian();
@@ -168,10 +193,38 @@ mod tests {
     }
 
     #[test]
+    fn pathological_candidate_set_errors_instead_of_panicking() {
+        // A self-pair candidate scores positive (a node shares all its
+        // neighbors with itself) and used to panic inside from_edges; the
+        // Result path must surface the offending pair instead.
+        let gg = cliques(&CliqueSpec { n: 20, k: 2, max_short_circuit: 1, seed: 2 });
+        let bad = DroppedGraph { graph: gg.graph.clone(), removed: vec![(0, 0)] };
+        let err = complete_graph(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("self-loop"), "{err:#}");
+    }
+
+    #[test]
+    fn embedding_score_is_cosine_on_normalized_rows() {
+        use crate::cluster::row_normalize;
+        let gg = cliques(&CliqueSpec { n: 30, k: 2, max_short_circuit: 1, seed: 5 });
+        let e = eigh(&gg.graph.laplacian()).unwrap();
+        let norm = row_normalize(&e.bottom_k(2));
+        // Self-similarity is exactly 1 for a unit row; same-clique pairs
+        // score far above cross-clique pairs.
+        assert!((embedding_score(&norm, 0, 0) - 1.0).abs() < 1e-12);
+        let same = embedding_score(&norm, 0, 1);
+        let cross = embedding_score(&norm, 0, 29);
+        assert!(same > cross + 0.5, "same {same} vs cross {cross}");
+        // Zero rows score 0 (row_normalize leaves them untouched).
+        let z = DMat::zeros(2, 2);
+        assert_eq!(embedding_score(&z, 0, 1), 0.0);
+    }
+
+    #[test]
     fn predicted_weights_in_unit_interval() {
         let gg = cliques(&CliqueSpec { n: 30, k: 2, max_short_circuit: 1, seed: 21 });
-        let d = drop_edges(&gg.graph, 0.3, 23);
-        let completed = complete_graph(&d);
+        let d = drop_edges(&gg.graph, 0.3, 23).unwrap();
+        let completed = complete_graph(&d).unwrap();
         for e in completed.edges() {
             assert!(e.w > 0.0 && e.w <= 1.0 + 1e-12, "weight {}", e.w);
         }

@@ -31,6 +31,7 @@ fn main() {
     let result = match cmd.as_str() {
         "cluster" => cmd_cluster(args),
         "stream" => cmd_stream(args),
+        "serve" => cmd_serve(args),
         "pvf" => cmd_pvf(args),
         "linkpred" => cmd_linkpred(args),
         "experiment" => cmd_experiment(args),
@@ -62,6 +63,7 @@ fn print_usage() {
          SUBCOMMANDS:\n\
          \x20 cluster     spectral clustering through the SPED pipeline\n\
          \x20 stream      streaming edge deltas with warm-started re-solves\n\
+         \x20 serve       batched queries over a cached embedding (solve rarely, serve constantly)\n\
          \x20 pvf         proto-value functions of the 3-room MDP (Fig 1-3)\n\
          \x20 linkpred    probabilistic-graph clustering (Fig 5 / App A.1)\n\
          \x20 experiment  regenerate paper figures (--figure fig2|fig3|fig4|fig5|fig6|walks|all)\n\
@@ -480,7 +482,13 @@ fn cmd_stream(mut args: Vec<String>) -> anyhow::Result<()> {
     );
     let publish = |session: &mut StreamSession, tag: &str| -> anyhow::Result<()> {
         let rep = session.publish()?;
-        let drift = rep.ari_vs_previous.map_or(String::from("-"), |x| format!("{x:.4}"));
+        let drift = match (rep.ari_vs_previous, rep.ari_prefix_vs_previous) {
+            (Some(x), _) => format!("{x:.4}"),
+            // Node growth: full-vector ARI is undefined; report the
+            // common-prefix drift with the reason.
+            (None, Some(p)) => format!("prefix {p:.4}"),
+            (None, None) => rep.ari_reason.map_or(String::from("-"), |r| format!("- ({r})")),
+        };
         let truth = if !labels.is_empty() && labels.len() == rep.assignments.len() {
             format!(" | ARI vs labels {:.4}", adjusted_rand_index(&rep.assignments, &labels))
         } else {
@@ -529,6 +537,128 @@ fn cmd_stream(mut args: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<()> {
+    use sped::coordinator::serve::{parse_query_batches, Answer, Query, ServeConfig, ServeSession};
+    use sped::coordinator::stream::parse_event_batches;
+    let cfg = load_config(&mut args)?;
+    let spec = pipeline_spec(graph_spec("sped serve"))
+        .opt_req(
+            "queries",
+            "query file: one query per line (linkpred U V | cluster U | topk U K), \
+             a `---` line closes a batch",
+        )
+        .opt_req(
+            "events",
+            "delta event file in the `sped stream` grammar; event batch i is ingested \
+             before query batch i — the cache invalidates per the delta outcome and the \
+             next query batch re-solves lazily (warm-started when the churn allows)",
+        )
+        .opt(
+            "warm-frac",
+            "0.25",
+            "delta volume (fraction of current edge count) above which a lazy re-solve \
+             runs cold instead of warm-starting from the previous embedding (--solver ritz)",
+        );
+    let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
+    let queries_path = a
+        .get("queries")
+        .ok_or_else(|| anyhow::anyhow!("--queries <file> is required"))?;
+    let qtext = std::fs::read_to_string(&queries_path)
+        .map_err(|e| anyhow::anyhow!("reading {queries_path}: {e}"))?;
+    let qbatches = parse_query_batches(&qtext)?;
+    let ebatches = match a.get("events") {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            parse_event_batches(&text)?
+        }
+        None => Vec::new(),
+    };
+    let (graph, _labels, stored_order) = make_graph(&a)?;
+    println!(
+        "graph: {} nodes, {} edges | {} query batches, {} delta batches",
+        graph.num_nodes(),
+        graph.num_edges(),
+        qbatches.len(),
+        ebatches.len()
+    );
+    let mut pcfg = build_pipeline_cfg(&a, &cfg)?;
+    auto_eta(&graph, &mut pcfg, true);
+    let mut session = ServeSession::with_order(
+        graph,
+        stored_order,
+        ServeConfig { pipeline: pcfg, warm_volume_frac: a.f64("warm-frac") },
+    );
+    println!("cache key config: {}", session.fingerprint());
+    let qname = |q: &Query| match *q {
+        Query::LinkPred { u, v } => format!("linkpred {u} {v}"),
+        Query::NearestCluster { u } => format!("cluster {u}"),
+        Query::TopK { u, k } => format!("topk {u} {k}"),
+    };
+    let rounds = qbatches.len().max(ebatches.len());
+    for i in 0..rounds {
+        if let Some(batch) = ebatches.get(i) {
+            // A rejected delta batch leaves the graph and caches intact;
+            // serving continues.
+            match session.apply_batch(batch) {
+                Ok(outcome) => println!(
+                    "deltas {}: +{} -{} ~{} edges, +{} nodes{}",
+                    i + 1,
+                    outcome.edges_added,
+                    outcome.edges_removed,
+                    outcome.edges_reweighted,
+                    outcome.nodes_added,
+                    if outcome.topology_changed { " (topology changed)" } else { "" }
+                ),
+                Err(e) => println!("delta batch {} rejected: {e:#}", i + 1),
+            }
+        }
+        if let Some(qb) = qbatches.get(i) {
+            let solves_before = session.solves();
+            // A bad query batch errors with the offending query's index;
+            // the session stays valid and the next batch is served.
+            match session.answer_batch(qb) {
+                Ok(answers) => {
+                    if session.solves() > solves_before {
+                        println!(
+                            "queries {}: re-solved ({}) before answering",
+                            i + 1,
+                            session
+                                .last_solve_path()
+                                .map(|p| p.to_string())
+                                .unwrap_or_default()
+                        );
+                    }
+                    println!("queries {} ({} answered from cache):", i + 1, answers.len());
+                    for (q, ans) in qb.iter().zip(answers.iter()) {
+                        match ans {
+                            Answer::Score(s) => println!("  {:<18} -> score {s:.6}", qname(q)),
+                            Answer::Cluster { cluster, distance } => println!(
+                                "  {:<18} -> cluster {cluster} (distance {distance:.6})",
+                                qname(q)
+                            ),
+                            Answer::Neighbors(nb) => {
+                                let top: Vec<String> = nb
+                                    .iter()
+                                    .map(|(v, s)| format!("{v}:{s:.4}"))
+                                    .collect();
+                                println!("  {:<18} -> [{}]", qname(q), top.join(", "));
+                            }
+                        }
+                    }
+                }
+                Err(e) => println!("query batch {} rejected: {e:#}", i + 1),
+            }
+        }
+    }
+    println!(
+        "served {rounds} rounds with {} solve(s) ({} query batches answered from a warm cache)",
+        session.solves(),
+        qbatches.len().saturating_sub(session.solves())
+    );
+    Ok(())
+}
+
 fn cmd_pvf(mut args: Vec<String>) -> anyhow::Result<()> {
     let _cfg = load_config(&mut args)?;
     let spec = ArgSpec::new("sped pvf", "3-room MDP proto-value functions")
@@ -574,8 +704,8 @@ fn cmd_linkpred(mut args: Vec<String>) -> anyhow::Result<()> {
     let spec = pipeline_spec(graph_spec("sped linkpred")).opt("drop", "0.2", "edge drop probability");
     let a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
     let (graph, labels, _) = make_graph(&a)?;
-    let dropped = sped::linkpred::drop_edges(&graph, a.f64("drop"), a.u64("seed") ^ 0xA1);
-    let completed = sped::linkpred::complete_graph(&dropped);
+    let dropped = sped::linkpred::drop_edges(&graph, a.f64("drop"), a.u64("seed") ^ 0xA1)?;
+    let completed = sped::linkpred::complete_graph(&dropped)?;
     println!(
         "dropped {} of {} edges; completion re-added {} weighted predictions",
         dropped.removed.len(),

@@ -197,7 +197,7 @@ fn pipeline_on_mdp_pvfs() {
 #[test]
 fn pipeline_on_linkpred_completed_graph() {
     let gg = cliques(&CliqueSpec { n: 45, k: 3, max_short_circuit: 2, seed: 3 });
-    let completed = complete_graph(&drop_edges(&gg.graph, 0.2, 7));
+    let completed = complete_graph(&drop_edges(&gg.graph, 0.2, 7).unwrap()).unwrap();
     let cfg = PipelineConfig {
         k: 3,
         transform: TransformKind::LimitNegExp { ell: 251 },

@@ -1,0 +1,264 @@
+//! Serve-mode integration harness (PR 8 acceptance): cached batched
+//! answers are bitwise-equal to a fresh one-shot pipeline run for all
+//! three query kinds across 1/2/8 workers; a weights-only delta keeps the
+//! cached RCM order while a topology delta drops it; and the lazy
+//! re-solve after invalidation warm-starts and matches a cold rebuild.
+
+use sped::cluster::{nearest_centroid, row_normalize};
+use sped::coordinator::serve::{Answer, Query, ServeConfig, ServeSession};
+use sped::graph::delta::EdgeDelta;
+use sped::graph::gen::{cliques, CliqueSpec};
+use sped::graph::Reorder;
+use sped::linkpred::embedding_score;
+use sped::pipeline::{Pipeline, PipelineConfig, SolvePath};
+use sped::transforms::{OpMode, TransformKind};
+
+/// The same solve the stream-stability harness uses: Ritz on the
+/// matrix-free dilated operator, tight tolerance, no O(n^3) ground truth.
+fn base_pipeline(k: usize, threads: usize) -> PipelineConfig {
+    PipelineConfig {
+        k,
+        transform: TransformKind::LimitNegExp { ell: 51 },
+        solver: "ritz".into(),
+        ritz_tol: 1e-8,
+        ritz_max_iters: 2000,
+        op_mode: OpMode::MatrixFree,
+        ground_truth: false,
+        threads,
+        ..Default::default()
+    }
+}
+
+fn serve_cfg(k: usize, threads: usize) -> ServeConfig {
+    ServeConfig { pipeline: base_pipeline(k, threads), warm_volume_frac: 0.25 }
+}
+
+/// One batch exercising every query kind.
+fn query_mix() -> Vec<Query> {
+    vec![
+        Query::LinkPred { u: 0, v: 1 },
+        Query::LinkPred { u: 0, v: 47 },
+        Query::NearestCluster { u: 0 },
+        Query::NearestCluster { u: 30 },
+        Query::TopK { u: 5, k: 4 },
+        Query::TopK { u: 40, k: 7 },
+    ]
+}
+
+/// Flatten an answer into comparable bits — bitwise equality, not
+/// approximate equality, is the contract under test.
+fn bits(a: &Answer) -> Vec<u64> {
+    match a {
+        Answer::Score(s) => vec![s.to_bits()],
+        Answer::Cluster { cluster, distance } => vec![*cluster as u64, distance.to_bits()],
+        Answer::Neighbors(nb) => {
+            nb.iter().flat_map(|&(v, s)| [v as u64, s.to_bits()]).collect()
+        }
+    }
+}
+
+/// All three query kinds, answered from the serve cache, must be bitwise
+/// identical to scoring a fresh one-shot [`Pipeline::run`] output with the
+/// public kernels — at every worker count, and regardless of how the
+/// batch is split.
+#[test]
+fn cached_answers_bitwise_match_one_shot_pipeline_across_workers() {
+    let gg = cliques(&CliqueSpec { n: 48, k: 3, max_short_circuit: 2, seed: 11 });
+    let queries = query_mix();
+
+    // The oracle: one fresh end-to-end pipeline run plus the same public
+    // scoring kernels the serve kernel is built from.
+    let mut pcfg = base_pipeline(3, 1);
+    pcfg.do_cluster = true;
+    let out = Pipeline::new(pcfg).run(&gg.graph).unwrap();
+    let norm = row_normalize(&out.embedding);
+    let cl = out.clustering.as_ref().unwrap();
+    let n = gg.graph.num_nodes();
+    let expected: Vec<Vec<u64>> = queries
+        .iter()
+        .map(|q| match *q {
+            Query::LinkPred { u, v } => vec![embedding_score(&norm, u, v).to_bits()],
+            Query::NearestCluster { u } => {
+                let (c, d2) = nearest_centroid(&cl.centroids, norm.row(u));
+                assert_eq!(c, cl.assignments[u], "oracle lookup disagrees with k-means");
+                vec![c as u64, d2.sqrt().to_bits()]
+            }
+            Query::TopK { u, k } => {
+                let mut scored: Vec<(usize, f64)> = (0..n)
+                    .filter(|&v| v != u)
+                    .map(|v| (v, embedding_score(&norm, u, v)))
+                    .collect();
+                scored.sort_by(|a, b| {
+                    b.1.partial_cmp(&a.1)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.0.cmp(&b.0))
+                });
+                scored.truncate(k);
+                scored.iter().flat_map(|&(v, s)| [v as u64, s.to_bits()]).collect()
+            }
+        })
+        .collect();
+
+    for threads in [1usize, 2, 8] {
+        let mut s = ServeSession::new(gg.graph.clone(), serve_cfg(3, threads));
+        let answers = s.answer_batch(&queries).unwrap();
+        assert_eq!(s.solves(), 1, "one lazy solve per session, not per query");
+        for (i, (ans, exp)) in answers.iter().zip(expected.iter()).enumerate() {
+            assert_eq!(&bits(ans), exp, "query {i} diverged from the oracle at {threads} workers");
+        }
+        // Splitting the same work into two batches must not change any
+        // answer or trigger another solve.
+        let head = s.answer_batch(&queries[..2]).unwrap();
+        let tail = s.answer_batch(&queries[2..]).unwrap();
+        assert_eq!(s.solves(), 1, "cache hits must not re-solve");
+        for (i, ans) in head.iter().chain(tail.iter()).enumerate() {
+            assert_eq!(&bits(ans), &expected[i], "batch split changed query {i}");
+        }
+    }
+
+    // Semantic sanity on the oracle itself: same-clique pairs beat
+    // cross-clique pairs, and nodes 0 and 30 sit in different clusters.
+    assert!(
+        embedding_score(&norm, 0, 1) > embedding_score(&norm, 0, 47) + 0.5,
+        "same-clique cosine must dominate cross-clique"
+    );
+    assert_ne!(cl.assignments[0], cl.assignments[30]);
+}
+
+/// Invalidation follows the [`DeltaOutcome`] flags exactly: a weights-only
+/// batch drops the embedding but keeps the RCM order; a topology batch
+/// drops both; each invalidation triggers exactly one lazy re-solve.
+#[test]
+fn weights_only_delta_keeps_rcm_order_topology_delta_drops_it() {
+    let gg = cliques(&CliqueSpec { n: 48, k: 3, max_short_circuit: 2, seed: 7 });
+    let mut cfg = serve_cfg(3, 2);
+    cfg.pipeline.reorder = Reorder::Rcm;
+    let mut s = ServeSession::new(gg.graph.clone(), cfg);
+    assert!(s.cached_order().is_none(), "no order before the first solve");
+
+    s.answer_batch(&[Query::NearestCluster { u: 0 }]).unwrap();
+    assert_eq!(s.solves(), 1);
+    let order0 = s.cached_order().expect("an RCM solve caches the order").to_vec();
+
+    // Weights-only delta: embedding cache drops, order survives.
+    let (u, v, w) = {
+        let e = &s.graph().edges()[0];
+        (e.u as usize, e.v as usize, e.w)
+    };
+    let out = s.apply_batch(&[EdgeDelta::Reweight { u, v, w: w * 1.5 }]).unwrap();
+    assert!(out.weights_changed && !out.topology_changed);
+    assert!(!s.cache_valid(), "a weights delta must invalidate the embedding");
+    assert_eq!(s.cached_order(), Some(&order0[..]), "a weights delta must keep the RCM order");
+
+    s.answer_batch(&[Query::NearestCluster { u: 0 }]).unwrap();
+    assert_eq!(s.solves(), 2, "the invalidated cache re-solves lazily, once");
+    assert_eq!(s.cached_order(), Some(&order0[..]), "the re-solve reuses the cached order");
+
+    // Topology delta: both caches drop. Pick a pair with no existing edge
+    // so the Add is genuinely structural.
+    let existing: std::collections::HashSet<(usize, usize)> =
+        s.graph().edges().iter().map(|e| (e.u as usize, e.v as usize)).collect();
+    let (mut a, mut b) = (usize::MAX, usize::MAX);
+    'outer: for x in 0..48 {
+        for y in (x + 1)..48 {
+            if !existing.contains(&(x, y)) {
+                (a, b) = (x, y);
+                break 'outer;
+            }
+        }
+    }
+    let out = s.apply_batch(&[EdgeDelta::Add { u: a, v: b, w: 0.5 }]).unwrap();
+    assert!(out.topology_changed);
+    assert!(!s.cache_valid());
+    assert!(s.cached_order().is_none(), "a topology delta must drop the RCM order");
+
+    s.answer_batch(&[Query::NearestCluster { u: 0 }]).unwrap();
+    assert_eq!(s.solves(), 3);
+    assert!(s.cached_order().is_some(), "the re-solve recomputes the order for the new topology");
+}
+
+/// After a small-churn invalidation the next query warm-starts the
+/// re-solve, and its answers match a cold rebuild on the mutated graph;
+/// heavy churn degrades the lazy re-solve to cold up front.
+#[test]
+fn lazy_resolve_warm_starts_and_matches_cold_rebuild() {
+    let gg = cliques(&CliqueSpec { n: 48, k: 3, max_short_circuit: 2, seed: 9 });
+    let queries = query_mix();
+    let mut s = ServeSession::new(gg.graph.clone(), serve_cfg(3, 1));
+    s.answer_batch(&queries).unwrap();
+    assert_eq!(s.last_solve_path(), Some(SolvePath::Cold), "first solve has no seed");
+
+    // A reweight burst well under the churn threshold.
+    let batch: Vec<EdgeDelta> = gg
+        .graph
+        .edges()
+        .iter()
+        .take(6)
+        .map(|e| EdgeDelta::Reweight { u: e.u as usize, v: e.v as usize, w: e.w * 1.1 })
+        .collect();
+    s.apply_batch(&batch).unwrap();
+    assert!(!s.cache_valid());
+
+    let warm_answers = s.answer_batch(&queries).unwrap();
+    assert_eq!(s.solves(), 2);
+    assert_eq!(
+        s.last_solve_path(),
+        Some(SolvePath::Warm),
+        "small churn must warm-start the lazy re-solve"
+    );
+
+    // Cold-rebuild oracle: a fresh session over the mutated graph.
+    let mut cold = ServeSession::new(s.graph().clone(), serve_cfg(3, 1));
+    let cold_answers = cold.answer_batch(&queries).unwrap();
+    assert_eq!(cold.last_solve_path(), Some(SolvePath::Cold));
+
+    for (i, (wa, ca)) in warm_answers.iter().zip(cold_answers.iter()).enumerate() {
+        match (wa, ca) {
+            (Answer::Score(a), Answer::Score(b)) => {
+                assert!((a - b).abs() < 1e-6, "query {i}: warm score {a} vs cold {b}");
+            }
+            (Answer::Cluster { cluster: a, distance: da }, Answer::Cluster { cluster: b, distance: db }) => {
+                assert_eq!(a, b, "query {i}: warm and cold disagree on the cluster");
+                assert!((da - db).abs() < 1e-6, "query {i}: distance {da} vs {db}");
+            }
+            (Answer::Neighbors(na), Answer::Neighbors(nb)) => {
+                assert_eq!(na.len(), nb.len(), "query {i}");
+                // Near-ties inside a clique may reorder between two
+                // independent solves; the semantic contract is that both
+                // neighbor sets stay inside the query node's clique.
+                let clique_of = |v: usize| gg.labels[v];
+                let qu = match queries[i] {
+                    Query::TopK { u, .. } => u,
+                    _ => unreachable!(),
+                };
+                for &(v, score) in na.iter().chain(nb.iter()) {
+                    assert_eq!(
+                        clique_of(v),
+                        clique_of(qu),
+                        "query {i}: neighbor {v} (score {score}) left the clique"
+                    );
+                }
+            }
+            _ => panic!("query {i}: warm and cold answer kinds diverged"),
+        }
+    }
+
+    // Heavy churn: reweight more than warm_volume_frac of the edges, and
+    // the next lazy re-solve must run cold by policy.
+    let m = s.graph().num_edges();
+    let big: Vec<EdgeDelta> = s
+        .graph()
+        .edges()
+        .iter()
+        .take(m / 2 + 1)
+        .map(|e| EdgeDelta::Reweight { u: e.u as usize, v: e.v as usize, w: e.w * 0.9 })
+        .collect();
+    s.apply_batch(&big).unwrap();
+    s.answer_batch(&queries[..1]).unwrap();
+    assert_eq!(s.solves(), 3);
+    assert_eq!(
+        s.last_solve_path(),
+        Some(SolvePath::Cold),
+        "churn above warm_volume_frac must degrade the lazy re-solve to cold"
+    );
+}

@@ -272,6 +272,86 @@ fn bounded_noise_keeps_clusters_stable() {
     }
 }
 
+/// Regression (PR 8): after an `AddNodes` delta the publish used to feed a
+/// grown assignment vector and the shorter previous one into the ARI —
+/// now the metrics assert on length mismatch, the full-vector drift is
+/// `None` with a reason, and the common prefix of pre-existing nodes is
+/// compared instead.
+#[test]
+fn node_growth_reports_prefix_drift_not_misleading_full_ari() {
+    let gg = cliques(&CliqueSpec { n: 48, k: 2, max_short_circuit: 2, seed: 5 });
+    let mut s = StreamSession::new(gg.graph.clone(), ritz_cfg(2, 1));
+    let first = s.publish().unwrap();
+    assert!(first.ari_vs_previous.is_none());
+    assert!(first.ari_prefix_vs_previous.is_none());
+    assert!(first.ari_reason.unwrap().contains("no previous"), "{:?}", first.ari_reason);
+    // Grow the graph by two leaf nodes hanging off the first clique.
+    s.apply_batch(&[
+        EdgeDelta::AddNodes { count: 2 },
+        EdgeDelta::Add { u: 0, v: 48, w: 1.0 },
+        EdgeDelta::Add { u: 1, v: 49, w: 1.0 },
+    ])
+    .unwrap();
+    let rep = s.publish().unwrap();
+    assert_eq!(rep.assignments.len(), 50);
+    assert!(rep.ari_vs_previous.is_none(), "full-vector ARI is undefined across node sets");
+    let prefix = rep
+        .ari_prefix_vs_previous
+        .expect("growth must still report the pre-existing-node drift");
+    assert!(prefix > 0.9, "two leaves must not move the planted partition: prefix ARI {prefix}");
+    assert!(rep.ari_reason.unwrap().contains("grew"), "{:?}", rep.ari_reason);
+    // Steady state: the next publish is a same-length comparison again.
+    let steady = s.publish().unwrap();
+    assert!(steady.ari_vs_previous.is_some());
+    assert!(steady.ari_prefix_vs_previous.is_none());
+    assert!(steady.ari_reason.is_none());
+}
+
+/// Regression (PR 8): on a graph driven to zero edges the churn fraction's
+/// `max(1)` denominator made the accumulated volume look tiny, so a later
+/// publish silently took the warm path seeded from a meaningless subspace.
+/// Zero-edge graphs are now always-cold by policy — and never panic.
+#[test]
+fn zero_edge_graph_publishes_cold_never_warm() {
+    // Born empty: nodes but no edges at all.
+    let g = Graph::from_edges(6, &[]).unwrap();
+    let mut s = StreamSession::new(g, ritz_cfg(2, 1));
+    match s.publish() {
+        Ok(first) => {
+            assert_eq!(first.path, SolvePath::Cold);
+            assert_eq!(first.volume_frac, 0.0);
+            // A previous embedding now exists and the accumulated volume
+            // is 0 — exactly the state the old fraction logic warmed on.
+            let second = s.publish().unwrap();
+            assert_eq!(second.path, SolvePath::Cold, "zero-edge graphs must never warm-start");
+        }
+        // A clean error from the null-operator solve is acceptable (the
+        // point is no panic and no warm path); the session stays usable.
+        Err(e) => assert!(!format!("{e:#}").is_empty()),
+    }
+
+    // Driven to zero: a live session whose every edge is cut in one batch.
+    let gg = cliques(&CliqueSpec { n: 24, k: 2, max_short_circuit: 1, seed: 3 });
+    let mut s = StreamSession::new(gg.graph.clone(), ritz_cfg(2, 1));
+    s.publish().unwrap();
+    let cut: Vec<EdgeDelta> = s
+        .graph()
+        .edges()
+        .iter()
+        .map(|e| EdgeDelta::Remove { u: e.u as usize, v: e.v as usize })
+        .collect();
+    let out = s.apply_batch(&cut).unwrap();
+    assert!(out.topology_changed);
+    assert_eq!(s.graph().num_edges(), 0);
+    if let Ok(rep) = s.publish() {
+        assert_eq!(rep.path, SolvePath::Cold, "publish on the cut graph must run cold");
+        // And so must every later publish while the graph stays empty.
+        if let Ok(rep2) = s.publish() {
+            assert_eq!(rep2.path, SolvePath::Cold);
+        }
+    }
+}
+
 /// Fault injection: malformed deltas are rejected transactionally with the
 /// session left fully usable, and legal-but-brutal deltas (disconnecting a
 /// community, isolating a node) degrade gracefully — solves still run,
