@@ -318,6 +318,14 @@ impl Pipeline {
                         cfg.build.degree
                     );
                 }
+                if cfg.build.precision.is_mixed() {
+                    // The XLA artifacts already run their own f32 chunk
+                    // protocol; the mixed CSR path is native-only.
+                    bail!(
+                        "--precision mixed requires the native backend (the XLA \
+                         artifacts run their own f32 protocol); use --precision f64"
+                    );
+                }
                 if !cfg.ground_truth {
                     // The XLA chunk protocol consumes the oracle bundle.
                     bail!("ground_truth=false requires the native backend");
@@ -345,6 +353,18 @@ impl Pipeline {
         // solver's M·V products.
         let mut build = cfg.build;
         build.threads = cfg.threads.max(build.threads).max(1);
+
+        if build.precision.is_mixed() && cfg.ground_truth {
+            // Ground truth is the exact f64 oracle; pairing it with a
+            // demoted-arithmetic operator would report convergence curves
+            // whose floor is the f32 budget, not the solver — reject rather
+            // than publish misleading metrics.
+            bail!(
+                "--precision mixed cannot drive a ground-truth run (the oracle \
+                 certifies f64 trajectories); disable ground truth or use \
+                 --precision f64"
+            );
+        }
 
         // The dense Laplacian is needed by the ground-truth oracle and the
         // dense operator path; the matrix-free path without metrics never
@@ -660,6 +680,7 @@ mod tests {
     use super::*;
     use crate::cluster::adjusted_rand_index;
     use crate::graph::gen::{cliques, CliqueSpec};
+    use crate::transforms::Precision;
 
     #[test]
     fn native_pipeline_end_to_end() {
@@ -976,6 +997,74 @@ mod tests {
         };
         let err = Pipeline::new(cfg).run(&gg.graph).unwrap_err();
         assert!(format!("{err:#}").contains("--basis monomial"), "{err:#}");
+    }
+
+    #[test]
+    fn mixed_precision_pipeline_matches_f64_partition_dense_free() {
+        // `--precision mixed` rides the matrix-free ritz path end to end:
+        // same hard partition as the f64 run, solver converged via the
+        // precision-floor clamp even under an unreachable requested tol.
+        let gg = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 9 });
+        let mk = |precision| PipelineConfig {
+            k: 3,
+            transform: TransformKind::LimitNegExp { ell: 51 },
+            solver: "ritz".into(),
+            ritz_tol: 1e-14, // below the f32 budget → clamp must engage
+            ritz_max_iters: 300,
+            op_mode: OpMode::MatrixFree,
+            ground_truth: false,
+            build: BuildOptions { precision, ..BuildOptions::default() },
+            ..Default::default()
+        };
+        let exact = Pipeline::new(mk(Precision::F64)).run(&gg.graph).unwrap();
+        let mixed = Pipeline::new(mk(Precision::Mixed)).run(&gg.graph).unwrap();
+        let mz = mixed.ritz.as_ref().unwrap();
+        assert!(mz.converged, "mixed ritz unconverged after {} iters", mz.iterations);
+        let err = crate::linalg::metrics::subspace_error(&exact.embedding, &mixed.embedding);
+        assert!(err < 1e-2, "f64 vs mixed subspace err {err}");
+        assert_eq!(
+            exact.clustering.as_ref().unwrap().assignments,
+            mixed.clustering.as_ref().unwrap().assignments
+        );
+    }
+
+    #[test]
+    fn mixed_precision_rejected_off_the_sparse_native_path() {
+        let gg = cliques(&CliqueSpec { n: 12, k: 2, max_short_circuit: 1, seed: 2 });
+        let mixed_build =
+            BuildOptions { precision: Precision::Mixed, ..BuildOptions::default() };
+        // XLA backend: native-only knob.
+        let cfg = PipelineConfig {
+            k: 2,
+            build: mixed_build,
+            backend: Backend::Xla { artifacts_dir: "artifacts".into() },
+            ..Default::default()
+        };
+        let err = Pipeline::new(cfg).run(&gg.graph).unwrap_err();
+        assert!(format!("{err:#}").contains("native backend"), "{err:#}");
+        // Ground-truth run: the oracle certifies f64 trajectories.
+        let cfg = PipelineConfig {
+            k: 2,
+            transform: TransformKind::LimitNegExp { ell: 51 },
+            solver: "ritz".into(),
+            op_mode: OpMode::MatrixFree,
+            build: mixed_build,
+            ..Default::default() // ground_truth defaults to true
+        };
+        let err = Pipeline::new(cfg).run(&gg.graph).unwrap_err();
+        assert!(format!("{err:#}").contains("ground-truth"), "{err:#}");
+        // Dense materialized build: f64-only (build_solver_matrix bails).
+        let cfg = PipelineConfig {
+            k: 2,
+            transform: TransformKind::LimitNegExp { ell: 51 },
+            solver: "ritz".into(),
+            op_mode: OpMode::DenseMaterialized,
+            ground_truth: false,
+            build: mixed_build,
+            ..Default::default()
+        };
+        let err = Pipeline::new(cfg).run(&gg.graph).unwrap_err();
+        assert!(format!("{err:#}").contains("--precision f64"), "{err:#}");
     }
 
     #[test]

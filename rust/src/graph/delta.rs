@@ -312,6 +312,10 @@ impl Graph {
             (self.laplacian_csr(), rebuilt.laplacian_csr()),
             (self.normalized_laplacian_csr(), rebuilt.normalized_laplacian_csr()),
         ] {
+            // Structural CSR validation (sorted strictly-ascending columns,
+            // consistent indptr) of the Laplacian built from the *patched*
+            // adjacency — the invariant every SpMM kernel assumes.
+            ours.debug_assert_valid();
             debug_assert!(
                 ours.values().len() == theirs.values().len()
                     && ours

@@ -24,6 +24,12 @@
 //! Python never runs on the request path: the `sped` binary only loads
 //! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate).
 //!
+//! With `--features simd` (nightly toolchains only) the skinny-SpMM
+//! kernel family is implemented on `std::simd` portable vectors; without
+//! it the stable unrolled kernels are used. Both are bitwise-identical
+//! to the streaming reference, so the feature changes throughput, never
+//! results.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -40,6 +46,7 @@
 //! let out = Pipeline::new(cfg).run(&graph.graph).unwrap();
 //! println!("clusters: {:?}", out.clustering.unwrap().assignments);
 //! ```
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 pub mod cluster;
 pub mod coordinator;

@@ -26,6 +26,13 @@
 //! * [`sparse`] — CSR matrices and the matrix-free kernels (row-sharded
 //!   SpMM / SpMV / λ_max power iteration) behind `OpMode::MatrixFree`,
 //!   with the same determinism contract as [`par`].
+//! * [`simd`] — the build-time SpMM kernel backend selection: portable
+//!   `std::simd` inner loops under `--features simd` (nightly), the
+//!   stable unrolled kernels otherwise. Bitwise-identical either way.
+//! * [`shard`] — graph-sharded SpMM ([`shard::ShardedCsr`]): CSR rows
+//!   partitioned into shards with explicit halo exchange of boundary
+//!   bundle rows, bitwise-equal to the unsharded kernels — the stepping
+//!   stone from threads-on-one-box to distributed execution.
 
 pub mod dmat;
 pub mod eigh;
@@ -35,6 +42,8 @@ pub mod matmul;
 pub mod metrics;
 pub mod par;
 pub mod qr;
+pub mod shard;
+pub mod simd;
 pub mod sparse;
 
 pub use dmat::DMat;

@@ -1,0 +1,351 @@
+//! Graph-sharded SpMM with explicit halo exchange.
+//!
+//! The row-sharded kernels in [`super::sparse`] assume every worker can
+//! read the whole bundle — true for threads in one address space, false
+//! for anything distributed. This module is the stepping stone from
+//! threads-on-one-box to multi-process execution (the distributed
+//! dimension of the Block Chebyshev–Davidson line of work): CSR rows are
+//! partitioned into `S` contiguous shards, and each shard's matrix block
+//! is rewritten against a **local panel** containing only the bundle rows
+//! the shard actually touches — its own row range plus the **halo** of
+//! boundary rows owned by other shards. An apply is then two phases:
+//!
+//! 1. **Halo exchange** — every shard gathers its local panel from the
+//!    owning shards' slices of the bundle ([`HaloPlan`] says exactly which
+//!    rows cross shard boundaries; with RCM reordering the graph bandwidth
+//!    is small, so halos are thin).
+//! 2. **Independent per-shard SpMM** — each shard multiplies its local
+//!    block against its local panel into its own output rows, with zero
+//!    shared reads. In-process the phases are function calls; across
+//!    processes phase 1 becomes the only message traffic.
+//!
+//! ## Bitwise contract
+//!
+//! The local column remap is **order-preserving** (global columns map to
+//! their rank in the sorted own ∪ halo set), so each local row stores the
+//! same values in the same ascending order as the unsharded matrix, and
+//! the per-shard kernel is the same [`super::sparse`] row-range kernel.
+//! Per output element the floating-point reduction is therefore the
+//! identical sequence — [`ShardedCsr::apply`] is **bitwise equal** to
+//! [`super::sparse::spmm`] at every (shard count, worker count)
+//! combination, empty shards and isolated nodes included (pinned by
+//! `tests/kernel_equivalence.rs`).
+
+use super::dmat::DMat;
+use super::par::{row_shards, shard_starts};
+use super::sparse::{kernel_for_width, CsrMat};
+use crate::util::pool::parallel_shards;
+
+/// Which bundle rows each shard must receive from outside its own row
+/// range before it can run its local SpMM — the message plan a
+/// multi-process transport would execute.
+#[derive(Clone, Debug)]
+pub struct HaloPlan {
+    /// `recv[s]`: the global bundle-row indices shard `s` needs but does
+    /// not own, ascending. In-process these are gathered by copy; across
+    /// processes each index names one row-of-k-floats message.
+    pub recv: Vec<Vec<usize>>,
+}
+
+impl HaloPlan {
+    /// Total halo rows exchanged per apply (the transport volume is this
+    /// many `k`-float rows).
+    pub fn halo_rows(&self) -> usize {
+        self.recv.iter().map(|r| r.len()).sum()
+    }
+}
+
+/// One shard: a contiguous output-row range and its matrix block rewritten
+/// against the local panel index space.
+#[derive(Clone, Debug)]
+struct Shard {
+    /// First global row this shard owns.
+    row_start: usize,
+    /// Rows owned (possibly 0 — shards stay addressable even when the
+    /// partition hands them nothing, unlike the thread-pool row split).
+    rows: usize,
+    /// `rows × panel_rows.len()` block with columns remapped into local
+    /// panel space, order-preservingly.
+    local: CsrMat,
+    /// Global bundle-row index of each local panel row, ascending:
+    /// the sorted union of the own range and the halo.
+    panel_rows: Vec<usize>,
+}
+
+impl Shard {
+    /// Phase 1 for this shard: gather the local panel (own rows + halo
+    /// rows) out of the global bundle.
+    fn gather_panel(&self, b: &DMat) -> DMat {
+        let k = b.cols();
+        let mut p = DMat::zeros(self.panel_rows.len(), k);
+        let (bd, pd) = (b.data(), p.data_mut());
+        for (li, &gi) in self.panel_rows.iter().enumerate() {
+            pd[li * k..(li + 1) * k].copy_from_slice(&bd[gi * k..(gi + 1) * k]);
+        }
+        p
+    }
+}
+
+/// A square CSR matrix partitioned into `S` row shards with an explicit
+/// halo-exchange plan (see the module docs).
+#[derive(Clone, Debug)]
+pub struct ShardedCsr {
+    n: usize,
+    shards: Vec<Shard>,
+    /// The boundary-row exchange plan, exposed for diagnostics and for a
+    /// future multi-process transport.
+    pub halo_plan: HaloPlan,
+}
+
+impl ShardedCsr {
+    /// Partition `a`'s rows into `s` contiguous shards (first shards take
+    /// the remainder; shards past the row count come out empty, so any
+    /// `s ≥ 1` is valid for any size) and precompute each shard's local
+    /// block + halo plan. `a` must be square — the halo notion pairs
+    /// matrix columns with owned bundle rows.
+    pub fn partition(a: &CsrMat, s: usize) -> ShardedCsr {
+        assert!(s >= 1, "shard count must be at least 1");
+        assert!(a.is_square(), "sharding needs a square operator");
+        let n = a.rows();
+        let base = n / s;
+        let rem = n % s;
+        let mut shards = Vec::with_capacity(s);
+        let mut recv = Vec::with_capacity(s);
+        let mut start = 0usize;
+        for i in 0..s {
+            let rows = base + usize::from(i < rem);
+            let end = start + rows;
+            // Halo: every column referenced outside the own range.
+            let mut halo: Vec<usize> = Vec::new();
+            for r in start..end {
+                for &c in a.row(r).0 {
+                    let c = c as usize;
+                    if c < start || c >= end {
+                        halo.push(c);
+                    }
+                }
+            }
+            halo.sort_unstable();
+            halo.dedup();
+            // Local panel rows: sorted union of halo and the own range —
+            // halo-below, then own, then halo-above keeps global order.
+            let split = halo.partition_point(|&c| c < start);
+            let mut panel_rows = Vec::with_capacity(halo.len() + rows);
+            panel_rows.extend_from_slice(&halo[..split]);
+            panel_rows.extend(start..end);
+            panel_rows.extend_from_slice(&halo[split..]);
+            // Remap columns into panel space. The map is monotone, so the
+            // local rows keep strictly-increasing columns and the local
+            // block passes `CsrMat::new` validation.
+            let mut indptr = Vec::with_capacity(rows + 1);
+            indptr.push(0usize);
+            let mut indices: Vec<u32> = Vec::new();
+            let mut values: Vec<f64> = Vec::new();
+            for r in start..end {
+                let (cols, vals) = a.row(r);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    let local = panel_rows
+                        .binary_search(&(c as usize))
+                        .expect("every referenced column is in the panel");
+                    indices.push(local as u32);
+                    values.push(v);
+                }
+                indptr.push(indices.len());
+            }
+            let local = CsrMat::new(rows, panel_rows.len(), indptr, indices, values);
+            shards.push(Shard { row_start: start, rows, local, panel_rows });
+            recv.push(halo);
+            start = end;
+        }
+        debug_assert_eq!(start, n, "shards must tile the rows");
+        ShardedCsr { n, shards, halo_plan: HaloPlan { recv } }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Rows owned per shard (zeros included).
+    pub fn shard_lens(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.rows).collect()
+    }
+
+    /// `C = A · B` through the two-phase sharded path. Phase 1 gathers
+    /// every shard's local panel (the halo exchange); phase 2 runs the
+    /// per-shard SpMMs concurrently into disjoint output row ranges, each
+    /// shard further row-split across up to `threads` workers. Bitwise
+    /// equal to [`super::sparse::spmm`] for every (S, threads).
+    pub fn apply(&self, b: &DMat, threads: usize) -> DMat {
+        let mut c = DMat::zeros(self.n, b.cols());
+        self.apply_into(b, &mut c, threads);
+        c
+    }
+
+    /// [`Self::apply`] into an existing buffer.
+    pub fn apply_into(&self, b: &DMat, c: &mut DMat, threads: usize) {
+        assert_eq!(self.n, b.rows(), "sharded spmm shape mismatch");
+        let k = b.cols();
+        assert_eq!((c.rows(), c.cols()), (self.n, k), "sharded spmm output shape mismatch");
+        // Phase 1: halo exchange — assemble each shard's local panel.
+        let panels: Vec<DMat> = self.shards.iter().map(|sh| sh.gather_panel(b)).collect();
+        // Phase 2: independent per-shard SpMM. Each shard's own rows are
+        // further split across `threads` sub-ranges; the flattened
+        // (shard, sub-range) spans tile the output exactly, keeping empty
+        // shards in the tiling so output rows stay aligned.
+        let kernel = kernel_for_width(k);
+        let mut lens: Vec<usize> = Vec::new();
+        let mut spans: Vec<(usize, usize, usize)> = Vec::new();
+        for (si, sh) in self.shards.iter().enumerate() {
+            let subs = row_shards(sh.rows, threads);
+            if subs.is_empty() {
+                lens.push(0);
+                spans.push((si, 0, 0));
+                continue;
+            }
+            for (&len, &r0) in subs.iter().zip(shard_starts(&subs).iter()) {
+                lens.push(len * k);
+                spans.push((si, r0, r0 + len));
+            }
+        }
+        parallel_shards(c.data_mut(), &lens, |idx, chunk| {
+            let (si, r0, r1) = spans[idx];
+            if r0 == r1 {
+                return;
+            }
+            kernel(&self.shards[si].local, &panels[si], chunk, r0, r1);
+        });
+    }
+
+    /// First global row owned by shard `s` (diagnostics).
+    pub fn shard_row_start(&self, s: usize) -> usize {
+        self.shards[s].row_start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sparse::spmm;
+    use crate::util::rng::Rng;
+
+    fn random_bundle(seed: u64, r: usize, c: usize) -> DMat {
+        let mut rng = Rng::new(seed);
+        DMat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    fn bitwise_eq(a: &DMat, b: &DMat) -> bool {
+        a.rows() == b.rows()
+            && a.cols() == b.cols()
+            && a.data().iter().zip(b.data().iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn sharded_apply_bitwise_matches_unsharded() {
+        let g = crate::graph::gen::cliques(&crate::graph::gen::CliqueSpec {
+            n: 48,
+            k: 4,
+            max_short_circuit: 5,
+            seed: 11,
+        })
+        .graph;
+        let l = g.laplacian_csr();
+        for &s in &[1usize, 2, 3, 7] {
+            let sharded = ShardedCsr::partition(&l, s);
+            assert_eq!(sharded.shard_lens().iter().sum::<usize>(), 48);
+            for k in [1usize, 8, 17] {
+                let b = random_bundle(k as u64 + 7, 48, k);
+                let want = spmm(&l, &b, 1);
+                for &workers in &[1usize, 2, 8] {
+                    let got = sharded.apply(&b, workers);
+                    assert!(bitwise_eq(&got, &want), "S={s}, k={k}, {workers} workers");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_shards_than_rows_keeps_empty_shards_addressable() {
+        // n = 5, S = 7: shards 5 and 6 own zero rows but stay in the
+        // partition (and contribute nothing to the output).
+        let l = CsrMat::from_triplets(
+            5,
+            5,
+            &[(0, 0, 1.0), (0, 4, -1.0), (2, 2, 2.0), (4, 0, -1.0), (4, 4, 1.0)],
+        );
+        let sharded = ShardedCsr::partition(&l, 7);
+        assert_eq!(sharded.shard_count(), 7);
+        assert_eq!(sharded.shard_lens(), vec![1, 1, 1, 1, 1, 0, 0]);
+        let b = random_bundle(3, 5, 4);
+        let want = spmm(&l, &b, 1);
+        for &workers in &[1usize, 4] {
+            assert!(bitwise_eq(&sharded.apply(&b, workers), &want));
+        }
+    }
+
+    #[test]
+    fn halo_plan_names_exactly_the_boundary_rows() {
+        // Ring 0-1-2-3: split into two shards of two rows each; each
+        // shard's halo is its two cross-boundary neighbours.
+        let l = CsrMat::from_triplets(
+            4,
+            4,
+            &[
+                (0, 0, 2.0),
+                (0, 1, -1.0),
+                (0, 3, -1.0),
+                (1, 0, -1.0),
+                (1, 1, 2.0),
+                (1, 2, -1.0),
+                (2, 1, -1.0),
+                (2, 2, 2.0),
+                (2, 3, -1.0),
+                (3, 0, -1.0),
+                (3, 2, -1.0),
+                (3, 3, 2.0),
+            ],
+        );
+        let sharded = ShardedCsr::partition(&l, 2);
+        assert_eq!(sharded.halo_plan.recv, vec![vec![2, 3], vec![0, 1]]);
+        assert_eq!(sharded.halo_plan.halo_rows(), 4);
+        let b = random_bundle(5, 4, 3);
+        assert!(bitwise_eq(&sharded.apply(&b, 2), &spmm(&l, &b, 1)));
+    }
+
+    #[test]
+    fn isolated_nodes_and_structural_zeros_survive_sharding() {
+        // Node 1 is fully isolated (no stored entries at all), node 0
+        // carries only a structural zero diagonal.
+        let l = CsrMat::from_triplets(
+            6,
+            6,
+            &[(0, 0, 0.0), (2, 2, 1.0), (2, 5, -1.0), (5, 2, -1.0), (5, 5, 1.0)],
+        );
+        for &s in &[1usize, 2, 7] {
+            let sharded = ShardedCsr::partition(&l, s);
+            let b = random_bundle(9, 6, 8);
+            let want = spmm(&l, &b, 1);
+            for &workers in &[1usize, 2, 8] {
+                let got = sharded.apply(&b, workers);
+                assert!(bitwise_eq(&got, &want), "S={s}, {workers} workers");
+                for row in [0usize, 1, 3, 4] {
+                    assert!(got.row(row).iter().all(|x| x.to_bits() == 0), "row {row}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_matrix_partitions() {
+        let l = CsrMat::from_triplets(0, 0, &[]);
+        let sharded = ShardedCsr::partition(&l, 3);
+        assert_eq!(sharded.shard_lens(), vec![0, 0, 0]);
+        assert_eq!(sharded.halo_plan.halo_rows(), 0);
+        let b = DMat::zeros(0, 4);
+        let got = sharded.apply(&b, 2);
+        assert_eq!((got.rows(), got.cols()), (0, 4));
+    }
+}

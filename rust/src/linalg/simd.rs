@@ -1,0 +1,226 @@
+//! Build-time SIMD backend for the skinny-SpMM kernel family.
+//!
+//! The register-blocked kernels in [`super::sparse`] keep all `k ≤ 16`
+//! output columns of a row in a `[f64; K]` accumulator while sweeping the
+//! row's nonzeros. That inner loop is embarrassingly lane-parallel **across
+//! the bundle-width dimension**: each output column is an independent
+//! accumulator chain, so packing four of them into a `std::simd` vector
+//! (`Simd<f64, 4>`) preserves the exact per-element floating-point
+//! reduction — same CSR entry order, same zero skip, one multiply and one
+//! add per entry per lane. No FMA is ever emitted (`mul_add`'s single
+//! rounding would diverge from the scalar mul-then-add sequence), so the
+//! SIMD family is **bitwise identical** to the unrolled kernels and to the
+//! streaming reference.
+//!
+//! Selection happens at build time, not run time:
+//!
+//! * `--features simd` (nightly toolchains; the `portable_simd` feature
+//!   gate) — [`spmm_kernel`] / [`step_kernel`] return the `Simd<f64, 4>`
+//!   implementations and `sparse::{kernel_for_width, step_kernel_for_width}`
+//!   dispatch to them for every blocked width.
+//! * default (stable) — both hooks return `None` and the existing unrolled
+//!   kernels run; those compile to good autovectorized code on their own.
+//!
+//! [`backend_name`] reports which backend a binary carries (`sped info`,
+//! bench JSON metadata), because the two are indistinguishable by output.
+
+use super::sparse::{RowRangeKernel, StepRowRangeKernel};
+
+/// Which SpMM kernel backend this build carries: `"portable-simd"` under
+/// `--features simd`, `"unrolled"` otherwise. Purely informational — both
+/// backends are bitwise-identical.
+pub fn backend_name() -> &'static str {
+    if cfg!(feature = "simd") {
+        "portable-simd"
+    } else {
+        "unrolled"
+    }
+}
+
+/// SIMD SpMM kernel for bundle width `k`, or `None` when this build (or
+/// this width — only 1..=16 are blocked) has no SIMD kernel and the caller
+/// should fall back to the unrolled/streaming family.
+#[cfg(not(feature = "simd"))]
+pub(crate) fn spmm_kernel(_k: usize) -> Option<RowRangeKernel> {
+    None
+}
+
+/// SIMD fused-step kernel for bundle width `k` (see [`spmm_kernel`]).
+#[cfg(not(feature = "simd"))]
+pub(crate) fn step_kernel(_k: usize) -> Option<StepRowRangeKernel> {
+    None
+}
+
+#[cfg(feature = "simd")]
+pub(crate) fn spmm_kernel(k: usize) -> Option<RowRangeKernel> {
+    macro_rules! widths {
+        ($($w:literal),*) => {
+            match k {
+                $($w => Some(vec_impl::spmm_row_range_simd::<$w> as RowRangeKernel),)*
+                _ => None,
+            }
+        };
+    }
+    widths!(1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16)
+}
+
+#[cfg(feature = "simd")]
+pub(crate) fn step_kernel(k: usize) -> Option<StepRowRangeKernel> {
+    macro_rules! widths {
+        ($($w:literal),*) => {
+            match k {
+                $($w => Some(vec_impl::spmm_step_row_range_simd::<$w> as StepRowRangeKernel),)*
+                _ => None,
+            }
+        };
+    }
+    widths!(1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16)
+}
+
+#[cfg(feature = "simd")]
+mod vec_impl {
+    use crate::linalg::dmat::DMat;
+    use crate::linalg::sparse::{for_each_nonzero, CsrMat};
+    use std::simd::Simd;
+
+    /// Lane count: 4 × f64 (AVX2 / NEON-pair width). Portable SIMD lowers
+    /// wider or narrower targets to the same lane-wise operation sequence,
+    /// so the bitwise contract does not depend on the host ISA.
+    const LANES: usize = 4;
+    /// `K ≤ 16` ⇒ at most `16 / LANES` full vectors per row.
+    const MAX_CHUNKS: usize = 16 / LANES;
+
+    /// SIMD SpMM row-range kernel for fixed width `K`: the `[f64; K]`
+    /// accumulator of the unrolled kernel becomes `K / 4` vector
+    /// accumulators plus a `K % 4` scalar tail. Per output element the
+    /// reduction is the identical [`for_each_nonzero`] sequence — vector
+    /// lanes never interact, and mul/add stay separate (no FMA).
+    pub(super) fn spmm_row_range_simd<const K: usize>(
+        a: &CsrMat,
+        b: &DMat,
+        c_rows: &mut [f64],
+        r0: usize,
+        r1: usize,
+    ) {
+        debug_assert_eq!(b.cols(), K);
+        debug_assert_eq!(a.cols(), b.rows());
+        debug_assert_eq!(c_rows.len(), (r1 - r0) * K);
+        let bd = b.data();
+        let chunks = K / LANES;
+        let rem = K % LANES;
+        debug_assert!(chunks <= MAX_CHUNKS && rem < LANES);
+        for i in r0..r1 {
+            let mut acc = [Simd::<f64, LANES>::splat(0.0); MAX_CHUNKS];
+            let mut tail = [0.0f64; LANES - 1];
+            for_each_nonzero(a, i, |v, j| {
+                let brow = &bd[j * K..(j + 1) * K];
+                let vs = Simd::<f64, LANES>::splat(v);
+                for c in 0..chunks {
+                    let bv = Simd::<f64, LANES>::from_slice(&brow[c * LANES..]);
+                    acc[c] = acc[c] + vs * bv;
+                }
+                for t in 0..rem {
+                    tail[t] += v * brow[chunks * LANES + t];
+                }
+            });
+            let out = &mut c_rows[(i - r0) * K..(i - r0 + 1) * K];
+            for c in 0..chunks {
+                acc[c].copy_to_slice(&mut out[c * LANES..(c + 1) * LANES]);
+            }
+            for t in 0..rem {
+                out[chunks * LANES + t] = tail[t];
+            }
+        }
+    }
+
+    /// SIMD fused-step row-range kernel for fixed width `K`: the SpMM
+    /// accumulation above plus the `c = c·β + α·w + γ·u` combine, both in
+    /// vector registers, matching the scalar kernel's conditional skips
+    /// (zero-valued `α`/`γ` terms are not applied at all).
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn spmm_step_row_range_simd<const K: usize>(
+        a: &CsrMat,
+        w: &DMat,
+        u: &DMat,
+        c_rows: &mut [f64],
+        r0: usize,
+        r1: usize,
+        alpha: f64,
+        beta: f64,
+        gamma: f64,
+    ) {
+        debug_assert_eq!(w.cols(), K);
+        debug_assert_eq!(a.cols(), w.rows());
+        debug_assert_eq!(c_rows.len(), (r1 - r0) * K);
+        let wd = w.data();
+        let ud = u.data();
+        let chunks = K / LANES;
+        let rem = K % LANES;
+        debug_assert!(chunks <= MAX_CHUNKS && rem < LANES);
+        let alpha_v = Simd::<f64, LANES>::splat(alpha);
+        let beta_v = Simd::<f64, LANES>::splat(beta);
+        let gamma_v = Simd::<f64, LANES>::splat(gamma);
+        for i in r0..r1 {
+            let mut acc = [Simd::<f64, LANES>::splat(0.0); MAX_CHUNKS];
+            let mut tail = [0.0f64; LANES - 1];
+            for_each_nonzero(a, i, |v, j| {
+                let wrow = &wd[j * K..(j + 1) * K];
+                let vs = Simd::<f64, LANES>::splat(v);
+                for c in 0..chunks {
+                    let wv = Simd::<f64, LANES>::from_slice(&wrow[c * LANES..]);
+                    acc[c] = acc[c] + vs * wv;
+                }
+                for t in 0..rem {
+                    tail[t] += v * wrow[chunks * LANES + t];
+                }
+            });
+            let wrow = &wd[i * K..(i + 1) * K];
+            let urow = &ud[i * K..(i + 1) * K];
+            let out = &mut c_rows[(i - r0) * K..(i - r0 + 1) * K];
+            for c in 0..chunks {
+                let mut x = acc[c] * beta_v;
+                if alpha != 0.0 {
+                    x = x + alpha_v * Simd::<f64, LANES>::from_slice(&wrow[c * LANES..]);
+                }
+                if gamma != 0.0 {
+                    x = x + gamma_v * Simd::<f64, LANES>::from_slice(&urow[c * LANES..]);
+                }
+                x.copy_to_slice(&mut out[c * LANES..(c + 1) * LANES]);
+            }
+            for t in 0..rem {
+                let idx = chunks * LANES + t;
+                let mut x = tail[t] * beta;
+                if alpha != 0.0 {
+                    x += alpha * wrow[idx];
+                }
+                if gamma != 0.0 {
+                    x += gamma * urow[idx];
+                }
+                out[idx] = x;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn backend_matches_compiled_features() {
+        let want = if cfg!(feature = "simd") { "portable-simd" } else { "unrolled" };
+        assert_eq!(super::backend_name(), want);
+    }
+
+    #[test]
+    fn dispatch_agrees_with_backend() {
+        // Blocked widths carry a SIMD kernel exactly when the feature is
+        // on; everything else always falls back.
+        for k in 1..=16usize {
+            assert_eq!(super::spmm_kernel(k).is_some(), cfg!(feature = "simd"), "k={k}");
+            assert_eq!(super::step_kernel(k).is_some(), cfg!(feature = "simd"), "k={k}");
+        }
+        for k in [0usize, 17, 64] {
+            assert!(super::spmm_kernel(k).is_none(), "k={k}");
+            assert!(super::step_kernel(k).is_none(), "k={k}");
+        }
+    }
+}

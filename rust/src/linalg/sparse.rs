@@ -73,21 +73,42 @@ impl CsrMat {
         indices: Vec<u32>,
         values: Vec<f64>,
     ) -> CsrMat {
-        assert_eq!(indptr.len(), rows + 1, "indptr length");
-        assert_eq!(indptr[0], 0, "indptr must start at 0");
-        assert_eq!(*indptr.last().unwrap(), indices.len(), "indptr must end at nnz");
-        assert_eq!(indices.len(), values.len(), "indices/values length mismatch");
-        for r in 0..rows {
-            assert!(indptr[r] <= indptr[r + 1], "indptr not monotone at row {r}");
-            let row = &indices[indptr[r]..indptr[r + 1]];
+        let m = CsrMat { rows, cols, indptr, indices, values };
+        m.assert_valid();
+        m
+    }
+
+    /// The full invariant validation pass `new` runs: indptr shape and
+    /// monotonicity, strictly increasing (hence duplicate-free) column
+    /// indices within each row, and columns `< cols`. Panic messages name
+    /// the offending row. Exposed so build paths that patch the arrays in
+    /// place (e.g. `graph::delta`) can re-check the invariants they are
+    /// responsible for preserving.
+    pub fn assert_valid(&self) {
+        assert_eq!(self.indptr.len(), self.rows + 1, "indptr length");
+        assert_eq!(self.indptr[0], 0, "indptr must start at 0");
+        assert_eq!(*self.indptr.last().unwrap(), self.indices.len(), "indptr must end at nnz");
+        assert_eq!(self.indices.len(), self.values.len(), "indices/values length mismatch");
+        for r in 0..self.rows {
+            assert!(self.indptr[r] <= self.indptr[r + 1], "indptr not monotone at row {r}");
+            let row = &self.indices[self.indptr[r]..self.indptr[r + 1]];
             for w in row.windows(2) {
                 assert!(w[0] < w[1], "row {r}: columns not strictly increasing");
             }
             if let Some(&last) = row.last() {
-                assert!((last as usize) < cols, "row {r}: column {last} out of range");
+                assert!((last as usize) < self.cols, "row {r}: column {last} out of range");
             }
         }
-        CsrMat { rows, cols, indptr, indices, values }
+    }
+
+    /// [`Self::assert_valid`] in debug builds only — the form the in-place
+    /// patching hot paths call per batch (release builds skip the `O(nnz)`
+    /// sweep).
+    #[inline]
+    pub fn debug_assert_valid(&self) {
+        if cfg!(debug_assertions) {
+            self.assert_valid();
+        }
     }
 
     /// Build from `(row, col, value)` triplets; duplicates have their
@@ -233,11 +254,11 @@ impl CsrMat {
 /// `(value, column)` of row `i` in ascending-column CSR order, skipping
 /// zero values to match the dense kernels' `aik == 0.0` skip. Every sparse
 /// kernel in this module — streaming SpMM, the register-blocked SpMM
-/// family, and SpMV — reduces through this helper, so there is exactly one
-/// reference semantics (entry order + zero skip) for the bitwise contracts
-/// to pin down.
+/// family, SpMV, and the [`super::simd`] backend — reduces through this
+/// helper, so there is exactly one reference semantics (entry order + zero
+/// skip) for the bitwise contracts to pin down.
 #[inline(always)]
-fn for_each_nonzero(a: &CsrMat, i: usize, mut visit: impl FnMut(f64, usize)) {
+pub(crate) fn for_each_nonzero(a: &CsrMat, i: usize, mut visit: impl FnMut(f64, usize)) {
     for idx in a.indptr[i]..a.indptr[i + 1] {
         let v = a.values[idx];
         if v == 0.0 {
@@ -304,12 +325,18 @@ fn spmm_row_range_blocked<const K: usize>(
 
 /// A row-range SpMM kernel (the unit of work the serial and sharded
 /// dispatch paths share).
-type RowRangeKernel = fn(&CsrMat, &DMat, &mut [f64], usize, usize);
+pub(crate) type RowRangeKernel = fn(&CsrMat, &DMat, &mut [f64], usize, usize);
 
 /// Kernel selection by bundle width: a monomorphized register-blocked
 /// kernel for each k ∈ 1..=16 (the solver's `k ≤ 16` skinny regime, same
-/// split as the dense `matmul_skinny_range`), streaming above that.
-fn kernel_for_width(k: usize) -> RowRangeKernel {
+/// split as the dense `matmul_skinny_range`), streaming above that. Under
+/// `--features simd` the blocked widths come from the [`super::simd`]
+/// portable-SIMD family instead — bitwise-identical, so callers cannot
+/// observe which backend the build selected except through throughput.
+pub(crate) fn kernel_for_width(k: usize) -> RowRangeKernel {
+    if let Some(kernel) = super::simd::spmm_kernel(k) {
+        return kernel;
+    }
     macro_rules! blocked_widths {
         ($($w:literal),*) => {
             match k {
@@ -475,12 +502,16 @@ fn spmm_step_row_range_blocked<const K: usize>(
 }
 
 /// A row-range fused-step kernel (see [`spmm_step_into`]).
-type StepRowRangeKernel =
+pub(crate) type StepRowRangeKernel =
     fn(&CsrMat, &DMat, &DMat, &mut [f64], usize, usize, f64, f64, f64);
 
 /// Fused-step kernel selection by bundle width — the same 1..=16 blocked /
-/// streaming-above split as [`kernel_for_width`].
-fn step_kernel_for_width(k: usize) -> StepRowRangeKernel {
+/// streaming-above split as [`kernel_for_width`], with the same
+/// build-time [`super::simd`] backend substitution.
+pub(crate) fn step_kernel_for_width(k: usize) -> StepRowRangeKernel {
+    if let Some(kernel) = super::simd::step_kernel(k) {
+        return kernel;
+    }
     macro_rules! blocked_widths {
         ($($w:literal),*) => {
             match k {
@@ -559,6 +590,219 @@ pub fn spmm_step(
     let mut c = DMat::zeros(a.rows, w.cols());
     spmm_step_into(a, w, u, alpha, beta, gamma, &mut c, threads);
     c
+}
+
+// ---------------------------------------------------------------------------
+// Mixed precision: f32 storage, f64 accumulation.
+// ---------------------------------------------------------------------------
+
+/// CSR matrix with `f32` stored values — the mixed-precision operand for
+/// the inexact iterative stages (`Precision::Mixed`). Skinny SpMM is
+/// memory-bandwidth-bound, so halving the bytes behind both the matrix
+/// values and the bundle panels roughly doubles effective bandwidth; the
+/// per-entry products and the α/β/γ combine still run in `f64` (an
+/// `f32 × f32` product is exact in `f64`), so the only new rounding is one
+/// `f32` store per element per sweep — the term
+/// [`crate::transforms::mixed_error_budget`] documents.
+///
+/// Structural invariants are inherited from the source [`CsrMat`], which
+/// validated them on construction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatF32 {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrMatF32 {
+    /// Demote a validated f64 CSR matrix to f32 storage (one rounding per
+    /// stored value).
+    pub fn from_f64(a: &CsrMat) -> CsrMatF32 {
+        CsrMatF32 {
+            rows: a.rows,
+            cols: a.cols,
+            indptr: a.indptr.clone(),
+            indices: a.indices.clone(),
+            values: a.values.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+}
+
+/// Mixed-precision counterpart of [`for_each_nonzero`]: same ascending-CSR
+/// entry order, same zero skip (an f64 value that rounded to `0.0f32`
+/// contributes nothing either way).
+#[inline(always)]
+fn for_each_nonzero_f32(a: &CsrMatF32, i: usize, mut visit: impl FnMut(f32, usize)) {
+    for idx in a.indptr[i]..a.indptr[i + 1] {
+        let v = a.values[idx];
+        if v == 0.0 {
+            continue;
+        }
+        visit(v, a.indices[idx] as usize);
+    }
+}
+
+/// A row-range mixed-precision fused-step kernel: f32 matrix values and
+/// bundle panels, f64 accumulators and combine, one f32 rounding on store.
+type MixedStepKernel =
+    fn(&CsrMatF32, &[f32], &[f32], &mut [f32], usize, usize, usize, f64, f64, f64);
+
+/// Streaming mixed-precision fused step (any bundle width `k`).
+#[allow(clippy::too_many_arguments)]
+fn spmm_step_mixed_row_range_streaming(
+    a: &CsrMatF32,
+    w: &[f32],
+    u: &[f32],
+    c_rows: &mut [f32],
+    k: usize,
+    r0: usize,
+    r1: usize,
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+) {
+    debug_assert_eq!(w.len(), a.cols * k);
+    debug_assert_eq!(c_rows.len(), (r1 - r0) * k);
+    let mut acc = vec![0.0f64; k];
+    for i in r0..r1 {
+        acc.fill(0.0);
+        for_each_nonzero_f32(a, i, |v, j| {
+            let wrow = &w[j * k..(j + 1) * k];
+            for t in 0..k {
+                acc[t] += v as f64 * wrow[t] as f64;
+            }
+        });
+        let wrow = &w[i * k..(i + 1) * k];
+        let urow = &u[i * k..(i + 1) * k];
+        let crow = &mut c_rows[(i - r0) * k..(i - r0 + 1) * k];
+        for t in 0..k {
+            let mut x = acc[t] * beta;
+            if alpha != 0.0 {
+                x += alpha * wrow[t] as f64;
+            }
+            if gamma != 0.0 {
+                x += gamma * urow[t] as f64;
+            }
+            crow[t] = x as f32;
+        }
+    }
+}
+
+/// Register-blocked mixed-precision fused step for a fixed width `K` —
+/// the same monomorphized family shape as [`spmm_step_row_range_blocked`],
+/// with `[f64; K]` accumulators over f32 operands.
+#[allow(clippy::too_many_arguments)]
+fn spmm_step_mixed_row_range_blocked<const K: usize>(
+    a: &CsrMatF32,
+    w: &[f32],
+    u: &[f32],
+    c_rows: &mut [f32],
+    k: usize,
+    r0: usize,
+    r1: usize,
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+) {
+    debug_assert_eq!(k, K);
+    debug_assert_eq!(w.len(), a.cols * K);
+    debug_assert_eq!(c_rows.len(), (r1 - r0) * K);
+    for i in r0..r1 {
+        let mut acc = [0.0f64; K];
+        for_each_nonzero_f32(a, i, |v, j| {
+            let wrow: &[f32; K] = w[j * K..(j + 1) * K].try_into().unwrap();
+            for t in 0..K {
+                acc[t] += v as f64 * wrow[t] as f64;
+            }
+        });
+        let wrow: &[f32; K] = w[i * K..(i + 1) * K].try_into().unwrap();
+        let urow: &[f32; K] = u[i * K..(i + 1) * K].try_into().unwrap();
+        let crow = &mut c_rows[(i - r0) * K..(i - r0 + 1) * K];
+        for t in 0..K {
+            let mut x = acc[t] * beta;
+            if alpha != 0.0 {
+                x += alpha * wrow[t] as f64;
+            }
+            if gamma != 0.0 {
+                x += gamma * urow[t] as f64;
+            }
+            crow[t] = x as f32;
+        }
+    }
+}
+
+/// Mixed-step kernel selection — the same 1..=16 blocked / streaming-above
+/// split as [`step_kernel_for_width`].
+fn mixed_step_kernel_for_width(k: usize) -> MixedStepKernel {
+    macro_rules! blocked_widths {
+        ($($w:literal),*) => {
+            match k {
+                $($w => spmm_step_mixed_row_range_blocked::<$w>,)*
+                _ => spmm_step_mixed_row_range_streaming,
+            }
+        };
+    }
+    blocked_widths!(1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16)
+}
+
+/// Mixed-precision fused solver step: `C = α·W + β·(A·W) + γ·U` with f32
+/// storage (matrix values and all three panels) and f64 accumulation, in
+/// one pass, row-sharded across `threads` workers.
+///
+/// Same shape and operand conventions as [`spmm_step_into`] (`A` square,
+/// panels row-major `n×k`, `γ = 0` skips `U` so callers may pass `w`
+/// again). The determinism contract carries over: output is **bitwise
+/// identical for every worker count** — shards partition output rows and
+/// each row reduces in the same ascending-CSR order. What mixed precision
+/// gives up is agreement with the f64 kernels, bounded by one f32
+/// rounding per element per sweep
+/// ([`crate::transforms::mixed_error_budget`]); it is therefore only
+/// reachable from the inexact iterative stages, never the exact
+/// transforms or ground-truth paths.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_step_mixed_into(
+    a: &CsrMatF32,
+    w: &[f32],
+    u: &[f32],
+    k: usize,
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+    c: &mut [f32],
+    threads: usize,
+) {
+    assert!(a.is_square(), "spmm_step_mixed needs a square operator");
+    assert_eq!(w.len(), a.cols * k, "spmm_step_mixed W shape mismatch");
+    assert_eq!(u.len(), a.rows * k, "spmm_step_mixed U shape mismatch");
+    assert_eq!(c.len(), a.rows * k, "spmm_step_mixed output shape mismatch");
+    let kernel = mixed_step_kernel_for_width(k);
+    let m = a.rows;
+    let shards = row_shards(m, threads);
+    if shards.len() <= 1 {
+        kernel(a, w, u, c, k, 0, m, alpha, beta, gamma);
+        return;
+    }
+    let starts = shard_starts(&shards);
+    let elem_lens: Vec<usize> = shards.iter().map(|&len| len * k).collect();
+    parallel_shards(c, &elem_lens, |idx, chunk| {
+        let r0 = starts[idx];
+        kernel(a, w, u, chunk, k, r0, r0 + shards[idx], alpha, beta, gamma);
+    });
 }
 
 /// Row-range SpMV kernel (shared serial/sharded inner loop) — the width-1
@@ -889,5 +1133,83 @@ mod tests {
         let c = spmm(&one, &b, 4);
         assert_eq!(c.row(0), &[6.0, -3.0]);
         assert_eq!(spmv(&one, &[2.0], 4), vec![6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row 1: columns not strictly increasing")]
+    fn unsorted_columns_panic_names_the_row() {
+        // Row 1 carries [2, 1] — out of order. The validation pass must
+        // say *which* row, not just that something is wrong.
+        CsrMat::new(2, 3, vec![0, 1, 3], vec![0, 2, 1], vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row 0: columns not strictly increasing")]
+    fn duplicate_columns_panic_names_the_row() {
+        // Duplicates fail the same strict-< check as unsorted columns.
+        CsrMat::new(1, 3, vec![0, 2], vec![1, 1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row 2: column 5 out of range")]
+    fn out_of_range_column_panics_naming_the_row() {
+        CsrMat::new(3, 3, vec![0, 0, 0, 1], vec![5], vec![1.0]);
+    }
+
+    #[test]
+    fn assert_valid_accepts_every_builder_output() {
+        // The validation pass is re-runnable on matrices the builders
+        // produced (the contract the in-place delta patching relies on).
+        random_sym_csr(9, 17, 0.3).assert_valid();
+        CsrMat::from_triplets(0, 0, &[]).assert_valid();
+        let mut m = random_sym_csr(10, 8, 0.4);
+        m.scale_values(0.5);
+        m.add_diag(1.0);
+        m.debug_assert_valid();
+    }
+
+    #[test]
+    fn mixed_step_tracks_f64_within_f32_budget() {
+        // The mixed kernel agrees with the f64 fused step to f32-rounding
+        // accuracy: operands are rounded once to f32, products/combine run
+        // in f64, and one f32 rounding lands on the store.
+        let a = random_sym_csr(51, 23, 0.3);
+        let a32 = CsrMatF32::from_f64(&a);
+        assert_eq!((a32.rows(), a32.cols(), a32.nnz()), (23, 23, a.nnz()));
+        for k in [1usize, 8, 17] {
+            let w = random_bundle(k as u64 + 500, 23, k);
+            let u = random_bundle(k as u64 + 501, 23, k);
+            let (alpha, beta, gamma) = (-1.3, 0.7, -1.0);
+            let want = spmm_step(&a, &w, &u, alpha, beta, gamma, 1);
+            let (w32, u32) = (w.to_f32(), u.to_f32());
+            let mut c32 = vec![0.0f32; 23 * k];
+            spmm_step_mixed_into(&a32, &w32, &u32, k, alpha, beta, gamma, &mut c32, 1);
+            let scale = want.data().iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1.0);
+            for (got, wv) in c32.iter().zip(want.data()) {
+                assert!(
+                    ((*got as f64) - wv).abs() <= 256.0 * f32::EPSILON as f64 * scale,
+                    "k={k}: mixed {got} vs f64 {wv}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_step_is_bitwise_worker_invariant() {
+        let a32 = CsrMatF32::from_f64(&random_sym_csr(52, 29, 0.3));
+        for k in [1usize, 8, 17] {
+            let w: Vec<f32> = random_bundle(k as u64 + 600, 29, k).to_f32();
+            let u: Vec<f32> = random_bundle(k as u64 + 601, 29, k).to_f32();
+            let mut serial = vec![0.0f32; 29 * k];
+            spmm_step_mixed_into(&a32, &w, &u, k, 2.0, -0.5, 1.0, &mut serial, 1);
+            for workers in [2usize, 8] {
+                let mut c = vec![0.0f32; 29 * k];
+                spmm_step_mixed_into(&a32, &w, &u, k, 2.0, -0.5, 1.0, &mut c, workers);
+                assert!(
+                    c.iter().zip(serial.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "mixed step not worker-invariant at k={k}, {workers} workers"
+                );
+            }
+        }
     }
 }

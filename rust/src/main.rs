@@ -17,7 +17,7 @@
 use sped::cluster::{adjusted_rand_index, max_conductance, normalized_mutual_info};
 use sped::coordinator::experiments::{self, ExperimentOptions};
 use sped::pipeline::{Backend, Pipeline, PipelineConfig};
-use sped::transforms::{OpMode, PolyBasis, TransformKind};
+use sped::transforms::{OpMode, PolyBasis, Precision, TransformKind};
 use sped::util::cli::ArgSpec;
 use sped::util::config::Config;
 
@@ -38,6 +38,7 @@ fn main() {
         "walk-bench" => cmd_walk_bench(args),
         "gaps" => cmd_gaps(args),
         "artifacts" => cmd_artifacts(args),
+        "info" => cmd_info(args),
         "--help" | "-h" | "help" => {
             print_usage();
             Ok(())
@@ -70,6 +71,7 @@ fn print_usage() {
          \x20 walk-bench  walker-fleet estimator diagnostics (§4.3)\n\
          \x20 gaps        eigengap-dilation report (Table 2 effect)\n\
          \x20 artifacts   list the AOT artifact registry\n\
+         \x20 info        detected capabilities (SIMD backend, threads, precisions, features)\n\
          \n\
          Run `sped <SUBCOMMAND> --help` for options."
     );
@@ -142,6 +144,15 @@ fn pipeline_spec(spec: ArgSpec) -> ArgSpec {
         .opt("threads", "1", "worker threads for dense kernels (bitwise-identical output)")
         .opt("op", "dense", "dense (materialize p(L)) | sparse (matrix-free CSR operator)")
         .opt_choice(
+            "precision",
+            "f64",
+            &["f64", "double", "mixed", "f32"],
+            "SpMM sweep arithmetic: f64 = bitwise-deterministic historical path, \
+             mixed = f32 Laplacian/bundle storage with f64 accumulators (~half the \
+             kernel memory traffic; iterative sparse solves only, error bounded by \
+             the documented budget — requires --op sparse and --no-ground-truth)",
+        )
+        .opt_choice(
             "basis",
             "monomial",
             &["monomial", "mono", "horner", "chebyshev", "cheb"],
@@ -202,6 +213,9 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
     build.degree = sped::transforms::Degree::parse(
         &cfg.str_opt("pipeline.degree").unwrap_or_else(|| a.str("degree")),
         cfg.f64("pipeline.cheb_tol", a.f64("cheb-tol")),
+    )?;
+    build.precision = Precision::parse(
+        &cfg.str_opt("pipeline.precision").unwrap_or_else(|| a.str("precision")),
     )?;
     let backend = match a.str("backend").as_str() {
         "native" => Backend::Native,
@@ -367,26 +381,28 @@ fn cmd_cluster(mut args: Vec<String>) -> anyhow::Result<()> {
     let out = Pipeline::new(pcfg.clone()).run(&graph)?;
     match out.history.last() {
         Some(last) => println!(
-            "\ntransform {} | solver {} | op {} | basis {} | domain {} | degree {} | steps {} | subspace err {:.3e} | streak {}/{}",
+            "\ntransform {} | solver {} | op {} | basis {} | domain {} | degree {} | precision {} | steps {} | subspace err {:.3e} | streak {}/{}",
             pcfg.transform,
             pcfg.solver,
             pcfg.op_mode,
             pcfg.build.basis,
             pcfg.build.domain,
             pcfg.build.degree,
+            pcfg.build.precision,
             last.step,
             last.subspace_error,
             last.streak,
             pcfg.k
         ),
         None => println!(
-            "\ntransform {} | solver {} | op {} | basis {} | domain {} | degree {} | ran {} steps (ground-truth metrics skipped)",
+            "\ntransform {} | solver {} | op {} | basis {} | domain {} | degree {} | precision {} | ran {} steps (ground-truth metrics skipped)",
             pcfg.transform,
             pcfg.solver,
             pcfg.op_mode,
             pcfg.build.basis,
             pcfg.build.domain,
             pcfg.build.degree,
+            pcfg.build.precision,
             pcfg.steps
         ),
     }
@@ -853,6 +869,32 @@ fn cmd_gaps(mut args: Vec<String>) -> anyhow::Result<()> {
     for row in experiments::gap_report(&l, a.usize("k"))? {
         println!("{row}");
     }
+    Ok(())
+}
+
+fn cmd_info(mut args: Vec<String>) -> anyhow::Result<()> {
+    let _cfg = load_config(&mut args)?;
+    let spec = ArgSpec::new("sped info", "detected capabilities of this binary");
+    let _a = spec.parse(args).map_err(|e| anyhow::anyhow!(e))?;
+    let threads = std::thread::available_parallelism().map_or(1, |p| p.get());
+    println!("sped {} — capability report", env!("CARGO_PKG_VERSION"));
+    println!(
+        "  SIMD backend     : {} ({})",
+        sped::linalg::simd::backend_name(),
+        if cfg!(feature = "simd") {
+            "portable-SIMD kernels, nightly `--features simd` build"
+        } else {
+            "stable unrolled register-blocked kernels"
+        }
+    );
+    println!("  thread default   : {threads} (std::thread::available_parallelism)");
+    println!("  precisions       : f64 (default, bitwise-deterministic), mixed (f32 storage + f64 accumulators, --op sparse only)");
+    println!(
+        "  crate features   : xla={} simd={}",
+        cfg!(feature = "xla"),
+        cfg!(feature = "simd")
+    );
+    println!("  capability string: {}", sped::util::bench::capability_string());
     Ok(())
 }
 

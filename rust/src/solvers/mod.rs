@@ -18,8 +18,8 @@ use crate::linalg::dmat::{dot, normalize, DMat};
 use crate::linalg::matmul::matmul;
 use crate::linalg::metrics::{eigenvector_streak, subspace_error, ConvergenceHistory};
 use crate::linalg::qr::mgs_orthonormalize;
-use crate::linalg::sparse::CsrMat;
-use crate::transforms::{PolyBasis, PolySeries, SeriesForm, TransformKind};
+use crate::linalg::sparse::{spmm_step_mixed_into, CsrMat, CsrMatF32};
+use crate::transforms::{ChebSeries, PolyBasis, PolySeries, Precision, SeriesForm, TransformKind};
 
 pub mod ritz;
 pub mod stochastic;
@@ -40,6 +40,15 @@ pub trait MatVecOp {
     /// overrides this with its evaluated degree.
     fn sweeps_per_apply(&self) -> usize {
         1
+    }
+    /// The smallest relative residual this operator's arithmetic can
+    /// certify — `0` for full-precision operators (the default); the
+    /// mixed-precision matrix-free operator reports its documented f32
+    /// error budget ([`SparsePolyOp::mixed_budget`]). The Ritz solver
+    /// clamps its convergence tolerance to this floor so a mixed run
+    /// never spins on residuals below the arithmetic's resolution.
+    fn precision_floor(&self) -> f64 {
+        0.0
     }
 }
 
@@ -116,6 +125,9 @@ impl MatVecOp for DenseOp {
 pub struct SparsePolyOp {
     /// CSR of the (pre-scaled) Laplacian the polynomial is evaluated in.
     l: CsrMat,
+    /// f32 copy of `l` for the mixed-precision sweeps ([`Precision::Mixed`]
+    /// only; `None` on the default f64 path, which stays bitwise-identical).
+    l32: Option<CsrMatF32>,
     form: SparsePolyForm,
     /// Reversal shift λ* of eq 8.
     pub lambda_star: f64,
@@ -125,6 +137,11 @@ pub struct SparsePolyOp {
     pub kind: TransformKind,
     /// The polynomial basis `p(L)·V` is evaluated in.
     pub basis: PolyBasis,
+    /// Arithmetic precision of the SpMM sweeps (`--precision f64|mixed`).
+    /// [`Precision::Mixed`] stores the Laplacian and the recurrence panels
+    /// in f32 with f64 accumulators — same recurrences, one f32 rounding
+    /// per element per sweep, bounded by [`Self::mixed_budget`].
+    pub precision: Precision,
     pub threads: usize,
 }
 
@@ -209,7 +226,21 @@ impl SparsePolyOp {
             }
         };
         let lambda_star = kind.lambda_star(est.rho);
-        Ok(SparsePolyOp { l, form, lambda_star, scale, kind, basis: opts.basis, threads })
+        // Mixed precision demotes the (already scaled) Laplacian to f32
+        // once at build time — the f64 CSR stays authoritative for nnz
+        // accounting and any exact consumer.
+        let l32 = opts.precision.is_mixed().then(|| CsrMatF32::from_f64(&l));
+        Ok(SparsePolyOp {
+            l,
+            l32,
+            form,
+            lambda_star,
+            scale,
+            kind,
+            basis: opts.basis,
+            precision: opts.precision,
+            threads,
+        })
     }
 
     /// Stored entries of the underlying CSR Laplacian.
@@ -257,6 +288,139 @@ impl SparsePolyOp {
             _ => None,
         }
     }
+
+    /// The **documented f32 term** of the mixed-precision error contract:
+    /// an upper envelope on `‖mixed apply − f64 apply‖_max` relative to the
+    /// bundle scale, via [`crate::transforms::mixed_error_budget`] at this
+    /// operator's sweep count and coefficient mass (`Σ|c_j|` for the series
+    /// forms; `1` for the norm-bounded `NegPower` special case). The full
+    /// `--degree auto --precision mixed` contract is the Chebyshev
+    /// truncation tolerance **plus** this term. Meaningful (and nonzero)
+    /// regardless of [`Self::precision`], so callers can quote the budget
+    /// before opting in.
+    pub fn mixed_budget(&self) -> f64 {
+        let coeff_l1 = match &self.form {
+            SparsePolyForm::Poly(PolySeries::Monomial(s)) => {
+                s.coeffs.iter().map(|c| c.abs()).sum()
+            }
+            SparsePolyForm::Poly(PolySeries::Chebyshev(c)) => {
+                c.coeffs.iter().map(|c| c.abs()).sum()
+            }
+            SparsePolyForm::NegPower { .. } => 1.0,
+        };
+        crate::transforms::mixed_error_budget(self.sweeps(), coeff_l1)
+    }
+
+    /// Mixed-precision apply: the identical recurrences to the f64 path,
+    /// with the Laplacian and the recurrence panels stored in f32 and every
+    /// per-row reduction accumulating in f64 ([`spmm_step_mixed_into`]).
+    /// The final reversal combine `λ*·V − p(L)·V` runs in full f64 against
+    /// the original input bundle. Bitwise worker-invariant, but **not**
+    /// equal to the f64 path — bounded by [`Self::mixed_budget`].
+    fn apply_mixed(&self, v: &DMat, threads: usize) -> DMat {
+        let l32 = self.l32.as_ref().expect("mixed operator carries an f32 Laplacian");
+        let (n, k) = (v.rows(), v.cols());
+        let v32 = v.to_f32();
+        let p_v = match &self.form {
+            SparsePolyForm::Poly(PolySeries::Monomial(s)) => {
+                mixed_horner_bundle(l32, s, &v32, n, k, threads)
+            }
+            SparsePolyForm::Poly(PolySeries::Chebyshev(c)) => {
+                mixed_cheb_bundle(l32, c, v, &v32, threads)
+            }
+            SparsePolyForm::NegPower { ell } => {
+                // W ← (I − L/ℓ)·W, ℓ times; p(L)·V = −W — the f32-panel
+                // mirror of the f64 fused loop below.
+                let inv = -1.0 / *ell as f64;
+                let mut w = v32.clone();
+                let mut t = vec![0.0f32; n * k];
+                for _ in 0..*ell {
+                    spmm_step_mixed_into(l32, &w, &v32, k, 1.0, inv, 0.0, &mut t, threads);
+                    std::mem::swap(&mut w, &mut t);
+                }
+                let mut p = DMat::from_f32(n, k, &w);
+                p.scale(-1.0);
+                p
+            }
+        };
+        // M·V = λ*·V − p(L)·V, in f64 against the original bundle.
+        let mut out = v.clone();
+        out.scale(self.lambda_star);
+        out.axpy(-1.0, &p_v);
+        out
+    }
+}
+
+/// f32-panel Horner: `R ← c_d·V`, then `d` fused mixed passes
+/// `R ← B·R + c_i·V` with `B = A − shift·I` — the mirror of
+/// [`SeriesForm::apply_bundle`] with one f32 rounding per element per pass.
+fn mixed_horner_bundle(
+    l32: &CsrMatF32,
+    s: &SeriesForm,
+    v32: &[f32],
+    n: usize,
+    k: usize,
+    threads: usize,
+) -> DMat {
+    if s.coeffs.is_empty() {
+        return DMat::zeros(n, k);
+    }
+    let d = s.coeffs.len() - 1;
+    let mut r: Vec<f32> = v32.iter().map(|&x| (s.coeffs[d] * x as f64) as f32).collect();
+    let mut t = vec![0.0f32; n * k];
+    for i in (0..d).rev() {
+        spmm_step_mixed_into(l32, &r, v32, k, -s.shift, 1.0, s.coeffs[i], &mut t, threads);
+        std::mem::swap(&mut r, &mut t);
+    }
+    DMat::from_f32(n, k, &r)
+}
+
+/// f32-panel Chebyshev recurrence: the mirror of
+/// [`ChebSeries::apply_bundle`] with the `T_j·V` panels in f32. The output
+/// accumulation `Σ c_j·(T_j V)` stays in f64 (each panel element is widened
+/// once), so the only f32 roundings are the per-sweep panel stores that
+/// [`crate::transforms::mixed_error_budget`] accounts for.
+fn mixed_cheb_bundle(
+    l32: &CsrMatF32,
+    c: &ChebSeries,
+    v: &DMat,
+    v32: &[f32],
+    threads: usize,
+) -> DMat {
+    let (n, k) = (v.rows(), v.cols());
+    let mut out = DMat::zeros(n, k);
+    if c.coeffs.is_empty() {
+        return out;
+    }
+    out.axpy(c.coeffs[0], v); // c_0·T_0·V in full f64
+    if c.coeffs.len() == 1 {
+        return out;
+    }
+    // Domain map y = a·x + b (public-field mirror of the f64 recurrence).
+    assert!(c.hi > c.lo, "degenerate Chebyshev domain [{}, {}]", c.lo, c.hi);
+    let a = 2.0 / (c.hi - c.lo);
+    let b = -(c.hi + c.lo) / (c.hi - c.lo);
+    let mut t_prev = v32.to_vec();
+    let mut t_cur = vec![0.0f32; n * k];
+    spmm_step_mixed_into(l32, v32, v32, k, b, a, 0.0, &mut t_cur, threads);
+    axpy_f32_panel(&mut out, c.coeffs[1], &t_cur);
+    let mut t_next = vec![0.0f32; n * k];
+    for &cj in c.coeffs.iter().skip(2) {
+        spmm_step_mixed_into(l32, &t_cur, &t_prev, 2.0 * b, 2.0 * a, -1.0, &mut t_next, threads);
+        if cj != 0.0 {
+            axpy_f32_panel(&mut out, cj, &t_next);
+        }
+        std::mem::swap(&mut t_prev, &mut t_cur);
+        std::mem::swap(&mut t_cur, &mut t_next);
+    }
+    out
+}
+
+/// `out += c · panel` with each f32 panel element widened to f64 once.
+fn axpy_f32_panel(out: &mut DMat, c: f64, panel: &[f32]) {
+    for (o, &p) in out.data_mut().iter_mut().zip(panel.iter()) {
+        *o += c * p as f64;
+    }
 }
 
 impl MatVecOp for SparsePolyOp {
@@ -264,6 +428,9 @@ impl MatVecOp for SparsePolyOp {
         // Shared work-size guard; work per SpMM is nnz·k multiply-adds.
         let work = self.l.nnz().saturating_mul(v.cols());
         let threads = crate::linalg::par::effective_threads(work, self.threads);
+        if self.precision.is_mixed() {
+            return self.apply_mixed(v, threads);
+        }
         let p_v = match &self.form {
             SparsePolyForm::Poly(series) => series.apply_bundle(&self.l, v, threads),
             SparsePolyForm::NegPower { ell } => {
@@ -294,10 +461,21 @@ impl MatVecOp for SparsePolyOp {
         self.l.rows()
     }
     fn label(&self) -> String {
-        format!("sparse[{},nnz={},{}]", self.l.rows(), self.l.nnz(), self.basis)
+        if self.precision.is_mixed() {
+            format!("sparse[{},nnz={},{},mixed]", self.l.rows(), self.l.nnz(), self.basis)
+        } else {
+            format!("sparse[{},nnz={},{}]", self.l.rows(), self.l.nnz(), self.basis)
+        }
     }
     fn sweeps_per_apply(&self) -> usize {
         self.sweeps()
+    }
+    fn precision_floor(&self) -> f64 {
+        if self.precision.is_mixed() {
+            self.mixed_budget()
+        } else {
+            0.0
+        }
     }
 }
 
@@ -797,6 +975,112 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err:#}").contains("--basis chebyshev"), "{err:#}");
+    }
+
+    #[test]
+    fn mixed_op_tracks_f64_within_documented_budget() {
+        // The f32 term of the error contract: for every polynomial form
+        // (Horner, NegPower repeated-multiply, Chebyshev recurrence) the
+        // mixed apply deviates from the f64 apply by at most
+        // `mixed_budget()` relative to the bundle scale — and the mixed
+        // path itself is bitwise worker-invariant.
+        let g = cliques(&CliqueSpec { n: 40, k: 4, max_short_circuit: 3, seed: 13 }).graph;
+        let v = random_init(40, 6, 21);
+        for (kind, basis) in [
+            (TransformKind::TaylorNegExp { ell: 31 }, PolyBasis::Monomial),
+            (TransformKind::TaylorLog { ell: 41, eps: 0.05 }, PolyBasis::Monomial),
+            (TransformKind::LimitNegExp { ell: 51 }, PolyBasis::Monomial),
+            (TransformKind::LimitNegExp { ell: 51 }, PolyBasis::Chebyshev),
+        ] {
+            let mk = |precision, threads| {
+                let opts = BuildOptions {
+                    prescale: true,
+                    basis,
+                    precision,
+                    threads,
+                    ..BuildOptions::default()
+                };
+                SparsePolyOp::from_graph(&g, kind, &opts).unwrap()
+            };
+            let mut exact = mk(Precision::F64, 1);
+            let mut mixed = mk(Precision::Mixed, 1);
+            assert_eq!(exact.precision_floor(), 0.0, "{kind}: f64 op has no floor");
+            assert!(mixed.precision_floor() > 0.0, "{kind}: mixed op must report a floor");
+            assert_eq!(mixed.precision_floor(), mixed.mixed_budget(), "{kind}");
+            assert!(mixed.label().contains("mixed"), "label {}", mixed.label());
+            assert!(!exact.label().contains("mixed"), "label {}", exact.label());
+            let want = exact.apply(&v);
+            let got = mixed.apply(&v);
+            let scale = want.max_abs().max(v.max_abs()).max(1.0);
+            let err = (&got - &want).max_abs();
+            assert!(
+                err <= mixed.mixed_budget() * scale,
+                "{kind}/{basis}: mixed error {err} exceeds budget {}",
+                mixed.mixed_budget() * scale
+            );
+            for threads in [2usize, 8] {
+                let par = mk(Precision::Mixed, threads).apply(&v);
+                let identical = got
+                    .data()
+                    .iter()
+                    .zip(par.data().iter())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(identical, "{kind}/{basis}: mixed diverged at {threads} workers");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_precision_map_error_within_contract() {
+        use crate::transforms::{Degree, DomainEstimate};
+        // The `--degree auto --precision mixed` honesty contract: on the
+        // true eigenvectors, the mixed operator's action deviates from the
+        // ideal scalar map by at most the Chebyshev truncation tolerance
+        // plus the documented f32 term.
+        let g = cliques(&CliqueSpec { n: 48, k: 3, max_short_circuit: 2, seed: 13 }).graph;
+        let e = eigh(&g.laplacian()).unwrap();
+        let kind = TransformKind::LimitNegExp { ell: 251 };
+        // Truncation-term bound: the adaptive-degree test establishes that
+        // the tol=1e-9 truncated filter tracks the scalar map to ≤1e-6.
+        let cheb_budget = 1e-6;
+        let opts = BuildOptions {
+            basis: PolyBasis::Chebyshev,
+            domain: DomainEstimate::Lanczos,
+            degree: Degree::Auto { tol: 1e-9, max: usize::MAX },
+            precision: Precision::Mixed,
+            ..BuildOptions::default()
+        };
+        let mut op = SparsePolyOp::from_graph(&g, kind, &opts).unwrap();
+        assert!(op.sweeps() < 251, "auto degree should truncate");
+        let k = 4;
+        let v = e.bottom_k(k);
+        let got = op.apply(&v);
+        // Columns are unit eigenvectors: M·v_i = (λ* − p(λ_i))·v_i, so the
+        // per-entry residual against the *truncated polynomial's* map is
+        // pure mixed-arithmetic error; against the transform's scalar map
+        // it additionally carries the truncation term the existing
+        // adaptive-degree test bounds by 1e-6.
+        for i in 0..k {
+            let lam = e.values[i];
+            let exact_want = op.lambda_star - op.poly_eval(lam);
+            let map_want = op.lambda_star - kind.scalar_map(lam);
+            let mut arith_err = 0.0f64;
+            let mut map_err = 0.0f64;
+            for r in 0..48 {
+                arith_err = arith_err.max((got[(r, i)] - exact_want * v[(r, i)]).abs());
+                map_err = map_err.max((got[(r, i)] - map_want * v[(r, i)]).abs());
+            }
+            assert!(
+                arith_err <= op.mixed_budget(),
+                "λ_{i}: arithmetic error {arith_err} exceeds f32 budget {}",
+                op.mixed_budget()
+            );
+            assert!(
+                map_err <= cheb_budget + op.mixed_budget(),
+                "λ_{i}: map error {map_err} exceeds cheb-tol + f32 budget {}",
+                cheb_budget + op.mixed_budget()
+            );
+        }
     }
 
     #[test]

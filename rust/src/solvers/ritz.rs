@@ -255,6 +255,12 @@ pub fn ritz_solve(op: &mut dyn MatVecOp, cfg: &RitzConfig) -> Result<RitzResult>
         bail!("ritz: tol must be > 0");
     }
     let sweeps_per_apply = op.sweeps_per_apply();
+    // Clamp the tolerance to the operator's arithmetic floor
+    // ([`MatVecOp::precision_floor`]): a mixed-precision operator cannot
+    // certify residuals below its documented f32 budget, so a tighter
+    // requested tol would spin to `max_iters` on arithmetic noise. Zero
+    // for full-precision operators — the clamp is then a no-op.
+    let tol = cfg.tol.max(op.precision_floor());
     let mut v = match &cfg.warm_start {
         Some(prev) => warm_block(prev, n, b)?,
         None => deterministic_block(n, b),
@@ -327,7 +333,7 @@ pub fn ritz_solve(op: &mut dyn MatVecOp, cfg: &RitzConfig) -> Result<RitzResult>
         // leading pair has locked in — which the near-kernel start column
         // makes immediate for reversed Laplacian operators).
         let scale = e.values.iter().fold(0.0f64, |m, &t| m.max(t.abs())).max(1e-300);
-        if max_res <= cfg.tol * scale {
+        if max_res <= tol * scale {
             converged = true;
             break;
         }
@@ -567,6 +573,27 @@ mod tests {
         assert_eq!(f.kind, SolveFailureKind::Stagnation);
         assert!(f.iteration < 20, "stagnation not detected early: {}", f.iteration);
         assert!(f.max_residual.is_finite() && f.max_residual > 0.0);
+    }
+
+    #[test]
+    fn mixed_operator_converges_via_precision_floor_clamp() {
+        use crate::transforms::Precision;
+        let g = cliques(&CliqueSpec { n: 24, k: 3, max_short_circuit: 1, seed: 5 }).graph;
+        let opts = BuildOptions { precision: Precision::Mixed, ..BuildOptions::default() };
+        let mut op =
+            SparsePolyOp::from_graph(&g, TransformKind::LimitNegExp { ell: 51 }, &opts).unwrap();
+        assert!(op.precision_floor() > 0.0);
+        // tol far below the f32 floor: without the clamp this run would
+        // grind on arithmetic noise it can never certify; with it,
+        // convergence is declared at the operator's documented floor.
+        let cfg = RitzConfig { k: 3, tol: 1e-14, max_iters: 300, ..Default::default() };
+        let res = ritz_solve(&mut op, &cfg).unwrap();
+        assert!(res.converged, "mixed run did not converge in {} iters", res.iterations);
+        // The embedding still recovers the bottom subspace to well beyond
+        // clustering accuracy.
+        let v_star = crate::linalg::eigh(&g.laplacian()).unwrap().bottom_k(3);
+        let err = subspace_error(&v_star, &res.embedding);
+        assert!(err < 1e-2, "subspace err {err}");
     }
 
     #[test]

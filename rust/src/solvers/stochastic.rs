@@ -8,6 +8,15 @@
 //! * [`StochasticPolyOp`] — the full stochastic SPED operator: each step
 //!   draws fresh random walks on the edge-incidence graph and applies an
 //!   unbiased estimate of `λ*I − p(L)` (sub-walk harvesting; §4.3).
+//!
+//! The `--precision mixed` knob ([`crate::transforms::Precision`])
+//! deliberately does **not** reach these oracles: their per-application
+//! error is Monte-Carlo variance (`~1/√walks`), orders of magnitude above
+//! any f32 rounding term, so demoting their arithmetic would change
+//! trajectories without a measurable speedup. Both oracles therefore keep
+//! the default [`MatVecOp::precision_floor`] of zero — their noise floor
+//! is statistical, not arithmetic, and the solvers that drive them (Oja,
+//! µ-EigenGame) average across steps rather than certifying residuals.
 
 use super::MatVecOp;
 use crate::graph::Graph;

@@ -372,6 +372,84 @@ impl std::fmt::Display for Degree {
     }
 }
 
+/// Arithmetic precision of the matrix-free bundle sweeps (CLI
+/// `--precision`).
+///
+/// * **[`Precision::F64`]** (default) — the historical kernels, bitwise
+///   identical across worker counts and to every reference path.
+/// * **[`Precision::Mixed`]** — f32 storage (CSR values and bundle
+///   panels) with f64 accumulation
+///   ([`crate::linalg::sparse::spmm_step_mixed_into`]). Skinny SpMM is
+///   memory-bandwidth-bound, so halving the bytes is close to doubling
+///   throughput; the price is one f32 rounding per element per sweep,
+///   bounded by [`mixed_error_budget`]. Only the inexact iterative stages
+///   may take it: exact (eigh-based) transforms, dense-materialized
+///   operators, and the ground-truth metric oracle are rejected — their
+///   contracts are exactness, not a budget.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f64 storage and arithmetic (bitwise-contract default).
+    #[default]
+    F64,
+    /// f32 storage, f64 accumulation, for the iterative sweeps only.
+    Mixed,
+}
+
+impl Precision {
+    /// Parse from a CLI/config name (`f64` | `mixed`).
+    pub fn parse(s: &str) -> Result<Precision> {
+        Ok(match s {
+            "f64" | "double" => Precision::F64,
+            "mixed" | "f32" => Precision::Mixed,
+            other => bail!("unknown precision {other:?} (expected f64 | mixed)"),
+        })
+    }
+
+    /// Canonical display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::Mixed => "mixed",
+        }
+    }
+
+    pub fn is_mixed(&self) -> bool {
+        matches!(self, Precision::Mixed)
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// The documented f32 term of the mixed-precision error budget: an
+/// absolute bound (in spectrum-map units) on how far a mixed-precision
+/// operator application can drift from the f64 one, per unit bundle norm.
+///
+/// Derivation: the mixed kernels round operands to f32 once up front and
+/// round each panel element to f32 once per sweep; products and the
+/// α/β/γ combine run in f64 (an f32 × f32 product is exact in f64), so
+/// each of the `sweeps` recurrence steps contributes at most a relative
+/// `f32::EPSILON` perturbation to a quantity bounded by the filter's
+/// size. For a Chebyshev series `Σ c_j T_j` on its fit domain
+/// `|p| ≤ Σ|c_j| = coeff_l1` (and the NegPower product is bounded by 1,
+/// its `coeff_l1`), giving
+///
+/// ```text
+/// budget = (sweeps + 1) · coeff_l1 · 8 · f32::EPSILON
+/// ```
+///
+/// with the `+1` covering the initial demotion of the inputs and the 8 a
+/// deliberate slack factor for the accumulated worst case. The total
+/// `--degree auto --precision mixed` map-error contract is then
+/// `cheb-tol budget + this budget` — pinned by the operator-level
+/// contract test and the `spmm-simd` bench group's `map_err_mixed`.
+pub fn mixed_error_budget(sweeps: usize, coeff_l1: f64) -> f64 {
+    (sweeps as f64 + 1.0) * coeff_l1.max(1.0) * 8.0 * f32::EPSILON as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,6 +498,28 @@ mod tests {
         for d in [DomainEstimate::Power, DomainEstimate::Lanczos, DomainEstimate::Gershgorin] {
             assert_eq!(DomainEstimate::parse(d.name()).unwrap(), d);
         }
+    }
+
+    #[test]
+    fn precision_parse_display_and_budget() {
+        assert_eq!(Precision::parse("f64").unwrap(), Precision::F64);
+        assert_eq!(Precision::parse("mixed").unwrap(), Precision::Mixed);
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::Mixed);
+        assert!(Precision::parse("f16").is_err());
+        assert_eq!(Precision::default(), Precision::F64);
+        assert!(!Precision::F64.is_mixed() && Precision::Mixed.is_mixed());
+        for p in [Precision::F64, Precision::Mixed] {
+            assert_eq!(Precision::parse(p.name()).unwrap(), p);
+            assert_eq!(p.to_string(), p.name());
+        }
+        // Budget grows with sweeps and filter mass, floors at coeff_l1 = 1,
+        // and sits far above f64 noise but far below any useful tolerance's
+        // complement.
+        let b = mixed_error_budget(51, 2.0);
+        assert!(b > mixed_error_budget(15, 2.0));
+        assert!(b > mixed_error_budget(51, 0.5) - 1e-18);
+        assert_eq!(mixed_error_budget(51, 0.5), mixed_error_budget(51, 1.0));
+        assert!(b > 1e-12 && b < 1e-3, "budget {b}");
     }
 
     #[test]

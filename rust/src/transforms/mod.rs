@@ -97,7 +97,7 @@ pub use basis::{
     affine_compose, cheb_domain, chebyshev_to_monomial, monomial_to_chebyshev, ChebSeries,
     PolyBasis, PolySeries,
 };
-pub use domain::{Degree, DomainEstimate, SpectrumEstimate};
+pub use domain::{mixed_error_budget, Degree, DomainEstimate, Precision, SpectrumEstimate};
 
 use crate::linalg::dmat::DMat;
 use crate::linalg::funcs::{matpow, poly_horner, power_lambda_max, spectral_apply};
@@ -505,6 +505,14 @@ pub struct BuildOptions {
     /// ℓ, bitwise-identical); the other policies reshape the evaluated
     /// polynomial and require [`PolyBasis::Chebyshev`].
     pub degree: Degree,
+    /// Arithmetic precision of the matrix-free SpMM sweeps
+    /// (`--precision f64|mixed`). **Default [`Precision::F64`]**, the
+    /// bitwise-compat path; [`Precision::Mixed`] stores the Laplacian and
+    /// bundle panels in `f32` with `f64` accumulators
+    /// ([`crate::linalg::sparse::CsrMatF32`]) — inexact iterative stages
+    /// only, with the [`mixed_error_budget`] contract. Rejected for the
+    /// dense build, exact transforms, and ground-truth paths.
+    pub precision: Precision,
 }
 
 impl Default for BuildOptions {
@@ -517,6 +525,7 @@ impl Default for BuildOptions {
             basis: PolyBasis::Monomial,
             domain: DomainEstimate::Power,
             degree: Degree::Native,
+            precision: Precision::F64,
         }
     }
 }
@@ -526,6 +535,13 @@ impl Default for BuildOptions {
 pub fn build_solver_matrix(l: &DMat, kind: TransformKind, opts: &BuildOptions) -> Result<SolverMatrix> {
     let threads = opts.threads.max(1);
     opts.degree.validate_basis(opts.basis)?;
+    if opts.precision.is_mixed() {
+        bail!(
+            "--precision mixed applies only to the matrix-free (sparse) operator \
+             path — the dense materialized build is f64-only; use --op-mode sparse \
+             or --precision f64"
+        );
+    }
     // The power estimate feeds the pre-scale factor and the Power domain's
     // ρ; when neither consumes it (un-prescaled Lanczos/Gershgorin domains,
     // which derive ρ from their own interval) the 100-matvec iteration is
@@ -1021,6 +1037,19 @@ mod tests {
         )
         .unwrap();
         assert!((&fixed.m - &full31.m).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_precision_rejected_on_the_dense_build() {
+        // The dense materialized path is f64-only: mixed precision is a
+        // matrix-free knob, and like every other unsupported combination
+        // it errors clearly instead of silently falling back.
+        let l = test_laplacian();
+        let opts = BuildOptions { precision: Precision::Mixed, ..BuildOptions::default() };
+        let err =
+            build_solver_matrix(&l, TransformKind::LimitNegExp { ell: 51 }, &opts).unwrap_err();
+        assert!(format!("{err:#}").contains("--precision f64"), "{err:#}");
+        assert_eq!(BuildOptions::default().precision, Precision::F64);
     }
 
     #[test]

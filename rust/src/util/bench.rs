@@ -45,6 +45,42 @@ pub fn fast_mode() -> bool {
     std::env::var("SPED_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Problem-size scaling shared by the bench groups: the full size `n` in a
+/// real run, `n/8` (floored at 64) under [`fast_mode`] smoke runs. Central
+/// so every group shrinks by the same policy instead of hand-rolling
+/// per-group constants.
+pub fn fast_mode_scale(n: usize) -> usize {
+    if fast_mode() {
+        (n / 8).max(64)
+    } else {
+        n
+    }
+}
+
+/// One-line capability fingerprint of this binary: which SpMM backend it
+/// carries ([`crate::linalg::simd::backend_name`]), the machine's effective
+/// thread default, the precisions the sparse operator supports, and the
+/// crate features compiled in. Printed by `sped info` and embedded in every
+/// [`BenchSuite::write_json`] emission so archived bench JSONs record what
+/// produced them.
+pub fn capability_string() -> String {
+    let threads = std::thread::available_parallelism().map_or(1, |p| p.get());
+    let mut features: Vec<&str> = Vec::new();
+    if cfg!(feature = "xla") {
+        features.push("xla");
+    }
+    if cfg!(feature = "simd") {
+        features.push("simd");
+    }
+    let features = if features.is_empty() { "none".to_string() } else { features.join(",") };
+    format!(
+        "simd={} threads={} precisions=f64,mixed features={}",
+        crate::linalg::simd::backend_name(),
+        threads,
+        features
+    )
+}
+
 /// A benchmark suite: named timing cases + free-form report lines.
 pub struct BenchSuite {
     name: String,
@@ -151,7 +187,11 @@ impl BenchSuite {
         rows: &[Vec<(String, JsonVal)>],
     ) -> std::io::Result<()> {
         let mut out = String::new();
-        out.push_str(&format!("{{\n  \"suite\": {},\n  \"rows\": [\n", json_string(&self.name)));
+        out.push_str(&format!(
+            "{{\n  \"suite\": {},\n  \"caps\": {},\n  \"rows\": [\n",
+            json_string(&self.name),
+            json_string(&capability_string())
+        ));
         for (i, row) in rows.iter().enumerate() {
             out.push_str("    {");
             for (j, (key, val)) in row.iter().enumerate() {
@@ -298,6 +338,7 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert!(text.contains("\"suite\": \"jsontest\""));
+        assert!(text.contains("\"caps\": \"simd="), "capability fingerprint embedded: {text}");
         assert!(text.contains("\"n\": 256"));
         assert!(text.contains("\"sparse_step_s\": 0.5"));
         assert!(text.contains("\"speedup\": 3.0"), "integral floats stay floats: {text}");
@@ -306,6 +347,23 @@ mod tests {
         // Balanced braces/brackets — cheap well-formedness check.
         assert_eq!(text.matches('{').count(), text.matches('}').count());
         assert_eq!(text.matches('[').count(), text.matches(']').count());
+    }
+
+    #[test]
+    fn capability_string_names_backend_and_features() {
+        let caps = capability_string();
+        assert!(caps.contains(&format!("simd={}", crate::linalg::simd::backend_name())), "{caps}");
+        assert!(caps.contains("precisions=f64,mixed"), "{caps}");
+        assert!(caps.contains("threads="), "{caps}");
+        assert!(caps.contains("features="), "{caps}");
+    }
+
+    #[test]
+    fn fast_mode_scale_floors_at_64() {
+        // 64/8 = 8 floors back up to 64 — invariant in both modes, so this
+        // stays race-free against tests that toggle SPED_BENCH_FAST.
+        assert_eq!(fast_mode_scale(64), 64);
+        assert!([512, 4096].contains(&fast_mode_scale(4096)));
     }
 
     #[test]

@@ -6,8 +6,13 @@
 //!    densified matrix, for every bundle width k ∈ 1..=17 (all 16 blocked
 //!    widths plus the first streaming-fallback width), every graph
 //!    generator × both Laplacian variants × 1/2/8 workers, including
-//!    empty rows and structural-zero diagonals;
-//! 2. RCM row reordering is a pure relabeling: permutations round-trip,
+//!    empty rows and structural-zero diagonals — under a `--features simd`
+//!    build the same sweep exercises the portable-SIMD kernels, since they
+//!    ride the identical [`sped::linalg::sparse::spmm`] dispatch;
+//! 2. the halo-exchange sharded SpMM ([`sped::linalg::shard::ShardedCsr`])
+//!    is bitwise equal to the unsharded kernel at every shard count ×
+//!    worker count, empty shards and isolated nodes included;
+//! 3. RCM row reordering is a pure relabeling: permutations round-trip,
 //!    bandwidth shrinks on a scrambled power-law sample, and the pipeline
 //!    recovers the identical partition (after un-permutation) with the
 //!    identical λ*.
@@ -109,6 +114,72 @@ fn blocked_spmm_empty_rows_and_structural_zero_diagonals() {
             assert!(bitwise_eq(&spmm_streaming(&m, &v, workers), &want));
             for row in [0usize, 1, 3] {
                 assert!(got.row(row).iter().all(|x| x.to_bits() == 0), "row {row} not +0.0");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_spmm_bitwise_equals_unsharded_across_the_zoo() {
+    // The two-phase halo-exchange path must be indistinguishable — bit for
+    // bit — from the unsharded kernel at every (shard count, worker count),
+    // for every generator and both Laplacian variants. S = 7 does not
+    // divide n = 22, so uneven shard sizes are always in play.
+    use sped::linalg::shard::ShardedCsr;
+    for (name, g) in generator_zoo(22, 5) {
+        let nn = g.num_nodes();
+        for (variant, sparse) in [
+            ("laplacian", g.laplacian_csr()),
+            ("normalized", g.normalized_laplacian_csr()),
+        ] {
+            for s in [1usize, 2, 7] {
+                let sharded = ShardedCsr::partition(&sparse, s);
+                assert_eq!(sharded.shard_count(), s);
+                assert_eq!(sharded.shard_lens().iter().sum::<usize>(), nn);
+                for k in [1usize, 8, 17] {
+                    let mut rng = Rng::new((s as u64) << 16 ^ (k as u64) << 8 ^ nn as u64);
+                    let v = DMat::from_fn(nn, k, |_, _| rng.normal());
+                    let want = spmm(&sparse, &v, 1);
+                    for workers in [1usize, 2, 8] {
+                        assert!(
+                            bitwise_eq(&sharded.apply(&v, workers), &want),
+                            "{name}/{variant}: sharded S={s} vs unsharded at k={k}, {workers} workers"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_spmm_empty_shards_and_isolated_nodes() {
+    // n = 5 under S = 7 leaves two shards owning zero rows; nodes 3 and 4
+    // are fully isolated (structural-zero Laplacian diagonal). The sharded
+    // apply must keep the empty shards addressable and the isolated rows
+    // exactly +0.0, matching the unsharded kernel bitwise.
+    use sped::linalg::shard::ShardedCsr;
+    let g = Graph::from_edges(5, &[(0, 1, 1.0), (1, 2, 0.5)]).unwrap();
+    for (variant, sparse) in [
+        ("laplacian", g.laplacian_csr()),
+        ("normalized", g.normalized_laplacian_csr()),
+    ] {
+        let sharded = ShardedCsr::partition(&sparse, 7);
+        assert_eq!(sharded.shard_count(), 7);
+        assert_eq!(sharded.shard_lens(), vec![1, 1, 1, 1, 1, 0, 0]);
+        for k in [1usize, 4, 17] {
+            let mut rng = Rng::new(k as u64 + 900);
+            let v = DMat::from_fn(5, k, |_, _| rng.normal());
+            let want = spmm(&sparse, &v, 1);
+            for workers in [1usize, 2, 8] {
+                let got = sharded.apply(&v, workers);
+                assert!(bitwise_eq(&got, &want), "{variant}: k={k}, {workers} workers");
+                for row in [3usize, 4] {
+                    assert!(
+                        got.row(row).iter().all(|x| x.to_bits() == 0),
+                        "{variant}: isolated row {row} not +0.0"
+                    );
+                }
             }
         }
     }
