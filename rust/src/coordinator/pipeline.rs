@@ -58,6 +58,12 @@ pub struct PipelineConfig {
     /// `--solver ritz` only: block width (0 = auto: k + 2 guard vectors,
     /// clamped to n).
     pub block_size: usize,
+    /// `--solver ritz` only: locked-convergence deflation
+    /// (`--ritz-lock on|off`, default on) — freeze converged Ritz pairs
+    /// and shrink the active block so SpMM column volume decays per sweep
+    /// ([`crate::solvers::ritz::RitzConfig::lock`]). `false` restores the
+    /// fixed-block iteration bit for bit.
+    pub ritz_lock: bool,
     pub build: BuildOptions,
     pub backend: Backend,
     pub seed: u64,
@@ -124,6 +130,7 @@ impl Default for PipelineConfig {
             ritz_tol: 1e-8,
             ritz_max_iters: 500,
             block_size: 0,
+            ritz_lock: true,
             build: BuildOptions::default(),
             backend: Backend::Native,
             seed: 0,
@@ -187,6 +194,12 @@ impl std::fmt::Display for SolvePath {
     }
 }
 
+/// Trailing-window size long-lived sessions keep of a
+/// [`RitzSummary`]'s per-iteration histories ([`RitzSummary::capped`]):
+/// stream/serve retain one summary per publish, so an unbounded history
+/// would grow memory linearly in publish count × solve iterations.
+pub const RITZ_HISTORY_CAP: usize = 64;
+
 /// What a `--solver ritz` run reports about itself: residual-based
 /// convergence (self-measured — available even with `ground_truth` off)
 /// and the SpMM-sweep accounting the dilated-vs-undilated comparison is
@@ -202,14 +215,52 @@ pub struct RitzSummary {
     pub sweeps_per_apply: usize,
     /// `iterations · sweeps_per_apply`.
     pub total_sweeps: usize,
+    /// SpMM **column** sweeps actually spent
+    /// ([`crate::solvers::ritz::RitzResult::col_sweeps`]): equal to
+    /// `total_sweeps · block` for a fixed block, strictly smaller once
+    /// deflation locks pairs.
+    pub col_sweeps: usize,
+    /// Halo bundle-row volume a sharded operator exchanged (`--shards N`;
+    /// `0` unsharded).
+    pub halo_volume: usize,
+    /// Ritz pairs locked when the solve finished (`0` with
+    /// `--ritz-lock off`).
+    pub locked: usize,
+    /// Locked-pair count after each outer iteration (aligned with
+    /// `residual_history`; capped together with it by [`Self::capped`]).
+    pub locked_history: Vec<usize>,
     /// Per-outer-iteration max residual over the k wanted Ritz pairs.
+    /// Possibly capped to a trailing window by [`Self::capped`] — check
+    /// `residual_history_total` for the uncapped length.
     pub residual_history: Vec<f64>,
+    /// Outer iterations the solve actually recorded —
+    /// `residual_history.len()` unless [`Self::capped`] dropped a prefix.
+    pub residual_history_total: usize,
     /// Final per-pair residual norms `‖M·x_i − θ_i·x_i‖`.
     pub residuals: Vec<f64>,
     /// Ritz values of `M` for the embedding columns (descending).
     pub values: Vec<f64>,
     /// Which solve produced the embedding (cold / warm / warm-degraded).
     pub path: SolvePath,
+}
+
+impl RitzSummary {
+    /// Bound the per-iteration histories to the trailing `cap` entries,
+    /// keeping the honest totals (`residual_history_total`, `iterations`,
+    /// sweep counters) intact. Long-running stream/serve sessions retain
+    /// one summary per publish — without the cap their memory grows
+    /// linearly in solve iterations × publish count. A `cap` of 0 keeps
+    /// nothing but the totals.
+    pub fn capped(mut self, cap: usize) -> RitzSummary {
+        self.residual_history_total = self.residual_history_total.max(self.residual_history.len());
+        if self.residual_history.len() > cap {
+            self.residual_history.drain(..self.residual_history.len() - cap);
+        }
+        if self.locked_history.len() > cap {
+            self.locked_history.drain(..self.locked_history.len() - cap);
+        }
+        self
+    }
 }
 
 /// The pipeline orchestrator.
@@ -326,6 +377,14 @@ impl Pipeline {
                          artifacts run their own f32 protocol); use --precision f64"
                     );
                 }
+                if cfg.build.shards > 0 {
+                    // The halo-exchange sharded apply lives in the native
+                    // matrix-free kernels; the XLA artifacts are dense.
+                    bail!(
+                        "--shards requires the native backend with --op-mode \
+                         sparse (the XLA artifacts have no halo schedule)"
+                    );
+                }
                 if !cfg.ground_truth {
                     // The XLA chunk protocol consumes the oracle bundle.
                     bail!("ground_truth=false requires the native backend");
@@ -411,6 +470,7 @@ impl Pipeline {
                 block: cfg.block_size,
                 tol: cfg.ritz_tol,
                 max_iters: cfg.ritz_max_iters,
+                lock: cfg.ritz_lock,
                 ..Default::default()
             };
             // Graceful degradation: a warm start is an optimization, never
@@ -455,6 +515,11 @@ impl Pipeline {
                 converged: res.converged,
                 sweeps_per_apply: res.sweeps_per_apply,
                 total_sweeps: res.total_sweeps,
+                col_sweeps: res.col_sweeps,
+                halo_volume: res.halo_volume,
+                locked: res.locked,
+                locked_history: res.locked_history,
+                residual_history_total: res.history.len(),
                 residual_history: res.history.iter().map(|p| p.max_residual).collect(),
                 residuals: res.residuals,
                 values: res.values,
@@ -1140,5 +1205,37 @@ mod tests {
             Pipeline::new(mk(TransformKind::LimitNegExp { ell: 251 })).run(&gg.graph).unwrap();
         let err = crate::linalg::metrics::subspace_error(&exact.embedding, &series.embedding);
         assert!(err < 1e-3, "exact vs series subspace err {err}");
+    }
+
+    #[test]
+    fn ritz_summary_cap_keeps_tail_and_totals() {
+        let full = RitzSummary {
+            iterations: 10,
+            converged: true,
+            sweeps_per_apply: 5,
+            total_sweeps: 50,
+            col_sweeps: 180,
+            halo_volume: 0,
+            locked: 4,
+            locked_history: (0..10).map(|i| (i / 3).min(4)).collect(),
+            residual_history: (0..10).map(|i| 1.0 / (i + 1) as f64).collect(),
+            residual_history_total: 10,
+            residuals: vec![1e-9; 4],
+            values: vec![2.0, 1.5, 1.0, 0.5],
+            path: SolvePath::Cold,
+        };
+        let capped = full.clone().capped(3);
+        assert_eq!(capped.residual_history, full.residual_history[7..]);
+        assert_eq!(capped.locked_history, full.locked_history[7..]);
+        assert_eq!(capped.residual_history_total, 10);
+        assert_eq!(capped.iterations, 10);
+        assert_eq!(capped.col_sweeps, 180);
+        // A cap wider than the history is a no-op; capping twice is idempotent.
+        let wide = full.clone().capped(64);
+        assert_eq!(wide.residual_history, full.residual_history);
+        assert_eq!(wide.residual_history_total, 10);
+        let twice = full.capped(3).capped(3);
+        assert_eq!(twice.residual_history_total, 10);
+        assert_eq!(twice.residual_history.len(), 3);
     }
 }

@@ -31,7 +31,9 @@
 //! [`StreamSession`]: crate::coordinator::stream::StreamSession
 
 use crate::cluster::{nearest_centroid, row_normalize};
-use crate::coordinator::pipeline::{Pipeline, PipelineConfig, SolvePath};
+use crate::coordinator::pipeline::{
+    Pipeline, PipelineConfig, RitzSummary, SolvePath, RITZ_HISTORY_CAP,
+};
 use crate::graph::delta::{DeltaOutcome, EdgeDelta};
 use crate::graph::{Graph, Reorder};
 use crate::linalg::dmat::DMat;
@@ -192,7 +194,10 @@ pub fn graph_content_hash(g: &Graph) -> u64 {
 
 /// The transform/solver half of the cache key: every config knob that can
 /// change the solved embedding. Threads are deliberately excluded — the
-/// determinism contract makes the embedding worker-count-invariant.
+/// determinism contract makes the embedding worker-count-invariant — and
+/// so is the shard count (`--shards`): the sharded matrix-free operator
+/// is bitwise-equal to the unsharded one at every shard count, so it can
+/// never change the embedding a cache entry holds.
 pub fn config_fingerprint(p: &PipelineConfig) -> String {
     format!(
         "{}|{}|k={}|{}|basis={}|domain={}|degree={}|prescale={}|seed={}|reorder={}",
@@ -248,6 +253,10 @@ pub struct ServeSession {
     cached_order: Option<Vec<usize>>,
     /// Edge volume accumulated since the last solve.
     delta_volume: usize,
+    /// Diagnostics of the most recent `ritz` re-solve, histories capped to
+    /// the trailing [`RITZ_HISTORY_CAP`] entries so a long-lived session's
+    /// memory stays bounded no matter how many iterations each solve ran.
+    last_ritz: Option<RitzSummary>,
     solves: usize,
 }
 
@@ -262,6 +271,7 @@ impl ServeSession {
             prev_embedding: None,
             cached_order: None,
             delta_volume: 0,
+            last_ritz: None,
             solves: 0,
         }
     }
@@ -282,6 +292,15 @@ impl ServeSession {
     /// Solves run so far (lazy — one per cache miss, not per batch).
     pub fn solves(&self) -> usize {
         self.solves
+    }
+
+    /// Capped diagnostics of the most recent `ritz` re-solve (`None`
+    /// before the first one, or with a step-driven solver).
+    /// `residual_history` / `locked_history` hold at most
+    /// [`RITZ_HISTORY_CAP`] trailing entries; `residual_history_total` and
+    /// the sweep counters stay uncapped.
+    pub fn last_ritz(&self) -> Option<&RitzSummary> {
+        self.last_ritz.as_ref()
     }
 
     /// The config half of the cache key.
@@ -391,6 +410,9 @@ impl ServeSession {
         }
         let out = Pipeline::new(pcfg).run(&self.graph).context("serve re-solve")?;
         let path = out.ritz.as_ref().map(|rz| rz.path).unwrap_or(SolvePath::Cold);
+        if let Some(rz) = out.ritz.clone() {
+            self.last_ritz = Some(rz.capped(RITZ_HISTORY_CAP));
+        }
         let clustering = out
             .clustering
             .context("serve re-solve produced no clustering (do_cluster forced on)")?;
@@ -516,6 +538,34 @@ mod tests {
         // Validation runs before the solve: nothing was computed yet.
         assert_eq!(s.solves(), 0);
         assert!(!s.cache_valid());
+    }
+
+    #[test]
+    fn session_retains_capped_ritz_diagnostics() {
+        // Same construction as the stream-session cap test: tol 0 on a
+        // full-precision operator never certifies, the default stagnation
+        // window (100) exceeds max_iters, so the solve runs exactly 80
+        // iterations and the retained summary must hold only the trailing
+        // window with honest totals.
+        let gg = cliques(&CliqueSpec { n: 24, k: 2, max_short_circuit: 1, seed: 3 });
+        let mut cfg = ritz_serve_cfg(2);
+        cfg.pipeline.ritz_tol = 0.0;
+        cfg.pipeline.ritz_max_iters = 80;
+        let mut s = ServeSession::new(gg.graph, cfg);
+        assert!(s.last_ritz().is_none(), "no solve yet");
+        s.answer_batch(&[Query::LinkPred { u: 0, v: 1 }]).unwrap();
+        assert_eq!(s.solves(), 1);
+        let rz = s.last_ritz().expect("ritz solve retains a summary");
+        assert_eq!(rz.iterations, 80);
+        assert!(!rz.converged);
+        assert_eq!(rz.residual_history.len(), RITZ_HISTORY_CAP);
+        assert_eq!(rz.locked_history.len(), RITZ_HISTORY_CAP);
+        assert_eq!(rz.residual_history_total, 80);
+        assert_eq!(rz.total_sweeps, 80 * rz.sweeps_per_apply);
+        // A cache hit does not re-solve, so the summary stays put.
+        s.answer_batch(&[Query::LinkPred { u: 0, v: 1 }]).unwrap();
+        assert_eq!(s.solves(), 1);
+        assert_eq!(s.last_ritz().unwrap().iterations, 80);
     }
 
     #[test]

@@ -17,7 +17,9 @@
 //! node order and a bitwise no-op batch keeps everything.
 
 use crate::cluster::adjusted_rand_index;
-use crate::coordinator::pipeline::{Pipeline, PipelineConfig, SolvePath};
+use crate::coordinator::pipeline::{
+    Pipeline, PipelineConfig, RitzSummary, SolvePath, RITZ_HISTORY_CAP,
+};
 use crate::graph::delta::{DeltaOutcome, EdgeDelta};
 use crate::graph::{Graph, Reorder};
 use crate::linalg::dmat::DMat;
@@ -97,6 +99,10 @@ pub struct StreamSession {
     cached_domain: Option<SpectrumEstimate>,
     /// Edge volume accumulated since the last publish.
     delta_volume: usize,
+    /// Diagnostics of the most recent `ritz` publish, histories capped to
+    /// the trailing [`RITZ_HISTORY_CAP`] entries so a long-lived session's
+    /// memory stays bounded no matter how many iterations each solve ran.
+    last_ritz: Option<RitzSummary>,
     publishes: usize,
 }
 
@@ -110,6 +116,7 @@ impl StreamSession {
             cached_order: None,
             cached_domain: None,
             delta_volume: 0,
+            last_ritz: None,
             publishes: 0,
         }
     }
@@ -134,6 +141,14 @@ impl StreamSession {
 
     pub fn publishes(&self) -> usize {
         self.publishes
+    }
+
+    /// Capped diagnostics of the most recent `ritz` publish (`None` before
+    /// the first one, or with a step-driven solver). `residual_history` /
+    /// `locked_history` hold at most [`RITZ_HISTORY_CAP`] trailing entries;
+    /// `residual_history_total` and the sweep counters stay uncapped.
+    pub fn last_ritz(&self) -> Option<&RitzSummary> {
+        self.last_ritz.as_ref()
     }
 
     /// Apply one transactional delta batch and invalidate exactly the
@@ -231,6 +246,9 @@ impl StreamSession {
         if !assignments.is_empty() {
             self.prev_assignments = Some(assignments.clone());
         }
+        if let Some(rz) = out.ritz {
+            self.last_ritz = Some(rz.capped(RITZ_HISTORY_CAP));
+        }
         self.delta_volume = 0;
         self.publishes += 1;
         Ok(PublishReport {
@@ -309,6 +327,33 @@ mod tests {
             },
             warm_volume_frac: 0.25,
         }
+    }
+
+    #[test]
+    fn session_caps_retained_ritz_history() {
+        // tol 0 can never be certified by a full-precision operator (the
+        // floor clamp is a no-op at f64) and the default stagnation window
+        // (100) is wider than max_iters, so this solve runs exactly 80
+        // outer iterations — past RITZ_HISTORY_CAP — and stays Ok
+        // (running out of iterations is honest non-convergence, not an
+        // error).
+        let gg = cliques(&CliqueSpec { n: 30, k: 3, max_short_circuit: 2, seed: 4 });
+        let mut cfg = ritz_stream_cfg();
+        cfg.pipeline.ritz_tol = 0.0;
+        cfg.pipeline.ritz_max_iters = 80;
+        let mut s = StreamSession::new(gg.graph.clone(), cfg);
+        assert!(s.last_ritz().is_none(), "no publish yet");
+        let rep = s.publish().unwrap();
+        assert!(!rep.converged);
+        assert_eq!(rep.iterations, 80);
+        let rz = s.last_ritz().expect("ritz publish retains a summary");
+        // Histories hold only the trailing window; totals stay honest.
+        assert_eq!(rz.residual_history.len(), RITZ_HISTORY_CAP);
+        assert_eq!(rz.locked_history.len(), RITZ_HISTORY_CAP);
+        assert_eq!(rz.residual_history_total, 80);
+        assert_eq!(rz.iterations, 80);
+        assert_eq!(rz.total_sweeps, 80 * rz.sweeps_per_apply);
+        assert!(rz.residual_history.iter().all(|r| r.is_finite()));
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //!
 //! Generators that imply a ground-truth clustering return it as `labels`.
 
-use super::Graph;
+use super::{Edge, Graph};
 use crate::util::rng::Rng;
 
 /// A generated graph plus its ground-truth cluster labels (when defined).
@@ -166,22 +166,30 @@ pub fn barbell(m: usize) -> GeneratedGraph {
 /// the workload class where RCM row reordering
 /// ([`crate::graph::Graph::rcm_permutation`]) pays off for the sparse
 /// solver kernels.
+///
+/// Streaming construction: the endpoint multiset read pairwise **is** the
+/// edge list in generation order, so the CSR is built straight from it by
+/// a two-pass counting scatter ([`Graph::from_canonical_edges`]) with no
+/// intermediate pair/triple `Vec`s — peak transient memory is the `2E`
+/// endpoint multiset plus the `E` canonical edges, which is what lets the
+/// `n ≥ 10⁶` power-law benchmarks fit. Bitwise-identical to the historical
+/// `from_pairs` path (pinned by the structure test below).
 pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> GeneratedGraph {
     assert!(m >= 1 && n > m, "need n > m ≥ 1");
     let mut rng = Rng::new(seed);
-    let mut pairs: Vec<(usize, usize)> = Vec::new();
     // Each edge contributes both endpoints, so a uniform draw from this
     // multiset is exactly degree-proportional sampling.
-    let mut endpoints: Vec<usize> = Vec::new();
+    let e_total = m * (m + 1) / 2 + (n - m - 1) * m;
+    let mut endpoints: Vec<usize> = Vec::with_capacity(2 * e_total);
     for i in 0..=m {
         for j in (i + 1)..=m {
-            pairs.push((i, j));
             endpoints.push(i);
             endpoints.push(j);
         }
     }
+    let mut chosen: Vec<usize> = Vec::with_capacity(m);
     for v in (m + 1)..n {
-        let mut chosen: Vec<usize> = Vec::with_capacity(m);
+        chosen.clear();
         while chosen.len() < m {
             let t = endpoints[rng.below(endpoints.len())];
             if !chosen.contains(&t) {
@@ -189,12 +197,39 @@ pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> GeneratedGraph {
             }
         }
         for &t in &chosen {
-            pairs.push((v, t));
             endpoints.push(v);
             endpoints.push(t);
         }
     }
-    GeneratedGraph { graph: Graph::from_pairs(n, &pairs).unwrap(), labels: vec![] }
+    // Counting scatter into per-source buckets (canonical source = the
+    // smaller endpoint), then an in-bucket sort by target. Every generated
+    // edge is unique — the seed clique enumerates distinct pairs and each
+    // growth step draws `m` *distinct* targets for a fresh `v` — so the
+    // result is exactly the strictly-ascending dedup-free edge list
+    // `Graph::from_edges` would have produced.
+    let mut bucket = vec![0usize; n];
+    for p in endpoints.chunks_exact(2) {
+        bucket[p[0].min(p[1])] += 1;
+    }
+    let mut starts = Vec::with_capacity(n + 1);
+    starts.push(0usize);
+    for i in 0..n {
+        starts.push(starts[i] + bucket[i]);
+    }
+    let mut cursor = starts.clone();
+    let mut edges = vec![Edge { u: 0, v: 0, w: 0.0 }; e_total];
+    for p in endpoints.chunks_exact(2) {
+        let (u, v) = (p[0].min(p[1]), p[0].max(p[1]));
+        edges[cursor[u]] = Edge { u: u as u32, v: v as u32, w: 1.0 };
+        cursor[u] += 1;
+    }
+    drop(endpoints);
+    for u in 0..n {
+        edges[starts[u]..starts[u + 1]].sort_unstable_by_key(|e| e.v);
+    }
+    let graph = Graph::from_canonical_edges(n, edges)
+        .expect("counting scatter yields a canonical edge list");
+    GeneratedGraph { graph, labels: vec![] }
 }
 
 /// Ring of `k` cliques of size `m`, adjacent cliques joined by one edge.
@@ -312,6 +347,44 @@ mod tests {
         // Deterministic per seed.
         assert_eq!(g.graph.edges(), barabasi_albert(200, 3, 5).graph.edges());
         assert_valid(&g.graph);
+    }
+
+    #[test]
+    fn barabasi_albert_streamed_build_matches_from_pairs() {
+        // Replay the generator's exact RNG walk into the historical
+        // pairs + from_pairs path: the streamed counting-scatter build
+        // must reproduce it bitwise (edge order included).
+        let (n, m, seed) = (150usize, 3usize, 9u64);
+        let mut rng = Rng::new(seed);
+        let mut pairs: Vec<(usize, usize)> = Vec::new();
+        let mut endpoints: Vec<usize> = Vec::new();
+        for i in 0..=m {
+            for j in (i + 1)..=m {
+                pairs.push((i, j));
+                endpoints.push(i);
+                endpoints.push(j);
+            }
+        }
+        for v in (m + 1)..n {
+            let mut chosen: Vec<usize> = Vec::with_capacity(m);
+            while chosen.len() < m {
+                let t = endpoints[rng.below(endpoints.len())];
+                if !chosen.contains(&t) {
+                    chosen.push(t);
+                }
+            }
+            for &t in &chosen {
+                pairs.push((v, t));
+                endpoints.push(v);
+                endpoints.push(t);
+            }
+        }
+        let historical = Graph::from_pairs(n, &pairs).unwrap();
+        let streamed = barabasi_albert(n, m, seed);
+        assert_eq!(historical.edges(), streamed.graph.edges());
+        for v in 0..n {
+            assert_eq!(historical.neighbors(v), streamed.graph.neighbors(v), "node {v}");
+        }
     }
 
     fn assert_valid(g: &Graph) {

@@ -74,6 +74,32 @@ fn try_invert_permutation(order: &[usize], n: usize) -> Result<Vec<usize>> {
     Ok(inv)
 }
 
+/// CSR adjacency for a canonical edge list: counting pass over the
+/// degrees, prefix-sum offsets, then a scatter pass. Shared by every
+/// [`Graph`] construction path so the neighbor order (edge-list order per
+/// row) is identical no matter how the edges were produced.
+fn build_adjacency(n: usize, edges: &[Edge]) -> (Vec<usize>, Vec<(u32, f64)>) {
+    let mut degree_count = vec![0usize; n];
+    for e in edges {
+        degree_count[e.u as usize] += 1;
+        degree_count[e.v as usize] += 1;
+    }
+    let mut offsets = Vec::with_capacity(n + 1);
+    offsets.push(0);
+    for i in 0..n {
+        offsets.push(offsets[i] + degree_count[i]);
+    }
+    let mut cursor = offsets.clone();
+    let mut neighbors = vec![(0u32, 0.0f64); offsets[n]];
+    for e in edges {
+        neighbors[cursor[e.u as usize]] = (e.v, e.w);
+        cursor[e.u as usize] += 1;
+        neighbors[cursor[e.v as usize]] = (e.u, e.w);
+        cursor[e.v as usize] += 1;
+    }
+    (offsets, neighbors)
+}
+
 /// An undirected, optionally weighted graph.
 ///
 /// Edges are stored once in canonical orientation `(u, v)` with `u < v`
@@ -122,25 +148,7 @@ impl Graph {
                 _ => edges.push(Edge { u, v, w }),
             }
         }
-        // CSR adjacency.
-        let mut degree_count = vec![0usize; n];
-        for e in &edges {
-            degree_count[e.u as usize] += 1;
-            degree_count[e.v as usize] += 1;
-        }
-        let mut offsets = Vec::with_capacity(n + 1);
-        offsets.push(0);
-        for i in 0..n {
-            offsets.push(offsets[i] + degree_count[i]);
-        }
-        let mut cursor = offsets.clone();
-        let mut neighbors = vec![(0u32, 0.0f64); offsets[n]];
-        for e in &edges {
-            neighbors[cursor[e.u as usize]] = (e.v, e.w);
-            cursor[e.u as usize] += 1;
-            neighbors[cursor[e.v as usize]] = (e.u, e.w);
-            cursor[e.v as usize] += 1;
-        }
+        let (offsets, neighbors) = build_adjacency(n, &edges);
         Ok(Graph { n, edges, offsets, neighbors })
     }
 
@@ -148,6 +156,40 @@ impl Graph {
     pub fn from_pairs(n: usize, pairs: &[(usize, usize)]) -> Result<Graph> {
         let raw: Vec<(usize, usize, f64)> = pairs.iter().map(|&(a, b)| (a, b, 1.0)).collect();
         Graph::from_edges(n, &raw)
+    }
+
+    /// Build from an **already-canonical** edge list: each edge `u < v`,
+    /// strictly ascending `(u, v)` order (hence no duplicates), finite
+    /// weights. Validates those invariants in `O(E)` and takes ownership —
+    /// no intermediate sort or merge buffer, so a streaming generator can
+    /// hand over its edges with exactly one `Vec<Edge>` live (plus the
+    /// `2E` CSR adjacency every construction path builds). The invariants
+    /// are precisely what [`Graph::from_edges`] would have produced, so
+    /// graphs built either way are interchangeable bit for bit.
+    pub fn from_canonical_edges(n: usize, edges: Vec<Edge>) -> Result<Graph> {
+        let mut prev: Option<(u32, u32)> = None;
+        for e in &edges {
+            if e.u >= e.v {
+                bail!("edge ({},{}) is not canonical (need u < v)", e.u, e.v);
+            }
+            if e.v as usize >= n {
+                bail!("edge ({},{}) out of range for n={n}", e.u, e.v);
+            }
+            if !e.w.is_finite() {
+                bail!("non-finite edge weight {}", e.w);
+            }
+            if let Some(p) = prev {
+                if p >= (e.u, e.v) {
+                    bail!(
+                        "edges not strictly ascending: ({},{}) after ({},{})",
+                        e.u, e.v, p.0, p.1
+                    );
+                }
+            }
+            prev = Some((e.u, e.v));
+        }
+        let (offsets, neighbors) = build_adjacency(n, &edges);
+        Ok(Graph { n, edges, offsets, neighbors })
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -457,6 +499,27 @@ mod tests {
 
     fn triangle() -> Graph {
         Graph::from_pairs(3, &[(0, 1), (1, 2), (0, 2)]).unwrap()
+    }
+
+    #[test]
+    fn canonical_construction_matches_from_edges_bitwise() {
+        let raw = [(2usize, 0usize, 0.5), (1, 3, 2.0), (0, 1, 1.25)];
+        let a = Graph::from_edges(4, &raw).unwrap();
+        let b = Graph::from_canonical_edges(4, a.edges().to_vec()).unwrap();
+        assert_eq!(a.edges(), b.edges());
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.neighbors, b.neighbors);
+        // O(E) validation: non-canonical orientation, duplicates /
+        // out-of-order, out-of-range endpoints, non-finite weights.
+        let e = |u, v, w| Edge { u, v, w };
+        assert!(Graph::from_canonical_edges(4, vec![e(2, 1, 1.0)]).is_err());
+        assert!(Graph::from_canonical_edges(4, vec![e(1, 1, 1.0)]).is_err());
+        assert!(Graph::from_canonical_edges(4, vec![e(0, 1, 1.0), e(0, 1, 1.0)]).is_err());
+        assert!(Graph::from_canonical_edges(4, vec![e(1, 2, 1.0), e(0, 1, 1.0)]).is_err());
+        assert!(Graph::from_canonical_edges(3, vec![e(0, 3, 1.0)]).is_err());
+        assert!(Graph::from_canonical_edges(4, vec![e(0, 1, f64::NAN)]).is_err());
+        // Empty list is a valid (edgeless) graph.
+        assert_eq!(Graph::from_canonical_edges(2, Vec::new()).unwrap().num_edges(), 0);
     }
 
     #[test]

@@ -72,11 +72,26 @@ fn rescue_column(prev: &[Vec<f64>], n: usize) -> Vec<f64> {
 /// relative to their pre-projection scale) are replaced with deterministic
 /// rescue directions orthogonal to the rest.
 pub fn mgs_orthonormalize(v: &mut DMat) {
+    mgs_orthonormalize_against(&[], v);
+}
+
+/// [`mgs_orthonormalize`] with a fixed **locked panel**: the columns of
+/// `v` are additionally projected against `locked` (assumed orthonormal —
+/// the Ritz solver's frozen converged pairs), which is never modified.
+/// The breakdown rescue also spans the locked panel, so a rescued column
+/// stays orthogonal to the deflated directions. With an empty `locked`
+/// this *is* `mgs_orthonormalize` — the same operations in the same
+/// order, bitwise.
+pub fn mgs_orthonormalize_against(locked: &[Vec<f64>], v: &mut DMat) {
     let (n, k) = (v.rows(), v.cols());
-    let mut cols: Vec<Vec<f64>> = (0..k).map(|j| v.col(j)).collect();
-    for j in 0..k {
+    let l = locked.len();
+    let mut cols: Vec<Vec<f64>> = Vec::with_capacity(l + k);
+    cols.extend(locked.iter().cloned());
+    cols.extend((0..k).map(|j| v.col(j)));
+    for j in l..l + k {
         let orig = norm(&cols[j]);
-        // Two passes of projection-removal against previous columns.
+        // Two passes of projection-removal against previous columns
+        // (locked panel first, then the already-fixed columns of `v`).
         for _pass in 0..2 {
             for i in 0..j {
                 let (head, tail) = cols.split_at_mut(j);
@@ -89,8 +104,8 @@ pub fn mgs_orthonormalize(v: &mut DMat) {
             cols[j] = fixed;
         }
     }
-    for (j, c) in cols.iter().enumerate() {
-        v.set_col(j, c);
+    for j in 0..k {
+        v.set_col(j, &cols[l + j]);
     }
 }
 
@@ -250,6 +265,43 @@ mod tests {
         // Column 0's direction survived (no spurious rescue).
         let align = dot(&tiny.col(0), &want_dir).abs();
         assert!(align > 1.0 - 1e-10, "independent tiny column was clobbered: {align}");
+    }
+
+    #[test]
+    fn mgs_against_locked_panel_keeps_both_orthogonal() {
+        let mut rng = Rng::new(7);
+        // Build an orthonormal locked panel of 3 columns.
+        let mut lk = DMat::from_fn(30, 3, |_, _| rng.normal());
+        mgs_orthonormalize(&mut lk);
+        let locked: Vec<Vec<f64>> = (0..3).map(|j| lk.col(j)).collect();
+        // Active block deliberately contaminated with locked directions
+        // plus a column duplicating locked[0] exactly (breakdown path).
+        let mut v = DMat::from_fn(30, 4, |i, j| match j {
+            0 => locked[0][i],
+            _ => rng.normal() + 0.5 * locked[j % 3][i],
+        });
+        mgs_orthonormalize_against(&locked, &mut v);
+        // Active columns are orthonormal among themselves...
+        let g = matmul(&v.t(), &v);
+        assert!((&g - &DMat::eye(4)).max_abs() < 1e-10);
+        // ...and orthogonal to every locked column (duplicate included —
+        // the rescue spans the locked panel).
+        for j in 0..4 {
+            for q in &locked {
+                assert!(dot(q, &v.col(j)).abs() < 1e-10, "col {j} not ⊥ locked");
+            }
+        }
+        // Locked panel untouched, and the empty-panel form is the plain
+        // orthonormalizer bitwise.
+        let mut a = DMat::from_fn(20, 3, |_, _| rng.normal());
+        let mut b = a.clone();
+        mgs_orthonormalize(&mut a);
+        mgs_orthonormalize_against(&[], &mut b);
+        assert!(a
+            .data()
+            .iter()
+            .zip(b.data().iter())
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

@@ -33,7 +33,7 @@
 
 use super::dmat::DMat;
 use super::par::{row_shards, shard_starts};
-use super::sparse::{kernel_for_width, CsrMat};
+use super::sparse::{kernel_for_width, spmm_step_into, CsrMat};
 use crate::util::pool::parallel_shards;
 
 /// Which bundle rows each shard must receive from outside its own row
@@ -224,6 +224,132 @@ impl ShardedCsr {
     pub fn shard_row_start(&self, s: usize) -> usize {
         self.shards[s].row_start
     }
+
+    /// Fused solver step `C = α·W + β·(A·W) + γ·U` through the two-phase
+    /// sharded path — the sharded counterpart of
+    /// [`super::sparse::spmm_step_into`], and **bitwise equal** to it at
+    /// every (shard count, worker count): phase 2 runs the same
+    /// [`kernel_for_width`] accumulation per row (identical CSR-order,
+    /// zero-skipping reduction — the local remap preserves entry order),
+    /// and the α/β/γ combine then applies the identical operation sequence
+    /// per element. Only the bundle `W` needs a halo exchange; the α·W and
+    /// γ·U terms read each shard's *own* rows, which it already holds.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_into(
+        &self,
+        w: &DMat,
+        u: &DMat,
+        alpha: f64,
+        beta: f64,
+        gamma: f64,
+        c: &mut DMat,
+        threads: usize,
+    ) {
+        assert_eq!(self.n, w.rows(), "sharded step shape mismatch");
+        let k = w.cols();
+        assert_eq!((u.rows(), u.cols()), (self.n, k), "sharded step U shape mismatch");
+        assert_eq!((c.rows(), c.cols()), (self.n, k), "sharded step output shape mismatch");
+        // Phase 1: halo exchange — one gather of W per sweep; U never
+        // crosses shard boundaries.
+        let panels: Vec<DMat> = self.shards.iter().map(|sh| sh.gather_panel(w)).collect();
+        // Phase 2: per-shard SpMM accumulation + in-chunk α/β/γ combine.
+        let kernel = kernel_for_width(k);
+        let mut lens: Vec<usize> = Vec::new();
+        let mut spans: Vec<(usize, usize, usize)> = Vec::new();
+        for (si, sh) in self.shards.iter().enumerate() {
+            let subs = row_shards(sh.rows, threads);
+            if subs.is_empty() {
+                lens.push(0);
+                spans.push((si, 0, 0));
+                continue;
+            }
+            for (&len, &r0) in subs.iter().zip(shard_starts(&subs).iter()) {
+                lens.push(len * k);
+                spans.push((si, r0, r0 + len));
+            }
+        }
+        let wd = w.data();
+        let ud = u.data();
+        parallel_shards(c.data_mut(), &lens, |idx, chunk| {
+            let (si, r0, r1) = spans[idx];
+            if r0 == r1 {
+                return;
+            }
+            let sh = &self.shards[si];
+            kernel(&sh.local, &panels[si], chunk, r0, r1);
+            // Combine against the globally-indexed own rows of W and U —
+            // the same `x = acc·β; x += α·w; x += γ·u` sequence (with the
+            // zero-coefficient skips) as the fused unsharded kernel.
+            for lr in 0..(r1 - r0) {
+                let gi = sh.row_start + r0 + lr;
+                let crow = &mut chunk[lr * k..(lr + 1) * k];
+                let wrow = &wd[gi * k..(gi + 1) * k];
+                let urow = &ud[gi * k..(gi + 1) * k];
+                for t in 0..k {
+                    let mut x = crow[t] * beta;
+                    if alpha != 0.0 {
+                        x += alpha * wrow[t];
+                    }
+                    if gamma != 0.0 {
+                        x += gamma * urow[t];
+                    }
+                    crow[t] = x;
+                }
+            }
+        });
+    }
+}
+
+/// The operator a polynomial bundle apply iterates against: either the
+/// plain CSR matrix (every fused step one [`spmm_step_into`] pass) or a
+/// [`ShardedCsr`] (every fused step one halo exchange + per-shard pass).
+/// This is the dispatch seam that routes the sharded schedule underneath
+/// `SparsePolyOp`'s three series evaluators — Horner, the Chebyshev
+/// recurrence, and the NegPower repeated multiply — without touching their
+/// recurrence code. The two variants are bitwise-equal, so which one a
+/// pipeline runs is observable only through the halo accounting.
+#[derive(Clone, Copy)]
+pub enum StepOperand<'a> {
+    /// The unsharded CSR path.
+    Csr(&'a CsrMat),
+    /// The shard-partitioned two-phase path.
+    Sharded(&'a ShardedCsr),
+}
+
+impl StepOperand<'_> {
+    /// Operator dimension (rows = cols; both variants are square).
+    pub fn rows(&self) -> usize {
+        match self {
+            StepOperand::Csr(a) => a.rows(),
+            StepOperand::Sharded(s) => s.rows(),
+        }
+    }
+
+    /// Fused step `C = α·W + β·(A·W) + γ·U` on whichever variant this is.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_into(
+        &self,
+        w: &DMat,
+        u: &DMat,
+        alpha: f64,
+        beta: f64,
+        gamma: f64,
+        c: &mut DMat,
+        threads: usize,
+    ) {
+        match self {
+            StepOperand::Csr(a) => spmm_step_into(a, w, u, alpha, beta, gamma, c, threads),
+            StepOperand::Sharded(s) => s.step_into(w, u, alpha, beta, gamma, c, threads),
+        }
+    }
+
+    /// Halo rows one sweep exchanges (0 for the unsharded variant).
+    pub fn halo_rows(&self) -> usize {
+        match self {
+            StepOperand::Csr(_) => 0,
+            StepOperand::Sharded(s) => s.halo_plan.halo_rows(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -336,6 +462,53 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sharded_step_bitwise_matches_fused_kernel() {
+        // The full α/β/γ surface the three series evaluators use: Horner
+        // (−shift, 1, c), NegPower (1, −1/ℓ, 0), Chebyshev (2b, 2a, −1).
+        let g = crate::graph::gen::cliques(&crate::graph::gen::CliqueSpec {
+            n: 48,
+            k: 4,
+            max_short_circuit: 5,
+            seed: 11,
+        })
+        .graph;
+        let l = g.laplacian_csr();
+        let combos = [(0.0, 1.0, 0.25), (1.0, -1.0 / 51.0, 0.0), (0.8, -1.6, -1.0)];
+        for &s in &[1usize, 2, 3, 7] {
+            let sharded = ShardedCsr::partition(&l, s);
+            for k in [1usize, 8, 17] {
+                let w = random_bundle(k as u64 + 7, 48, k);
+                let u = random_bundle(k as u64 + 31, 48, k);
+                for &(alpha, beta, gamma) in &combos {
+                    let want = crate::linalg::sparse::spmm_step(&l, &w, &u, alpha, beta, gamma, 1);
+                    for &workers in &[1usize, 2, 8] {
+                        let mut got = DMat::zeros(48, k);
+                        sharded.step_into(&w, &u, alpha, beta, gamma, &mut got, workers);
+                        assert!(
+                            bitwise_eq(&got, &want),
+                            "S={s}, k={k}, {workers} workers, ({alpha},{beta},{gamma})"
+                        );
+                        let mut via = DMat::zeros(48, k);
+                        StepOperand::Sharded(&sharded)
+                            .step_into(&w, &u, alpha, beta, gamma, &mut via, workers);
+                        assert!(bitwise_eq(&via, &want), "operand dispatch diverged");
+                    }
+                }
+            }
+        }
+        // The unsharded operand variant is the fused kernel itself.
+        let w = random_bundle(3, 48, 5);
+        let u = random_bundle(4, 48, 5);
+        let want = crate::linalg::sparse::spmm_step(&l, &w, &u, 0.5, 1.0, -0.25, 1);
+        let mut got = DMat::zeros(48, 5);
+        let op = StepOperand::Csr(&l);
+        assert_eq!(op.rows(), 48);
+        assert_eq!(op.halo_rows(), 0);
+        op.step_into(&w, &u, 0.5, 1.0, -0.25, &mut got, 4);
+        assert!(bitwise_eq(&got, &want));
     }
 
     #[test]

@@ -141,6 +141,21 @@ fn pipeline_spec(spec: ArgSpec) -> ArgSpec {
             "0",
             "--solver ritz: subspace block width (0 = auto: k + 2 guard vectors)",
         )
+        .opt_choice(
+            "ritz-lock",
+            "on",
+            &["on", "off"],
+            "--solver ritz: locked-convergence deflation — freeze converged Ritz pairs and \
+             apply the operator only to the shrinking active block (fewer SpMM columns per \
+             sweep; off = historical fixed-block sweeps)",
+        )
+        .opt(
+            "shards",
+            "0",
+            "row-shard the matrix-free operator into N two-phase (owned + halo) partitions; \
+             bitwise-identical to --shards 0 at every shard/worker count (--op sparse, \
+             --precision f64 only)",
+        )
         .opt("threads", "1", "worker threads for dense kernels (bitwise-identical output)")
         .opt("op", "dense", "dense (materialize p(L)) | sparse (matrix-free CSR operator)")
         .opt_choice(
@@ -217,6 +232,12 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
     build.precision = Precision::parse(
         &cfg.str_opt("pipeline.precision").unwrap_or_else(|| a.str("precision")),
     )?;
+    build.shards = cfg.usize("pipeline.shards", a.usize("shards"));
+    let ritz_lock = match cfg.str("pipeline.ritz_lock", &a.str("ritz-lock")).as_str() {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("--ritz-lock takes on|off, got {other:?}"),
+    };
     let backend = match a.str("backend").as_str() {
         "native" => Backend::Native,
         "xla" => Backend::Xla { artifacts_dir: a.str("artifacts") },
@@ -237,6 +258,7 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
         ritz_tol: cfg.f64("pipeline.ritz_tol", a.f64("ritz-tol")),
         ritz_max_iters: cfg.usize("pipeline.ritz_max_iters", a.usize("ritz-max-iters")),
         block_size: cfg.usize("pipeline.block_size", a.usize("block-size")),
+        ritz_lock,
         build,
         backend,
         seed: a.u64("seed"),
@@ -245,6 +267,7 @@ fn build_pipeline_cfg(a: &sped::util::cli::Args, cfg: &Config) -> anyhow::Result
         op_mode,
         rcm_order: None, // filled by callers that loaded a persisted order
         reorder,
+        warm_start: None, // managed by the stream/serve sessions
         ground_truth,
     })
 }
@@ -421,15 +444,30 @@ fn cmd_cluster(mut args: Vec<String>) -> anyhow::Result<()> {
             rz.sweeps_per_apply,
             rz.total_sweeps
         );
+        // Deflation/sharding accounting: column sweeps are the honest SpMM
+        // cost unit once locking shrinks the active block (fixed-block cost
+        // would be total_sweeps * block width).
+        println!(
+            "ritz: {} locked pairs, {} SpMM column sweeps{}",
+            rz.locked,
+            rz.col_sweeps,
+            if rz.halo_volume > 0 {
+                format!(", {} halo bundle rows exchanged", rz.halo_volume)
+            } else {
+                String::new()
+            }
+        );
         // Strided residual trace (≤ ~12 lines), always including the last.
         let stride = (rz.residual_history.len() / 10).max(1);
+        let first = rz.residual_history_total - rz.residual_history.len();
         for (i, r) in rz.residual_history.iter().enumerate() {
             if i % stride == 0 || i + 1 == rz.residual_history.len() {
                 println!(
-                    "  iter {:>4}  max residual {:.3e}  sweeps {}",
-                    i + 1,
+                    "  iter {:>4}  max residual {:.3e}  sweeps {}  locked {}",
+                    first + i + 1,
                     r,
-                    (i + 1) * rz.sweeps_per_apply
+                    (first + i + 1) * rz.sweeps_per_apply,
+                    rz.locked_history.get(i).copied().unwrap_or(rz.locked)
                 );
             }
         }

@@ -18,6 +18,7 @@ use crate::linalg::dmat::{dot, normalize, DMat};
 use crate::linalg::matmul::matmul;
 use crate::linalg::metrics::{eigenvector_streak, subspace_error, ConvergenceHistory};
 use crate::linalg::qr::mgs_orthonormalize;
+use crate::linalg::shard::{ShardedCsr, StepOperand};
 use crate::linalg::sparse::{spmm_step_mixed_into, CsrMat, CsrMatF32};
 use crate::transforms::{ChebSeries, PolyBasis, PolySeries, Precision, SeriesForm, TransformKind};
 
@@ -49,6 +50,13 @@ pub trait MatVecOp {
     /// never spins on residuals below the arithmetic's resolution.
     fn precision_floor(&self) -> f64 {
         0.0
+    }
+    /// Halo bundle rows one SpMM sweep exchanges between shards — `0` for
+    /// unsharded operators (the default); the sharded matrix-free operator
+    /// reports its partition's total. The Ritz solver multiplies this by
+    /// sweeps × active columns for its per-solve `halo_volume` accounting.
+    fn halo_rows_per_sweep(&self) -> usize {
+        0
     }
 }
 
@@ -142,6 +150,11 @@ pub struct SparsePolyOp {
     /// in f32 with f64 accumulators — same recurrences, one f32 rounding
     /// per element per sweep, bounded by [`Self::mixed_budget`].
     pub precision: Precision,
+    /// Graph-sharded partition of `l` (`--shards N`, `N ≥ 1`): every series
+    /// sweep runs as [`ShardedCsr`]'s two-phase owned/halo apply with one
+    /// halo exchange per sweep — bitwise-equal to the unsharded kernels at
+    /// every (shard, worker) pair. `None` on the default unsharded path.
+    sharded: Option<ShardedCsr>,
     pub threads: usize,
 }
 
@@ -183,6 +196,12 @@ impl SparsePolyOp {
             );
         }
         opts.degree.validate_basis(opts.basis)?;
+        if opts.shards > 0 && opts.precision.is_mixed() {
+            anyhow::bail!(
+                "--shards composes with the f64 sweeps only — the mixed-precision \
+                 path has no sharded kernel yet; use --precision f64 or drop --shards"
+            );
+        }
         let threads = opts.threads.max(1);
         // Skip the 100-matvec power estimate when nothing consumes it —
         // see the matching guard in `build_solver_matrix`.
@@ -230,6 +249,10 @@ impl SparsePolyOp {
         // once at build time — the f64 CSR stays authoritative for nnz
         // accounting and any exact consumer.
         let l32 = opts.precision.is_mixed().then(|| CsrMatF32::from_f64(&l));
+        // Partition AFTER pre-scaling so the shard-local CSRs hold the same
+        // values the unsharded sweeps read — the bitwise-equality contract
+        // is against this exact matrix.
+        let sharded = (opts.shards > 0).then(|| ShardedCsr::partition(&l, opts.shards));
         Ok(SparsePolyOp {
             l,
             l32,
@@ -239,8 +262,19 @@ impl SparsePolyOp {
             kind,
             basis: opts.basis,
             precision: opts.precision,
+            sharded,
             threads,
         })
+    }
+
+    /// Shard count of the partitioned operator (`0` when unsharded).
+    pub fn shard_count(&self) -> usize {
+        self.sharded.as_ref().map_or(0, ShardedCsr::shard_count)
+    }
+
+    /// Halo bundle rows one sweep exchanges (`0` when unsharded).
+    pub fn halo_rows(&self) -> usize {
+        self.sharded.as_ref().map_or(0, |s| s.halo_plan.halo_rows())
     }
 
     /// Stored entries of the underlying CSR Laplacian.
@@ -431,8 +465,15 @@ impl MatVecOp for SparsePolyOp {
         if self.precision.is_mixed() {
             return self.apply_mixed(v, threads);
         }
+        // One stepping operand for every evaluator: the plain fused kernel,
+        // or (with --shards) the two-phase owned/halo sharded apply — same
+        // recurrences, bitwise-equal output.
+        let operand = match &self.sharded {
+            Some(s) => StepOperand::Sharded(s),
+            None => StepOperand::Csr(&self.l),
+        };
         let p_v = match &self.form {
-            SparsePolyForm::Poly(series) => series.apply_bundle(&self.l, v, threads),
+            SparsePolyForm::Poly(series) => series.apply_bundle_via(&operand, v, threads),
             SparsePolyForm::NegPower { ell } => {
                 // W ← (I − L/ℓ)·W, ℓ times; p(L)·V = −W. Each step is one
                 // fused pass (W + inv·(L·W)) over two preallocated bundles
@@ -442,9 +483,7 @@ impl MatVecOp for SparsePolyOp {
                 let mut w = v.clone();
                 let mut t = DMat::zeros(v.rows(), v.cols());
                 for _ in 0..*ell {
-                    crate::linalg::sparse::spmm_step_into(
-                        &self.l, &w, v, 1.0, inv, 0.0, &mut t, threads,
-                    );
+                    operand.step_into(&w, v, 1.0, inv, 0.0, &mut t, threads);
                     std::mem::swap(&mut w, &mut t);
                 }
                 w.scale(-1.0);
@@ -461,11 +500,19 @@ impl MatVecOp for SparsePolyOp {
         self.l.rows()
     }
     fn label(&self) -> String {
-        if self.precision.is_mixed() {
+        let mut label = if self.precision.is_mixed() {
             format!("sparse[{},nnz={},{},mixed]", self.l.rows(), self.l.nnz(), self.basis)
         } else {
             format!("sparse[{},nnz={},{}]", self.l.rows(), self.l.nnz(), self.basis)
+        };
+        if let Some(s) = &self.sharded {
+            label.push_str(&format!(
+                "+shards[{},halo={}]",
+                s.shard_count(),
+                s.halo_plan.halo_rows()
+            ));
         }
+        label
     }
     fn sweeps_per_apply(&self) -> usize {
         self.sweeps()
@@ -476,6 +523,9 @@ impl MatVecOp for SparsePolyOp {
         } else {
             0.0
         }
+    }
+    fn halo_rows_per_sweep(&self) -> usize {
+        self.halo_rows()
     }
 }
 
@@ -836,6 +886,59 @@ mod tests {
                 assert!(identical, "{kind} diverged at {threads} workers");
             }
         }
+    }
+
+    #[test]
+    fn sharded_op_bitwise_matches_unsharded_all_evaluators() {
+        // Horner (TaylorNegExp), NegPower (LimitNegExp) and the Chebyshev
+        // recurrence must all route through the sharded two-phase apply
+        // without changing a single bit, at every (shards, workers) pair.
+        let g = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 7 }).graph;
+        let v = random_init(36, 4, 3);
+        let cases = [
+            (TransformKind::TaylorNegExp { ell: 21 }, PolyBasis::Monomial),
+            (TransformKind::LimitNegExp { ell: 31 }, PolyBasis::Monomial),
+            (TransformKind::TaylorNegExp { ell: 21 }, PolyBasis::Chebyshev),
+        ];
+        for (kind, basis) in cases {
+            let base = {
+                let opts = BuildOptions { basis, ..BuildOptions::default() };
+                SparsePolyOp::from_graph(&g, kind, &opts).unwrap().apply(&v)
+            };
+            for shards in [1usize, 2, 7] {
+                for threads in [1usize, 2, 8] {
+                    let opts = BuildOptions { basis, shards, threads, ..BuildOptions::default() };
+                    let mut op = SparsePolyOp::from_graph(&g, kind, &opts).unwrap();
+                    assert_eq!(op.shard_count(), shards);
+                    assert!(op.label().contains(&format!("+shards[{shards},")), "{}", op.label());
+                    assert_eq!(op.halo_rows_per_sweep(), op.halo_rows());
+                    if shards > 1 {
+                        assert!(op.halo_rows() > 0, "{kind}/{basis}: expected halo rows");
+                    }
+                    let got = op.apply(&v);
+                    let identical = base
+                        .data()
+                        .iter()
+                        .zip(got.data().iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(identical, "{kind}/{basis} diverged at S={shards}, {threads} workers");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_op_rejects_mixed_precision() {
+        let g = cliques(&CliqueSpec { n: 12, k: 2, max_short_circuit: 1, seed: 1 }).graph;
+        let opts = BuildOptions {
+            shards: 2,
+            precision: Precision::Mixed,
+            ..BuildOptions::default()
+        };
+        let err =
+            SparsePolyOp::from_graph(&g, TransformKind::TaylorNegExp { ell: 21 }, &opts)
+                .unwrap_err();
+        assert!(format!("{err:#}").contains("--shards"), "{err:#}");
     }
 
     #[test]

@@ -30,7 +30,7 @@
 use crate::linalg::dmat::{norm, DMat};
 use crate::linalg::eigh;
 use crate::linalg::matmul::matmul;
-use crate::linalg::qr::mgs_orthonormalize;
+use crate::linalg::qr::{mgs_orthonormalize, mgs_orthonormalize_against};
 use crate::solvers::MatVecOp;
 use anyhow::{bail, Result};
 
@@ -62,6 +62,17 @@ pub struct RitzConfig {
     /// converging run never trips it; only a frozen iteration — an
     /// operator whose image stopped depending on the basis — does.
     pub stagnation_window: usize,
+    /// Locked-convergence deflation (`--ritz-lock on|off`, **default on**):
+    /// per outer iteration, freeze the maximal leading prefix of wanted
+    /// Ritz pairs whose residual is at tolerance into a locked panel, and
+    /// apply the operator only to the shrinking active block (orthogonalized
+    /// against the panel each sweep) — so SpMM *column* volume per sweep
+    /// decays as pairs converge instead of staying at `b`. Until the first
+    /// pair locks the trajectory is bitwise identical to `lock = false`;
+    /// locked solves report the savings in [`RitzResult::col_sweeps`] /
+    /// [`RitzResult::locked_history`]. `false` restores the fixed-block
+    /// iteration exactly.
+    pub lock: bool,
 }
 
 impl Default for RitzConfig {
@@ -73,6 +84,7 @@ impl Default for RitzConfig {
             max_iters: 500,
             warm_start: None,
             stagnation_window: 100,
+            lock: true,
         }
     }
 }
@@ -173,6 +185,23 @@ pub struct RitzResult {
     pub sweeps_per_apply: usize,
     /// `iterations · sweeps_per_apply`.
     pub total_sweeps: usize,
+    /// Ritz pairs frozen in the locked panel when the solve finished
+    /// (`= k` for a converged locked solve; `0` with `lock = false`).
+    pub locked: usize,
+    /// Locked-pair count after each outer iteration's locking step —
+    /// `history`-aligned, monotone non-decreasing, all zeros with
+    /// `lock = false`.
+    pub locked_history: Vec<usize>,
+    /// SpMM **column** sweeps actually spent:
+    /// `Σ_iterations active_width · sweeps_per_apply`. Equals
+    /// `total_sweeps · b` for a fixed block; strictly smaller once pairs
+    /// lock — the honest unit for the deflation win (`total_sweeps`
+    /// deliberately keeps counting bundle applies).
+    pub col_sweeps: usize,
+    /// Halo bundle-row volume exchanged by a sharded operator:
+    /// `Σ_iterations halo_rows · sweeps_per_apply · active_width`
+    /// ([`MatVecOp::halo_rows_per_sweep`]); `0` for unsharded operators.
+    pub halo_volume: usize,
 }
 
 /// Deterministic `n×b` orthonormal starting block, a pure function of
@@ -255,6 +284,7 @@ pub fn ritz_solve(op: &mut dyn MatVecOp, cfg: &RitzConfig) -> Result<RitzResult>
         bail!("ritz: tol must be > 0");
     }
     let sweeps_per_apply = op.sweeps_per_apply();
+    let halo_per_sweep = op.halo_rows_per_sweep();
     // Clamp the tolerance to the operator's arithmetic floor
     // ([`MatVecOp::precision_floor`]): a mixed-precision operator cannot
     // certify residuals below its documented f32 budget, so a tighter
@@ -269,18 +299,38 @@ pub fn ritz_solve(op: &mut dyn MatVecOp, cfg: &RitzConfig) -> Result<RitzResult>
     let mut embedding = DMat::zeros(n, k);
     let mut values = vec![0.0; k];
     let mut residuals = vec![f64::INFINITY; k];
+    // The locked panel (soft locking): Ritz vectors frozen at their
+    // lock-time values/residuals. Empty until the first pair converges,
+    // and permanently empty with `lock = false` — in both states the loop
+    // below is bitwise-identical to the historical fixed-block iteration.
+    let mut locked_vecs: Vec<Vec<f64>> = Vec::new();
+    let mut locked_vals: Vec<f64> = Vec::new();
+    let mut locked_res: Vec<f64> = Vec::new();
+    let mut locked_history: Vec<usize> = Vec::new();
+    let mut col_sweeps = 0usize;
+    let mut halo_volume = 0usize;
     let mut iterations = 0;
     let mut converged = false;
     let mut best_res = f64::INFINITY;
     let mut stagnant = 0usize;
     for it in 1..=cfg.max_iters {
         iterations = it;
+        // Active block width: b minus the locked panel. Invariant:
+        // ba − k_rem = b − k ≥ 0, so ba ≥ 1 whenever pairs remain wanted.
+        let ba = v.cols();
+        let k_rem = k - locked_vals.len();
         let w = op.apply(&v);
+        // Honest per-column accounting: this apply cost ba columns ×
+        // sweeps_per_apply SpMM sweeps (and, when sharded, that many
+        // halo-row bundles exchanged). `total_sweeps` keeps counting whole
+        // bundle applies — `col_sweeps` is where deflation shows up.
+        col_sweeps += ba * sweeps_per_apply;
+        halo_volume += halo_per_sweep * sweeps_per_apply * ba;
         // Rayleigh–Ritz on span(V): H = VᵀMV, symmetrized so eigh sees an
         // exactly-symmetric input regardless of fp round-off in the product.
         let mut h = matmul(&v.t(), &w);
         h.symmetrize();
-        // Poisoned operator output shows up here first (b×b, so the scan
+        // Poisoned operator output shows up here first (ba×ba, so the scan
         // is free relative to the bundle product): bail with a structured
         // failure instead of feeding NaN to eigh and looping to the cap.
         if h.data().iter().any(|x| !x.is_finite()) {
@@ -293,22 +343,60 @@ pub fn ritz_solve(op: &mut dyn MatVecOp, cfg: &RitzConfig) -> Result<RitzResult>
             .into());
         }
         let e = eigh(&h)?;
-        // Wanted pairs: top-k of M (eigh orders ascending). X = V·Y and
-        // M·X = W·Y — the residual needs no further operator application.
-        let y = DMat::from_fn(b, k, |r, c| e.vectors[(r, b - 1 - c)]);
+        // Full active rotation, θ descending (eigh orders ascending):
+        // X = V·Y are the active Ritz vectors and M·X = W·Y their images —
+        // residuals and the next basis both read off these products, no
+        // further operator application. (The guard columns ride along;
+        // widening Y beyond the wanted k changes no bits of the leading
+        // columns — `matmul` reduces each output element in the same
+        // ascending-k order at every output width.)
+        let y = DMat::from_fn(ba, ba, |r, c| e.vectors[(r, ba - 1 - c)]);
         let x = matmul(&v, &y);
-        let mut r_mat = matmul(&w, &y);
-        for c in 0..k {
-            values[c] = e.values[b - 1 - c];
+        let xw = matmul(&w, &y);
+        let active_vals: Vec<f64> = (0..ba).map(|c| e.values[ba - 1 - c]).collect();
+        // Residuals of the wanted (leading k_rem) active pairs.
+        let mut active_res = vec![0.0f64; k_rem];
+        for c in 0..k_rem {
+            let theta = active_vals[c];
+            let mut col = xw.col(c);
+            for (row, cv) in col.iter_mut().enumerate() {
+                *cv -= theta * x[(row, c)];
+            }
+            active_res[c] = norm(&col);
         }
-        for c in 0..k {
-            let theta = values[c];
-            for row in 0..n {
-                r_mat[(row, c)] -= theta * x[(row, c)];
+        // ρ̂(M) from the locked ∪ active Ritz values (θ_max ≤ ρ(M), tight
+        // once the leading pair has locked in — which the near-kernel
+        // start column makes immediate for reversed Laplacian operators).
+        let scale = locked_vals
+            .iter()
+            .chain(e.values.iter())
+            .fold(0.0f64, |m, &t| m.max(t.abs()))
+            .max(1e-300);
+        // Deflation step: freeze the maximal leading prefix of wanted
+        // active pairs at tolerance. Prefix-only locking keeps the locked
+        // θ sequence descending and never locks past an unconverged pair.
+        let mut p = 0usize;
+        if cfg.lock {
+            while p < k_rem && active_res[p] <= tol * scale {
+                p += 1;
             }
         }
-        for c in 0..k {
-            residuals[c] = norm(&r_mat.col(c));
+        // Assemble the k reported pairs — frozen locked + fresh leading
+        // active — sorted by θ descending (stable, so the already-ordered
+        // unlocked case is untouched bit for bit).
+        let ll = locked_vals.len();
+        let theta_of = |i: usize| if i < ll { locked_vals[i] } else { active_vals[i - ll] };
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&ia, &ib| {
+            theta_of(ib).partial_cmp(&theta_of(ia)).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for (dst, &src) in order.iter().enumerate() {
+            values[dst] = theta_of(src);
+            residuals[dst] = if src < ll { locked_res[src] } else { active_res[src - ll] };
+            for row in 0..n {
+                embedding[(row, dst)] =
+                    if src < ll { locked_vecs[src][row] } else { x[(row, src - ll)] };
+            }
         }
         let max_res = residuals.iter().fold(0.0f64, |m, &r| m.max(r));
         // Residuals are norms of real vectors, so NaN here means the
@@ -328,12 +416,24 @@ pub fn ritz_solve(op: &mut dyn MatVecOp, cfg: &RitzConfig) -> Result<RitzResult>
             max_residual: max_res,
             sweeps: it * sweeps_per_apply,
         });
-        embedding = x;
-        // ρ̂(M) from the block's Ritz values (θ_max ≤ ρ(M), tight once the
-        // leading pair has locked in — which the near-kernel start column
-        // makes immediate for reversed Laplacian operators).
-        let scale = e.values.iter().fold(0.0f64, |m, &t| m.max(t.abs())).max(1e-300);
-        if max_res <= tol * scale {
+        // Commit the freshly locked prefix (vectors, values and residuals
+        // freeze at lock time — soft locking).
+        for c in 0..p {
+            locked_vecs.push(x.col(c));
+            locked_vals.push(active_vals[c]);
+            locked_res.push(active_res[c]);
+        }
+        locked_history.push(locked_vals.len());
+        // Convergence: a locked solve is done once all k wanted pairs sit
+        // in the panel (p = k_rem requires every leading residual at
+        // tolerance — exactly the fixed-block `max_res ≤ tol·ρ̂` criterion
+        // when nothing was locked before).
+        if cfg.lock {
+            if locked_vals.len() >= k {
+                converged = true;
+                break;
+            }
+        } else if max_res <= tol * scale {
             converged = true;
             break;
         }
@@ -353,13 +453,27 @@ pub fn ritz_solve(op: &mut dyn MatVecOp, cfg: &RitzConfig) -> Result<RitzResult>
             }
         }
         if it < cfg.max_iters {
-            // Filtered subspace-iteration step: the next basis is the
-            // orthonormalized image orth(M·V). Rank-deficient images (the
-            // filter annihilating guard directions) are rescued
-            // deterministically inside the orthonormalizer.
-            let mut next = w;
-            mgs_orthonormalize(&mut next);
-            v = next;
+            if locked_vecs.is_empty() {
+                // Filtered subspace-iteration step: the next basis is the
+                // orthonormalized image orth(M·V). Rank-deficient images
+                // (the filter annihilating guard directions) are rescued
+                // deterministically inside the orthonormalizer. This is
+                // the historical fixed-block update, taken verbatim until
+                // the first pair locks.
+                let mut next = w;
+                mgs_orthonormalize(&mut next);
+                v = next;
+            } else {
+                // Shrunken active block: drop the p freshly locked leading
+                // columns of the rotated image M·X (they carry the locked
+                // directions) and re-orthonormalize the remainder against
+                // the locked panel — MGS2 with the shared deterministic
+                // rescue path, so the active block stays an orthonormal
+                // complement of the panel every sweep.
+                let mut next = DMat::from_fn(n, ba - p, |r, c| xw[(r, p + c)]);
+                mgs_orthonormalize_against(&locked_vecs, &mut next);
+                v = next;
+            }
         }
     }
     let total_sweeps = iterations * sweeps_per_apply;
@@ -372,6 +486,10 @@ pub fn ritz_solve(op: &mut dyn MatVecOp, cfg: &RitzConfig) -> Result<RitzResult>
         converged,
         sweeps_per_apply,
         total_sweeps,
+        locked: locked_vals.len(),
+        locked_history,
+        col_sweeps,
+        halo_volume,
     })
 }
 
@@ -594,6 +712,131 @@ mod tests {
         let v_star = crate::linalg::eigh(&g.laplacian()).unwrap().bottom_k(3);
         let err = subspace_error(&v_star, &res.embedding);
         assert!(err < 1e-2, "subspace err {err}");
+    }
+
+    #[test]
+    fn locked_solve_matches_fixed_block_with_fewer_column_sweeps() {
+        let g = cliques(&CliqueSpec { n: 24, k: 3, max_short_circuit: 1, seed: 5 }).graph;
+        let mk = || {
+            SparsePolyOp::from_graph(
+                &g,
+                TransformKind::LimitNegExp { ell: 51 },
+                &BuildOptions::default(),
+            )
+            .unwrap()
+        };
+        let locked_cfg = RitzConfig { k: 3, tol: 1e-10, max_iters: 300, ..Default::default() };
+        let fixed_cfg = RitzConfig { lock: false, ..locked_cfg.clone() };
+        let locked = ritz_solve(&mut mk(), &locked_cfg).unwrap();
+        let fixed = ritz_solve(&mut mk(), &fixed_cfg).unwrap();
+        assert!(locked.converged && fixed.converged);
+        // Same subspace, honest bookkeeping on both sides.
+        let err = subspace_error(&fixed.embedding, &locked.embedding);
+        assert!(err < 1e-8, "locked vs fixed subspace err {err}");
+        assert_eq!(locked.locked, 3);
+        assert_eq!(fixed.locked, 0);
+        let b = 5; // auto block: k + 2
+        assert_eq!(fixed.col_sweeps, fixed.total_sweeps * b);
+        assert!(fixed.locked_history.iter().all(|&l| l == 0));
+        assert_eq!(fixed.halo_volume, 0);
+        // Deflation must have spent strictly fewer SpMM columns.
+        assert!(
+            locked.col_sweeps < fixed.col_sweeps,
+            "locked {} !< fixed {}",
+            locked.col_sweeps,
+            fixed.col_sweeps
+        );
+        // locked_history is history-aligned, monotone, and ends at k.
+        assert_eq!(locked.locked_history.len(), locked.history.len());
+        assert!(locked.locked_history.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*locked.locked_history.last().unwrap(), 3);
+        // col_sweeps is exactly the per-iteration active-width sum.
+        let mut want_cols = 0;
+        for t in 0..locked.iterations {
+            let before = if t == 0 { 0 } else { locked.locked_history[t - 1] };
+            want_cols += (b - before) * locked.sweeps_per_apply;
+        }
+        assert_eq!(locked.col_sweeps, want_cols);
+        // Values still descend after the locked/active merge.
+        for w in locked.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12, "values not descending: {:?}", locked.values);
+        }
+    }
+
+    #[test]
+    fn locked_warm_start_and_block_size_compose() {
+        let g = cliques(&CliqueSpec { n: 24, k: 3, max_short_circuit: 1, seed: 5 }).graph;
+        let mk = || {
+            SparsePolyOp::from_graph(
+                &g,
+                TransformKind::LimitNegExp { ell: 51 },
+                &BuildOptions::default(),
+            )
+            .unwrap()
+        };
+        // Custom block width: locking still converges and accounts in
+        // units of the configured width.
+        let wide = RitzConfig { k: 3, block: 6, tol: 1e-10, max_iters: 300, ..Default::default() };
+        let res = ritz_solve(&mut mk(), &wide).unwrap();
+        assert!(res.converged);
+        assert_eq!(res.locked, 3);
+        let mut want_cols = 0;
+        for t in 0..res.iterations {
+            let before = if t == 0 { 0 } else { res.locked_history[t - 1] };
+            want_cols += (6 - before) * res.sweeps_per_apply;
+        }
+        assert_eq!(res.col_sweeps, want_cols);
+        // Warm-starting from the converged embedding locks everything on
+        // the first sweep: one full-width apply, then done.
+        let warm = RitzConfig {
+            k: 3,
+            tol: 1e-10,
+            max_iters: 300,
+            ..Default::default()
+        }
+        .warm_start(res.embedding.clone());
+        let w = ritz_solve(&mut mk(), &warm).unwrap();
+        assert!(w.converged);
+        assert_eq!(w.iterations, 1);
+        assert_eq!(w.locked, 3);
+        assert_eq!(w.col_sweeps, 5 * w.sweeps_per_apply);
+        // Locked warm solves stay bitwise-reproducible.
+        let w2 = ritz_solve(&mut mk(), &warm).unwrap();
+        assert!(w
+            .embedding
+            .data()
+            .iter()
+            .zip(w2.embedding.data().iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn sharded_operator_reports_halo_volume_and_stays_bitwise() {
+        let g = cliques(&CliqueSpec { n: 24, k: 3, max_short_circuit: 1, seed: 5 }).graph;
+        let kind = TransformKind::LimitNegExp { ell: 51 };
+        let cfg = RitzConfig { k: 3, tol: 1e-10, max_iters: 300, ..Default::default() };
+        let mut plain =
+            SparsePolyOp::from_graph(&g, kind, &BuildOptions::default()).unwrap();
+        let base = ritz_solve(&mut plain, &cfg).unwrap();
+        assert_eq!(base.halo_volume, 0);
+        for shards in [2usize, 7] {
+            let opts = BuildOptions { shards, ..BuildOptions::default() };
+            let mut op = SparsePolyOp::from_graph(&g, kind, &opts).unwrap();
+            let halo = op.halo_rows();
+            let res = ritz_solve(&mut op, &cfg).unwrap();
+            // Sharded solves are bitwise-equal to unsharded — identical
+            // trajectory, identical embedding.
+            assert_eq!(res.iterations, base.iterations, "S={shards}");
+            assert!(res
+                .embedding
+                .data()
+                .iter()
+                .zip(base.embedding.data().iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+            // Halo accounting: halo_rows bundle rows per sweep per column.
+            assert_eq!(res.halo_volume, halo * res.col_sweeps, "S={shards}");
+            assert!(res.halo_volume > 0);
+        }
     }
 
     #[test]

@@ -34,7 +34,8 @@
 
 use super::SeriesForm;
 use crate::linalg::dmat::DMat;
-use crate::linalg::sparse::{spmm_step_into, CsrMat};
+use crate::linalg::shard::StepOperand;
+use crate::linalg::sparse::CsrMat;
 use anyhow::{bail, Result};
 
 /// Which polynomial basis a series' coefficients are expressed in
@@ -376,7 +377,16 @@ impl ChebSeries {
     /// bitwise identical for every worker count.
     pub fn apply_bundle(&self, l: &CsrMat, v: &DMat, threads: usize) -> DMat {
         assert!(l.is_square(), "apply_bundle needs a square operator");
-        assert_eq!(l.cols(), v.rows(), "apply_bundle shape mismatch");
+        self.apply_bundle_via(&StepOperand::Csr(l), v, threads)
+    }
+
+    /// [`Self::apply_bundle`] generalized over the stepping operand: the
+    /// same three-term recurrence runs against either the plain CSR fused
+    /// kernel or a [`crate::linalg::shard::ShardedCsr`] two-phase apply
+    /// (one halo exchange per sweep). Bitwise-identical across operands
+    /// and worker counts.
+    pub fn apply_bundle_via(&self, op: &StepOperand<'_>, v: &DMat, threads: usize) -> DMat {
+        assert_eq!(op.rows(), v.rows(), "apply_bundle shape mismatch");
         let (n, k) = (v.rows(), v.cols());
         let mut out = DMat::zeros(n, k);
         if self.coeffs.is_empty() {
@@ -390,12 +400,12 @@ impl ChebSeries {
         // T_1·V = Y·V = a·(A·V) + b·V — one fused pass.
         let mut t_prev = v.clone();
         let mut t_cur = DMat::zeros(n, k);
-        spmm_step_into(l, v, v, b, a, 0.0, &mut t_cur, threads);
+        op.step_into(v, v, b, a, 0.0, &mut t_cur, threads);
         out.axpy(self.coeffs[1], &t_cur);
         let mut t_next = DMat::zeros(n, k);
         for &c in self.coeffs.iter().skip(2) {
             // T_{j+1}V = 2a·(A·T_jV) + 2b·T_jV − T_{j−1}V — one fused pass.
-            spmm_step_into(l, &t_cur, &t_prev, 2.0 * b, 2.0 * a, -1.0, &mut t_next, threads);
+            op.step_into(&t_cur, &t_prev, 2.0 * b, 2.0 * a, -1.0, &mut t_next, threads);
             if c != 0.0 {
                 out.axpy(c, &t_next);
             }
@@ -486,6 +496,15 @@ impl PolySeries {
         match self {
             PolySeries::Monomial(s) => s.apply_bundle(a, v, threads),
             PolySeries::Chebyshev(c) => c.apply_bundle(a, v, threads),
+        }
+    }
+
+    /// [`Self::apply_bundle`] over an arbitrary stepping operand (plain
+    /// CSR or sharded) — dispatches to the per-basis `apply_bundle_via`.
+    pub fn apply_bundle_via(&self, op: &StepOperand<'_>, v: &DMat, threads: usize) -> DMat {
+        match self {
+            PolySeries::Monomial(s) => s.apply_bundle_via(op, v, threads),
+            PolySeries::Chebyshev(c) => c.apply_bundle_via(op, v, threads),
         }
     }
 }

@@ -101,7 +101,8 @@ pub use domain::{mixed_error_budget, Degree, DomainEstimate, Precision, Spectrum
 
 use crate::linalg::dmat::DMat;
 use crate::linalg::funcs::{matpow, poly_horner, power_lambda_max, spectral_apply};
-use crate::linalg::sparse::{spmm_step_into, CsrMat};
+use crate::linalg::shard::StepOperand;
+use crate::linalg::sparse::CsrMat;
 use anyhow::{anyhow, bail, Result};
 
 /// A spectral transform from Table 2 (or the identity baseline).
@@ -208,13 +209,23 @@ impl SeriesForm {
     ///
     /// This is the monomial-basis solver-step path behind
     /// `OpMode::MatrixFree` (`solvers::SparsePolyOp`); each Horner step is
-    /// one fused [`spmm_step_into`] pass (register-blocked for `k ≤ 16`
+    /// one fused [`crate::linalg::sparse::spmm_step_into`] pass
+    /// (register-blocked for `k ≤ 16`
     /// bundles), bitwise identical to the historical
     /// SpMM + `axpy` + `axpy` composition and for every worker count (the
     /// [`crate::linalg::sparse`] determinism contract).
     pub fn apply_bundle(&self, a: &CsrMat, v: &DMat, threads: usize) -> DMat {
         assert!(a.is_square(), "apply_bundle needs a square operator");
-        assert_eq!(a.cols(), v.rows(), "apply_bundle shape mismatch");
+        self.apply_bundle_via(&StepOperand::Csr(a), v, threads)
+    }
+
+    /// [`Self::apply_bundle`] generalized over the stepping operand: the
+    /// same Horner recurrence runs against either the plain CSR fused
+    /// kernel or a [`crate::linalg::shard::ShardedCsr`] two-phase apply
+    /// (one halo exchange per sweep). Bitwise-identical across operands
+    /// and worker counts.
+    pub fn apply_bundle_via(&self, op: &StepOperand<'_>, v: &DMat, threads: usize) -> DMat {
+        assert_eq!(op.rows(), v.rows(), "apply_bundle shape mismatch");
         if self.coeffs.is_empty() {
             return DMat::zeros(v.rows(), v.cols());
         }
@@ -226,7 +237,7 @@ impl SeriesForm {
         let mut t = DMat::zeros(v.rows(), v.cols());
         for i in (0..d).rev() {
             // R ← B·R + c_i·V with B = A − shift·I, in one pass.
-            spmm_step_into(a, &r, v, -self.shift, 1.0, self.coeffs[i], &mut t, threads);
+            op.step_into(&r, v, -self.shift, 1.0, self.coeffs[i], &mut t, threads);
             std::mem::swap(&mut r, &mut t);
         }
         r
@@ -513,6 +524,15 @@ pub struct BuildOptions {
     /// only, with the [`mixed_error_budget`] contract. Rejected for the
     /// dense build, exact transforms, and ground-truth paths.
     pub precision: Precision,
+    /// Graph-shard count for the matrix-free SpMM sweeps (`--shards N`).
+    /// **Default 0** (unsharded fused kernels, the historical path);
+    /// `N ≥ 1` partitions the operator into `N` contiguous row shards and
+    /// runs every series sweep as a two-phase owned/halo apply
+    /// ([`crate::linalg::shard::ShardedCsr`]) with one halo exchange per
+    /// sweep — bitwise-equal to the unsharded operator at every
+    /// (shard, worker) pair. Sparse path only; rejected with
+    /// `--precision mixed` and the dense build.
+    pub shards: usize,
 }
 
 impl Default for BuildOptions {
@@ -526,6 +546,7 @@ impl Default for BuildOptions {
             domain: DomainEstimate::Power,
             degree: Degree::Native,
             precision: Precision::F64,
+            shards: 0,
         }
     }
 }
@@ -540,6 +561,13 @@ pub fn build_solver_matrix(l: &DMat, kind: TransformKind, opts: &BuildOptions) -
             "--precision mixed applies only to the matrix-free (sparse) operator \
              path — the dense materialized build is f64-only; use --op-mode sparse \
              or --precision f64"
+        );
+    }
+    if opts.shards > 0 {
+        bail!(
+            "--shards applies only to the matrix-free (sparse) operator path — \
+             the dense materialized build has no halo schedule; use --op-mode \
+             sparse or drop --shards"
         );
     }
     // The power estimate feeds the pre-scale factor and the Power domain's

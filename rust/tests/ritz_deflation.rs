@@ -1,0 +1,270 @@
+//! Acceptance harness for locked-convergence deflation and sharded
+//! polynomial applies:
+//!
+//! 1. locked (`--ritz-lock on`) and fixed-block (`off`) solves agree to
+//!    tolerance across every generator × both Laplacian variants ×
+//!    1/2/8 workers, and the locked solve spends **strictly fewer** SpMM
+//!    column sweeps — the whole point of deflation;
+//! 2. the locked solve is bitwise worker-invariant, like everything else;
+//! 3. the sharded matrix-free operator (`--shards N`) is **bitwise**
+//!    identical to the unsharded one over S ∈ {1, 2, 7} × worker counts,
+//!    including shard counts above the node count (empty shards) and
+//!    warm-started solves, with honest halo-volume accounting.
+
+use sped::graph::gen::{
+    barabasi_albert, barbell, cliques, erdos_renyi, grid2d, path, ring, ring_of_cliques, sbm,
+    CliqueSpec,
+};
+use sped::graph::Graph;
+use sped::linalg::dmat::DMat;
+use sped::linalg::eigh;
+use sped::linalg::metrics::subspace_error;
+use sped::pipeline::{Pipeline, PipelineConfig};
+use sped::solvers::ritz::{ritz_solve, RitzConfig, RitzResult};
+use sped::solvers::SparsePolyOp;
+use sped::transforms::{BuildOptions, OpMode, TransformKind};
+
+/// Every generator in the crate, at a size where the eigh oracle per
+/// (generator × variant) stays cheap.
+fn generator_zoo(n: usize, seed: u64) -> Vec<(&'static str, Graph)> {
+    vec![
+        (
+            "cliques",
+            cliques(&CliqueSpec { n, k: (n / 6).max(1), max_short_circuit: 3, seed }).graph,
+        ),
+        ("sbm", sbm(&[n / 2, n - n / 2], 0.8, 0.05, seed).graph),
+        ("erdos_renyi", erdos_renyi(n, 0.3, seed).graph),
+        ("grid2d", grid2d(n / 3 + 1, 3).graph),
+        ("path", path(n).graph),
+        ("ring", ring(n.max(3)).graph),
+        ("barbell", barbell(n / 2 + 2).graph),
+        ("ring_of_cliques", ring_of_cliques(3, n / 3 + 2, seed).graph),
+        ("barabasi_albert", barabasi_albert(n.max(5), 3, seed).graph),
+    ]
+}
+
+/// The subspace dimension with the widest relative spectral separation
+/// among k ∈ {2, 3, 4} — keeps the harness off exactly-degenerate
+/// boundaries, where "the bottom-k subspace" is not even well defined and
+/// two converged solves may legitimately disagree.
+fn pick_k(values: &[f64]) -> usize {
+    let lam_max = values.last().copied().unwrap_or(1.0).max(1e-12);
+    let mut best = (2usize, f64::NEG_INFINITY);
+    for k in 2..=4usize.min(values.len() - 1) {
+        let gap = (values[k] - values[k - 1]) / lam_max;
+        if gap > best.1 {
+            best = (k, gap);
+        }
+    }
+    best.0
+}
+
+fn bitwise_eq(a: &DMat, b: &DMat) -> bool {
+    a.rows() == b.rows()
+        && a.cols() == b.cols()
+        && a.data().iter().zip(b.data().iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn solve(
+    lc: sped::linalg::sparse::CsrMat,
+    k: usize,
+    lock: bool,
+    threads: usize,
+    shards: usize,
+    warm: Option<DMat>,
+) -> RitzResult {
+    let opts = BuildOptions { threads, shards, ..BuildOptions::default() };
+    let mut op =
+        SparsePolyOp::from_csr(lc, TransformKind::LimitNegExp { ell: 51 }, &opts).unwrap();
+    let cfg = RitzConfig {
+        k,
+        tol: 1e-10,
+        max_iters: 4000,
+        lock,
+        warm_start: warm,
+        ..Default::default()
+    };
+    ritz_solve(&mut op, &cfg).unwrap()
+}
+
+#[test]
+fn locked_beats_fixed_block_across_zoo_variants_and_workers() {
+    for (name, g) in generator_zoo(22, 3) {
+        for (variant, ld, mk_csr) in [
+            ("laplacian", g.laplacian(), Graph::laplacian_csr as fn(&Graph) -> _),
+            ("normalized", g.normalized_laplacian(), Graph::normalized_laplacian_csr),
+        ] {
+            let tag = format!("{name}/{variant}");
+            let k = pick_k(&eigh(&ld).unwrap().values);
+            let fixed = solve(mk_csr(&g), k, false, 1, 0, None);
+            assert!(fixed.converged, "{tag}: fixed-block solve unconverged");
+            assert_eq!(fixed.locked, 0, "{tag}: lock=off must never lock");
+            // Fixed block: every sweep runs the full auto block (k + 2).
+            assert_eq!(fixed.col_sweeps, fixed.total_sweeps * (k + 2), "{tag}");
+
+            let locked = solve(mk_csr(&g), k, true, 1, 0, None);
+            assert!(locked.converged, "{tag}: locked solve unconverged");
+            assert_eq!(locked.locked, k, "{tag}: converged ⟺ all k pairs locked");
+            assert_eq!(locked.locked_history.len(), locked.iterations, "{tag}");
+            assert!(
+                locked.locked_history.windows(2).all(|w| w[0] <= w[1]),
+                "{tag}: locked count must be monotone"
+            );
+            // The acceptance claim: same subspace, strictly fewer SpMM
+            // column sweeps than the fixed-block run paid.
+            let err = subspace_error(&fixed.embedding, &locked.embedding);
+            assert!(err < 1e-6, "{tag}: locked vs fixed subspace err {err:.3e}");
+            assert!(
+                locked.col_sweeps < fixed.col_sweeps,
+                "{tag}: locked {} column sweeps vs fixed {}",
+                locked.col_sweeps,
+                fixed.col_sweeps
+            );
+            for (a, b) in fixed.values.iter().zip(locked.values.iter()) {
+                assert!((a - b).abs() <= 1e-8 * a.abs().max(1.0), "{tag}: {a} vs {b}");
+            }
+
+            // Deflation keeps the bitwise worker-invariance contract.
+            for threads in [2usize, 8] {
+                let other = solve(mk_csr(&g), k, true, threads, 0, None);
+                assert_eq!(locked.iterations, other.iterations, "{tag} @{threads}");
+                assert_eq!(locked.col_sweeps, other.col_sweeps, "{tag} @{threads}");
+                assert_eq!(locked.locked_history, other.locked_history, "{tag} @{threads}");
+                assert!(
+                    bitwise_eq(&locked.embedding, &other.embedding),
+                    "{tag}: locked embedding diverged at {threads} workers"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_solves_are_bitwise_equal_to_unsharded() {
+    // cliques(36): every shard non-empty at S ≤ 7. path(5): S = 7 exceeds
+    // the node count, so partitioning yields empty shards — which must be
+    // harmless, not special-cased.
+    let graphs: Vec<(&str, Graph)> = vec![
+        ("cliques", cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 7 }).graph),
+        ("path5", path(5).graph),
+    ];
+    for (name, g) in &graphs {
+        let k = 2usize;
+        let base = solve(g.laplacian_csr(), k, true, 1, 0, None);
+        assert_eq!(base.halo_volume, 0, "{name}: unsharded exchanges nothing");
+        for shards in [1usize, 2, 7] {
+            for threads in [1usize, 2, 8] {
+                let sh = solve(g.laplacian_csr(), k, true, threads, shards, None);
+                assert_eq!(base.iterations, sh.iterations, "{name} S={shards} @{threads}");
+                assert_eq!(base.col_sweeps, sh.col_sweeps, "{name} S={shards} @{threads}");
+                assert!(
+                    bitwise_eq(&base.embedding, &sh.embedding),
+                    "{name}: sharded embedding diverged at S={shards}, {threads} workers"
+                );
+                for (a, b) in base.residuals.iter().zip(sh.residuals.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{name} S={shards} @{threads}");
+                }
+                // Halo accounting: rows-per-sweep × column sweeps, zero
+                // only when nothing crosses a shard boundary.
+                let opts = BuildOptions { shards, ..BuildOptions::default() };
+                let op = SparsePolyOp::from_csr(
+                    g.laplacian_csr(),
+                    TransformKind::LimitNegExp { ell: 51 },
+                    &opts,
+                )
+                .unwrap();
+                assert_eq!(op.shard_count(), shards, "{name}");
+                assert_eq!(
+                    sh.halo_volume,
+                    op.halo_rows() * sh.col_sweeps,
+                    "{name} S={shards} @{threads}"
+                );
+                if shards > 1 && g.num_edges() > 0 {
+                    assert!(sh.halo_volume > 0, "{name} S={shards}: halo volume missing");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_warm_started_solves_stay_bitwise_and_compose_with_locking() {
+    let g = cliques(&CliqueSpec { n: 48, k: 4, max_short_circuit: 2, seed: 13 }).graph;
+    let k = 4usize;
+    // A converged embedding from a looser solve seeds the warm runs.
+    let seed_emb = {
+        let opts = BuildOptions::default();
+        let mut op = SparsePolyOp::from_csr(
+            g.laplacian_csr(),
+            TransformKind::LimitNegExp { ell: 51 },
+            &opts,
+        )
+        .unwrap();
+        let cfg = RitzConfig { k, tol: 1e-4, max_iters: 500, ..Default::default() };
+        ritz_solve(&mut op, &cfg).unwrap().embedding
+    };
+    let cold = solve(g.laplacian_csr(), k, true, 1, 0, None);
+    let warm = solve(g.laplacian_csr(), k, true, 1, 0, Some(seed_emb.clone()));
+    assert!(warm.converged && cold.converged);
+    assert!(
+        warm.col_sweeps < cold.col_sweeps,
+        "warm locked solve must be cheaper: {} vs {}",
+        warm.col_sweeps,
+        cold.col_sweeps
+    );
+    for shards in [2usize, 7] {
+        for threads in [1usize, 2, 8] {
+            let sh = solve(g.laplacian_csr(), k, true, threads, shards, Some(seed_emb.clone()));
+            assert_eq!(warm.iterations, sh.iterations, "S={shards} @{threads}");
+            assert_eq!(warm.col_sweeps, sh.col_sweeps, "S={shards} @{threads}");
+            assert!(
+                bitwise_eq(&warm.embedding, &sh.embedding),
+                "warm sharded embedding diverged at S={shards}, {threads} workers"
+            );
+            assert!(sh.halo_volume > 0, "S={shards}: halo volume missing");
+        }
+    }
+}
+
+#[test]
+fn pipeline_with_shards_matches_unsharded_end_to_end() {
+    let g = cliques(&CliqueSpec { n: 36, k: 3, max_short_circuit: 2, seed: 5 }).graph;
+    let run = |shards: usize, threads: usize| {
+        let mut cfg = PipelineConfig {
+            k: 3,
+            transform: TransformKind::LimitNegExp { ell: 51 },
+            solver: "ritz".into(),
+            ritz_tol: 1e-10,
+            ritz_max_iters: 500,
+            op_mode: OpMode::MatrixFree,
+            ground_truth: false,
+            threads,
+            ..Default::default()
+        };
+        cfg.build.shards = shards;
+        Pipeline::new(cfg).run(&g).unwrap()
+    };
+    let base = run(0, 1);
+    let rz = base.ritz.as_ref().unwrap();
+    assert_eq!(rz.halo_volume, 0);
+    for shards in [1usize, 2, 7] {
+        for threads in [1usize, 2, 8] {
+            let out = run(shards, threads);
+            assert!(
+                bitwise_eq(&base.embedding, &out.embedding),
+                "pipeline embedding diverged at S={shards}, {threads} workers"
+            );
+            let srz = out.ritz.as_ref().unwrap();
+            assert_eq!(rz.iterations, srz.iterations, "S={shards} @{threads}");
+            assert_eq!(rz.col_sweeps, srz.col_sweeps, "S={shards} @{threads}");
+            assert_eq!(
+                base.clustering.as_ref().unwrap().assignments,
+                out.clustering.as_ref().unwrap().assignments,
+                "S={shards} @{threads}"
+            );
+            if shards > 1 {
+                assert!(srz.halo_volume > 0, "S={shards}: halo volume missing");
+            }
+        }
+    }
+}
